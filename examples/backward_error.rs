@@ -1,0 +1,40 @@
+//! Empirical backward-error analysis (paper §4.2, Theorem 3).
+//!
+//! Runs PASSCoDe-Wild on the multicore simulator (real races cannot occur
+//! on this 1-core host — DESIGN.md §3), measures ε = w̄ − ŵ (the lost-
+//! write error), and verifies Theorem 3's claim: ŵ satisfies the
+//! optimality conditions of the *perturbed* primal problem, which is why
+//! Table 2 predicts with ŵ.
+//!
+//! ```text
+//! cargo run --release --example backward_error
+//! ```
+
+use passcode::coordinator::experiments;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== PASSCoDe-Wild backward error (Theorem 3, simulated cores) ===\n");
+    println!(
+        "dataset   cores   lost writes   ‖ε‖/‖ŵ‖     KKT resid(ŵ)   KKT resid(w̄)"
+    );
+    for dataset in ["rcv1", "news20", "webspam"] {
+        for cores in [2usize, 8, 16] {
+            let be = experiments::backward_error(dataset, 0.05, 20, cores)?;
+            println!(
+                "{dataset:<9} {cores:>5}   {:>11}   {:>9.3e}   {:>12.3e}   {:>12.3e}",
+                be.lost_writes,
+                be.eps_norm / be.w_norm.max(1e-12),
+                be.perturbed_residual,
+                be.unperturbed_residual,
+            );
+        }
+    }
+    println!(
+        "\nReading: lost writes (and hence ε) grow with core count, yet\n\
+         ε stays small relative to ŵ and the KKT residual measured with\n\
+         ŵ stays comparable to the w̄ one — the Wild iterate is the exact\n\
+         solution of a nearby perturbed problem, so predict with ŵ\n\
+         (paper Table 2, §4.2)."
+    );
+    Ok(())
+}

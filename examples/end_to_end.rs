@@ -1,0 +1,129 @@
+//! End-to-end system driver (EXPERIMENTS.md §E2E): exercises every layer
+//! of the stack on a real small workload.
+//!
+//! 1. generate the rcv1 analog (S3 data substrate),
+//! 2. train hinge SVM with serial DCD, PASSCoDe-{Lock,Atomic,Wild},
+//!    CoCoA (S5–S7), logging the full loss curve per epoch,
+//! 3. evaluate the final model through BOTH the native sparse path and
+//!    the AOT/PJRT path compiled from the Pallas kernels (S13, L1+L2) and
+//!    cross-check them,
+//! 4. replay the same workload on the multicore simulator (S10) for the
+//!    10-core speedup estimate this host cannot measure,
+//! 5. print a summary block that EXPERIMENTS.md records.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use passcode::coordinator::{driver, RunConfig, SolverKind};
+use passcode::data::registry;
+use passcode::loss::Hinge;
+use passcode::runtime::{Engine, Evaluator};
+use passcode::simcore::{self, CostModel, Mechanism, SimConfig};
+use passcode::solver::MemoryModel;
+
+fn main() -> anyhow::Result<()> {
+    let scale = 0.25;
+    let epochs = 12;
+    let threads = 4;
+    println!("=== PASSCoDe end-to-end driver ===");
+    println!("dataset rcv1-analog @ scale {scale}, {epochs} epochs, {threads} threads\n");
+
+    // ---- 1+2: train all variants, log curves ------------------------
+    let mut summaries = Vec::new();
+    for (label, solver) in [
+        ("dcd-serial", SolverKind::Dcd),
+        ("passcode-lock", SolverKind::Passcode(MemoryModel::Lock)),
+        ("passcode-atomic", SolverKind::Passcode(MemoryModel::Atomic)),
+        ("passcode-wild", SolverKind::Passcode(MemoryModel::Wild)),
+        ("cocoa", SolverKind::Cocoa),
+    ] {
+        let cfg = RunConfig {
+            dataset: "rcv1".into(),
+            scale,
+            solver,
+            threads: if label == "dcd-serial" { 1 } else { threads },
+            epochs,
+            eval_every: 1,
+            ..Default::default()
+        };
+        let out = driver::run(&cfg)?;
+        println!("--- {label} ---");
+        println!("  epoch    P(ŵ)            gap       acc");
+        for r in &out.metrics.rows {
+            println!(
+                "  {:>5}  {:>12.5}  {:>10.3e}  {:>7.4}",
+                r.epoch, r.primal, r.gap, r.test_acc
+            );
+        }
+        println!(
+            "  final acc(ŵ) = {:.4}, acc(w̄) = {:.4}, train {:.3}s\n",
+            out.acc_what,
+            out.acc_wbar,
+            out.result.train_secs()
+        );
+        summaries.push((label, out));
+    }
+
+    // ---- 3: AOT/PJRT cross-check on the wild model -------------------
+    let wild = &summaries
+        .iter()
+        .find(|(l, _)| *l == "passcode-wild")
+        .unwrap()
+        .1;
+    let (train, _, c) = registry::load("rcv1", scale)?;
+    match Engine::load_default() {
+        Ok(engine) => {
+            let aot = Evaluator::new(&engine).eval(&train, &wild.result.w_hat)?;
+            let native = wild.primal_final;
+            let rel = (aot.primal(c) - native).abs() / native.abs().max(1.0);
+            println!("AOT/PJRT cross-check (platform {}):", engine.platform());
+            println!("  native P(ŵ) = {native:.6}");
+            println!("  AOT    P(ŵ) = {:.6}  (rel err {rel:.2e})", aot.primal(c));
+            assert!(rel < 2e-3, "AOT and native eval disagree");
+        }
+        Err(e) => {
+            println!("AOT path skipped (run `make artifacts`): {e:#}");
+        }
+    }
+
+    // ---- 4: simulated 10-core speedup -------------------------------
+    println!("\nsimulated 10-core speedups (multicore DES, DESIGN.md §3):");
+    let loss = Hinge::new(c);
+    let cost = CostModel::default();
+    let serial_ns = simcore::serial_reference_ns(&train, &loss, epochs, 7, &cost);
+    for (mech, name) in [
+        (Mechanism::Wild, "wild"),
+        (Mechanism::Atomic, "atomic"),
+        (Mechanism::Lock, "lock"),
+    ] {
+        let sim = simcore::simulate(
+            &train,
+            &loss,
+            &SimConfig { cores: 10, epochs, seed: 7, cost, mechanism: mech, sockets: 1 },
+        );
+        println!(
+            "  {name:<7} {:>6.2}x   (lost writes: {}, mean staleness {:.1})",
+            serial_ns / sim.virtual_ns,
+            sim.lost_writes,
+            sim.mean_staleness
+        );
+    }
+
+    // ---- 5: headline summary ----------------------------------------
+    println!("\n=== summary ===");
+    for (label, out) in &summaries {
+        println!(
+            "  {label:<16} P={:.5}  gap={:.2e}  acc(ŵ)={:.4}",
+            out.primal_final, out.gap_final, out.acc_what
+        );
+    }
+    let dcd = &summaries[0].1;
+    let wild_acc = wild.acc_what;
+    assert!(
+        (wild_acc - dcd.acc_what).abs() < 0.02,
+        "wild accuracy diverged from serial"
+    );
+    println!("\nend_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+"""AOT bridge: lower the Layer-2 evaluation graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path.  Interchange is HLO text, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def export_table():
+    """(name, fn, input shapes, output shapes, notes) for every artifact."""
+    b, d = model.ROW_BLOCK, model.FEAT_BLOCK
+    db = model.DCD_ROW_BLOCK
+    return [
+        (
+            "margins_block",
+            model.margins_block,
+            [(b, d), (d, 1)],
+            [(b, 1)],
+            "partial margins X_blk @ w_blk; accumulate over feature blocks",
+        ),
+        (
+            "eval_block",
+            model.eval_block,
+            [(b, d), (d, 1), (b, 1)],
+            [(1, 1), (1, 1), (b, 1)],
+            "hinge loss sum, correct count, margins for one row block",
+        ),
+        (
+            "eval_block_sqhinge",
+            model.eval_block_sqhinge,
+            [(b, d), (d, 1), (b, 1)],
+            [(1, 1), (1, 1), (b, 1)],
+            "squared-hinge variant of eval_block",
+        ),
+        (
+            "loss_stats_block",
+            model.loss_stats_block,
+            [(b, 1), (b, 1)],
+            [(1, 1), (1, 1)],
+            "hinge stats over accumulated margins (multi-feature-block path)",
+        ),
+        (
+            "loss_stats_block_sq",
+            model.loss_stats_block_sq,
+            [(b, 1), (b, 1)],
+            [(1, 1), (1, 1)],
+            "squared-hinge stats over accumulated margins",
+        ),
+        (
+            "sumsq_block",
+            model.sumsq_block,
+            [(d, 1)],
+            [(1, 1)],
+            "blockwise ||v||^2 for the regularizer",
+        ),
+        (
+            "dcd_block_epoch",
+            model.dcd_block_epoch,
+            [(db, d), (db, 1), (1, 1), (db, 1), (d, 1)],
+            [(db, 1), (d, 1)],
+            f"{model.DCD_SWEEPS} dense cyclic DCD sweep(s); "
+            "qii==0 marks padding rows",
+        ),
+    ]
+
+
+def build(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "jax_version": jax.__version__,
+        "row_block": model.ROW_BLOCK,
+        "feat_block": model.FEAT_BLOCK,
+        "dcd_row_block": model.DCD_ROW_BLOCK,
+        "dcd_sweeps": model.DCD_SWEEPS,
+        "artifacts": {},
+    }
+    for name, fn, in_shapes, out_shapes, note in export_table():
+        specs = [_spec(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [list(s) for s in in_shapes],
+            "outputs": [list(s) for s in out_shapes],
+            "dtype": "f32",
+            "note": note,
+        }
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"  manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

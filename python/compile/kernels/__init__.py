@@ -1,0 +1,11 @@
+"""Pallas kernels (Layer 1) and their pure-jnp oracles.
+
+Exports: margins (tiled X@w), hinge_stats / sumsq reductions, dcd_block
+(sequential dense block dual coordinate descent), and the ``ref`` module
+with the correctness oracles.
+"""
+
+from . import ref  # noqa: F401
+from .dcd_block import dcd_block  # noqa: F401
+from .margins import margins  # noqa: F401
+from .objective import hinge_stats, sumsq  # noqa: F401

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: dense block dual coordinate descent (hinge).
+
+The compute analog of the paper's inner solver: ``sweeps`` sequential
+passes of Algorithm 1 over a dense block of rows, with the block-local
+primal vector ``w`` maintained in VMEM.  This is the local solver the
+CoCoA baseline runs per block, and the dense-path workhorse of the
+end-to-end example (covtype-analog, d small).
+
+Coordinate descent is intrinsically sequential inside a block; on TPU that
+maps to a ``fori_loop`` over a VMEM-resident tile (dot products hit the
+VPU/MXU per row), not to a parallel grid.  The *parallelism across blocks*
+is what the Rust coordinator owns.  interpret=True on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dcd_block_kernel(x_ref, qii_ref, c_ref, alpha_ref, w_ref,
+                      alpha_out_ref, w_out_ref, *, sweeps: int):
+    # Copy the state into the output refs; the sweeps mutate those in VMEM.
+    alpha_out_ref[...] = alpha_ref[...]
+    w_out_ref[...] = w_ref[...]
+    b = x_ref.shape[0]
+    c = c_ref[0, 0]
+
+    def body(k, _):
+        i = k % b
+        xi = x_ref[i, :]                      # (D,)
+        qi = qii_ref[i, 0]
+        ai = alpha_out_ref[i, 0]
+        w = w_out_ref[...]                    # (D, 1)
+        g = jnp.dot(xi, w[:, 0]) - 1.0        # gradient of the subproblem
+        # Guard padding rows (qii == 0): keep alpha, delta = 0.
+        safe_q = jnp.where(qi > 0.0, qi, 1.0)
+        a_new = jnp.clip(ai - g / safe_q, 0.0, c)
+        delta = jnp.where(qi > 0.0, a_new - ai, 0.0)
+        alpha_out_ref[i, 0] = ai + delta
+        w_out_ref[...] = w + delta * xi[:, None]
+        return 0
+
+    jax.lax.fori_loop(0, sweeps * b, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def dcd_block(x, qii, c, alpha, w, *, sweeps: int = 1):
+    """Run ``sweeps`` cyclic DCD passes over a dense block.
+
+    x: (B, D) f32; qii: (B, 1) row squared norms (0 marks padding rows);
+    c: (1, 1) box constraint; alpha: (B, 1); w: (D, 1) block-local primal
+    vector consistent with alpha.  Returns (alpha', w').
+    """
+    b, d = x.shape
+    assert qii.shape == (b, 1) and alpha.shape == (b, 1)
+    assert w.shape == (d, 1) and c.shape == (1, 1)
+    kernel = functools.partial(_dcd_block_kernel, sweeps=sweeps)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        ),
+        interpret=True,
+    )(x, qii, c, alpha, w)

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: tiled dense margins ``m = X @ w``.
+
+This is the bulk-evaluation hot-spot of the stack: the Rust coordinator
+streams dense feature blocks of the (padded) data matrix through the AOT
+executable to score/evaluate a model without touching Python.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows × feature
+blocks; each (bm × bd) tile of X and (bd × 1) slice of w are staged into
+VMEM by the BlockSpec pipeline, the partial product targets the MXU, and
+the (bm × 1) output tile is accumulated in place across the feature-block
+grid dimension (classic "reduce over grid axis 1" pattern).  On this image
+the kernel runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the structure is what a real TPU lowering would pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _margins_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o[bm,1] (+)= x[bm,bd] @ w[bd,1]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd"))
+def margins(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 128, bd: int = 256):
+    """Tiled margins for a dense block.
+
+    x: (B, D) f32 with B % bm == 0 and D % bd == 0 (the AOT exporter and
+    the Rust runtime always pad to the exported shape); w: (D, 1) f32.
+    Returns (B, 1) f32.
+    """
+    b, d = x.shape
+    assert b % bm == 0 and d % bd == 0, (b, d, bm, bd)
+    assert w.shape == (d, 1), w.shape
+    grid = (b // bm, d // bd)
+    return pl.pallas_call(
+        _margins_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(x, w)

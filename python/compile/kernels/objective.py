@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernels: masked loss statistics and sum-of-squares.
+
+Reduction kernels used by the L2 evaluation graph.  Each accumulates a
+scalar across the grid into a (1, 1) output tile — the standard Pallas
+"scalar accumulator lives in the output ref" reduction idiom.
+
+All kernels run with ``interpret=True`` on this image (see margins.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hinge_stats_kernel(m_ref, mask_ref, loss_ref, correct_ref, *, squared):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        correct_ref[...] = jnp.zeros_like(correct_ref)
+
+    m = m_ref[...]
+    msk = mask_ref[...]
+    h = jnp.maximum(0.0, 1.0 - m)
+    if squared:
+        h = h * h
+    loss_ref[...] += jnp.sum(msk * h).reshape(1, 1)
+    correct_ref[...] += jnp.sum(
+        msk * (m > 0.0).astype(jnp.float32)
+    ).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "squared"))
+def hinge_stats(
+    margins: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    bm: int = 128,
+    squared: bool = False,
+):
+    """Masked (squared-)hinge loss sum and correct count.
+
+    margins, mask: (B, 1) f32 with B % bm == 0; mask is 1.0 on live rows,
+    0.0 on padding.  Returns ((1,1) loss_sum, (1,1) correct_count).
+    """
+    b = margins.shape[0]
+    assert margins.shape == (b, 1) and mask.shape == (b, 1)
+    assert b % bm == 0, (b, bm)
+    kernel = functools.partial(_hinge_stats_kernel, squared=squared)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=True,
+    )(margins, mask)
+
+
+def _sumsq_kernel(v_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = v_ref[...]
+    o_ref[...] += jnp.sum(v * v).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def sumsq(v: jnp.ndarray, *, bd: int = 256):
+    """Sum of squares of a (D, 1) f32 vector, D % bd == 0 -> (1, 1)."""
+    d = v.shape[0]
+    assert v.shape == (d, 1) and d % bd == 0, (v.shape, bd)
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((bd, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(v)

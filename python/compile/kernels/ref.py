@@ -1,0 +1,122 @@
+"""Pure-jnp / pure-python reference oracles for the Pallas kernels.
+
+Every kernel in this package must agree with the corresponding function in
+this module (pytest + hypothesis enforce it).  The references are written
+with deliberately *different* mechanics than the kernels — plain `jnp`
+matmuls and Python loops — so a shared bug is unlikely.
+
+Conventions (match the paper): rows of ``x`` are already label-folded,
+``x_i = y_i * xdot_i``, so a positive margin ``w.T x_i > 0`` is a correct
+prediction and the hinge loss is ``C * max(0, 1 - w.T x_i)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def margins_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Margins ``m = X @ w`` for a dense block.
+
+    x: (B, D) float32, w: (D, 1) float32 -> (B, 1) float32.
+    """
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+
+def hinge_stats_ref(margins: jnp.ndarray, mask: jnp.ndarray):
+    """Masked hinge-loss sum and correct-prediction count.
+
+    margins: (B, 1); mask: (B, 1) in {0.0, 1.0} marking live rows
+    (padding rows carry 0 and must not contribute).
+
+    Returns (loss_sum, correct) each shaped (1, 1):
+      loss_sum = sum_i mask_i * max(0, 1 - m_i)
+      correct  = sum_i mask_i * [m_i > 0]
+    """
+    m = jnp.asarray(margins, jnp.float32)
+    msk = jnp.asarray(mask, jnp.float32)
+    loss = jnp.sum(msk * jnp.maximum(0.0, 1.0 - m)).reshape(1, 1)
+    correct = jnp.sum(msk * (m > 0.0).astype(jnp.float32)).reshape(1, 1)
+    return loss, correct
+
+
+def squared_hinge_stats_ref(margins: jnp.ndarray, mask: jnp.ndarray):
+    """Masked squared-hinge sum and correct count, same shapes as hinge."""
+    m = jnp.asarray(margins, jnp.float32)
+    msk = jnp.asarray(mask, jnp.float32)
+    h = jnp.maximum(0.0, 1.0 - m)
+    loss = jnp.sum(msk * h * h).reshape(1, 1)
+    correct = jnp.sum(msk * (m > 0.0).astype(jnp.float32)).reshape(1, 1)
+    return loss, correct
+
+
+def sumsq_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """Sum of squares of a (D, 1) block -> (1, 1)."""
+    v = jnp.asarray(v, jnp.float32)
+    return jnp.sum(v * v).reshape(1, 1)
+
+
+def dcd_block_ref(
+    x: np.ndarray,
+    qii: np.ndarray,
+    alpha0: np.ndarray,
+    w0: np.ndarray,
+    c: float,
+    sweeps: int,
+):
+    """Reference dense block dual coordinate descent (hinge loss).
+
+    Sequentially sweeps the block's coordinates ``sweeps`` times, exactly
+    Algorithm 1 of the paper restricted to the block, with the local ``w``
+    kept in sync:
+
+        G     = w.T x_i - 1
+        a_new = clip(alpha_i - G / qii_i, 0, C)
+        w    += (a_new - alpha_i) x_i
+
+    Rows with qii_i == 0 (padding) are skipped.  Pure numpy + Python loop
+    (the kernel uses a lax.fori_loop over VMEM refs).
+
+    x: (B, D); qii: (B, 1) row squared norms; alpha0: (B, 1); w0: (D, 1).
+    Returns (alpha, w) after the sweeps.
+    """
+    x = np.asarray(x, np.float64)
+    alpha = np.asarray(alpha0, np.float64).copy().reshape(-1)
+    w = np.asarray(w0, np.float64).copy().reshape(-1)
+    q = np.asarray(qii, np.float64).reshape(-1)
+    b = x.shape[0]
+    for _ in range(int(sweeps)):
+        for i in range(b):
+            if q[i] <= 0.0:
+                continue  # padding row
+            g = float(x[i] @ w) - 1.0
+            a_new = min(max(alpha[i] - g / q[i], 0.0), float(c))
+            d = a_new - alpha[i]
+            if d != 0.0:
+                alpha[i] = a_new
+                w += d * x[i]
+    return (
+        alpha.reshape(-1, 1).astype(np.float32),
+        w.reshape(-1, 1).astype(np.float32),
+    )
+
+
+def primal_objective_ref(x: np.ndarray, w: np.ndarray, c: float) -> float:
+    """Full primal objective P(w) = 0.5||w||^2 + C sum max(0, 1 - Xw)."""
+    w = np.asarray(w, np.float64).reshape(-1)
+    m = np.asarray(x, np.float64) @ w
+    return 0.5 * float(w @ w) + float(c) * float(
+        np.maximum(0.0, 1.0 - m).sum()
+    )
+
+
+def dual_objective_ref(x: np.ndarray, alpha: np.ndarray, c: float) -> float:
+    """Hinge dual D(alpha) = 0.5||sum_i alpha_i x_i||^2 - sum_i alpha_i.
+
+    (Valid on the box 0 <= alpha_i <= C; the conjugate of the hinge loss.)
+    """
+    a = np.asarray(alpha, np.float64).reshape(-1)
+    assert np.all(a >= -1e-12) and np.all(a <= c + 1e-12)
+    wbar = np.asarray(x, np.float64).T @ a
+    return 0.5 * float(wbar @ wbar) - float(a.sum())

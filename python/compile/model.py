@@ -1,0 +1,89 @@
+"""Layer-2 JAX evaluation graph for the PASSCoDe stack.
+
+Composes the Layer-1 Pallas kernels into the fixed-shape entry points the
+Rust runtime executes via PJRT:
+
+  * ``margins_block``   — dense partial margins X_blk @ w_blk (the Rust
+                          side accumulates across feature blocks),
+  * ``eval_block``      — margins + masked hinge statistics in one program
+                          (fused eval for row blocks whose full feature
+                          width fits one export),
+  * ``sumsq_block``     — blockwise ||w||^2 reduction for the regularizer,
+  * ``dcd_block_epoch`` — dense block dual CD sweeps (CoCoA local solver /
+                          dense end-to-end path).
+
+Every function returns a tuple (the AOT bridge lowers with
+``return_tuple=True``; the Rust side unwraps with ``to_tupleN``).
+Shapes are fixed at export time by python/compile/aot.py and recorded in
+artifacts/manifest.json; the Rust runtime pads blocks to match.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import dcd_block, hinge_stats, margins, sumsq
+
+# Default export geometry.  Small enough that interpret-mode Pallas on a
+# 1-core CPU stays fast; 128/256-multiples so a real TPU lowering would
+# tile MXU-natively.
+ROW_BLOCK = 256      # rows per eval block (B)
+FEAT_BLOCK = 512     # features per block (D)
+DCD_ROW_BLOCK = 128  # rows per dense DCD block
+DCD_SWEEPS = 1       # CD sweeps per dcd_block_epoch call
+
+
+def margins_block(x: jnp.ndarray, w: jnp.ndarray):
+    """Partial margins for one (row-block × feature-block) tile.
+
+    x: (B, Dblk) f32, w: (Dblk, 1) f32 -> ((B, 1) f32,).
+    Rust accumulates the partial margins over feature blocks.
+    """
+    return (margins(x, w, bm=128, bd=256),)
+
+
+def eval_block(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray):
+    """Fused margins + masked hinge stats for one row block.
+
+    x: (B, D) f32, w: (D, 1) f32, mask: (B, 1) f32 ->
+    ((1,1) hinge_loss_sum, (1,1) correct_count, (B,1) margins).
+    """
+    m = margins(x, w, bm=128, bd=256)
+    loss, correct = hinge_stats(m, mask, bm=128, squared=False)
+    return (loss, correct, m)
+
+
+def eval_block_sqhinge(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray):
+    """Squared-hinge variant of :func:`eval_block`."""
+    m = margins(x, w, bm=128, bd=256)
+    loss, correct = hinge_stats(m, mask, bm=128, squared=True)
+    return (loss, correct, m)
+
+
+def loss_stats_block(margins_in: jnp.ndarray, mask: jnp.ndarray):
+    """Masked hinge stats over precomputed margins.
+
+    Used by the Rust runtime when the feature space spans multiple
+    feature blocks: it accumulates `margins_block` outputs first, then
+    reduces here.  margins_in, mask: (B, 1) -> ((1,1) loss, (1,1) correct).
+    """
+    return hinge_stats(margins_in, mask, bm=128, squared=False)
+
+
+def loss_stats_block_sq(margins_in: jnp.ndarray, mask: jnp.ndarray):
+    """Squared-hinge variant of :func:`loss_stats_block`."""
+    return hinge_stats(margins_in, mask, bm=128, squared=True)
+
+
+def sumsq_block(v: jnp.ndarray):
+    """Blockwise sum of squares: (Dblk, 1) f32 -> ((1, 1) f32,)."""
+    return (sumsq(v, bd=256),)
+
+
+def dcd_block_epoch(x, qii, c, alpha, w):
+    """Dense block dual CD epoch (DCD_SWEEPS cyclic sweeps).
+
+    x: (B, D); qii: (B, 1) with 0 on padding rows; c: (1, 1); alpha: (B, 1);
+    w: (D, 1).  Returns (alpha', w').
+    """
+    return dcd_block(x, qii, c, alpha, w, sweeps=DCD_SWEEPS)

@@ -1,0 +1,56 @@
+"""AOT pipeline: lowering produces valid HLO text + consistent manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, verbose=False)
+    return out, manifest
+
+
+def test_every_artifact_written(built):
+    out, manifest = built
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "HloModule" in text, f"{name}: missing module header"
+
+
+def test_manifest_roundtrips_as_json(built):
+    out, manifest = built
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == json.loads(json.dumps(manifest))
+    assert on_disk["format"] == "hlo-text"
+    assert on_disk["row_block"] == model.ROW_BLOCK
+    assert on_disk["feat_block"] == model.FEAT_BLOCK
+
+
+def test_artifact_parameter_counts(built):
+    """Parameter declarations in the HLO text match the manifest inputs."""
+    out, manifest = built
+    for name, entry in manifest["artifacts"].items():
+        text = open(os.path.join(out, entry["file"])).read()
+        entry_block = text[text.index("ENTRY"):]
+        n_params = entry_block.count("parameter(")
+        assert n_params == len(entry["inputs"]), (
+            f"{name}: {n_params} params vs {len(entry['inputs'])} inputs"
+        )
+
+
+def test_no_mosaic_custom_calls(built):
+    """interpret=True must lower Pallas to plain HLO (no Mosaic custom
+    calls — the CPU PJRT client cannot execute those)."""
+    out, manifest = built
+    for name, entry in manifest["artifacts"].items():
+        text = open(os.path.join(out, entry["file"])).read()
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name

@@ -1,0 +1,199 @@
+"""Kernel-vs-oracle correctness: the CORE Layer-1 signal.
+
+Hypothesis sweeps shapes/seeds; every Pallas kernel must match its pure
+reference in kernels/ref.py to float32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dcd_block, hinge_stats, margins, ref, sumsq
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+# ----------------------------------------------------------------- margins
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rb=st.integers(1, 3),
+    fb=st.integers(1, 3),
+)
+def test_margins_matches_ref(seed, rb, fb):
+    rng = np.random.default_rng(seed)
+    b, d = 128 * rb, 256 * fb
+    x, w = rand(rng, (b, d)), rand(rng, (d, 1))
+    got = margins(jnp.asarray(x), jnp.asarray(w), bm=128, bd=256)
+    want = ref.margins_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-4
+    )
+
+
+def test_margins_zero_w_gives_zero():
+    x = np.ones((128, 256), np.float32)
+    w = np.zeros((256, 1), np.float32)
+    got = margins(jnp.asarray(x), jnp.asarray(w), bm=128, bd=256)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_margins_rejects_misaligned_shapes():
+    x = np.zeros((100, 256), np.float32)
+    w = np.zeros((256, 1), np.float32)
+    with pytest.raises(AssertionError):
+        margins(jnp.asarray(x), jnp.asarray(w), bm=128, bd=256)
+
+
+def test_margins_identity_columns():
+    # x = eye-ish: row i selects feature i => margins = w[:B]
+    b, d = 128, 256
+    x = np.zeros((b, d), np.float32)
+    x[np.arange(b), np.arange(b)] = 1.0
+    rng = np.random.default_rng(7)
+    w = rand(rng, (d, 1))
+    got = np.asarray(margins(jnp.asarray(x), jnp.asarray(w), bm=128, bd=256))
+    np.testing.assert_allclose(got, w[:b], rtol=1e-6)
+
+
+# ------------------------------------------------------------- hinge stats
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rb=st.integers(1, 4),
+    squared=st.booleans(),
+    mask_p=st.floats(0.0, 1.0),
+)
+def test_hinge_stats_matches_ref(seed, rb, squared, mask_p):
+    rng = np.random.default_rng(seed)
+    b = 128 * rb
+    m = rand(rng, (b, 1), scale=2.0)
+    mask = (rng.random((b, 1)) < mask_p).astype(np.float32)
+    got_l, got_c = hinge_stats(
+        jnp.asarray(m), jnp.asarray(mask), bm=128, squared=squared
+    )
+    want = (
+        ref.squared_hinge_stats_ref(m, mask)
+        if squared
+        else ref.hinge_stats_ref(m, mask)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_l), np.asarray(want[0]), rtol=3e-5, atol=1e-4
+    )
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want[1]))
+
+
+def test_hinge_stats_all_masked_out_is_zero():
+    m = np.full((128, 1), -5.0, np.float32)
+    mask = np.zeros((128, 1), np.float32)
+    l, c = hinge_stats(jnp.asarray(m), jnp.asarray(mask), bm=128)
+    assert np.asarray(l).item() == 0.0 and np.asarray(c).item() == 0.0
+
+
+def test_hinge_stats_margin_exactly_one_has_zero_loss():
+    m = np.ones((128, 1), np.float32)
+    mask = np.ones((128, 1), np.float32)
+    l, c = hinge_stats(jnp.asarray(m), jnp.asarray(mask), bm=128)
+    assert np.asarray(l).item() == 0.0
+    assert np.asarray(c).item() == 128.0
+
+
+# ------------------------------------------------------------------ sumsq
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), fb=st.integers(1, 4))
+def test_sumsq_matches_ref(seed, fb):
+    rng = np.random.default_rng(seed)
+    v = rand(rng, (256 * fb, 1))
+    got = sumsq(jnp.asarray(v), bd=256)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.sumsq_ref(v)), rtol=3e-5, atol=1e-4
+    )
+
+
+# -------------------------------------------------------------- dcd block
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sweeps=st.integers(1, 3),
+    c=st.floats(0.05, 4.0),
+    pad=st.integers(0, 4),
+)
+def test_dcd_block_matches_ref(seed, sweeps, c, pad):
+    rng = np.random.default_rng(seed)
+    b, d = 16, 32
+    x = rand(rng, (b, d), scale=0.4)
+    if pad:
+        x[-pad:] = 0.0
+    qii = (x * x).sum(axis=1, keepdims=True).astype(np.float32)
+    alpha0 = np.clip(rand(rng, (b, 1), 0.2), 0, c).astype(np.float32)
+    if pad:
+        alpha0[-pad:] = 0.0
+    w0 = (x.T @ alpha0).astype(np.float32)
+    c_arr = np.full((1, 1), c, np.float32)
+    got_a, got_w = dcd_block(
+        jnp.asarray(x), jnp.asarray(qii), jnp.asarray(c_arr),
+        jnp.asarray(alpha0), jnp.asarray(w0), sweeps=sweeps,
+    )
+    want_a, want_w = ref.dcd_block_ref(x, qii, alpha0, w0, c, sweeps)
+    np.testing.assert_allclose(np.asarray(got_a), want_a, rtol=1e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_w), want_w, rtol=1e-4, atol=2e-5)
+
+
+def test_dcd_block_decreases_dual_objective():
+    rng = np.random.default_rng(3)
+    b, d, c = 32, 64, 1.0
+    x = rand(rng, (b, d), scale=0.3)
+    qii = (x * x).sum(axis=1, keepdims=True).astype(np.float32)
+    alpha0 = np.zeros((b, 1), np.float32)
+    w0 = np.zeros((d, 1), np.float32)
+    c_arr = np.full((1, 1), c, np.float32)
+    d0 = ref.dual_objective_ref(x, alpha0, c)
+    a, w = alpha0, w0
+    prev = d0
+    for _ in range(4):
+        a, w = dcd_block(
+            jnp.asarray(x), jnp.asarray(qii), jnp.asarray(c_arr),
+            jnp.asarray(a), jnp.asarray(w), sweeps=1,
+        )
+        a, w = np.asarray(a), np.asarray(w)
+        cur = ref.dual_objective_ref(x, np.clip(a, 0, c), c)
+        assert cur <= prev + 1e-5
+        prev = cur
+    assert prev < d0  # made real progress
+
+
+def test_dcd_block_keeps_alpha_in_box():
+    rng = np.random.default_rng(11)
+    b, d, c = 16, 32, 0.25
+    x = rand(rng, (b, d))
+    qii = (x * x).sum(axis=1, keepdims=True).astype(np.float32)
+    a, w = dcd_block(
+        jnp.asarray(x), jnp.asarray(qii),
+        jnp.asarray(np.full((1, 1), c, np.float32)),
+        jnp.asarray(np.zeros((b, 1), np.float32)),
+        jnp.asarray(np.zeros((d, 1), np.float32)),
+        sweeps=2,
+    )
+    a = np.asarray(a)
+    assert np.all(a >= 0.0) and np.all(a <= c + 1e-6)
+
+
+def test_dcd_block_padding_rows_untouched():
+    rng = np.random.default_rng(5)
+    b, d, c = 16, 32, 1.0
+    x = rand(rng, (b, d), scale=0.4)
+    x[10:] = 0.0
+    qii = (x * x).sum(axis=1, keepdims=True).astype(np.float32)
+    a0 = np.zeros((b, 1), np.float32)
+    a, _ = dcd_block(
+        jnp.asarray(x), jnp.asarray(qii),
+        jnp.asarray(np.full((1, 1), c, np.float32)),
+        jnp.asarray(a0), jnp.asarray(np.zeros((d, 1), np.float32)),
+        sweeps=2,
+    )
+    assert np.all(np.asarray(a)[10:] == 0.0)

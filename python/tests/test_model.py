@@ -1,0 +1,115 @@
+"""Layer-2 model graph: shapes and numerics of the exported entry points."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def test_eval_block_shapes():
+    b, d = model.ROW_BLOCK, model.FEAT_BLOCK
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, (b, d)), _rand(rng, (d, 1))
+    mask = np.ones((b, 1), np.float32)
+    loss, correct, m = model.eval_block(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask)
+    )
+    assert loss.shape == (1, 1)
+    assert correct.shape == (1, 1)
+    assert m.shape == (b, 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), live=st.integers(0, 256))
+def test_eval_block_matches_numpy(seed, live):
+    b, d = model.ROW_BLOCK, model.FEAT_BLOCK
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (b, d), 0.2), _rand(rng, (d, 1), 0.2)
+    mask = np.zeros((b, 1), np.float32)
+    mask[:live] = 1.0
+    loss, correct, m = model.eval_block(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask)
+    )
+    m_np = (x.astype(np.float64) @ w.astype(np.float64)).reshape(-1)
+    want_loss = np.maximum(0.0, 1.0 - m_np[:live]).sum()
+    want_correct = float((m_np[:live] > 0).sum())
+    np.testing.assert_allclose(
+        np.asarray(loss).item(), want_loss, rtol=2e-4, atol=2e-3
+    )
+    # correct-count can flip on |margin| ~ f32 eps; allow 1-off
+    assert abs(np.asarray(correct).item() - want_correct) <= 1.0
+
+
+def test_eval_block_sqhinge_vs_ref():
+    b, d = model.ROW_BLOCK, model.FEAT_BLOCK
+    rng = np.random.default_rng(42)
+    x, w = _rand(rng, (b, d), 0.2), _rand(rng, (d, 1), 0.2)
+    mask = np.ones((b, 1), np.float32)
+    loss, correct, m = model.eval_block_sqhinge(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask)
+    )
+    want_l, want_c = ref.squared_hinge_stats_ref(np.asarray(m), mask)
+    np.testing.assert_allclose(
+        np.asarray(loss), np.asarray(want_l), rtol=2e-4, atol=2e-3
+    )
+    np.testing.assert_allclose(np.asarray(correct), np.asarray(want_c))
+
+
+def test_sumsq_block_matches():
+    d = model.FEAT_BLOCK
+    rng = np.random.default_rng(1)
+    v = _rand(rng, (d, 1))
+    (got,) = model.sumsq_block(jnp.asarray(v))
+    np.testing.assert_allclose(
+        np.asarray(got).item(), float((v.astype(np.float64) ** 2).sum()),
+        rtol=2e-5,
+    )
+
+
+def test_margins_block_accumulation_across_feature_blocks():
+    """Rust accumulates partial margins over feature blocks; verify the
+    contract: sum of per-block margins == full margins."""
+    b, d = model.ROW_BLOCK, model.FEAT_BLOCK
+    rng = np.random.default_rng(2)
+    x_full = _rand(rng, (b, 2 * d), 0.3)
+    w_full = _rand(rng, (2 * d, 1), 0.3)
+    (m0,) = model.margins_block(
+        jnp.asarray(x_full[:, :d]), jnp.asarray(w_full[:d])
+    )
+    (m1,) = model.margins_block(
+        jnp.asarray(x_full[:, d:]), jnp.asarray(w_full[d:])
+    )
+    total = np.asarray(m0) + np.asarray(m1)
+    want = x_full.astype(np.float64) @ w_full.astype(np.float64)
+    np.testing.assert_allclose(total, want, rtol=2e-4, atol=2e-3)
+
+
+def test_dcd_block_epoch_converges_on_separable_data():
+    """A few epochs of the dense DCD block must reach low primal-dual gap
+    on a small separable problem (the e2e dense path contract)."""
+    b, d, c = model.DCD_ROW_BLOCK, model.FEAT_BLOCK, 1.0
+    rng = np.random.default_rng(9)
+    wstar = _rand(rng, (d, 1), 1.0)
+    x = _rand(rng, (b, d), 1.0) / np.sqrt(d)
+    y = np.sign(x @ wstar).astype(np.float32)
+    x = x * y  # label-folded rows
+    qii = (x * x).sum(axis=1, keepdims=True).astype(np.float32)
+    alpha = np.zeros((b, 1), np.float32)
+    w = np.zeros((d, 1), np.float32)
+    c_arr = np.full((1, 1), c, np.float32)
+    for _ in range(30):
+        alpha, w = model.dcd_block_epoch(
+            jnp.asarray(x), jnp.asarray(qii), jnp.asarray(c_arr),
+            jnp.asarray(alpha), jnp.asarray(w),
+        )
+        alpha, w = np.asarray(alpha), np.asarray(w)
+    p = ref.primal_objective_ref(x, w, c)
+    dneg = -ref.dual_objective_ref(x, np.clip(alpha, 0, c), c)
+    gap = p - dneg
+    assert gap < 0.05 * max(1.0, abs(p))

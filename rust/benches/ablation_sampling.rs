@@ -1,0 +1,52 @@
+//! Ablation X2: design choices of Algorithm 1/2 —
+//!  * random permutation vs with-replacement sampling (§3.3),
+//!  * shrinking on/off (the LIBLINEAR heuristic),
+//! measured on the rcv1 analog: epochs-to-gap and updates performed.
+//!
+//! Run: `cargo bench --bench ablation_sampling`
+
+use passcode::data::registry;
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::solver::{Sampling, SerialDcd, SolveOptions};
+use passcode::util::Timer;
+
+fn main() {
+    let (tr, _, c) = registry::load("rcv1", 0.1).unwrap();
+    let loss = Hinge::new(c);
+    println!("=== Ablation: sampling scheme + shrinking (rcv1 analog) ===\n");
+    println!(
+        "{:<28} {:>8} {:>12} {:>12} {:>10}",
+        "variant", "epochs", "updates", "gap", "time (s)"
+    );
+    for (name, sampling, shrinking) in [
+        ("permutation", Sampling::Permutation, false),
+        ("with-replacement", Sampling::WithReplacement, false),
+        ("permutation + shrinking", Sampling::Permutation, true),
+    ] {
+        for epochs in [5usize, 15, 30] {
+            let t = Timer::start();
+            let r = SerialDcd::solve(
+                &tr,
+                &loss,
+                &SolveOptions {
+                    epochs,
+                    sampling,
+                    shrinking,
+                    ..Default::default()
+                },
+                None,
+            );
+            let secs = t.secs();
+            let gap = eval::duality_gap(&tr, &loss, &r.alpha);
+            println!(
+                "{:<28} {:>8} {:>12} {:>12.4e} {:>10.3}",
+                name, epochs, r.updates, gap, secs
+            );
+        }
+        println!();
+    }
+    println!("shape: permutation converges faster per epoch than");
+    println!("with-replacement (LIBLINEAR's choice); shrinking cuts");
+    println!("updates at equal quality once the active set stabilizes.");
+}

@@ -1,0 +1,54 @@
+//! Ablation X3: staleness (τ) vs convergence — the quantity Lemma 1 and
+//! Theorem 2 bound.  The DES reports mean in-flight updates at read time
+//! (an empirical τ); sweeping core count shows how τ grows and how the
+//! per-epoch convergence of Atomic/Wild degrades, checking the theory's
+//! qualitative claim: convergence persists while τ ≪ √n.
+//!
+//! Run: `cargo bench --bench ablation_staleness`
+
+use passcode::data::registry;
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::simcore::{self, Mechanism, SimConfig};
+
+fn main() {
+    let (tr, _, c) = registry::load("rcv1", 0.1).unwrap();
+    let loss = Hinge::new(c);
+    let epochs = 10;
+    let sqrt_n = (tr.n() as f64).sqrt();
+    println!("=== Ablation: staleness vs convergence (rcv1 analog, n = {}) ===", tr.n());
+    println!("Lemma-1 regime bound: τ ≪ √n = {sqrt_n:.1}\n");
+    println!(
+        "{:>6} {:>10} {:>12} {:>14} {:>12} {:>12}",
+        "cores", "mech", "mean τ", "lost writes", "gap", "P(ŵ)"
+    );
+    for mech in [Mechanism::Atomic, Mechanism::Wild] {
+        for cores in [1usize, 2, 4, 8, 16, 32] {
+            let sim = simcore::simulate(
+                &tr,
+                &loss,
+                &SimConfig {
+                    cores,
+                    epochs,
+                    seed: 7,
+                    cost: Default::default(),
+                    mechanism: mech, sockets: 1, },
+            );
+            let gap = eval::duality_gap(&tr, &loss, &sim.alpha);
+            let p = eval::primal_objective(&tr, &loss, &sim.w);
+            println!(
+                "{:>6} {:>10} {:>12.2} {:>14} {:>12.4e} {:>12.5}",
+                cores,
+                format!("{mech:?}"),
+                sim.mean_staleness,
+                sim.lost_writes,
+                gap,
+                p
+            );
+        }
+        println!();
+    }
+    println!("shape: τ grows ~linearly with cores; convergence quality");
+    println!("(gap after {epochs} epochs) degrades gracefully while τ ≪ √n,");
+    println!("matching the Lemma-1/Theorem-2 condition (6τ(τ+1)²eM/√n ≤ 1).");
+}

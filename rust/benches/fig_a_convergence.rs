@@ -1,0 +1,62 @@
+//! Bench: **Figures 2–6, panel (a)** — primal objective vs *iterations*
+//! (epochs) for PASSCoDe-Wild / PASSCoDe-Atomic / CoCoA / serial DCD
+//! (LIBLINEAR-style reference), 10 threads; AsySCD included only on the
+//! news20 analog (dense-Q memory guard — exactly the paper's situation).
+//!
+//! Paper shape: the PASSCoDe variants track serial DCD almost exactly;
+//! CoCoA lags per-iteration; covtype (dense) is slowest for everyone.
+//!
+//! Output: one CSV block per dataset (= the figure's data series).
+//!
+//! Run: `cargo bench --bench fig_a_convergence`
+
+use passcode::coordinator::experiments;
+
+fn main() {
+    let scale = std::env::var("PASSCODE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let epochs = 15;
+    let threads = 10;
+    println!(
+        "=== Fig (a): primal objective vs epochs (scale {scale}, {threads} threads) ===");
+    for dataset in ["news20", "covtype", "rcv1", "webspam", "kddb"] {
+        let include_asyscd = dataset == "news20";
+        println!("\n--- {dataset} ---");
+        let logs = experiments::fig_convergence(
+            dataset, scale, epochs, threads, include_asyscd,
+        )
+        .expect("fig_convergence");
+        for log in &logs {
+            print!("{}", log.to_csv());
+        }
+        // Shape check: both PASSCoDe variants end within 2% of serial DCD.
+        let final_primal = |label: &str| {
+            logs.iter()
+                .find(|l| l.label == label)
+                .and_then(|l| l.final_row())
+                .map(|r| r.primal)
+                .unwrap_or(f64::NAN)
+        };
+        let dcd = final_primal("dcd");
+        let wild = final_primal("passcode-wild");
+        let atomic = final_primal("passcode-atomic");
+        let cocoa = final_primal("cocoa");
+        let ok_wild = (wild - dcd).abs() < 0.02 * dcd.abs();
+        let ok_atomic = (atomic - dcd).abs() < 0.02 * dcd.abs();
+        let ok_cocoa = cocoa >= dcd - 0.01 * dcd.abs();
+        println!(
+            "  [{}] PASSCoDe-Wild within 2% of serial DCD after {epochs} epochs",
+            if ok_wild { "PASS" } else { "FAIL" }
+        );
+        println!(
+            "  [{}] PASSCoDe-Atomic within 2% of serial DCD",
+            if ok_atomic { "PASS" } else { "FAIL" }
+        );
+        println!(
+            "  [{}] CoCoA lags (P_cocoa ≥ P_dcd)",
+            if ok_cocoa { "PASS" } else { "FAIL" }
+        );
+    }
+}

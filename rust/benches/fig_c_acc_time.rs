@@ -1,0 +1,84 @@
+//! Bench: **Figures 2–6, panel (c)** — test accuracy vs time.
+//!
+//! Same protocol as panel (b): simulated p-core timelines; accuracy is
+//! measured with the maintained ŵ (the Theorem-3-correct predictor).
+//! Reports the paper's headline comparison: time for PASSCoDe-Wild /
+//! -Atomic / serial DCD to reach 99% of the LIBLINEAR-reference accuracy
+//! (cf. the webspam "2s vs 10s" abstract claim).
+//!
+//! Run: `cargo bench --bench fig_c_acc_time`
+
+use passcode::data::registry;
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::simcore::{self, CostModel, Mechanism, SimConfig};
+use passcode::solver::{SerialDcd, SolveOptions};
+
+fn main() {
+    let scale = std::env::var("PASSCODE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let epochs = 12;
+    let cores = 10;
+    println!("=== Fig (c): test accuracy vs simulated time ({cores} cores, scale {scale}) ===");
+    for dataset in ["news20", "covtype", "rcv1", "webspam", "kddb"] {
+        let (tr, te, c) = registry::load(dataset, scale).unwrap();
+        let loss = Hinge::new(c);
+        let cost = CostModel::default();
+        // LIBLINEAR-style reference accuracy: serial DCD w/ shrinking.
+        let reference = SerialDcd::solve(
+            &tr,
+            &loss,
+            &SolveOptions { epochs: 30, shrinking: true, ..Default::default() },
+            None,
+        );
+        let ref_acc = eval::accuracy(&te, &reference.w_hat);
+        let target = 0.99 * ref_acc;
+        println!("\n--- {dataset} (reference acc {ref_acc:.4}, target {target:.4}) ---");
+        println!("series,epoch,sim_secs,test_acc");
+        let mut time_to_target: Vec<(String, Option<f64>)> = Vec::new();
+        for (mech, name, sim_cores) in [
+            (Mechanism::Wild, "passcode-wild", cores),
+            (Mechanism::Atomic, "passcode-atomic", cores),
+            (Mechanism::Wild, "dcd-serial", 1),
+        ] {
+            let mut reached = None;
+            for e in [1, 2, 4, 8, epochs] {
+                let sim = simcore::simulate(
+                    &tr,
+                    &loss,
+                    &SimConfig {
+                        cores: sim_cores,
+                        epochs: e,
+                        seed: 7,
+                        cost,
+                        mechanism: mech, sockets: 1, },
+                );
+                let acc = eval::accuracy(&te, &sim.w);
+                let secs = sim.virtual_ns * 1e-9;
+                println!("{name},{e},{secs:.6},{acc:.5}");
+                if reached.is_none() && acc >= target {
+                    reached = Some(secs);
+                }
+            }
+            time_to_target.push((name.to_string(), reached));
+        }
+        print!("  time to {target:.3}: ");
+        for (name, t) in &time_to_target {
+            match t {
+                Some(s) => print!("{name}={s:.4}s  "),
+                None => print!("{name}=n/a  "),
+            }
+        }
+        println!();
+        if let (Some(w), Some(d)) = (time_to_target[0].1, time_to_target[2].1)
+        {
+            println!(
+                "  [{}] wild reaches target faster than serial ({:.1}x)",
+                if w < d { "PASS" } else { "FAIL" },
+                d / w
+            );
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Bench: **Figures 2–6, panel (d)** — speedup vs thread count.
+//!
+//! Paper protocol (§5.3): speedup = time(best serial reference) /
+//! time(method @ p threads); shrinking off; init excluded.  Times come
+//! from the multicore DES (testbed substitution).  Paper shape:
+//! PASSCoDe-Wild reaches ~6–8× at 10 threads on every dataset, Atomic
+//! slightly below, Lock well under 1×; AsySCD shows no *speedup* over
+//! serial DCD even though it scales, because its per-update cost is
+//! O(n) (shown on news20 where its Q fits).
+//!
+//! Run: `cargo bench --bench fig_d_speedup`
+
+use passcode::baselines::Asyscd;
+use passcode::coordinator::experiments;
+use passcode::data::registry;
+use passcode::loss::Hinge;
+use passcode::solver::SolveOptions;
+use passcode::util::Timer;
+
+fn main() {
+    let scale = std::env::var("PASSCODE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let epochs = 10;
+    println!("=== Fig (d): speedup vs threads (simulated, scale {scale}) ===");
+    for dataset in ["news20", "covtype", "rcv1", "webspam", "kddb"] {
+        println!("\n--- {dataset} ---");
+        let (table, pts) =
+            experiments::fig_speedup(dataset, scale, epochs, 10)
+                .expect("fig_speedup");
+        println!("{}", table.render());
+        let wild10 = pts
+            .iter()
+            .find(|p| p.threads == 10 && p.mechanism == "wild")
+            .unwrap()
+            .speedup;
+        println!(
+            "  [{}] wild 10-thread speedup in the paper's 5–9x band ({wild10:.2}x)",
+            if (5.0..9.5).contains(&wild10) { "PASS" } else { "FAIL" }
+        );
+    }
+
+    // AsySCD's "scaling without speedup" (news20 only, like the paper):
+    // wall-clock per epoch is dominated by the O(n) gradient scan.
+    println!("\n--- AsySCD vs serial DCD (news20 analog, real wall-clock) ---");
+    let (tr, _, c) = registry::load("news20", (scale * 0.5).min(0.05)).unwrap();
+    let loss = Hinge::new(c);
+    let t = Timer::start();
+    let _ = passcode::solver::SerialDcd::solve(
+        &tr,
+        &loss,
+        &SolveOptions { epochs, ..Default::default() },
+        None,
+    );
+    let dcd_secs = t.secs();
+    let t = Timer::start();
+    let _ = Asyscd::default()
+        .solve(
+            &tr,
+            &loss,
+            &SolveOptions { epochs, threads: 2, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    let asy_secs = t.secs();
+    println!("  serial DCD: {dcd_secs:.3}s   AsySCD(2 threads incl. Q init): {asy_secs:.3}s");
+    println!(
+        "  [{}] AsySCD slower than serial DCD ({:.0}x) — paper Fig 2(d)",
+        if asy_secs > dcd_secs { "PASS" } else { "FAIL" },
+        asy_secs / dcd_secs
+    );
+}

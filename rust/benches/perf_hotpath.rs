@@ -1,0 +1,122 @@
+//! §Perf bench: hot-path microbenchmarks for the L3 solver —
+//! updates/second and effective nnz-throughput of serial DCD and each
+//! PASSCoDe memory model (1 thread, the per-update cost that the
+//! paper's near-linear Wild scaling multiplies), plus the simulator's
+//! event throughput and the AOT margins-kernel throughput.
+//!
+//! This is the before/after instrument for EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use passcode::data::registry;
+use passcode::loss::Hinge;
+use passcode::simcore::{self, Mechanism, SimConfig};
+use passcode::solver::{MemoryModel, Passcode, SerialDcd, SolveOptions};
+use passcode::util::stats::bench_secs;
+
+fn main() {
+    let (tr, _, c) = registry::load("rcv1", 0.25).unwrap();
+    let loss = Hinge::new(c);
+    let epochs = 5;
+    let nnz = tr.x.nnz() as f64;
+    let updates = (tr.n() * epochs) as f64;
+    println!(
+        "=== §Perf hot path (rcv1 analog: n = {}, nnz = {}) ===\n",
+        tr.n(),
+        tr.x.nnz()
+    );
+
+    println!("{:<22} {:>12} {:>14} {:>12}", "variant", "median (s)", "updates/s", "Mnnz/s");
+    let report = |name: &str, median: f64| {
+        println!(
+            "{:<22} {:>12.4} {:>14.0} {:>12.1}",
+            name,
+            median,
+            updates / median,
+            nnz * epochs as f64 / median / 1e6
+        );
+    };
+
+    let s = bench_secs(1, 5, || {
+        let _ = SerialDcd::solve(
+            &tr,
+            &loss,
+            &SolveOptions { epochs, ..Default::default() },
+            None,
+        );
+    });
+    report("serial-dcd", s.median);
+
+    for (model, name) in [
+        (MemoryModel::Wild, "passcode-wild@1"),
+        (MemoryModel::Atomic, "passcode-atomic@1"),
+        (MemoryModel::Lock, "passcode-lock@1"),
+    ] {
+        let s = bench_secs(1, 5, || {
+            let _ = Passcode::solve(
+                &tr,
+                &loss,
+                model,
+                &SolveOptions {
+                    threads: 1,
+                    epochs,
+                    eval_every: 0,
+                    ..Default::default()
+                },
+                None,
+            );
+        });
+        report(name, s.median);
+    }
+
+    // Simulator event throughput (events ≈ updates).
+    let s = bench_secs(1, 3, || {
+        let _ = simcore::simulate(
+            &tr,
+            &loss,
+            &SimConfig {
+                cores: 10,
+                epochs,
+                seed: 7,
+                cost: Default::default(),
+                mechanism: Mechanism::Wild, sockets: 1, },
+        );
+    });
+    println!(
+        "{:<22} {:>12.4} {:>14.0} {:>12}",
+        "simulator@10cores",
+        s.median,
+        updates / s.median,
+        "-"
+    );
+
+    // AOT margins kernel throughput (if artifacts exist).
+    if let Ok(engine) = passcode::runtime::Engine::load_default() {
+        let rb = engine.manifest.row_block;
+        let fb = engine.manifest.feat_block;
+        let x = vec![0.5f32; rb * fb];
+        let w = vec![0.25f32; fb];
+        let xl = passcode::runtime::Engine::literal_f32(
+            &x,
+            &[rb as i64, fb as i64],
+        )
+        .unwrap();
+        let wl =
+            passcode::runtime::Engine::literal_f32(&w, &[fb as i64, 1])
+                .unwrap();
+        let flops = 2.0 * (rb * fb) as f64;
+        let s = bench_secs(2, 10, || {
+            let _ = engine.execute("margins_block", &[xl.reshape(&[rb as i64, fb as i64]).unwrap(), wl.reshape(&[fb as i64, 1]).unwrap()]).unwrap();
+        });
+        println!(
+            "{:<22} {:>12.6} {:>14} {:>12.2}",
+            "aot-margins-kernel",
+            s.median,
+            "-",
+            flops / s.median / 1e9
+        );
+        println!("  (last column = GFLOP/s for the margins kernel)");
+    } else {
+        println!("aot-margins-kernel: skipped (no artifacts)");
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: **Table 1** — scaling of PASSCoDe-Lock/Atomic/Wild on the rcv1
+//! analog (paper: 100 iterations, p ∈ {2,4,10}, speedup over serial DCD).
+//!
+//! Two measurements per cell:
+//!  * simulated p-core time from the multicore DES (the paper-testbed
+//!    substitution — this is the column to compare against Table 1), and
+//!  * real wall-clock on this host (informational; the host has 1 core).
+//!
+//! Paper shape: Lock < 1× (slower than serial), Atomic ≈ 1.75/3.2/6.9×,
+//! Wild ≈ 1.9/3.5/7.4× at p = 2/4/10.
+//!
+//! Run: `cargo bench --bench table1_scaling`
+
+use passcode::coordinator::experiments;
+
+fn main() {
+    let scale = std::env::var("PASSCODE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let epochs = 20;
+    println!("=== Table 1: PASSCoDe scaling (rcv1 analog @ scale {scale}, {epochs} epochs) ===\n");
+    let (table, rows) = experiments::table1(scale, epochs).expect("table1");
+    println!("{}", table.render());
+
+    // Paper-shape assertions (soft: report, don't panic the bench).
+    let at = |th: usize, m: &str| {
+        rows.iter()
+            .find(|r| r.threads == th && r.mechanism == m)
+            .unwrap()
+            .sim_speedup
+    };
+    let checks = [
+        ("lock slower than serial at 10 threads", at(10, "lock") < 1.0),
+        ("wild ≥ atomic at 10 threads", at(10, "wild") >= at(10, "atomic")),
+        ("wild ≥ 5x at 10 threads", at(10, "wild") >= 5.0),
+        ("atomic ≥ 3x at 10 threads", at(10, "atomic") >= 3.0),
+        ("wild scales 2→4→10", at(2, "wild") < at(4, "wild") && at(4, "wild") < at(10, "wild")),
+    ];
+    println!("paper-shape checks:");
+    for (name, ok) in checks {
+        println!("  [{}] {name}", if ok { "PASS" } else { "FAIL" });
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: **Table 3** — dataset statistics of the five synthetic analogs
+//! (n, ñ, d, average nnz, C), mirroring the paper's data table, plus
+//! generation throughput.
+//!
+//! Run: `cargo bench --bench table3_datasets`
+
+use passcode::coordinator::experiments;
+use passcode::data::registry;
+use passcode::util::Timer;
+
+fn main() {
+    let scale = std::env::var("PASSCODE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    println!("=== Table 3: dataset analogs (scale {scale}) ===\n");
+    let t = Timer::start();
+    let table = experiments::table3(scale).expect("table3");
+    println!("{}", table.render());
+    println!("generated + split all 5 datasets in {:.2}s", t.secs());
+
+    // Generation throughput per dataset (init-cost context for §5.2).
+    println!("\ngeneration throughput:");
+    for spec in registry::REGISTRY {
+        let s = spec.scaled(scale);
+        let t = Timer::start();
+        let ds = s.generate();
+        let secs = t.secs();
+        println!(
+            "  {:<8} {:>9} rows  {:>11} nnz  {:>8.2} Mnnz/s",
+            spec.name,
+            ds.n(),
+            ds.x.nnz(),
+            ds.x.nnz() as f64 / secs / 1e6
+        );
+    }
+}

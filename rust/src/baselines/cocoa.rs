@@ -1,0 +1,228 @@
+//! CoCoA baseline (Jaggi et al., NIPS 2014) — multi-core flavour, exactly
+//! the paper's comparison setup (§5): `β_K = 1` and DCD as the local dual
+//! solver.
+//!
+//! Each outer iteration: the K workers take a snapshot of the global `w`,
+//! run one local DCD epoch over their own block against a *private* copy,
+//! and the leader averages the accumulated deltas back in:
+//!
+//! ```text
+//!   w ← w + (β_K / K) Σ_k Δw_k ,   α_k ← α_k + (β_K / K) Δα_k .
+//! ```
+//!
+//! The synchronization barrier per outer round is the thing PASSCoDe
+//! removes; the per-iteration convergence penalty of the (1/K) averaging
+//! is what Figures 2–6(a) show.
+
+use std::sync::Mutex;
+
+use crate::data::Dataset;
+use crate::loss::{Loss, MIN_DELTA};
+use crate::util::{Pcg32, Phases, Timer};
+
+use super::super::solver::{Progress, ProgressFn, SolveOptions, SolveResult};
+
+/// CoCoA solver (β_K = 1, local solver = one DCD epoch per round).
+pub struct Cocoa;
+
+impl Cocoa {
+    pub fn solve<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        mut on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        let n = ds.n();
+        let d = ds.d();
+        let k = opts.threads.max(1);
+        let mut phases = Phases::new();
+
+        let init_t = Timer::start();
+        let qii = ds.x.all_row_sqnorms();
+        let mut alpha = vec![0.0f64; n];
+        let mut w = vec![0.0f64; d];
+        let mut rng = Pcg32::new(opts.seed, 0xC0C0A);
+        let perm = rng.permutation(n);
+        let blocks: Vec<Vec<usize>> = split_blocks(&perm, k);
+        phases.add("init", init_t.secs());
+
+        let train_t = Timer::start();
+        let mut updates: u64 = 0;
+        let mut epochs_run = 0;
+        let beta_k = 1.0;
+
+        'outer: for epoch in 0..opts.epochs {
+            // Workers run truly in parallel; results land in a mutex'd
+            // vec (one entry per block — contention-free in practice).
+            let results: Mutex<Vec<(usize, Vec<(usize, f64)>, Vec<f64>, u64)>> =
+                Mutex::new(Vec::with_capacity(k));
+            std::thread::scope(|scope| {
+                for (bk, block) in blocks.iter().enumerate() {
+                    let w_snapshot = &w;
+                    let alpha_ref = &alpha;
+                    let qii_ref = &qii;
+                    let results_ref = &results;
+                    scope.spawn(move || {
+                        let mut rng =
+                            Pcg32::new(opts.seed ^ (epoch as u64), bk as u64);
+                        let mut order = block.clone();
+                        rng.shuffle(&mut order);
+                        let mut w_local = w_snapshot.clone();
+                        let mut dalpha: Vec<(usize, f64)> = Vec::new();
+                        let mut local_updates = 0u64;
+                        for &i in &order {
+                            let q = qii_ref[i];
+                            if q <= 0.0 {
+                                continue;
+                            }
+                            let wx = ds.x.row_dot_dense(i, &w_local);
+                            // Local alpha view = global + accumulated delta.
+                            let cur = alpha_ref[i]
+                                + dalpha
+                                    .iter()
+                                    .rev()
+                                    .find(|(j, _)| *j == i)
+                                    .map(|(_, v)| *v)
+                                    .unwrap_or(0.0);
+                            let a_new = loss.solve_subproblem(cur, wx, q);
+                            let delta = a_new - cur;
+                            local_updates += 1;
+                            if delta.abs() > MIN_DELTA {
+                                dalpha.push((i, delta));
+                                let (idx, vals) = ds.x.row(i);
+                                for (j, v) in idx.iter().zip(vals) {
+                                    w_local[*j as usize] += delta * v;
+                                }
+                            }
+                        }
+                        // Δw_k = w_local − w_snapshot
+                        let dw: Vec<f64> = w_local
+                            .iter()
+                            .zip(w_snapshot)
+                            .map(|(a, b)| a - b)
+                            .collect();
+                        results_ref
+                            .lock()
+                            .unwrap()
+                            .push((bk, dalpha, dw, local_updates));
+                    });
+                }
+            });
+
+            // Reduce: w += (β/K) Σ Δw_k ; α += (β/K) Δα_k.
+            let scale = beta_k / k as f64;
+            for (_bk, dalpha, dw, u) in results.into_inner().unwrap() {
+                updates += u;
+                for (j, dv) in dw.iter().enumerate() {
+                    w[j] += scale * dv;
+                }
+                for (i, da) in dalpha {
+                    alpha[i] += scale * da;
+                }
+            }
+            epochs_run = epoch + 1;
+
+            if opts.eval_every > 0 && (epoch + 1) % opts.eval_every == 0 {
+                if let Some(cb) = on_progress.as_deref_mut() {
+                    let p = Progress {
+                        epoch: epoch + 1,
+                        alpha: &alpha,
+                        w: &w,
+                        train_secs: train_t.secs(),
+                    };
+                    if !cb(&p) {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        phases.add("train", train_t.secs());
+
+        SolveResult { alpha, w_hat: w, epochs_run, updates, phases }
+    }
+}
+
+fn split_blocks(perm: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = perm.len();
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for t in 0..k {
+        let len = base + usize::from(t < rem);
+        out.push(perm[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::eval;
+    use crate::loss::Hinge;
+
+    fn small() -> (Dataset, f64) {
+        let (tr, _, c) = registry::load("rcv1", 0.02).unwrap();
+        (tr, c)
+    }
+
+    #[test]
+    fn converges_with_multiple_blocks() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { threads: 4, epochs: 60, ..Default::default() };
+        let r = Cocoa::solve(&ds, &loss, &opts, None);
+        let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+        let p = eval::primal_objective(&ds, &loss, &r.w_hat);
+        assert!(gap < 0.02 * p.abs().max(1.0), "gap {gap} (P = {p})");
+    }
+
+    #[test]
+    fn maintains_primal_dual_consistency() {
+        // CoCoA's reduce keeps w = Σ α_i x_i exactly (synchronized).
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { threads: 4, epochs: 5, ..Default::default() };
+        let r = Cocoa::solve(&ds, &loss, &opts, None);
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err = r.w_hat.iter().zip(&wbar)
+            .map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-8, "consistency error {err}");
+    }
+
+    #[test]
+    fn single_block_equals_dcd_epoch_behaviour() {
+        // K = 1 means no averaging: CoCoA degenerates to serial DCD.
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { threads: 1, epochs: 20, ..Default::default() };
+        let r = Cocoa::solve(&ds, &loss, &opts, None);
+        let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+        assert!(gap < 1e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn per_epoch_progress_is_slower_than_dcd() {
+        // The averaging tax: after the same number of epochs with K = 8,
+        // CoCoA's dual objective must lag serial DCD's (paper Fig a).
+        use crate::solver::SerialDcd;
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let e = 5;
+        let dcd = SerialDcd::solve(
+            &ds, &loss,
+            &SolveOptions { epochs: e, ..Default::default() }, None);
+        let cocoa = Cocoa::solve(
+            &ds, &loss,
+            &SolveOptions { threads: 8, epochs: e, ..Default::default() },
+            None);
+        let d_dcd = eval::dual_objective(&ds, &loss, &dcd.alpha);
+        let d_cocoa = eval::dual_objective(&ds, &loss, &cocoa.alpha);
+        assert!(
+            d_dcd < d_cocoa,
+            "expected DCD ahead per-epoch: {d_dcd} vs {d_cocoa}"
+        );
+    }
+}

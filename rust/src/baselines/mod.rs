@@ -1,0 +1,11 @@
+//! Comparison methods from the paper's evaluation (§5): CoCoA (synchronized
+//! dual block ascent), AsySCD (asynchronous standard CD, no maintained w),
+//! and Pegasos (primal SGD, intro-level reference).
+
+pub mod asyscd;
+pub mod cocoa;
+pub mod pegasos;
+
+pub use asyscd::Asyscd;
+pub use cocoa::Cocoa;
+pub use pegasos::Pegasos;

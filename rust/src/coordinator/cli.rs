@@ -1,0 +1,115 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image):
+//! `passcode <command> [--key value]...`.
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    /// `--key value` pairs, `--flag` becomes `("flag", "true")`.
+    pub options: Vec<(String, String)>,
+}
+
+impl Cli {
+    /// Parse an argv (excluding the binary name).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut it = args.iter().peekable();
+        let command = match it.next() {
+            Some(c) if !c.starts_with('-') => c.clone(),
+            _ => bail!("usage: passcode <command> [--key value]..."),
+        };
+        let mut positional = Vec::new();
+        let mut options = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let is_value = it
+                    .peek()
+                    .map(|v| !v.starts_with("--"))
+                    .unwrap_or(false);
+                if is_value {
+                    options.push((key.to_string(), it.next().unwrap().clone()));
+                } else {
+                    options.push((key.to_string(), "true".to_string()));
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        Ok(Cli { command, positional, options })
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_positionals() {
+        let c = Cli::parse(&argv(
+            "train rcv1 --threads 8 --solver passcode-wild --verbose",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "train");
+        assert_eq!(c.positional, vec!["rcv1"]);
+        assert_eq!(c.opt("threads"), Some("8"));
+        assert_eq!(c.opt("solver"), Some("passcode-wild"));
+        assert_eq!(c.opt("verbose"), Some("true"));
+        assert_eq!(c.opt("missing"), None);
+    }
+
+    #[test]
+    fn opt_parse_defaults_and_errors() {
+        let c = Cli::parse(&argv("x --n 5")).unwrap();
+        assert_eq!(c.opt_parse("n", 1usize).unwrap(), 5);
+        assert_eq!(c.opt_parse("m", 7usize).unwrap(), 7);
+        let bad = Cli::parse(&argv("x --n five")).unwrap();
+        assert!(bad.opt_parse("n", 1usize).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_or_flag_first() {
+        assert!(Cli::parse(&[]).is_err());
+        assert!(Cli::parse(&argv("--flag")).is_err());
+    }
+
+    #[test]
+    fn later_options_win() {
+        let c = Cli::parse(&argv("x --k 1 --k 2")).unwrap();
+        assert_eq!(c.opt("k"), Some("2"));
+    }
+}

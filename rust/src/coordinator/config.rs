@@ -1,0 +1,274 @@
+//! Experiment configuration: JSON files + `--key value` CLI overrides.
+//!
+//! One [`RunConfig`] fully determines a training run (dataset analog,
+//! solver, memory model, loss, thread count, epochs, seed, …) — every
+//! metric row this repo produces is reproducible from its config dump.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::solver::{MemoryModel, Sampling};
+use crate::util::Json;
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Serial DCD (Algorithm 1), shrinking off.
+    Dcd,
+    /// Serial DCD with shrinking = the paper's LIBLINEAR baseline.
+    Liblinear,
+    /// PASSCoDe with the given memory model.
+    Passcode(MemoryModel),
+    /// CoCoA (β_K = 1, local DCD).
+    Cocoa,
+    /// AsySCD (γ = 1/2, dense Q).
+    Asyscd,
+    /// Pegasos primal SGD.
+    Pegasos,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Result<SolverKind> {
+        Ok(match s {
+            "dcd" => SolverKind::Dcd,
+            "liblinear" => SolverKind::Liblinear,
+            "passcode-lock" => SolverKind::Passcode(MemoryModel::Lock),
+            "passcode-atomic" => SolverKind::Passcode(MemoryModel::Atomic),
+            "passcode-wild" => SolverKind::Passcode(MemoryModel::Wild),
+            "cocoa" => SolverKind::Cocoa,
+            "asyscd" => SolverKind::Asyscd,
+            "pegasos" => SolverKind::Pegasos,
+            other => bail!(
+                "unknown solver {other:?}; expected one of dcd, liblinear, \
+                 passcode-{{lock,atomic,wild}}, cocoa, asyscd, pegasos"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SolverKind::Dcd => "dcd".into(),
+            SolverKind::Liblinear => "liblinear".into(),
+            SolverKind::Passcode(m) => format!("passcode-{}", m.name()),
+            SolverKind::Cocoa => "cocoa".into(),
+            SolverKind::Asyscd => "asyscd".into(),
+            SolverKind::Pegasos => "pegasos".into(),
+        }
+    }
+}
+
+/// Which loss to optimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    Hinge,
+    SquaredHinge,
+    Logistic,
+    /// Square loss (LS-SVM / ridge on folded labels).
+    Square,
+}
+
+impl LossKind {
+    pub fn parse(s: &str) -> Result<LossKind> {
+        Ok(match s {
+            "hinge" => LossKind::Hinge,
+            "squared-hinge" | "squared_hinge" | "l2svm" => LossKind::SquaredHinge,
+            "logistic" | "logreg" => LossKind::Logistic,
+            "square" | "ridge" | "lssvm" => LossKind::Square,
+            other => bail!("unknown loss {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Hinge => "hinge",
+            LossKind::SquaredHinge => "squared-hinge",
+            LossKind::Logistic => "logistic",
+            LossKind::Square => "square",
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Registry dataset name (or a path to a LIBSVM file, see `data_path`).
+    pub dataset: String,
+    /// Optional explicit LIBSVM path overriding the registry.
+    pub data_path: Option<String>,
+    /// Scale factor in (0, 1] applied to the registry analog.
+    pub scale: f64,
+    pub solver: SolverKind,
+    pub loss: LossKind,
+    /// Penalty C; `None` = registry default for the dataset.
+    pub c: Option<f64>,
+    pub threads: usize,
+    pub epochs: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub shrinking: bool,
+    pub sampling: Sampling,
+    pub pin_threads: bool,
+    /// Evaluate through the AOT/PJRT path as well (cross-check).
+    pub aot_eval: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "rcv1".into(),
+            data_path: None,
+            scale: 1.0,
+            solver: SolverKind::Passcode(MemoryModel::Wild),
+            loss: LossKind::Hinge,
+            c: None,
+            threads: 4,
+            epochs: 20,
+            eval_every: 1,
+            seed: 42,
+            shrinking: false,
+            sampling: Sampling::Permutation,
+            pin_threads: false,
+            aot_eval: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a single `key value` override (the CLI surface).  Keys may
+    /// use `-` or `_` separators (JSON dumps use `_`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let key = key.replace('_', "-");
+        match key.as_str() {
+            "dataset" => self.dataset = value.into(),
+            "data-path" => self.data_path = Some(value.into()),
+            "scale" => self.scale = value.parse()?,
+            "solver" => self.solver = SolverKind::parse(value)?,
+            "loss" => self.loss = LossKind::parse(value)?,
+            "c" => self.c = Some(value.parse()?),
+            "threads" => self.threads = value.parse()?,
+            "epochs" => self.epochs = value.parse()?,
+            "eval-every" => self.eval_every = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "shrinking" => self.shrinking = value.parse()?,
+            "sampling" => {
+                self.sampling = match value {
+                    "permutation" => Sampling::Permutation,
+                    "replacement" => Sampling::WithReplacement,
+                    other => bail!("unknown sampling {other:?}"),
+                }
+            }
+            "pin-threads" => self.pin_threads = value.parse()?,
+            "aot-eval" => self.aot_eval = value.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON object (string keys matching [`RunConfig::set`]).
+    pub fn from_json(json: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for (k, v) in json.as_obj()? {
+            if matches!(v, Json::Null) {
+                continue; // null = keep default
+            }
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => bail!("config key {k}: unsupported value {other:?}"),
+            };
+            cfg.set(k, &s)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load a JSON config file.
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {path}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize for provenance logging.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("scale", Json::num(self.scale)),
+            ("solver", Json::str(&self.solver.name())),
+            ("loss", Json::str(self.loss.name())),
+            (
+                "c",
+                self.c.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("threads", Json::num(self.threads as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("shrinking", Json::Bool(self.shrinking)),
+            (
+                "sampling",
+                Json::str(match self.sampling {
+                    Sampling::Permutation => "permutation",
+                    Sampling::WithReplacement => "replacement",
+                }),
+            ),
+            ("pin_threads", Json::Bool(self.pin_threads)),
+            ("aot_eval", Json::Bool(self.aot_eval)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_kinds_roundtrip() {
+        for s in [
+            "dcd", "liblinear", "passcode-lock", "passcode-atomic",
+            "passcode-wild", "cocoa", "asyscd", "pegasos",
+        ] {
+            assert_eq!(SolverKind::parse(s).unwrap().name(), s);
+        }
+        assert!(SolverKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = RunConfig::default();
+        c.set("dataset", "webspam").unwrap();
+        c.set("threads", "10").unwrap();
+        c.set("solver", "cocoa").unwrap();
+        c.set("c", "0.5").unwrap();
+        c.set("sampling", "replacement").unwrap();
+        assert_eq!(c.dataset, "webspam");
+        assert_eq!(c.threads, 10);
+        assert_eq!(c.solver, SolverKind::Cocoa);
+        assert_eq!(c.c, Some(0.5));
+        assert_eq!(c.sampling, Sampling::WithReplacement);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.set("solver", "passcode-atomic").unwrap();
+        c.set("epochs", "7").unwrap();
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.solver.name(), "passcode-atomic");
+        assert_eq!(c2.epochs, 7);
+        assert_eq!(c2.dataset, c.dataset);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_keys() {
+        let j = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

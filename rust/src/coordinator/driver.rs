@@ -1,0 +1,248 @@
+//! The experiment driver: dataset loading, solver dispatch, per-epoch
+//! evaluation, and provenance — one [`RunConfig`] in, one [`RunOutput`]
+//! out.  Every bench and example funnels through here.
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{Asyscd, Cocoa, Pegasos};
+use crate::data::{libsvm, registry, Dataset};
+use crate::eval;
+use crate::loss::{Hinge, Logistic, Loss, Square, SquaredHinge};
+use crate::solver::{
+    Passcode, Progress, SerialDcd, SolveOptions, SolveResult,
+};
+
+use super::config::{LossKind, RunConfig, SolverKind};
+use super::metrics::{MetricRow, MetricsLog};
+
+/// Everything a run produces.
+#[derive(Debug)]
+pub struct RunOutput {
+    pub config: RunConfig,
+    pub result: SolveResult,
+    pub metrics: MetricsLog,
+    /// Test accuracy predicting with the maintained ŵ.
+    pub acc_what: f64,
+    /// Test accuracy predicting with w̄ = Σ α_i x_i (Table 2's contrast).
+    pub acc_wbar: f64,
+    /// Final primal objective P(ŵ) on the training set.
+    pub primal_final: f64,
+    /// Final duality gap (projected α).
+    pub gap_final: f64,
+}
+
+/// Load the dataset pair for a config.
+pub fn load_data(cfg: &RunConfig) -> Result<(Dataset, Dataset, f64)> {
+    if let Some(path) = &cfg.data_path {
+        let ds = libsvm::load(path)?;
+        let (tr, te) = ds.split(0.2, cfg.seed);
+        let c = cfg.c.unwrap_or(1.0);
+        return Ok((tr, te, c));
+    }
+    let (tr, te, c_default) = registry::load(&cfg.dataset, cfg.scale)?;
+    Ok((tr, te, cfg.c.unwrap_or(c_default)))
+}
+
+/// Run a config end to end.
+pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
+    let (train, test, c) = load_data(cfg)?;
+    match cfg.loss {
+        LossKind::Hinge => run_with_loss(cfg, &train, &test, Hinge::new(c)),
+        LossKind::SquaredHinge => {
+            run_with_loss(cfg, &train, &test, SquaredHinge::new(c))
+        }
+        LossKind::Logistic => {
+            run_with_loss(cfg, &train, &test, Logistic::new(c))
+        }
+        LossKind::Square => {
+            run_with_loss(cfg, &train, &test, Square::new(c))
+        }
+    }
+}
+
+fn run_with_loss<L: Loss>(
+    cfg: &RunConfig,
+    train: &Dataset,
+    test: &Dataset,
+    loss: L,
+) -> Result<RunOutput> {
+    let opts = SolveOptions {
+        epochs: cfg.epochs,
+        seed: cfg.seed,
+        shrinking: cfg.shrinking
+            || matches!(cfg.solver, SolverKind::Liblinear),
+        sampling: cfg.sampling,
+        threads: cfg.threads,
+        pin_threads: cfg.pin_threads,
+        eval_every: cfg.eval_every,
+    };
+
+    let mut metrics = MetricsLog::new(cfg.solver.name());
+    // Evaluation runs inside the progress callback while workers hold an
+    // epoch barrier; subtract its cumulative cost from reported times so
+    // the curves measure *training* seconds (paper §5.3 protocol).
+    let mut eval_overhead = 0.0f64;
+    let mut callback = |p: &Progress<'_>| -> bool {
+        let t0 = crate::util::Timer::start();
+        let primal = eval::primal_objective(train, &loss, p.w);
+        let dual = eval::dual_objective(train, &loss, p.alpha);
+        let gap = eval::duality_gap(train, &loss, p.alpha);
+        let test_acc = eval::accuracy(test, p.w);
+        metrics.push(MetricRow {
+            epoch: p.epoch,
+            train_secs: (p.train_secs - eval_overhead).max(0.0),
+            primal,
+            dual,
+            gap,
+            test_acc,
+        });
+        eval_overhead += t0.secs();
+        true
+    };
+
+    let has_eval = cfg.eval_every > 0;
+    let cb: Option<&mut crate::solver::ProgressFn<'_>> =
+        if has_eval { Some(&mut callback) } else { None };
+
+    let result: SolveResult = match cfg.solver {
+        SolverKind::Dcd | SolverKind::Liblinear => {
+            SerialDcd::solve(train, &loss, &opts, cb)
+        }
+        SolverKind::Passcode(model) => {
+            Passcode::solve(train, &loss, model, &opts, cb)
+        }
+        SolverKind::Cocoa => Cocoa::solve(train, &loss, &opts, cb),
+        SolverKind::Asyscd => Asyscd::default()
+            .solve(train, &loss, &opts, cb)
+            .context("AsySCD failed (dense Q guard?)")?,
+        SolverKind::Pegasos => {
+            if loss.name() != "hinge" {
+                bail!("Pegasos baseline supports hinge loss only");
+            }
+            Pegasos::new(
+                // recover C from the loss (hinge) via its primal at z=0
+                loss.primal(0.0),
+            )
+            .solve(train, &opts, cb)
+        }
+    };
+
+    let acc_what = eval::accuracy(test, &result.w_hat);
+    let wbar = eval::wbar_from_alpha(train, &result.alpha);
+    let acc_wbar = eval::accuracy(test, &wbar);
+    let primal_final = eval::primal_objective(train, &loss, &result.w_hat);
+    let gap_final = eval::duality_gap(train, &loss, &result.alpha);
+
+    Ok(RunOutput {
+        config: cfg.clone(),
+        result,
+        metrics,
+        acc_what,
+        acc_wbar,
+        primal_final,
+        gap_final,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::MemoryModel;
+
+    fn base() -> RunConfig {
+        RunConfig {
+            dataset: "rcv1".into(),
+            scale: 0.02,
+            epochs: 10,
+            threads: 2,
+            eval_every: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn driver_runs_passcode_wild() {
+        let out = run(&base()).unwrap();
+        assert_eq!(out.metrics.rows.len(), 5);
+        assert!(out.acc_what > 0.7, "acc {}", out.acc_what);
+        assert!(out.gap_final >= -1e-9);
+        // metrics rows are in epoch order with nondecreasing time
+        for w in out.metrics.rows.windows(2) {
+            assert!(w[1].epoch > w[0].epoch);
+            assert!(w[1].train_secs >= w[0].train_secs - 1e-9);
+        }
+    }
+
+    #[test]
+    fn driver_runs_every_solver() {
+        for solver in [
+            SolverKind::Dcd,
+            SolverKind::Liblinear,
+            SolverKind::Passcode(MemoryModel::Atomic),
+            SolverKind::Cocoa,
+            SolverKind::Pegasos,
+        ] {
+            let mut cfg = base();
+            cfg.solver = solver;
+            cfg.epochs = 3;
+            let out = run(&cfg).unwrap();
+            assert!(
+                out.primal_final.is_finite(),
+                "{:?} returned junk",
+                solver
+            );
+        }
+    }
+
+    #[test]
+    fn asyscd_runs_on_tiny_news20() {
+        let cfg = RunConfig {
+            dataset: "news20".into(),
+            scale: 0.05,
+            solver: SolverKind::Asyscd,
+            epochs: 5,
+            threads: 2,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert!(out.primal_final.is_finite());
+    }
+
+    #[test]
+    fn asyscd_oom_guard_fires_at_full_scale() {
+        let cfg = RunConfig {
+            dataset: "kddb".into(),
+            scale: 1.0,
+            solver: SolverKind::Asyscd,
+            epochs: 1,
+            eval_every: 0,
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err(), "expected the dense-Q memory guard");
+    }
+
+    #[test]
+    fn squared_hinge_and_logistic_dispatch() {
+        for loss in [
+            LossKind::SquaredHinge,
+            LossKind::Logistic,
+            LossKind::Square,
+        ] {
+            let mut cfg = base();
+            cfg.loss = loss;
+            cfg.epochs = 3;
+            cfg.solver = SolverKind::Dcd;
+            let out = run(&cfg).unwrap();
+            assert!(out.primal_final.is_finite());
+        }
+    }
+
+    #[test]
+    fn pegasos_rejects_non_hinge() {
+        let mut cfg = base();
+        cfg.solver = SolverKind::Pegasos;
+        cfg.loss = LossKind::Logistic;
+        assert!(run(&cfg).is_err());
+    }
+}

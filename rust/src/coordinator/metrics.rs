@@ -1,0 +1,213 @@
+//! Metric logging: per-epoch rows, CSV/JSON export, and the aligned text
+//! tables the bench harness prints (no external plotting here — the CSV
+//! is the figure data).
+
+use std::fmt::Write as _;
+
+use crate::util::Json;
+
+/// One evaluation snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRow {
+    pub epoch: usize,
+    /// Training seconds so far (excl. init).
+    pub train_secs: f64,
+    /// P(ŵ) — the paper plots this even for Wild (§5.1).
+    pub primal: f64,
+    /// D(α).
+    pub dual: f64,
+    /// P(w̄) + D(α) ≥ 0.
+    pub gap: f64,
+    /// Test accuracy with the maintained ŵ.
+    pub test_acc: f64,
+}
+
+/// A labeled series of metric rows.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    pub label: String,
+    pub rows: Vec<MetricRow>,
+}
+
+impl MetricsLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: MetricRow) {
+        self.rows.push(row);
+    }
+
+    /// First training time (secs) at which the primal objective dips
+    /// under `threshold`; `None` if never.
+    pub fn time_to_primal(&self, threshold: f64) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.primal <= threshold)
+            .map(|r| r.train_secs)
+    }
+
+    /// First training time at which test accuracy reaches `threshold`.
+    pub fn time_to_accuracy(&self, threshold: f64) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.test_acc >= threshold)
+            .map(|r| r.train_secs)
+    }
+
+    pub fn final_row(&self) -> Option<&MetricRow> {
+        self.rows.last()
+    }
+
+    /// CSV with a header; `label` becomes the first column.
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("label,epoch,train_secs,primal,dual,gap,test_acc\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6},{:.8},{:.8},{:.3e},{:.5}",
+                self.label, r.epoch, r.train_secs, r.primal, r.dual, r.gap,
+                r.test_acc
+            );
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("epoch", Json::num(r.epoch as f64)),
+                                ("train_secs", Json::num(r.train_secs)),
+                                ("primal", Json::num(r.primal)),
+                                ("dual", Json::num(r.dual)),
+                                ("gap", Json::num(r.gap)),
+                                ("test_acc", Json::num(r.test_acc)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Minimal fixed-width text table (bench harness output).
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let _ = write!(out, "{:<w$}", c, w = width[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &width, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (cols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &width, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> MetricsLog {
+        let mut m = MetricsLog::new("test");
+        for e in 1..=3 {
+            m.push(MetricRow {
+                epoch: e,
+                train_secs: e as f64 * 0.5,
+                primal: 10.0 / e as f64,
+                dual: -9.0,
+                gap: 1.0 / e as f64,
+                test_acc: 0.8 + 0.05 * e as f64,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn thresholds() {
+        let m = log();
+        assert_eq!(m.time_to_primal(5.0), Some(1.0)); // epoch 2
+        assert_eq!(m.time_to_primal(1.0), None);
+        assert_eq!(m.time_to_accuracy(0.9), Some(1.0));
+        assert_eq!(m.final_row().unwrap().epoch, 3);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = log().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("label,epoch"));
+        assert!(lines[1].starts_with("test,1,"));
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let j = log().to_json();
+        let txt = j.to_pretty();
+        let back = crate::util::Json::parse(&txt).unwrap();
+        assert_eq!(back.get("label").unwrap().as_str().unwrap(), "test");
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+        // all data lines same length
+        let lens: Vec<usize> =
+            s.lines().map(|l| l.trim_end().len()).collect();
+        assert!(lens[2] >= 8);
+    }
+}

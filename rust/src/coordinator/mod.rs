@@ -1,0 +1,16 @@
+//! Coordinator: configs, the experiment driver, metric logging, the
+//! experiment registry (one entry per paper table/figure), and the CLI.
+
+pub mod cli;
+pub mod config;
+pub mod driver;
+pub mod experiments;
+pub mod metrics;
+pub mod model_io;
+pub mod tuning;
+
+pub use cli::Cli;
+pub use config::{LossKind, RunConfig, SolverKind};
+pub use driver::{run, RunOutput};
+pub use metrics::{MetricRow, MetricsLog, TextTable};
+pub use model_io::Model;

@@ -1,0 +1,212 @@
+//! Trained-model serialization: save/load `ŵ` (plus provenance) as JSON,
+//! and a batch prediction service over LIBSVM files — the deployment
+//! surface a downstream user of this library actually touches
+//! (`passcode train --save-model m.json` → `passcode predict`).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::util::Json;
+
+use super::config::RunConfig;
+
+/// A trained linear model with provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    /// The maintained primal vector ŵ (Theorem 3's correct predictor).
+    pub w: Vec<f64>,
+    /// Loss name ("hinge", …).
+    pub loss: String,
+    /// Penalty parameter.
+    pub c: f64,
+    /// Solver that produced it (for logs only).
+    pub solver: String,
+    /// Training-set name.
+    pub dataset: String,
+}
+
+impl Model {
+    /// Build from a finished run.
+    pub fn from_run(cfg: &RunConfig, c: f64, w: Vec<f64>) -> Model {
+        Model {
+            w,
+            loss: cfg.loss.name().to_string(),
+            c,
+            solver: cfg.solver.name(),
+            dataset: cfg.dataset.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("passcode-model-v1")),
+            ("loss", Json::str(&self.loss)),
+            ("c", Json::num(self.c)),
+            ("solver", Json::str(&self.solver)),
+            ("dataset", Json::str(&self.dataset)),
+            ("d", Json::num(self.w.len() as f64)),
+            ("w", Json::arr_f64(&self.w)),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<Model> {
+        ensure!(
+            json.get("format")?.as_str()? == "passcode-model-v1",
+            "not a passcode model file"
+        );
+        let w: Vec<f64> = json
+            .get("w")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Result<_>>()?;
+        ensure!(
+            w.len() == json.get("d")?.as_usize()?,
+            "model dimension mismatch"
+        );
+        Ok(Model {
+            w,
+            loss: json.get("loss")?.as_str()?.to_string(),
+            c: json.get("c")?.as_f64()?,
+            solver: json.get("solver")?.as_str()?.to_string(),
+            dataset: json.get("dataset")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())
+            .with_context(|| format!("write {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Model> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Model::from_json(&Json::parse(&text)?)
+    }
+
+    /// Margin of a sparse row given as (indices, values) — raw,
+    /// *unfolded* features.
+    pub fn margin(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        let mut m = 0.0;
+        for (j, v) in idx.iter().zip(vals) {
+            let j = *j as usize;
+            if j < self.w.len() {
+                m += self.w[j] * v;
+            }
+        }
+        m
+    }
+
+    /// Batch prediction over a (folded) dataset: returns (accuracy,
+    /// predictions as ±1).
+    pub fn predict_dataset(&self, ds: &Dataset) -> (f64, Vec<f64>) {
+        let mut preds = Vec::with_capacity(ds.n());
+        let mut correct = 0usize;
+        for i in 0..ds.n() {
+            let (idx, vals) = ds.x.row(i);
+            // rows are folded (x = y·ẋ): recover the raw margin sign
+            let folded_margin: f64 = idx
+                .iter()
+                .zip(vals)
+                .map(|(j, v)| {
+                    let j = *j as usize;
+                    if j < self.w.len() {
+                        self.w[j] * v
+                    } else {
+                        0.0
+                    }
+                })
+                .sum();
+            // folded margin > 0 ⇔ prediction matches the label
+            let label = ds.y[i];
+            let pred = if folded_margin > 0.0 { label } else { -label };
+            if pred == label {
+                correct += 1;
+            }
+            preds.push(pred);
+        }
+        (correct as f64 / ds.n().max(1) as f64, preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::RunConfig;
+    use crate::coordinator::driver;
+    use crate::data::registry;
+
+    fn trained() -> (Model, RunConfig) {
+        let cfg = RunConfig {
+            dataset: "rcv1".into(),
+            scale: 0.02,
+            epochs: 10,
+            threads: 2,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let out = driver::run(&cfg).unwrap();
+        (Model::from_run(&cfg, 1.0, out.result.w_hat), cfg)
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_model() {
+        let (m, _) = trained();
+        let j = m.to_json().to_pretty();
+        let back = Model::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let (m, _) = trained();
+        let dir = std::env::temp_dir().join("passcode_model_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        assert_eq!(m.w.len(), back.w.len());
+        assert_eq!(m.solver, back.solver);
+    }
+
+    #[test]
+    fn rejects_foreign_json() {
+        assert!(Model::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"format":"passcode-model-v1","loss":"hinge","c":1,
+                      "solver":"dcd","dataset":"x","d":3,"w":[1,2]}"#;
+        assert!(Model::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn predict_matches_training_accuracy() {
+        let cfg = RunConfig {
+            dataset: "rcv1".into(),
+            scale: 0.02,
+            epochs: 10,
+            threads: 2,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let out = driver::run(&cfg).unwrap();
+        let m = Model::from_run(&cfg, 1.0, out.result.w_hat.clone());
+        let (_, test, _) = registry::load("rcv1", 0.02).unwrap();
+        let (acc, preds) = m.predict_dataset(&test);
+        assert!((acc - out.acc_what).abs() < 1e-9);
+        assert_eq!(preds.len(), test.n());
+        assert!(preds.iter().all(|&p| p == 1.0 || p == -1.0));
+    }
+
+    #[test]
+    fn margin_ignores_out_of_range_features() {
+        let m = Model {
+            w: vec![1.0, 2.0],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "dcd".into(),
+            dataset: "t".into(),
+        };
+        assert_eq!(m.margin(&[0, 5], &[1.0, 100.0]), 1.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Labeled dataset container with the paper's label-folding convention.
+//!
+//! Throughout the paper `x_i = y_i ẋ_i` — labels are folded into the rows,
+//! so the margin `w·x_i > 0` means a correct prediction and the hinge loss
+//! is `C·max(0, 1 − w·x_i)`.  [`Dataset`] stores the *folded* matrix plus
+//! the raw labels (for bookkeeping and LIBSVM round-trips).
+
+use super::sparse::CsrMatrix;
+use crate::util::Pcg32;
+
+/// A binary-classification dataset, rows label-folded.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Folded design matrix (`x_i = y_i ẋ_i`).
+    pub x: CsrMatrix,
+    /// Raw labels in {-1, +1}, `len == x.rows()`.
+    pub y: Vec<f64>,
+    /// Human-readable name for logs/metrics.
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: CsrMatrix, y: Vec<f64>, name: impl Into<String>) -> Self {
+        assert_eq!(x.rows(), y.len());
+        assert!(y.iter().all(|&l| l == 1.0 || l == -1.0), "labels must be ±1");
+        Self { x, y, name: name.into() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Split into (train, test) with `test_frac` of rows held out,
+    /// deterministically from `seed`.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let n = self.n();
+        let mut rng = Pcg32::new(seed, 0xDA7A);
+        let perm = rng.permutation(n);
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let (test_rows, train_rows) = perm.split_at(n_test);
+        let take = |rows: &[usize], tag: &str| {
+            Dataset::new(
+                self.x.select_rows(rows),
+                rows.iter().map(|&i| self.y[i]).collect(),
+                format!("{}-{tag}", self.name),
+            )
+        };
+        (take(train_rows, "train"), take(test_rows, "test"))
+    }
+
+    /// Fraction of rows with margin > 0 under `w` (accuracy on folded rows).
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        let correct = (0..self.n())
+            .filter(|&i| self.x.row_dot_dense(i, w) > 0.0)
+            .count();
+        correct as f64 / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Entry;
+
+    fn toy() -> Dataset {
+        // Folded rows: positive class at +e0, negative at -e1 (folded:
+        // -1 * (+e1) = -e1 ... keep it simple: rows already folded).
+        let x = CsrMatrix::from_rows(
+            &[
+                vec![Entry { index: 0, value: 1.0 }],
+                vec![Entry { index: 1, value: 1.0 }],
+                vec![Entry { index: 0, value: 0.5 }],
+                vec![Entry { index: 1, value: -0.5 }],
+            ],
+            2,
+        );
+        Dataset::new(x, vec![1.0, -1.0, 1.0, -1.0], "toy")
+    }
+
+    #[test]
+    fn dims() {
+        let d = toy();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.d(), 2);
+    }
+
+    #[test]
+    fn accuracy_counts_positive_margins() {
+        let d = toy();
+        // w = (1, 1): margins = [1, 1, .5, -.5] -> 3/4 correct
+        assert!((d.accuracy(&[1.0, 1.0]) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let (tr, te) = d.split(0.25, 7);
+        assert_eq!(tr.n() + te.n(), d.n());
+        assert_eq!(te.n(), 1);
+        assert_eq!(tr.d(), d.d());
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let d = toy();
+        let (a, _) = d.split(0.5, 3);
+        let (b, _) = d.split(0.5, 3);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        let x = CsrMatrix::from_rows(&[vec![]], 1);
+        Dataset::new(x, vec![0.5], "bad");
+    }
+}

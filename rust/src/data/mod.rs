@@ -1,0 +1,14 @@
+//! Data substrate: CSR sparse matrices, the LIBSVM format, labeled
+//! datasets (label-folded, paper convention), synthetic generators, and
+//! the Table-3 analog registry.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod registry;
+pub mod sparse;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use registry::{load as load_dataset, spec as dataset_spec, DatasetSpec, REGISTRY};
+pub use sparse::{CsrMatrix, Entry};
+pub use synthetic::SyntheticSpec;

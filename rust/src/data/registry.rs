@@ -1,0 +1,198 @@
+//! Named dataset registry — the Table 3 analogs.
+//!
+//! Each entry mirrors one of the paper's five benchmark datasets, scaled
+//! 10–100× down so the full experiment suite runs on this 1-core host
+//! (DESIGN.md §3).  The *ratios* that drive (PASS)DCD behaviour — n vs d,
+//! sparsity, density regime — follow Table 3; `C` values are the paper's.
+
+use anyhow::{bail, Result};
+
+use super::dataset::Dataset;
+use super::synthetic::{generate_dense, SyntheticSpec};
+
+/// A registry entry: how to produce the dataset and its experiment config.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// The paper dataset this stands in for.
+    pub paper_analog: &'static str,
+    /// Paper's penalty parameter C (Table 3).
+    pub c: f64,
+    /// Held-out fraction (approximates the paper's ñ/n ratio).
+    pub test_frac: f64,
+    /// Shape parameters.
+    pub n: usize,
+    pub d: usize,
+    pub avg_nnz: f64,
+    pub dense: bool,
+    pub zipf_exponent: f64,
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+/// All registered analogs, in the paper's Table 3 order.
+pub const REGISTRY: &[DatasetSpec] = &[
+    DatasetSpec {
+        name: "news20",
+        paper_analog: "news20 (n=16k, d=1.36M, d̄=455.5, C=2)",
+        c: 2.0,
+        test_frac: 0.2,
+        n: 6_000,
+        d: 40_000,
+        avg_nnz: 80.0,
+        dense: false,
+        zipf_exponent: 1.1,
+        label_noise: 0.01,
+        seed: 20,
+    },
+    DatasetSpec {
+        name: "covtype",
+        paper_analog: "covtype (n=500k, d=54, d̄=11.9, C=0.0625)",
+        c: 0.0625,
+        test_frac: 0.14,
+        n: 24_000,
+        d: 54,
+        avg_nnz: 54.0,
+        dense: true,
+        zipf_exponent: 0.0,
+        label_noise: 0.12,
+        seed: 54,
+    },
+    DatasetSpec {
+        name: "rcv1",
+        paper_analog: "rcv1 (n=677k, d=47k, d̄=73.2, C=1)",
+        c: 1.0,
+        test_frac: 0.03,
+        n: 20_000,
+        d: 15_000,
+        avg_nnz: 60.0,
+        dense: false,
+        zipf_exponent: 1.2,
+        label_noise: 0.015,
+        seed: 1,
+    },
+    DatasetSpec {
+        name: "webspam",
+        paper_analog: "webspam (n=280k, d=16.6M, d̄=3727.7, C=1)",
+        c: 1.0,
+        test_frac: 0.25,
+        n: 8_000,
+        d: 60_000,
+        avg_nnz: 350.0,
+        dense: false,
+        zipf_exponent: 0.9,
+        label_noise: 0.005,
+        seed: 2,
+    },
+    DatasetSpec {
+        name: "kddb",
+        paper_analog: "kddb (n=19.3M, d=29.9M, d̄=29.4, C=1)",
+        c: 1.0,
+        test_frac: 0.04,
+        n: 60_000,
+        d: 150_000,
+        avg_nnz: 25.0,
+        dense: false,
+        zipf_exponent: 1.25,
+        label_noise: 0.08,
+        seed: 3,
+    },
+];
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Result<&'static DatasetSpec> {
+    REGISTRY
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            let names: Vec<_> = REGISTRY.iter().map(|s| s.name).collect();
+            anyhow::anyhow!("unknown dataset {name:?}; known: {names:?}")
+        })
+}
+
+impl DatasetSpec {
+    /// Generate the full dataset (train + test together).
+    pub fn generate(&self) -> Dataset {
+        if self.dense {
+            generate_dense(self.name, self.n, self.d, self.label_noise, self.seed)
+        } else {
+            SyntheticSpec {
+                name: self.name.to_string(),
+                n: self.n,
+                d: self.d,
+                avg_nnz: self.avg_nnz,
+                zipf_exponent: self.zipf_exponent,
+                label_noise: self.label_noise,
+                wstar_density: 0.3,
+                seed: self.seed,
+            }
+            .generate()
+        }
+    }
+
+    /// Generate and split into (train, test).
+    pub fn load_split(&self) -> (Dataset, Dataset) {
+        self.generate().split(self.test_frac, self.seed ^ 0x7E57)
+    }
+
+    /// A reduced-size variant (for fast tests / CI smoke runs).
+    pub fn scaled(&self, factor: f64) -> DatasetSpec {
+        let mut s = self.clone();
+        s.n = ((s.n as f64) * factor).max(64.0) as usize;
+        if !s.dense {
+            s.d = ((s.d as f64) * factor.sqrt()).max(32.0) as usize;
+            s.avg_nnz = s.avg_nnz.min(s.d as f64);
+        }
+        s
+    }
+}
+
+/// Load a dataset by name with an optional scale factor.
+pub fn load(name: &str, scale: f64) -> Result<(Dataset, Dataset, f64)> {
+    let s = spec(name)?;
+    if scale <= 0.0 || scale > 1.0 {
+        bail!("scale must be in (0, 1], got {scale}");
+    }
+    let s = if scale < 1.0 { s.scaled(scale) } else { s.clone() };
+    let (tr, te) = s.load_split();
+    Ok((tr, te, s.c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_five_paper_datasets() {
+        let names: Vec<_> = REGISTRY.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["news20", "covtype", "rcv1", "webspam", "kddb"]);
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert_eq!(spec("rcv1").unwrap().c, 1.0);
+        assert_eq!(spec("covtype").unwrap().c, 0.0625);
+        assert!(spec("mnist").is_err());
+    }
+
+    #[test]
+    fn scaled_load_produces_split() {
+        let (tr, te, c) = load("rcv1", 0.05).unwrap();
+        assert!(tr.n() > te.n());
+        assert_eq!(c, 1.0);
+        assert_eq!(tr.d(), te.d());
+    }
+
+    #[test]
+    fn covtype_analog_is_dense() {
+        let s = spec("covtype").unwrap().scaled(0.02);
+        let ds = s.generate();
+        assert_eq!(ds.x.avg_nnz(), ds.d() as f64);
+    }
+
+    #[test]
+    fn load_rejects_bad_scale() {
+        assert!(load("rcv1", 0.0).is_err());
+        assert!(load("rcv1", 2.0).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Compressed sparse row (CSR) matrix — the data substrate every solver
+//! walks.  Indices are `u32` (paper-scale feature spaces fit), values
+//! `f64` (the solvers accumulate in double precision like LIBLINEAR).
+
+/// One nonzero entry of a sparse row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub index: u32,
+    pub value: f64,
+}
+
+/// CSR sparse matrix.
+#[derive(Debug, Clone, Default)]
+pub struct CsrMatrix {
+    /// Row start offsets, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, CSR order (strictly increasing within a row).
+    indices: Vec<u32>,
+    /// Nonzero values, parallel to `indices`.
+    values: Vec<f64>,
+    /// Number of columns.
+    cols: usize,
+}
+
+impl CsrMatrix {
+    /// Build from per-row entry lists. Column count is `cols`; every index
+    /// must be `< cols` and strictly increasing within a row.
+    pub fn from_rows(rows: &[Vec<Entry>], cols: usize) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for row in rows {
+            let mut prev: i64 = -1;
+            for e in row {
+                assert!(
+                    (e.index as usize) < cols,
+                    "index {} out of bounds (cols={cols})",
+                    e.index
+                );
+                assert!(
+                    (e.index as i64) > prev,
+                    "indices must be strictly increasing within a row"
+                );
+                prev = e.index as i64;
+                indices.push(e.index);
+                values.push(e.value);
+            }
+            indptr.push(indices.len());
+        }
+        Self { indptr, indices, values, cols }
+    }
+
+    /// Build directly from raw CSR arrays (trusted caller).
+    pub fn from_raw(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        cols: usize,
+    ) -> Self {
+        assert!(!indptr.is_empty());
+        assert_eq!(indices.len(), values.len());
+        assert_eq!(*indptr.last().unwrap(), indices.len());
+        Self { indptr, indices, values, cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Average nonzeros per row (the paper's `d̄` in Table 3).
+    pub fn avg_nnz(&self) -> f64 {
+        if self.rows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows() as f64
+        }
+    }
+
+    /// Index/value slices of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Squared 2-norm of row `i`.
+    pub fn row_sqnorm(&self, i: usize) -> f64 {
+        let (_, vals) = self.row(i);
+        vals.iter().map(|v| v * v).sum()
+    }
+
+    /// All row squared norms (the `Q_ii = ||x_i||^2` precomputation of
+    /// Algorithm 1; one pass over the data, counted as init time).
+    pub fn all_row_sqnorms(&self) -> Vec<f64> {
+        (0..self.rows()).map(|i| self.row_sqnorm(i)).collect()
+    }
+
+    /// Sparse dot `x_i . w` against a dense vector.
+    ///
+    /// Hot path of every solver (O(nnz/n) per coordinate update).  The
+    /// gather is unchecked: indices are validated once at construction
+    /// (`from_rows`) against `cols`, and `w.len() == cols` is asserted
+    /// here — see EXPERIMENTS.md §Perf iteration 2.
+    #[inline]
+    pub fn row_dot_dense(&self, i: usize, w: &[f64]) -> f64 {
+        debug_assert!(w.len() >= self.cols);
+        let (idx, vals) = self.row(i);
+        let mut acc = 0.0;
+        for (j, v) in idx.iter().zip(vals) {
+            // SAFETY: `*j < cols ≤ w.len()` enforced at construction.
+            acc += unsafe { w.get_unchecked(*j as usize) } * v;
+        }
+        acc
+    }
+
+    /// `w_out = X^T a` (dense output), used to materialize `w̄ = Σ α_i x_i`.
+    pub fn transpose_dot(&self, a: &[f64]) -> Vec<f64> {
+        assert_eq!(a.len(), self.rows());
+        let mut w = vec![0.0; self.cols];
+        for i in 0..self.rows() {
+            let ai = a[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let (idx, vals) = self.row(i);
+            for (j, v) in idx.iter().zip(vals) {
+                w[*j as usize] += ai * v;
+            }
+        }
+        w
+    }
+
+    /// Dense margins `m = X w`.
+    pub fn dot_dense(&self, w: &[f64]) -> Vec<f64> {
+        (0..self.rows()).map(|i| self.row_dot_dense(i, w)).collect()
+    }
+
+    /// Scale every row to at most unit 2-norm if `max > 1`, matching the
+    /// paper's `R_max = 1` normalization assumption. Returns the scaling
+    /// factor applied (1.0 if none).
+    pub fn normalize_rows_to_unit_max(&mut self) -> f64 {
+        let max_sq = (0..self.rows())
+            .map(|i| self.row_sqnorm(i))
+            .fold(0.0_f64, f64::max);
+        if max_sq <= 1.0 || max_sq == 0.0 {
+            return 1.0;
+        }
+        let scale = 1.0 / max_sq.sqrt();
+        for v in &mut self.values {
+            *v *= scale;
+        }
+        scale
+    }
+
+    /// Materialize row `i` into a dense f32 buffer (runtime eval path).
+    pub fn write_row_dense_f32(&self, i: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        let (idx, vals) = self.row(i);
+        for (j, v) in idx.iter().zip(vals) {
+            out[*j as usize] = *v as f32;
+        }
+    }
+
+    /// Select a subset of rows into a new matrix (dataset splits).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &i in rows {
+            let (idx, vals) = self.row(i);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { indptr, indices, values, cols: self.cols }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [0, 0, 0]]
+        CsrMatrix::from_rows(
+            &[
+                vec![Entry { index: 0, value: 1.0 }, Entry { index: 2, value: 2.0 }],
+                vec![Entry { index: 1, value: 3.0 }],
+                vec![],
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(2), 0);
+        assert!((m.avg_nnz() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        let (idx, vals) = m.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn sqnorms() {
+        let m = sample();
+        assert_eq!(m.row_sqnorm(0), 5.0);
+        assert_eq!(m.all_row_sqnorms(), vec![5.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn dots() {
+        let m = sample();
+        let w = [1.0, 2.0, 3.0];
+        assert_eq!(m.row_dot_dense(0, &w), 7.0);
+        assert_eq!(m.dot_dense(&w), vec![7.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_dot_matches_manual() {
+        let m = sample();
+        let a = [2.0, -1.0, 5.0];
+        // X^T a = [2*1, -1*3, 2*2] = [2, -3, 4]
+        assert_eq!(m.transpose_dot(&a), vec![2.0, -3.0, 4.0]);
+    }
+
+    #[test]
+    fn normalization_caps_max_row_norm() {
+        let mut m = sample();
+        let s = m.normalize_rows_to_unit_max();
+        assert!(s < 1.0);
+        let max = (0..m.rows())
+            .map(|i| m.row_sqnorm(i))
+            .fold(0.0_f64, f64::max);
+        assert!((max - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalization_noop_when_already_unit() {
+        let mut m = CsrMatrix::from_rows(
+            &[vec![Entry { index: 0, value: 0.6 }, Entry { index: 1, value: 0.8 }]],
+            2,
+        );
+        assert_eq!(m.normalize_rows_to_unit_max(), 1.0);
+    }
+
+    #[test]
+    fn dense_row_materialization() {
+        let m = sample();
+        let mut buf = vec![9f32; 3];
+        m.write_row_dense_f32(0, &mut buf);
+        assert_eq!(buf, vec![1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row_nnz(0), 0);
+        let (idx, _) = s.row(1);
+        assert_eq!(idx, &[0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn rejects_out_of_bounds_index() {
+        CsrMatrix::from_rows(&[vec![Entry { index: 5, value: 1.0 }]], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted_row() {
+        CsrMatrix::from_rows(
+            &[vec![
+                Entry { index: 2, value: 1.0 },
+                Entry { index: 1, value: 1.0 },
+            ]],
+            3,
+        );
+    }
+}

@@ -1,0 +1,258 @@
+//! Synthetic dataset generators — the data substitution layer.
+//!
+//! The paper evaluates on news20 / covtype / rcv1 / webspam / kddb
+//! (Table 3).  This offline image has none of them, so we generate
+//! *shape-matched analogs* (DESIGN.md §3): same sparsity regime, power-law
+//! feature popularity, a planted separator `w*` with controllable label
+//! noise so a linear SVM attains high accuracy, and row norms capped at 1
+//! (the paper's `R_max = 1` assumption).
+
+use super::dataset::Dataset;
+use super::sparse::{CsrMatrix, Entry};
+use crate::util::Pcg32;
+
+/// Parameters of a synthetic binary-classification problem.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub name: String,
+    /// Number of instances (train + test together).
+    pub n: usize,
+    /// Feature-space dimensionality.
+    pub d: usize,
+    /// Mean nonzeros per row (Table 3's `d̄`).
+    pub avg_nnz: f64,
+    /// Power-law exponent for feature popularity (0 = uniform; text-like
+    /// corpora sit near 1.0–1.4).
+    pub zipf_exponent: f64,
+    /// Probability a label is flipped after the planted separator votes.
+    pub label_noise: f64,
+    /// Fraction of `w*` coordinates that are nonzero.
+    pub wstar_density: f64,
+    /// RNG seed (every dataset is reproducible from its spec).
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// Generate the dataset.
+    ///
+    /// Construction: feature `j` is drawn with probability ∝ `(j+1)^-z`
+    /// (shuffled so popularity is not index-correlated), values are
+    /// N(0,1)-scaled; a sparse `w*` is planted, labels are
+    /// `sign(w*.x + noise)` with `label_noise` random flips, rows are
+    /// folded (`x_i ← y_i x_i`) and globally rescaled so max ||x_i|| = 1.
+    pub fn generate(&self) -> Dataset {
+        assert!(self.n > 0 && self.d > 0);
+        assert!(self.avg_nnz >= 1.0 && self.avg_nnz <= self.d as f64);
+        let mut rng = Pcg32::new(self.seed, 0x5EED);
+
+        // --- feature popularity: cumulative power-law table -------------
+        let weights: Vec<f64> = (0..self.d)
+            .map(|j| 1.0 / ((j + 1) as f64).powf(self.zipf_exponent))
+            .collect();
+        let mut cum: Vec<f64> = Vec::with_capacity(self.d);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cum.push(acc);
+        }
+        let total = acc;
+        // Shuffled identity so that "popular" feature ids are scattered.
+        let mut feat_map: Vec<u32> = (0..self.d as u32).collect();
+        rng.shuffle(&mut feat_map);
+
+        // --- planted separator ------------------------------------------
+        let mut wstar = vec![0.0f64; self.d];
+        let k = ((self.d as f64) * self.wstar_density).ceil() as usize;
+        let support = rng.permutation(self.d);
+        for &j in support.iter().take(k.max(1)) {
+            wstar[j] = rng.gen_normal();
+        }
+
+        // --- rows ---------------------------------------------------------
+        let mut rows: Vec<Vec<Entry>> = Vec::with_capacity(self.n);
+        let mut labels: Vec<f64> = Vec::with_capacity(self.n);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for _ in 0..self.n {
+            // Row nnz ~ max(1, Poisson-ish around avg_nnz) via geometric
+            // mixture — cheap and produces realistic variance.
+            let lam = self.avg_nnz;
+            let jitter = 0.5 + rng.gen_f64(); // 0.5..1.5
+            let nnz = ((lam * jitter).round() as usize).clamp(1, self.d);
+            // Margin-rejection sampling: redraw rows whose planted margin
+            // is ambiguous (|w*·x| under half the conditional std) so the
+            // analogs are margin-separated like the paper's text corpora
+            // (news20/rcv1/webspam all sit near 97–99% accuracy).
+            let mut dot = 0.0;
+            for _attempt in 0..8 {
+                scratch.clear();
+                // Sample distinct features by popularity (reject dups).
+                let mut tries = 0;
+                while scratch.len() < nnz && tries < 20 * nnz {
+                    tries += 1;
+                    let u = rng.gen_f64() * total;
+                    let pos = cum.partition_point(|&c| c < u).min(self.d - 1);
+                    let f = feat_map[pos];
+                    if scratch.iter().all(|&(i, _)| i != f) {
+                        scratch.push((f, rng.gen_normal()));
+                    }
+                }
+                dot = 0.0;
+                let mut cond_var = 0.0;
+                for &(i, v) in &scratch {
+                    dot += wstar[i as usize] * v;
+                    cond_var += wstar[i as usize] * wstar[i as usize];
+                }
+                if dot.abs() >= 0.5 * cond_var.sqrt() {
+                    break;
+                }
+            }
+            scratch.sort_unstable_by_key(|&(i, _)| i);
+            let mut y = if dot >= 0.0 { 1.0 } else { -1.0 };
+            if rng.gen_f64() < self.label_noise {
+                y = -y;
+            }
+            rows.push(
+                scratch
+                    .iter()
+                    .map(|&(i, v)| Entry { index: i, value: y * v })
+                    .collect(),
+            );
+            labels.push(y);
+        }
+        let mut x = CsrMatrix::from_rows(&rows, self.d);
+        x.normalize_rows_to_unit_max();
+        Dataset::new(x, labels, self.name.clone())
+    }
+}
+
+/// Fully-dense generator (the covtype analog): every feature present.
+pub fn generate_dense(
+    name: &str,
+    n: usize,
+    d: usize,
+    label_noise: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xDE45E);
+    let wstar: Vec<f64> = (0..d).map(|_| rng.gen_normal()).collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let feats: Vec<f64> = (0..d).map(|_| rng.gen_normal()).collect();
+        let dot: f64 = feats.iter().zip(&wstar).map(|(a, b)| a * b).sum();
+        let mut y = if dot >= 0.0 { 1.0 } else { -1.0 };
+        if rng.gen_f64() < label_noise {
+            y = -y;
+        }
+        rows.push(
+            feats
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| Entry { index: j as u32, value: y * v })
+                .collect::<Vec<_>>(),
+        );
+        labels.push(y);
+    }
+    let mut x = CsrMatrix::from_rows(&rows, d);
+    x.normalize_rows_to_unit_max();
+    Dataset::new(x, labels, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "syn".into(),
+            n: 500,
+            d: 1000,
+            avg_nnz: 20.0,
+            zipf_exponent: 1.0,
+            label_noise: 0.02,
+            wstar_density: 0.2,
+            seed: 13,
+        }
+    }
+
+    #[test]
+    fn shape_matches_spec() {
+        let ds = spec().generate();
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.d(), 1000);
+        let avg = ds.x.avg_nnz();
+        assert!(
+            (avg - 20.0).abs() < 5.0,
+            "avg nnz {avg} far from requested 20"
+        );
+    }
+
+    #[test]
+    fn rows_are_unit_capped() {
+        let ds = spec().generate();
+        let max = (0..ds.n())
+            .map(|i| ds.x.row_sqnorm(i))
+            .fold(0.0_f64, f64::max);
+        assert!(max <= 1.0 + 1e-9, "max row sqnorm {max}");
+        assert!(max > 0.5, "normalization collapsed the data: {max}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = spec().generate();
+        let b = spec().generate();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.nnz(), b.x.nnz());
+    }
+
+    #[test]
+    fn both_classes_present() {
+        let ds = spec().generate();
+        let pos = ds.y.iter().filter(|&&y| y > 0.0).count();
+        assert!(pos > 50 && pos < 450, "degenerate class balance: {pos}/500");
+    }
+
+    #[test]
+    fn labels_are_learnable() {
+        // The planted separator itself must achieve well-above-chance
+        // accuracy on the folded rows (margin > 0).
+        let s = spec();
+        let ds = s.generate();
+        // Recover w* by regenerating with the same seed stream.
+        // Cheaper: train-free sanity — random w gives ~0.5, so just check
+        // *some* linear model does better: use w̄ = Σ x_i (mean of folded
+        // rows — a crude centroid classifier).
+        let ones = vec![1.0; ds.n()];
+        let centroid = ds.x.transpose_dot(&ones);
+        let acc = ds.accuracy(&centroid);
+        assert!(acc > 0.6, "centroid accuracy only {acc}");
+    }
+
+    #[test]
+    fn dense_generator_is_fully_dense() {
+        let ds = generate_dense("dense", 50, 10, 0.0, 1);
+        assert_eq!(ds.x.nnz(), 500);
+        assert_eq!(ds.x.avg_nnz(), 10.0);
+    }
+
+    #[test]
+    fn zipf_skews_feature_popularity() {
+        let mut s = spec();
+        s.zipf_exponent = 1.3;
+        s.n = 2000;
+        let ds = s.generate();
+        // Count feature frequencies; the most popular feature should be
+        // much more frequent than the median one.
+        let mut freq = vec![0usize; ds.d()];
+        for i in 0..ds.n() {
+            let (idx, _) = ds.x.row(i);
+            for &j in idx {
+                freq[j as usize] += 1;
+            }
+        }
+        freq.sort_unstable_by(|a, b| b.cmp(a));
+        let used: Vec<usize> = freq.iter().copied().filter(|&f| f > 0).collect();
+        assert!(used[0] >= 10 * used[used.len() / 2].max(1),
+            "no popularity skew: top={} median={}", used[0], used[used.len()/2]);
+    }
+}

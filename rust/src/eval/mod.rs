@@ -1,0 +1,120 @@
+//! Native (sparse, CPU) evaluation of the paper's reported quantities:
+//! primal objective P(w), dual objective D(α), duality gap, accuracy.
+//!
+//! These are the figures of merit in every plot of Section 5.  The PJRT
+//! runtime (`crate::runtime`) provides an AOT-compiled dense path for the
+//! same quantities; `rust/tests/runtime_aot.rs` cross-checks the two.
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+
+/// Primal objective `P(w) = ½‖w‖² + Σ_i ℓ_i(w·x_i)` (paper Eq. 1).
+pub fn primal_objective<L: Loss>(ds: &Dataset, loss: &L, w: &[f64]) -> f64 {
+    assert_eq!(w.len(), ds.d());
+    let reg: f64 = 0.5 * w.iter().map(|v| v * v).sum::<f64>();
+    let mut sum = 0.0;
+    for i in 0..ds.n() {
+        sum += loss.primal(ds.x.row_dot_dense(i, w));
+    }
+    reg + sum
+}
+
+/// Dual objective `D(α) = ½‖Σ_i α_i x_i‖² + Σ_i ℓ*_i(−α_i)` (paper Eq. 2).
+///
+/// α is projected onto the feasible domain before evaluating the
+/// conjugate (PASSCoDe-Wild iterates can sit epsilon outside the box).
+pub fn dual_objective<L: Loss>(ds: &Dataset, loss: &L, alpha: &[f64]) -> f64 {
+    assert_eq!(alpha.len(), ds.n());
+    let projected: Vec<f64> = alpha.iter().map(|&a| loss.project(a)).collect();
+    let wbar = ds.x.transpose_dot(&projected);
+    let reg: f64 = 0.5 * wbar.iter().map(|v| v * v).sum::<f64>();
+    let conj: f64 = projected.iter().map(|&a| loss.conjugate_neg(a)).sum();
+    reg + conj
+}
+
+/// `w̄ = Σ_i α_i x_i` — the primal vector implied by the dual iterate
+/// (paper Eq. 3/6). For PASSCoDe-Wild this *differs* from the maintained ŵ.
+pub fn wbar_from_alpha(ds: &Dataset, alpha: &[f64]) -> Vec<f64> {
+    ds.x.transpose_dot(alpha)
+}
+
+/// Duality gap `P(w(α)) + D(α)` (P(w*) = −D(α*), so the gap of a
+/// primal-dual pair is P + D ≥ 0).
+pub fn duality_gap<L: Loss>(ds: &Dataset, loss: &L, alpha: &[f64]) -> f64 {
+    let projected: Vec<f64> = alpha.iter().map(|&a| loss.project(a)).collect();
+    let wbar = ds.x.transpose_dot(&projected);
+    primal_objective(ds, loss, &wbar) + dual_objective(ds, loss, alpha)
+}
+
+/// Test accuracy: fraction of rows with positive margin (rows are folded).
+pub fn accuracy(ds: &Dataset, w: &[f64]) -> f64 {
+    ds.accuracy(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CsrMatrix, Entry};
+    use crate::loss::Hinge;
+
+    fn toy() -> Dataset {
+        let x = CsrMatrix::from_rows(
+            &[
+                vec![Entry { index: 0, value: 0.8 }],
+                vec![Entry { index: 1, value: 0.6 }],
+                vec![
+                    Entry { index: 0, value: -0.3 },
+                    Entry { index: 1, value: 0.4 },
+                ],
+            ],
+            2,
+        );
+        Dataset::new(x, vec![1.0, 1.0, -1.0], "toy")
+    }
+
+    #[test]
+    fn primal_at_zero_w_is_sum_of_losses() {
+        let ds = toy();
+        let h = Hinge::new(2.0);
+        // z = 0 for all rows: P = 0 + 3 * C*1
+        assert!((primal_objective(&ds, &h, &[0.0, 0.0]) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_at_zero_alpha_is_zero() {
+        let ds = toy();
+        let h = Hinge::new(1.0);
+        assert_eq!(dual_objective(&ds, &h, &[0.0; 3]), 0.0);
+    }
+
+    #[test]
+    fn gap_nonnegative_and_zero_only_at_optimum() {
+        let ds = toy();
+        let h = Hinge::new(1.0);
+        // Any feasible α has gap ≥ 0.
+        for a in [[0.0, 0.0, 0.0], [0.5, 0.5, 0.5], [1.0, 1.0, 1.0]] {
+            assert!(duality_gap(&ds, &h, &a) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn wbar_matches_manual_sum() {
+        let ds = toy();
+        let wbar = wbar_from_alpha(&ds, &[1.0, 2.0, 1.0]);
+        // col0: 1*0.8 + 1*(-0.3) = 0.5 ; col1: 2*0.6 + 1*0.4 = 1.6
+        assert!((wbar[0] - 0.5).abs() < 1e-12);
+        assert!((wbar[1] - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_projects_out_of_box_alphas() {
+        let ds = toy();
+        let h = Hinge::new(1.0);
+        let a_in = [0.9, 0.9, 0.9];
+        let a_out = [0.9, 1.3, -0.2]; // projected to [0.9, 1.0, 0.0]
+        let d_out = dual_objective(&ds, &h, &a_out);
+        let d_proj = dual_objective(&ds, &h, &[0.9, 1.0, 0.0]);
+        assert!((d_out - d_proj).abs() < 1e-12);
+        let _ = dual_objective(&ds, &h, &a_in); // must not panic
+    }
+}

@@ -1,0 +1,40 @@
+//! # PASSCoDe
+//!
+//! A production-grade reproduction of **"PASSCoDe: Parallel ASynchronous
+//! Stochastic dual Co-ordinate Descent"** (Hsieh, Yu & Dhillon, ICML 2015)
+//! as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: serial DCD
+//!   (Algorithm 1, = LIBLINEAR's dual solver), the PASSCoDe family
+//!   (Algorithm 2: Lock / Atomic / Wild), the CoCoA / AsySCD / Pegasos
+//!   baselines, a discrete-event multicore simulator (the hardware
+//!   substitution for the paper's 10-core testbed), datasets, metrics,
+//!   and the experiment harness behind every table and figure.
+//! * **Layer 2/1 (python/, build-time only)** — the JAX evaluation graph
+//!   and its Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **Runtime** — [`runtime`] loads those artifacts through the PJRT C
+//!   API (`xla` crate) so evaluation runs with no Python anywhere.
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use passcode::data::registry;
+//! use passcode::loss::Hinge;
+//! use passcode::solver::{MemoryModel, Passcode, SolveOptions};
+//!
+//! let (train, test, c) = registry::load("rcv1", 0.1).unwrap();
+//! let loss = Hinge::new(c);
+//! let opts = SolveOptions { threads: 4, epochs: 10, ..Default::default() };
+//! let r = Passcode::solve(&train, &loss, MemoryModel::Wild, &opts, None);
+//! println!("accuracy = {}", passcode::eval::accuracy(&test, &r.w_hat));
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod loss;
+pub mod runtime;
+pub mod simcore;
+pub mod solver;
+pub mod util;

@@ -1,0 +1,119 @@
+//! Hinge loss (L1-SVM), the paper's experimental workhorse.
+//!
+//! ```text
+//!   ℓ(z)      = C · max(0, 1 − z)
+//!   ℓ*(−α)    = −α          for α ∈ [0, C],  +∞ otherwise     (paper Eq. 10)
+//!   update    α ← Π_[0,C]( α − (w·x_i − 1) / ‖x_i‖² )
+//! ```
+
+use super::Loss;
+
+/// Hinge loss with penalty parameter `C`.
+#[derive(Debug, Clone, Copy)]
+pub struct Hinge {
+    pub c: f64,
+}
+
+impl Hinge {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0);
+        Self { c }
+    }
+}
+
+impl Loss for Hinge {
+    fn name(&self) -> &'static str {
+        "hinge"
+    }
+
+    #[inline]
+    fn primal(&self, z: f64) -> f64 {
+        self.c * (1.0 - z).max(0.0)
+    }
+
+    #[inline]
+    fn conjugate_neg(&self, alpha: f64) -> f64 {
+        debug_assert!(
+            (-1e-9..=self.c + 1e-9).contains(&alpha),
+            "alpha {alpha} outside [0, {}]",
+            self.c
+        );
+        -alpha
+    }
+
+    #[inline]
+    fn project(&self, alpha: f64) -> f64 {
+        alpha.clamp(0.0, self.c)
+    }
+
+    #[inline]
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        (alpha - (wx - 1.0) / q).clamp(0.0, self.c)
+    }
+
+    #[inline]
+    fn dual_gradient(&self, _alpha: f64, wx: f64) -> f64 {
+        wx - 1.0
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        Some(self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::brute_force_subproblem;
+
+    #[test]
+    fn primal_values() {
+        let h = Hinge::new(2.0);
+        assert_eq!(h.primal(2.0), 0.0);
+        assert_eq!(h.primal(1.0), 0.0);
+        assert_eq!(h.primal(0.0), 2.0);
+        assert_eq!(h.primal(-1.0), 4.0);
+    }
+
+    #[test]
+    fn projection_clamps() {
+        let h = Hinge::new(1.0);
+        assert_eq!(h.project(-0.5), 0.0);
+        assert_eq!(h.project(0.5), 0.5);
+        assert_eq!(h.project(1.5), 1.0);
+    }
+
+    #[test]
+    fn subproblem_matches_brute_force() {
+        let h = Hinge::new(0.75);
+        for &(alpha, wx, q) in &[
+            (0.0, -0.5, 1.0),
+            (0.2, 0.3, 0.5),
+            (0.75, 2.0, 2.0),
+            (0.4, 1.0, 0.1),
+            (0.0, 5.0, 1.0),
+        ] {
+            let got = h.solve_subproblem(alpha, wx, q);
+            let want = brute_force_subproblem(&h, alpha, wx, q, 0.0, h.c);
+            assert!(
+                (got - want).abs() < 1e-6,
+                "alpha={alpha} wx={wx} q={q}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn subproblem_fixed_point_at_optimum() {
+        // At the unconstrained optimum wx = 1, alpha should not move.
+        let h = Hinge::new(1.0);
+        assert_eq!(h.solve_subproblem(0.3, 1.0, 0.8), 0.3);
+    }
+
+    #[test]
+    fn gradient_sign() {
+        let h = Hinge::new(1.0);
+        assert!(h.dual_gradient(0.0, 2.0) > 0.0); // margin > 1: push α down
+        assert!(h.dual_gradient(0.0, 0.0) < 0.0); // violated: push α up
+    }
+}

@@ -1,0 +1,176 @@
+//! Logistic loss (ℓ2-regularized logistic regression).
+//!
+//! ```text
+//!   ℓ(z)   = C · log(1 + e^(−z))
+//!   ℓ*(−α) = α·log(α) + (C−α)·log(C−α) − C·log(C)   for α ∈ (0, C)
+//! ```
+//!
+//! The one-variable subproblem has no closed form (paper §3.1 cites
+//! Yu et al. 2012); we solve the stationarity condition
+//!
+//! ```text
+//!   g(a) = q·(a − α) + wx + log(a / (C − a)) = 0,   a ∈ (0, C)
+//! ```
+//!
+//! by safeguarded Newton (bisection fallback), 1e-12 tolerance.
+
+use super::Loss;
+
+/// Logistic loss with penalty parameter `C`.
+#[derive(Debug, Clone, Copy)]
+pub struct Logistic {
+    pub c: f64,
+}
+
+impl Logistic {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0);
+        Self { c }
+    }
+
+    /// Margin of feasibility: α is kept in [eps, C − eps].
+    #[inline]
+    fn eps(&self) -> f64 {
+        1e-12 * self.c
+    }
+}
+
+impl Loss for Logistic {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    #[inline]
+    fn primal(&self, z: f64) -> f64 {
+        // log(1 + e^-z), numerically stable both directions
+        self.c
+            * if z > 0.0 {
+                (-z).exp().ln_1p()
+            } else {
+                -z + z.exp().ln_1p()
+            }
+    }
+
+    #[inline]
+    fn conjugate_neg(&self, alpha: f64) -> f64 {
+        let c = self.c;
+        let a = alpha.clamp(self.eps(), c - self.eps());
+        a * a.ln() + (c - a) * (c - a).ln() - c * c.ln()
+    }
+
+    #[inline]
+    fn project(&self, alpha: f64) -> f64 {
+        alpha.clamp(self.eps(), self.c - self.eps())
+    }
+
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let c = self.c;
+        let eps = self.eps();
+        let alpha = alpha.clamp(eps, c - eps);
+        // g(a) = q (a − α) + wx + ln(a / (C − a)); strictly increasing.
+        let g = |a: f64| q * (a - alpha) + wx + (a / (c - a)).ln();
+        let (mut lo, mut hi) = (eps, c - eps);
+        if g(lo) >= 0.0 {
+            return lo;
+        }
+        if g(hi) <= 0.0 {
+            return hi;
+        }
+        let mut a = alpha.clamp(lo, hi);
+        for _ in 0..100 {
+            let ga = g(a);
+            if ga.abs() < 1e-12 {
+                break;
+            }
+            if ga > 0.0 {
+                hi = a;
+            } else {
+                lo = a;
+            }
+            // Newton step; g'(a) = q + C / (a (C − a))
+            let gp = q + c / (a * (c - a));
+            let mut next = a - ga / gp;
+            if !(next > lo && next < hi) {
+                next = 0.5 * (lo + hi); // bisection safeguard
+            }
+            if (next - a).abs() < 1e-15 {
+                a = next;
+                break;
+            }
+            a = next;
+        }
+        a
+    }
+
+    #[inline]
+    fn dual_gradient(&self, alpha: f64, wx: f64) -> f64 {
+        let a = self.project(alpha);
+        wx + (a / (self.c - a)).ln()
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        Some(self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::brute_force_subproblem;
+
+    #[test]
+    fn primal_is_stable_at_extremes() {
+        let l = Logistic::new(1.0);
+        assert!(l.primal(100.0) < 1e-40);
+        assert!((l.primal(-100.0) - 100.0).abs() < 1e-9);
+        assert!((l.primal(0.0) - (2.0_f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conjugate_symmetric_minimum_at_half_c() {
+        let l = Logistic::new(2.0);
+        // ℓ*(−α) is minimized at α = C/2 with value −C·log 2
+        let min = l.conjugate_neg(1.0);
+        assert!((min - (-2.0 * (2.0_f64).ln())).abs() < 1e-9);
+        assert!(l.conjugate_neg(0.5) > min);
+        assert!(l.conjugate_neg(1.5) > min);
+    }
+
+    #[test]
+    fn subproblem_matches_brute_force() {
+        let l = Logistic::new(1.0);
+        for &(alpha, wx, q) in &[
+            (0.5, -0.5, 1.0),
+            (0.1, 0.3, 0.5),
+            (0.9, 2.0, 2.0),
+            (0.5, 0.0, 0.1),
+            (0.01, -3.0, 1.0),
+        ] {
+            let got = l.solve_subproblem(alpha, wx, q);
+            let want =
+                brute_force_subproblem(&l, alpha, wx, q, 1e-9, 1.0 - 1e-9);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "alpha={alpha} wx={wx} q={q}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn solution_is_stationary() {
+        let l = Logistic::new(3.0);
+        let (alpha, wx, q) = (1.0, 0.4, 0.7);
+        let a = l.solve_subproblem(alpha, wx, q);
+        let g = q * (a - alpha) + wx + (a / (l.c - a)).ln();
+        assert!(g.abs() < 1e-9, "stationarity residual {g}");
+    }
+
+    #[test]
+    fn strongly_pushed_solution_saturates() {
+        let l = Logistic::new(1.0);
+        // Huge positive margin pushes α towards 0; huge negative towards C.
+        assert!(l.solve_subproblem(0.5, 50.0, 1.0) < 1e-6);
+        assert!(l.solve_subproblem(0.5, -50.0, 1.0) > 1.0 - 1e-6);
+    }
+}

@@ -1,0 +1,93 @@
+//! Loss library: primal losses, their conjugates, and the closed-form /
+//! Newton solvers for the one-variable dual subproblem
+//!
+//! ```text
+//!   Δα_i = argmin_δ  ½‖w + δ x_i‖² + ℓ*_i(−(α_i + δ))            (paper Eq. 4)
+//! ```
+//!
+//! which, expanding the quadratic and dropping constants, is
+//!
+//! ```text
+//!   argmin_δ  ½ q δ² + (w·x_i) δ + ℓ*_i(−(α_i + δ)),   q = ‖x_i‖².
+//! ```
+//!
+//! Rows are label-folded (`x_i = y_i ẋ_i`), so every loss is a function of
+//! the margin `z = w·x_i` and the dual variable lives in the conjugate's
+//! domain (e.g. `[0, C]` for hinge).
+
+pub mod hinge;
+pub mod logistic;
+pub mod square;
+pub mod squared_hinge;
+
+pub use hinge::Hinge;
+pub use logistic::Logistic;
+pub use square::Square;
+pub use squared_hinge::SquaredHinge;
+
+/// A loss with everything the solvers need.  Implementations are
+/// zero-sized-plus-C structs; solver loops are monomorphized over them.
+pub trait Loss: Copy + Send + Sync + 'static {
+    /// Short identifier for configs/logs.
+    fn name(&self) -> &'static str;
+
+    /// Primal loss `ℓ(z)` at margin `z = w·x_i`.
+    fn primal(&self, z: f64) -> f64;
+
+    /// Conjugate value `ℓ*(−α)`.  Callers guarantee `α` feasible
+    /// (see [`Loss::project`]); the dual objective sums this.
+    fn conjugate_neg(&self, alpha: f64) -> f64;
+
+    /// Project `α` onto the conjugate's domain (e.g. `[0, C]`).
+    fn project(&self, alpha: f64) -> f64;
+
+    /// Solve the one-variable subproblem: given the current `α_i`, the
+    /// margin `wx = w·x_i`, and `q = ‖x_i‖² > 0`, return the *new* α_i.
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64;
+
+    /// Gradient of the dual coordinate (for shrinking heuristics):
+    /// `∇_i D(α) = w·x_i + (ℓ*)'(−α_i)·(−1)` — for hinge this is
+    /// `w·x_i − 1`.  Default implementation via the subproblem is not
+    /// possible, so each loss provides it.
+    fn dual_gradient(&self, alpha: f64, wx: f64) -> f64;
+
+    /// Upper bound of the feasible dual box if finite (`Some(C)` for
+    /// hinge), used by the shrinking heuristic.
+    fn upper_bound(&self) -> Option<f64>;
+}
+
+/// Numerical safety: treat |δ| below this as a no-op update.
+pub const MIN_DELTA: f64 = 1e-16;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Loss;
+
+    /// Brute-force the subproblem minimizer by golden-section search over
+    /// the feasible interval — validates the closed-form/Newton solvers.
+    pub fn brute_force_subproblem<L: Loss>(
+        loss: &L,
+        alpha: f64,
+        wx: f64,
+        q: f64,
+        lo: f64,
+        hi: f64,
+    ) -> f64 {
+        let obj = |a: f64| {
+            let delta = a - alpha;
+            0.5 * q * delta * delta + wx * delta + loss.conjugate_neg(a)
+        };
+        let phi = (5.0_f64.sqrt() - 1.0) / 2.0;
+        let (mut a, mut b) = (lo, hi);
+        for _ in 0..200 {
+            let c = b - phi * (b - a);
+            let d = a + phi * (b - a);
+            if obj(c) < obj(d) {
+                b = d;
+            } else {
+                a = c;
+            }
+        }
+        0.5 * (a + b)
+    }
+}

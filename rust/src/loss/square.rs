@@ -1,0 +1,127 @@
+//! Square loss (LS-SVM / ridge regression on folded labels) — the
+//! "ridge regression" member of the paper's problem family (§1).
+//!
+//! ```text
+//!   ℓ(z)   = C · (1 − z)²
+//!   ℓ*(−α) = −α + α²/(4C)            (unconstrained: α ∈ ℝ)
+//! ```
+//!
+//! Identical conjugate algebra to the squared hinge but with no
+//! nonnegativity constraint, so the subproblem is an unconstrained
+//! quadratic with closed form
+//!
+//! ```text
+//!   α ← α − (wx − 1 + α/(2C)) / (q + 1/(2C)).
+//! ```
+
+use super::Loss;
+
+/// Square loss with penalty parameter `C`.
+#[derive(Debug, Clone, Copy)]
+pub struct Square {
+    pub c: f64,
+}
+
+impl Square {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0);
+        Self { c }
+    }
+}
+
+impl Loss for Square {
+    fn name(&self) -> &'static str {
+        "square"
+    }
+
+    #[inline]
+    fn primal(&self, z: f64) -> f64 {
+        let r = 1.0 - z;
+        self.c * r * r
+    }
+
+    #[inline]
+    fn conjugate_neg(&self, alpha: f64) -> f64 {
+        -alpha + alpha * alpha / (4.0 * self.c)
+    }
+
+    #[inline]
+    fn project(&self, alpha: f64) -> f64 {
+        alpha // unconstrained
+    }
+
+    #[inline]
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let inv2c = 1.0 / (2.0 * self.c);
+        alpha - (wx - 1.0 + alpha * inv2c) / (q + inv2c)
+    }
+
+    #[inline]
+    fn dual_gradient(&self, alpha: f64, wx: f64) -> f64 {
+        wx - 1.0 + alpha / (2.0 * self.c)
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::brute_force_subproblem;
+
+    #[test]
+    fn primal_values() {
+        let l = Square::new(2.0);
+        assert_eq!(l.primal(1.0), 0.0);
+        assert_eq!(l.primal(0.0), 2.0);
+        assert_eq!(l.primal(3.0), 8.0);
+    }
+
+    #[test]
+    fn subproblem_matches_brute_force_including_negative_alpha() {
+        let l = Square::new(1.5);
+        for &(alpha, wx, q) in &[
+            (0.0, -0.5, 1.0),
+            (-0.8, 0.3, 0.5),
+            (2.0, 2.0, 2.0),
+            (0.4, -3.0, 0.1),
+        ] {
+            let got = l.solve_subproblem(alpha, wx, q);
+            let want = brute_force_subproblem(&l, alpha, wx, q, -20.0, 20.0);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "alpha={alpha} wx={wx} q={q}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn subproblem_is_exactly_stationary() {
+        let l = Square::new(0.7);
+        let (alpha, wx, q) = (0.3, -0.9, 1.3);
+        let a = l.solve_subproblem(alpha, wx, q);
+        let g = q * (a - alpha) + wx - 1.0 + a / (2.0 * l.c);
+        assert!(g.abs() < 1e-12, "residual {g}");
+    }
+
+    #[test]
+    fn dcd_converges_on_ridge_problem() {
+        use crate::data::registry;
+        use crate::eval;
+        use crate::solver::{SerialDcd, SolveOptions};
+        let (ds, _, _) = registry::load("rcv1", 0.02).unwrap();
+        let l = Square::new(0.5);
+        let r = SerialDcd::solve(
+            &ds,
+            &l,
+            &SolveOptions { epochs: 30, ..Default::default() },
+            None,
+        );
+        let gap = eval::duality_gap(&ds, &l, &r.alpha);
+        let p = eval::primal_objective(&ds, &l, &r.w_hat);
+        assert!(gap < 1e-3 * p.abs().max(1.0), "gap {gap} (P={p})");
+    }
+}

@@ -1,0 +1,126 @@
+//! Squared hinge loss (L2-SVM).
+//!
+//! ```text
+//!   ℓ(z)   = C · max(0, 1 − z)²
+//!   ℓ*(−α) = −α + α²/(4C)    for α ≥ 0,  +∞ otherwise          (paper Eq. 11)
+//! ```
+//!
+//! The subproblem objective `½qδ² + wx·δ + (−(α+δ) + (α+δ)²/(4C))` is a
+//! smooth quadratic in δ on `α+δ ≥ 0`; its unconstrained minimizer is
+//!
+//! ```text
+//!   δ = −(wx − 1 + α/(2C)) / (q + 1/(2C)),
+//! ```
+//!
+//! projected onto `α + δ ≥ 0`.
+
+use super::Loss;
+
+/// Squared hinge loss with penalty parameter `C`.
+#[derive(Debug, Clone, Copy)]
+pub struct SquaredHinge {
+    pub c: f64,
+}
+
+impl SquaredHinge {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0);
+        Self { c }
+    }
+}
+
+impl Loss for SquaredHinge {
+    fn name(&self) -> &'static str {
+        "squared_hinge"
+    }
+
+    #[inline]
+    fn primal(&self, z: f64) -> f64 {
+        let h = (1.0 - z).max(0.0);
+        self.c * h * h
+    }
+
+    #[inline]
+    fn conjugate_neg(&self, alpha: f64) -> f64 {
+        debug_assert!(alpha >= -1e-9, "alpha {alpha} < 0");
+        -alpha + alpha * alpha / (4.0 * self.c)
+    }
+
+    #[inline]
+    fn project(&self, alpha: f64) -> f64 {
+        alpha.max(0.0)
+    }
+
+    #[inline]
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let inv2c = 1.0 / (2.0 * self.c);
+        let delta = -(wx - 1.0 + alpha * inv2c) / (q + inv2c);
+        (alpha + delta).max(0.0)
+    }
+
+    #[inline]
+    fn dual_gradient(&self, alpha: f64, wx: f64) -> f64 {
+        wx - 1.0 + alpha / (2.0 * self.c)
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        None // α is only lower-bounded for L2-SVM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::testutil::brute_force_subproblem;
+
+    #[test]
+    fn primal_values() {
+        let l = SquaredHinge::new(1.0);
+        assert_eq!(l.primal(1.0), 0.0);
+        assert_eq!(l.primal(0.0), 1.0);
+        assert_eq!(l.primal(-1.0), 4.0);
+        assert_eq!(l.primal(3.0), 0.0);
+    }
+
+    #[test]
+    fn conjugate_matches_paper_formula() {
+        let l = SquaredHinge::new(0.5);
+        // ℓ*(−α) = −α + α²/(4C) = −1 + 1/2 at α = 1, C = 0.5
+        assert!((l.conjugate_neg(1.0) - (-0.5)).abs() < 1e-12);
+        assert_eq!(l.conjugate_neg(0.0), 0.0);
+    }
+
+    #[test]
+    fn subproblem_matches_brute_force() {
+        let l = SquaredHinge::new(2.0);
+        for &(alpha, wx, q) in &[
+            (0.0, -0.5, 1.0),
+            (1.2, 0.3, 0.5),
+            (3.0, 2.0, 2.0),
+            (0.4, 1.0, 0.1),
+            (0.0, 5.0, 1.0),
+        ] {
+            let got = l.solve_subproblem(alpha, wx, q);
+            // feasible interval is α ≥ 0 — bracket generously
+            let want = brute_force_subproblem(&l, alpha, wx, q, 0.0, 20.0);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "alpha={alpha} wx={wx} q={q}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn stationarity_of_interior_solution() {
+        // If the new α is interior (> 0), the subproblem gradient there
+        // must vanish: q·δ + wx + d/dα ℓ*(−α_new) = 0.
+        let l = SquaredHinge::new(1.5);
+        let (alpha, wx, q) = (0.7, 0.2, 0.9);
+        let a_new = l.solve_subproblem(alpha, wx, q);
+        assert!(a_new > 0.0);
+        let delta = a_new - alpha;
+        let grad = q * delta + wx - 1.0 + a_new / (2.0 * l.c);
+        assert!(grad.abs() < 1e-10, "gradient {grad}");
+    }
+}

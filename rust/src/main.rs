@@ -1,0 +1,233 @@
+//! `passcode` — the command-line launcher.
+//!
+//! ```text
+//! passcode train [--dataset rcv1] [--solver passcode-wild] [--threads 4]
+//!                [--epochs 20] [--scale 0.1] [--loss hinge] [--c 1.0]
+//!                [--config file.json] [--csv out.csv] [--aot-eval]
+//! passcode datasets [--scale 1.0]         # Table 3 analog statistics
+//! passcode calibrate                      # simulator cost-model probes
+//! passcode experiment <table1|table2|table3|fig-a|fig-d|backward-error>
+//!                [--dataset rcv1] [--scale 0.05] [--epochs 10] ...
+//! passcode eval --dataset rcv1 --scale 0.05    # AOT vs native cross-check
+//! passcode predict --model m.json --data f.svm [--out preds.txt]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use passcode::coordinator::{
+    cli::Cli, config::RunConfig, driver, experiments, model_io::Model,
+};
+use passcode::data::registry;
+use passcode::loss::Hinge;
+use passcode::runtime::{Engine, Evaluator};
+use passcode::simcore;
+use passcode::solver::SerialDcd;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = real_main(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "train" => cmd_train(&cli),
+        "datasets" => cmd_datasets(&cli),
+        "calibrate" => cmd_calibrate(),
+        "experiment" => cmd_experiment(&cli),
+        "eval" => cmd_eval(&cli),
+        "predict" => cmd_predict(&cli),
+        other => bail!(
+            "unknown command {other:?}; see `passcode --help` banner in \
+             README.md (commands: train, datasets, calibrate, experiment, \
+             eval)"
+        ),
+    }
+}
+
+fn config_from_cli(cli: &Cli) -> Result<RunConfig> {
+    let mut cfg = match cli.opt("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(ds) = cli.positional.first() {
+        cfg.dataset = ds.clone();
+    }
+    for (k, v) in &cli.options {
+        if matches!(k.as_str(), "config" | "csv" | "save-model") {
+            continue;
+        }
+        cfg.set(k, v).with_context(|| format!("--{k} {v}"))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let cfg = config_from_cli(cli)?;
+    println!("config: {}", cfg.to_json().to_string());
+    let out = driver::run(&cfg)?;
+    println!(
+        "epochs={} updates={} init={:.3}s train={:.3}s",
+        out.result.epochs_run,
+        out.result.updates,
+        out.result.init_secs(),
+        out.result.train_secs(),
+    );
+    println!(
+        "P(ŵ)={:.6} gap={:.3e} acc(ŵ)={:.4} acc(w̄)={:.4}",
+        out.primal_final, out.gap_final, out.acc_what, out.acc_wbar
+    );
+    for row in &out.metrics.rows {
+        println!(
+            "  epoch {:>4}  t={:>8.3}s  P={:.6}  gap={:.3e}  acc={:.4}",
+            row.epoch, row.train_secs, row.primal, row.gap, row.test_acc
+        );
+    }
+    if let Some(path) = cli.opt("csv") {
+        std::fs::write(path, out.metrics.to_csv())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = cli.opt("save-model") {
+        let (_, _, c) = driver::load_data(&cfg)?;
+        Model::from_run(&cfg, c, out.result.w_hat.clone()).save(path)?;
+        println!("saved model to {path}");
+    }
+    if cfg.aot_eval {
+        let engine = Engine::load_default().context(
+            "load AOT artifacts (run `make artifacts` first)",
+        )?;
+        let (train, _, c) = driver::load_data(&cfg)?;
+        let aot = Evaluator::new(&engine).eval(&train, &out.result.w_hat)?;
+        println!(
+            "AOT cross-check: P={:.6} acc={:.4} (platform {})",
+            aot.primal(c),
+            aot.accuracy(),
+            engine.platform()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datasets(cli: &Cli) -> Result<()> {
+    let scale = cli.opt_parse("scale", 1.0f64)?;
+    println!("{}", experiments::table3(scale)?.render());
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    println!("calibrating simulator cost model on this host...");
+    let m = simcore::calibrate::measure();
+    println!("  t_read          = {:.2} ns", m.t_read);
+    println!("  t_write_plain   = {:.2} ns", m.t_write_plain);
+    println!("  t_write_atomic  = {:.2} ns", m.t_write_atomic);
+    println!("  t_lock_pair     = {:.2} ns", m.t_lock_pair);
+    println!("  t_cas_retry     = {:.2} ns (derived)", m.t_cas_retry);
+    println!("  t_lock_contended= {:.2} ns (derived)", m.t_lock_contended);
+    Ok(())
+}
+
+fn cmd_experiment(cli: &Cli) -> Result<()> {
+    let which = cli
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table1");
+    let scale = cli.opt_parse("scale", 0.05f64)?;
+    let epochs = cli.opt_parse("epochs", 10usize)?;
+    let dataset = cli.opt_or("dataset", "rcv1").to_string();
+    let threads = cli.opt_parse("threads", 10usize)?;
+    match which {
+        "table1" => {
+            let (t, _) = experiments::table1(scale, epochs)?;
+            println!("Table 1 (rcv1 analog, {epochs} epochs):\n{}", t.render());
+        }
+        "table2" => {
+            let (t, _) = experiments::table2(scale, epochs)?;
+            println!("Table 2 (ŵ vs w̄, {epochs} epochs):\n{}", t.render());
+        }
+        "table3" => {
+            println!("{}", experiments::table3(scale)?.render());
+        }
+        "fig-a" => {
+            let logs = experiments::fig_convergence(
+                &dataset, scale, epochs, threads, false,
+            )?;
+            for log in logs {
+                println!("{}", log.to_csv());
+            }
+        }
+        "fig-d" => {
+            let (t, _) =
+                experiments::fig_speedup(&dataset, scale, epochs, threads)?;
+            println!("Speedup ({dataset}):\n{}", t.render());
+        }
+        "backward-error" => {
+            let be = experiments::backward_error(&dataset, scale, epochs, 8)?;
+            println!(
+                "‖ε‖ = {:.6}  ‖ŵ‖ = {:.6}  ratio = {:.4}",
+                be.eps_norm,
+                be.w_norm,
+                be.eps_norm / be.w_norm.max(1e-12)
+            );
+            println!(
+                "perturbed-opt residual (ŵ): {:.3e}   unperturbed (w̄): {:.3e}",
+                be.perturbed_residual, be.unperturbed_residual
+            );
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+/// `passcode predict --model m.json --data file.svm` — batch scoring of
+/// a LIBSVM file with a saved model (the deployment path).
+fn cmd_predict(cli: &Cli) -> Result<()> {
+    let model_path = cli
+        .opt("model")
+        .context("--model <file.json> is required")?;
+    let data_path = cli.opt("data").context("--data <file.svm> is required")?;
+    let model = Model::load(model_path)?;
+    let ds = passcode::data::libsvm::load(data_path)?;
+    let (acc, preds) = model.predict_dataset(&ds);
+    println!(
+        "model: loss={} c={} solver={} (trained on {})",
+        model.loss, model.c, model.solver, model.dataset
+    );
+    println!("{} rows, accuracy {:.4}", ds.n(), acc);
+    if let Some(out) = cli.opt("out") {
+        let text: String = preds
+            .iter()
+            .map(|p| if *p > 0.0 { "+1\n" } else { "-1\n" })
+            .collect();
+        std::fs::write(out, text)?;
+        println!("wrote predictions to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let dataset = cli.opt_or("dataset", "covtype").to_string();
+    let scale = cli.opt_parse("scale", 0.02f64)?;
+    let epochs = cli.opt_parse("epochs", 5usize)?;
+    let (train, _, c) = registry::load(&dataset, scale)?;
+    let loss = Hinge::new(c);
+    let r = SerialDcd::solve(
+        &train,
+        &loss,
+        &passcode::solver::SolveOptions { epochs, ..Default::default() },
+        None,
+    );
+    let native = passcode::eval::primal_objective(&train, &loss, &r.w_hat);
+    let engine = Engine::load_default()?;
+    let aot = Evaluator::new(&engine).eval(&train, &r.w_hat)?;
+    println!("native P = {native:.6}");
+    println!("AOT    P = {:.6} (platform {})", aot.primal(c), engine.platform());
+    println!(
+        "rel err  = {:.3e}",
+        (aot.primal(c) - native).abs() / native.abs().max(1.0)
+    );
+    Ok(())
+}

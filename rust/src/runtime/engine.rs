@@ -1,0 +1,220 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! on the CPU PJRT client — evaluation with **no Python on the path**.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Every executable is compiled once at
+//! engine construction and cached.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::util::Timer;
+
+use super::manifest::Manifest;
+
+/// A loaded, compiled artifact set.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Seconds spent compiling at load time (reported as init cost).
+    pub compile_secs: f64,
+}
+
+impl Engine {
+    /// Load every artifact in `<dir>/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let t = Timer::start();
+        let mut executables = BTreeMap::new();
+        for name in manifest.artifacts.keys() {
+            let path = manifest.path_of(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine { manifest, client, executables, compile_secs: t.secs() })
+    }
+
+    /// Load from the default artifacts location (see
+    /// [`Manifest::default_dir`]).
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name`; returns the decomposed output tuple
+    /// (the AOT bridge lowers with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {name}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Build an f32 literal of the given shape from a slice.
+    pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+        let expect: i64 = shape.iter().product();
+        anyhow::ensure!(
+            expect as usize == data.len(),
+            "shape {shape:?} wants {expect} elements, got {}",
+            data.len()
+        );
+        Ok(xla::Literal::vec1(data).reshape(shape)?)
+    }
+}
+
+/// Dataset-level evaluation statistics computed through the AOT path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AotEval {
+    /// Σ_i max(0, 1 − m_i) — unweighted hinge sum (caller multiplies C).
+    pub hinge_sum: f64,
+    /// Rows with margin > 0.
+    pub correct: usize,
+    /// ½‖w‖².
+    pub half_sqnorm: f64,
+    /// Rows evaluated.
+    pub rows: usize,
+}
+
+impl AotEval {
+    /// Primal objective for hinge loss with penalty `c`.
+    pub fn primal(&self, c: f64) -> f64 {
+        self.half_sqnorm + c * self.hinge_sum
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.rows as f64
+        }
+    }
+}
+
+/// High-level evaluator: streams dense row/feature blocks of a (sparse)
+/// dataset through the compiled artifacts.
+pub struct Evaluator<'e> {
+    engine: &'e Engine,
+    rb: usize,
+    fb: usize,
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        let rb = engine.manifest.row_block;
+        let fb = engine.manifest.feat_block;
+        Self { engine, rb, fb }
+    }
+
+    /// Evaluate hinge statistics + accuracy of `w` over `ds`.
+    ///
+    /// Margins are accumulated across feature blocks with the
+    /// `margins_block` artifact, reduced with `loss_stats_block`, and the
+    /// regularizer comes from `sumsq_block` — all through PJRT.
+    pub fn eval(&self, ds: &Dataset, w: &[f64]) -> Result<AotEval> {
+        let (rb, fb) = (self.rb, self.fb);
+        let n = ds.n();
+        let d = ds.d();
+        assert_eq!(w.len(), d);
+        let n_fb = d.div_ceil(fb);
+
+        // ---- ½‖w‖² over padded feature blocks -------------------------
+        let mut half_sqnorm = 0.0f64;
+        let mut wblk = vec![0f32; fb];
+        for b in 0..n_fb {
+            let lo = b * fb;
+            let hi = (lo + fb).min(d);
+            wblk.fill(0.0);
+            for (k, j) in (lo..hi).enumerate() {
+                wblk[k] = w[j] as f32;
+            }
+            let lit = Engine::literal_f32(&wblk, &[fb as i64, 1])?;
+            let out = self.engine.execute("sumsq_block", &[lit])?;
+            half_sqnorm += 0.5 * out[0].to_vec::<f32>()?[0] as f64;
+        }
+
+        // ---- margins + loss stats over row blocks ----------------------
+        // The w-block literals are identical for every row block: build
+        // them once per eval instead of once per (row × feature) block
+        // (§Perf iteration 5 — saves n_rb× literal uploads).
+        let w_lits: Vec<xla::Literal> = (0..n_fb)
+            .map(|b| {
+                let lo = b * fb;
+                let hi = (lo + fb).min(d);
+                wblk.fill(0.0);
+                for (k, j) in (lo..hi).enumerate() {
+                    wblk[k] = w[j] as f32;
+                }
+                Engine::literal_f32(&wblk, &[fb as i64, 1])
+            })
+            .collect::<Result<_>>()?;
+        let mut hinge_sum = 0.0f64;
+        let mut correct = 0usize;
+        let n_rb = n.div_ceil(rb);
+        let mut xblk = vec![0f32; rb * fb];
+        let mut margins = vec![0f32; rb];
+        let mut mask = vec![0f32; rb];
+        for rbi in 0..n_rb {
+            let row_lo = rbi * rb;
+            let row_hi = (row_lo + rb).min(n);
+            let live = row_hi - row_lo;
+            margins.fill(0.0);
+            for b in 0..n_fb {
+                let col_lo = b * fb;
+                let col_hi = (col_lo + fb).min(d);
+                // densify the (row, feature) block
+                xblk.fill(0.0);
+                for (r, i) in (row_lo..row_hi).enumerate() {
+                    let (idx, vals) = ds.x.row(i);
+                    // rows are sorted: binary search the column window
+                    let s = idx.partition_point(|&j| (j as usize) < col_lo);
+                    let e = idx.partition_point(|&j| (j as usize) < col_hi);
+                    for k in s..e {
+                        xblk[r * fb + (idx[k] as usize - col_lo)] =
+                            vals[k] as f32;
+                    }
+                }
+                let xl = Engine::literal_f32(&xblk, &[rb as i64, fb as i64])?;
+                let wl = w_lits[b].reshape(&[fb as i64, 1])?;
+                let out = self.engine.execute("margins_block", &[xl, wl])?;
+                let part = out[0].to_vec::<f32>()?;
+                for (m, p) in margins.iter_mut().zip(&part) {
+                    *m += p;
+                }
+            }
+            mask.fill(0.0);
+            mask[..live].fill(1.0);
+            let ml = Engine::literal_f32(&margins, &[rb as i64, 1])?;
+            let kl = Engine::literal_f32(&mask, &[rb as i64, 1])?;
+            let out = self.engine.execute("loss_stats_block", &[ml, kl])?;
+            hinge_sum += out[0].to_vec::<f32>()?[0] as f64;
+            correct += out[1].to_vec::<f32>()?[0] as usize;
+        }
+
+        Ok(AotEval { hinge_sum, correct, half_sqnorm, rows: n })
+    }
+}

@@ -1,0 +1,146 @@
+//! Parse `artifacts/manifest.json` — the contract between the Python AOT
+//! exporter (`python/compile/aot.py`) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One exported computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes (row-major, f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub row_block: usize,
+    pub feat_block: usize,
+    pub dcd_row_block: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        if json.get("format")?.as_str()? != "hlo-text" {
+            bail!("unsupported artifact format");
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in json.get("artifacts")?.as_obj()? {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                entry
+                    .get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: entry.get("file")?.as_str()?.to_string(),
+                    inputs: shapes("inputs")?,
+                    outputs: shapes("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            row_block: json.get("row_block")?.as_usize()?,
+            feat_block: json.get("feat_block")?.as_usize()?,
+            dcd_row_block: json.get("dcd_row_block")?.as_usize()?,
+            artifacts,
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        Ok(self.dir.join(&a.file))
+    }
+
+    /// Locate the default artifacts dir: `$PASSCODE_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (for tests running in target/).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("PASSCODE_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","jax_version":"0.8.2",
+                "row_block":256,"feat_block":512,"dcd_row_block":128,
+                "dcd_sweeps":1,
+                "artifacts":{"margins_block":{"file":"margins_block.hlo.txt",
+                  "inputs":[[256,512],[512,1]],"outputs":[[256,1]],
+                  "dtype":"f32","note":"x"}}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("passcode_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.row_block, 256);
+        assert_eq!(m.feat_block, 512);
+        let a = &m.artifacts["margins_block"];
+        assert_eq!(a.inputs, vec![vec![256, 512], vec![512, 1]]);
+        assert!(m.path_of("margins_block").unwrap().ends_with("margins_block.hlo.txt"));
+        assert!(m.path_of("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("passcode_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"protobuf","artifacts":{},
+                "row_block":1,"feat_block":1,"dcd_row_block":1}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! placeholder
+pub mod engine;
+pub mod manifest;
+pub use engine::{AotEval, Engine, Evaluator};
+pub use manifest::Manifest;

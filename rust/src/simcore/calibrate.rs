@@ -1,0 +1,133 @@
+//! Cost-model calibration: microbenchmarks on *this* host for the
+//! constants in [`CostModel`].  Run via `passcode calibrate`.
+//!
+//! Each probe times a tight loop over a scattered f64 array sized to
+//! spill L1 (so the numbers include realistic cache behaviour), with
+//! enough iterations to drown scheduler noise on a busy 1-core box.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::util::{Pcg32, Timer};
+
+use super::cost::CostModel;
+
+const ARRAY: usize = 1 << 16; // 512 KiB of f64 — beyond L1
+const ITERS: usize = 2_000_000;
+
+fn scattered_indices() -> Vec<usize> {
+    let mut rng = Pcg32::new(0xCA11B, 7);
+    (0..ITERS).map(|_| rng.gen_range(ARRAY)).collect()
+}
+
+/// ns/op of a plain read-multiply-accumulate (the dot-product step).
+pub fn probe_read() -> f64 {
+    let v = vec![1.0f64; ARRAY];
+    let idx = scattered_indices();
+    let t = Timer::start();
+    let mut acc = 0.0;
+    for &i in &idx {
+        acc += v[i] * 1.0001;
+    }
+    let secs = t.secs();
+    std::hint::black_box(acc);
+    secs * 1e9 / ITERS as f64
+}
+
+/// ns/op of a plain (relaxed) read-modify-write — the Wild step 3.
+pub fn probe_write_plain() -> f64 {
+    let v: Vec<AtomicU64> =
+        (0..ARRAY).map(|_| AtomicU64::new(1f64.to_bits())).collect();
+    let idx = scattered_indices();
+    let t = Timer::start();
+    for &i in &idx {
+        let cur = f64::from_bits(v[i].load(Ordering::Relaxed));
+        v[i].store((cur + 1.0).to_bits(), Ordering::Relaxed);
+    }
+    t.secs() * 1e9 / ITERS as f64
+}
+
+/// ns/op of a CAS-loop add — the Atomic step 3 (uncontended).
+pub fn probe_write_atomic() -> f64 {
+    let v: Vec<AtomicU64> =
+        (0..ARRAY).map(|_| AtomicU64::new(1f64.to_bits())).collect();
+    let idx = scattered_indices();
+    let t = Timer::start();
+    for &i in &idx {
+        let cell = &v[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + 1.0).to_bits();
+            match cell.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(a) => cur = a,
+            }
+        }
+    }
+    t.secs() * 1e9 / ITERS as f64
+}
+
+/// ns per acquire+release of one spinlock (uncontended).
+pub fn probe_lock_pair() -> f64 {
+    let locks: Vec<AtomicBool> =
+        (0..ARRAY).map(|_| AtomicBool::new(false)).collect();
+    let idx = scattered_indices();
+    let t = Timer::start();
+    for &i in &idx {
+        while locks[i]
+            .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::hint::spin_loop();
+        }
+        locks[i].store(false, Ordering::Release);
+    }
+    t.secs() * 1e9 / ITERS as f64
+}
+
+/// Measure everything and assemble a [`CostModel`].  Contention constants
+/// (`t_cas_retry`, `t_lock_contended`) cannot be measured on one core —
+/// they keep literature-ratio defaults scaled by the measured base costs.
+pub fn measure() -> CostModel {
+    let t_read = probe_read();
+    let t_write_plain = probe_write_plain();
+    let t_write_atomic = probe_write_atomic();
+    let t_lock_pair = probe_lock_pair();
+    let d = CostModel::default();
+    CostModel {
+        t_fixed: d.t_fixed,
+        t_read,
+        t_write_plain,
+        t_write_atomic,
+        t_cas_retry: 2.0 * t_write_atomic,
+        t_lock_pair,
+        t_lock_contended: (d.t_lock_contended / d.t_lock_pair) * t_lock_pair,
+        bandwidth_drag: d.bandwidth_drag,
+        numa_remote_penalty: d.numa_remote_penalty,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probes_return_positive_nanoseconds() {
+        // Keep it quick: just the cheapest probe in unit tests.
+        let r = probe_read();
+        assert!(r > 0.0 && r < 1_000.0, "implausible read cost {r} ns");
+    }
+
+    #[test]
+    fn measured_model_is_ordered() {
+        let m = measure();
+        assert!(m.t_read > 0.0);
+        assert!(m.t_write_atomic >= m.t_write_plain * 0.5,
+            "CAS {} vs plain {}", m.t_write_atomic, m.t_write_plain);
+        assert!(m.t_lock_pair > 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Per-operation cost model for the multicore simulator.
+//!
+//! The paper's testbed is a 2-socket × 10-core Xeon; this image has one
+//! core, so wall-clock speedups cannot be *measured* — they are
+//! *modelled* (DESIGN.md §3).  A coordinate update of row `i` decomposes
+//! into (cf. Algorithm 2):
+//!
+//! ```text
+//!   t_update(i) = t_fixed                          (pick + subproblem)
+//!               + nnz_i · t_read                   (step 2: read ŵ, dot)
+//!               + nnz_i · t_write[mechanism]       (step 3: publish Δα x_i)
+//!               + lock overhead + contention       (Lock only)
+//! ```
+//!
+//! The constants default to values calibrated on this host by
+//! [`calibrate::measure`](super::calibrate::measure); the *ratios* —
+//! CAS ≈ 2–4× a plain store, lock acquire+release ≈ 20–60× — are what
+//! drive Table 1's shape and are stable across x86 parts.
+
+/// Cost constants, all in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Fixed per-update work: RNG, subproblem solve, bookkeeping.
+    pub t_fixed: f64,
+    /// Per-nonzero read + multiply-add in the dot product.
+    pub t_read: f64,
+    /// Per-nonzero plain (wild) read-modify-write.
+    pub t_write_plain: f64,
+    /// Per-nonzero atomic CAS add (uncontended).
+    pub t_write_atomic: f64,
+    /// Extra CAS retries under contention, per contending core.
+    pub t_cas_retry: f64,
+    /// Acquire + release of one feature spinlock (uncontended).
+    pub t_lock_pair: f64,
+    /// Spin-wait penalty per blocked acquisition attempt.
+    pub t_lock_contended: f64,
+    /// Shared-memory bandwidth drag: every active core slows all others
+    /// by this fraction (cacheline traffic + DRAM contention).  This is
+    /// what makes the paper's Wild speedup sublinear (7.4× at 10 cores,
+    /// not 10×).
+    pub bandwidth_drag: f64,
+    /// NUMA: multiplier on the per-nonzero read cost when the feature's
+    /// cacheline was last written by a core on *another* socket (paper
+    /// §3.3 "Thread Affinity": remote-socket access is slower; the
+    /// paper pins all threads to one socket to avoid it).
+    pub numa_remote_penalty: f64,
+}
+
+impl Default for CostModel {
+    /// Host-calibrated defaults (see `passcode calibrate`); ratios match
+    /// published x86 microarchitectural numbers.
+    fn default() -> Self {
+        Self {
+            t_fixed: 25.0,
+            t_read: 1.0,
+            t_write_plain: 1.2,
+            // Uncontended lock-free add ≈ plain store + a fraction: the
+            // cacheline fetch dominates both on x86.  The paper measures
+            // Atomic only ~7% slower than Wild end-to-end (Table 1).
+            t_write_atomic: 1.6,
+            t_cas_retry: 8.0,
+            t_lock_pair: 16.0,
+            t_lock_contended: 60.0,
+            bandwidth_drag: 0.030,
+            // ~1.6× remote:local latency ratio — typical 2-socket Xeon.
+            numa_remote_penalty: 1.6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Service time (ns) of one update of a row with `nnz` nonzeros under
+    /// the given mechanism, before contention effects.
+    pub fn base_update_ns(&self, nnz: usize, mech: Mechanism) -> f64 {
+        let nnz = nnz as f64;
+        let write = match mech {
+            Mechanism::Wild => self.t_write_plain,
+            Mechanism::Atomic => self.t_write_atomic,
+            Mechanism::Lock => self.t_write_plain,
+        };
+        let lock = match mech {
+            Mechanism::Lock => nnz * self.t_lock_pair,
+            _ => 0.0,
+        };
+        self.t_fixed + nnz * (self.t_read + write) + lock
+    }
+}
+
+/// The three write mechanisms (simulator-side mirror of
+/// [`crate::solver::MemoryModel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mechanism {
+    Lock,
+    Atomic,
+    Wild,
+}
+
+impl From<crate::solver::MemoryModel> for Mechanism {
+    fn from(m: crate::solver::MemoryModel) -> Self {
+        match m {
+            crate::solver::MemoryModel::Lock => Mechanism::Lock,
+            crate::solver::MemoryModel::Atomic => Mechanism::Atomic,
+            crate::solver::MemoryModel::Wild => Mechanism::Wild,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_costs_ordered_wild_atomic_lock() {
+        let c = CostModel::default();
+        let nnz = 50;
+        let wild = c.base_update_ns(nnz, Mechanism::Wild);
+        let atomic = c.base_update_ns(nnz, Mechanism::Atomic);
+        let lock = c.base_update_ns(nnz, Mechanism::Lock);
+        assert!(wild < atomic, "wild {wild} !< atomic {atomic}");
+        assert!(atomic < lock, "atomic {atomic} !< lock {lock}");
+    }
+
+    #[test]
+    fn cost_scales_linearly_in_nnz() {
+        let c = CostModel::default();
+        let a = c.base_update_ns(10, Mechanism::Wild);
+        let b = c.base_update_ns(20, Mechanism::Wild);
+        let inc = b - a;
+        let d = c.base_update_ns(30, Mechanism::Wild);
+        assert!((d - b - inc).abs() < 1e-9);
+    }
+}

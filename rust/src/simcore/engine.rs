@@ -1,0 +1,527 @@
+//! Discrete-event simulator of PASSCoDe on a p-core shared-memory machine.
+//!
+//! This is the hardware substitution for the paper's 10-core Xeon
+//! (DESIGN.md §3): the host has one physical core, so parallel wall-clock
+//! behaviour is *simulated* with faithful semantics:
+//!
+//! * every virtual core owns a random block of coordinates (paper §3.3)
+//!   and carries a local clock advanced by the [`CostModel`];
+//! * a read at virtual time `t` sees exactly the writes **committed**
+//!   `≤ t` — bounded staleness (the paper's `τ`) emerges from update
+//!   latency instead of being assumed;
+//! * `Wild` commits are overwrites: concurrent commits that land inside a
+//!   read-modify-write window are lost (counted in
+//!   [`SimReport::lost_writes`]) — the paper's Eq.-6 memory conflicts;
+//! * `Atomic` commits are additive (never lost) but pay CAS costs plus a
+//!   contention-dependent retry penalty;
+//! * `Lock` serializes overlapping feature sets through per-feature lock
+//!   timelines (ordered acquisition — no deadlock), paying the lock
+//!   overhead that makes it slower than serial DCD (Table 1).
+//!
+//! The simulation itself is deterministic given a seed: every experiment
+//! in EXPERIMENTS.md §Table-1/§Fig-d replays exactly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::data::Dataset;
+use crate::loss::{Loss, MIN_DELTA};
+use crate::util::Pcg32;
+
+use super::cost::{CostModel, Mechanism};
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of virtual cores.
+    pub cores: usize,
+    /// Epochs (each core does one pass over its block per epoch).
+    pub epochs: usize,
+    pub seed: u64,
+    pub cost: CostModel,
+    pub mechanism: Mechanism,
+    /// NUMA sockets the cores are spread over (contiguous halves).
+    /// 1 = the paper's recommended same-socket affinity (§3.3); 2 models
+    /// threads spread across both sockets: a read of a feature last
+    /// written by the other socket pays `cost.numa_remote_penalty`.
+    pub sockets: usize,
+}
+
+impl SimConfig {
+    /// One-socket (paper-affinity) configuration.
+    pub fn new(cores: usize, epochs: usize, seed: u64, mechanism: Mechanism) -> Self {
+        Self { cores, epochs, seed, cost: CostModel::default(), mechanism, sockets: 1 }
+    }
+}
+
+/// Aggregate simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Final dual iterate.
+    pub alpha: Vec<f64>,
+    /// Final shared-memory primal vector (all commits applied).
+    pub w: Vec<f64>,
+    /// Virtual wall-clock of the run (ns): max core finish time.
+    pub virtual_ns: f64,
+    /// Total coordinate updates simulated.
+    pub updates: u64,
+    /// Wild only: writes clobbered by overlapping commits.
+    pub lost_writes: u64,
+    /// Atomic only: CAS retries charged.
+    pub cas_retries: u64,
+    /// Lock only: total ns spent waiting for locks.
+    pub lock_wait_ns: f64,
+    /// Mean number of in-flight updates observed at read time (≈ τ).
+    pub mean_staleness: f64,
+    /// Per-epoch snapshots: (epoch, virtual_ns) at leader-core boundaries.
+    pub epoch_marks: Vec<(usize, f64)>,
+}
+
+/// One pending commit to shared memory (commit time lives in the heap key).
+#[derive(Debug, Clone, Copy)]
+struct Commit {
+    feature: u32,
+    /// Additive delta (Atomic/Lock) or overwrite delta (Wild).
+    delta: f64,
+    /// Wild: the memory value of the feature captured at this feature
+    /// write's RMW read instant; the commit *overwrites* with
+    /// `base + delta`, silently erasing anything that landed since
+    /// `created` — the real RMW's lost-update semantics, with the race
+    /// window ≈ one `t_write` (commits from updates that start after the
+    /// snapshot but land inside the window are a second-order miss).
+    base: f64,
+    /// Virtual time the base snapshot was taken (the RMW read instant).
+    created: f64,
+    overwrite: bool,
+}
+
+// BinaryHeap is a max-heap; order commits by smallest time first.
+#[derive(Debug, PartialEq, Clone, Copy)]
+struct ByTime(f64, usize);
+impl Eq for ByTime {}
+impl PartialOrd for ByTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ByTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// Run the simulation.
+pub fn simulate<L: Loss>(ds: &Dataset, loss: &L, cfg: &SimConfig) -> SimReport {
+    let n = ds.n();
+    let d = ds.d();
+    let p = cfg.cores.max(1);
+    let qii = ds.x.all_row_sqnorms();
+
+    // Random partition into p blocks (same scheme as the real solver).
+    let mut rng = Pcg32::new(cfg.seed, 0x51AC);
+    let perm = rng.permutation(n);
+    let mut blocks: Vec<Vec<usize>> = Vec::with_capacity(p);
+    {
+        let base = n / p;
+        let rem = n % p;
+        let mut start = 0;
+        for t in 0..p {
+            let len = base + usize::from(t < rem);
+            blocks.push(perm[start..start + len].to_vec());
+            start += len;
+        }
+    }
+
+    let sockets = cfg.sockets.max(1);
+    let socket_of = |core: usize| core * sockets / p;
+
+    // Shared memory state (commit-ordered application).
+    let mut w = vec![0.0f64; d];
+    let mut last_commit_time = vec![f64::NEG_INFINITY; d];
+    // Socket that last wrote each feature's cacheline (NUMA model).
+    let mut last_socket: Vec<u8> = vec![0; if sockets > 1 { d } else { 0 }];
+    let mut alpha = vec![0.0f64; n];
+    let mut commits: BinaryHeap<Reverse<ByTime>> = BinaryHeap::new();
+    let mut commit_pool: Vec<Commit> = Vec::new();
+    let mut free_slots: Vec<usize> = Vec::new();
+
+    // Lock timelines (Lock mechanism only).
+    let mut lock_until = vec![0.0f64; if cfg.mechanism == Mechanism::Lock { d } else { 0 }];
+
+    // Per-core cursors.
+    struct Core {
+        clock: f64,
+        order: Vec<usize>,
+        pos: usize,
+        epoch: usize,
+        rng: Pcg32,
+    }
+    let mut cores: Vec<Core> = (0..p)
+        .map(|t| {
+            let mut rng = Pcg32::new(cfg.seed, 0xC0DE + t as u64);
+            let mut order = blocks[t].clone();
+            rng.shuffle(&mut order);
+            Core { clock: 0.0, order, pos: 0, epoch: 0, rng }
+        })
+        .collect();
+
+    // Ready queue of cores ordered by local clock.
+    let mut ready: BinaryHeap<Reverse<ByTime>> = (0..p)
+        .map(|t| Reverse(ByTime(0.0, t)))
+        .collect();
+
+    let mut report = SimReport {
+        alpha: Vec::new(),
+        w: Vec::new(),
+        virtual_ns: 0.0,
+        updates: 0,
+        lost_writes: 0,
+        cas_retries: 0,
+        lock_wait_ns: 0.0,
+        mean_staleness: 0.0,
+        epoch_marks: Vec::new(),
+    };
+    let mut staleness_sum: f64 = 0.0;
+    let mut staleness_obs: u64 = 0;
+
+    // Apply all commits with time ≤ t.
+    macro_rules! drain_commits {
+        ($t:expr) => {
+            while let Some(&Reverse(ByTime(ct, slot))) = commits.peek() {
+                if ct > $t {
+                    break;
+                }
+                commits.pop();
+                let c = commit_pool[slot];
+                free_slots.push(slot);
+                let j = c.feature as usize;
+                if c.overwrite {
+                    if last_commit_time[j] > c.created {
+                        // We clobber whoever landed after our snapshot.
+                        report.lost_writes += 1;
+                    }
+                    // True lost-update semantics: overwrite with
+                    // base-at-read + delta, erasing interleaved commits.
+                    w[j] = c.base + c.delta;
+                } else {
+                    w[j] += c.delta;
+                }
+                last_commit_time[j] = ct;
+            }
+        };
+    }
+
+    while let Some(Reverse(ByTime(t, core_id))) = ready.pop() {
+        let core = &mut cores[core_id];
+        if core.epoch >= cfg.epochs {
+            continue;
+        }
+        // Fetch next coordinate; roll epochs.
+        if core.pos >= core.order.len() {
+            core.pos = 0;
+            core.epoch += 1;
+            let seed_rng = &mut core.rng;
+            seed_rng.shuffle(&mut core.order);
+            if core_id == 0 {
+                report.epoch_marks.push((core.epoch, t));
+            }
+            if core.epoch >= cfg.epochs {
+                report.virtual_ns = report.virtual_ns.max(core.clock);
+                continue;
+            }
+        }
+        let i = core.order[core.pos];
+        core.pos += 1;
+        let q = qii[i];
+        if q <= 0.0 {
+            ready.push(Reverse(ByTime(core.clock, core_id)));
+            continue;
+        }
+        let (idx, vals) = ds.x.row(i);
+        let nnz = idx.len();
+
+        // ---- Lock: wait for every feature lock (ordered acquisition) --
+        let mut start = t;
+        if cfg.mechanism == Mechanism::Lock {
+            let mut free_at = t;
+            for &j in idx {
+                free_at = free_at.max(lock_until[j as usize]);
+            }
+            if free_at > t {
+                report.lock_wait_ns += (free_at - t)
+                    + cfg.cost.t_lock_contended;
+                start = free_at + cfg.cost.t_lock_contended;
+            }
+        }
+
+        // ---- Read phase: memory as of `start` -------------------------
+        drain_commits!(start);
+        staleness_sum += commits.len() as f64;
+        staleness_obs += 1;
+        let mut wx = 0.0;
+        for (j, v) in idx.iter().zip(vals) {
+            wx += w[*j as usize] * v;
+        }
+        let a_old = alpha[i];
+        let a_new = loss.solve_subproblem(a_old, wx, q);
+        let delta = a_new - a_old;
+        report.updates += 1;
+
+        // ---- Service time + contention model --------------------------
+        // Bandwidth drag: p concurrently-active cores slow each other
+        // (cacheline traffic) — the source of sublinear Wild scaling.
+        let drag = 1.0 + cfg.cost.bandwidth_drag * (p as f64 - 1.0);
+        let mut service = cfg.cost.base_update_ns(nnz, cfg.mechanism) * drag;
+        // NUMA: remote-socket cachelines cost extra to read (§3.3).
+        if sockets > 1 {
+            let my_socket = socket_of(core_id) as u8;
+            let remote = idx
+                .iter()
+                .filter(|&&j| last_socket[j as usize] != my_socket)
+                .count();
+            service += remote as f64
+                * cfg.cost.t_read
+                * (cfg.cost.numa_remote_penalty - 1.0);
+        }
+        let read_end = start + cfg.cost.t_fixed + nnz as f64 * cfg.cost.t_read;
+
+        if delta.abs() > MIN_DELTA {
+            alpha[i] = a_new;
+            // Schedule the per-feature writes.
+            let wstep = match cfg.mechanism {
+                Mechanism::Wild => cfg.cost.t_write_plain,
+                Mechanism::Atomic => cfg.cost.t_write_atomic,
+                Mechanism::Lock => cfg.cost.t_write_plain,
+            };
+            for (k, (j, v)) in idx.iter().zip(vals).enumerate() {
+                let jj = *j as usize;
+                let wr = read_end + k as f64 * wstep;
+                let mut wc = wr + wstep;
+                if cfg.mechanism == Mechanism::Atomic {
+                    // Contention heuristic: if someone committed to this
+                    // feature within a CAS window before our write, we
+                    // retry once.
+                    if last_commit_time[jj] > wr - 4.0 * wstep {
+                        report.cas_retries += 1;
+                        service += cfg.cost.t_cas_retry;
+                        wc += cfg.cost.t_cas_retry;
+                    }
+                }
+                // Advance memory to this feature-write's read instant so
+                // the Wild base snapshot covers only the ~t_write RMW
+                // window (commits from not-yet-simulated updates that
+                // would land inside (t, wr) are a second-order miss).
+                drain_commits!(wr);
+                if sockets > 1 {
+                    last_socket[jj] = socket_of(core_id) as u8;
+                }
+                let commit = Commit {
+                    feature: *j,
+                    delta: delta * v,
+                    base: w[jj],
+                    created: wr,
+                    overwrite: cfg.mechanism == Mechanism::Wild,
+                };
+                let slot = if let Some(s) = free_slots.pop() {
+                    commit_pool[s] = commit;
+                    s
+                } else {
+                    commit_pool.push(commit);
+                    commit_pool.len() - 1
+                };
+                commits.push(Reverse(ByTime(wc, slot)));
+            }
+        }
+
+        let end = start + service;
+        if cfg.mechanism == Mechanism::Lock {
+            for &j in idx {
+                lock_until[j as usize] = end;
+            }
+        }
+        core.clock = end;
+        report.virtual_ns = report.virtual_ns.max(end);
+        ready.push(Reverse(ByTime(end, core_id)));
+    }
+
+    // Flush everything and finish.
+    drain_commits!(f64::INFINITY);
+    report.alpha = alpha;
+    report.w = w;
+    report.mean_staleness = if staleness_obs > 0 {
+        staleness_sum / staleness_obs as f64
+    } else {
+        0.0
+    };
+    report
+}
+
+/// Convenience: simulated serial reference time (1 core, wild costs —
+/// the denominator of the paper's speedup definition §5.3).
+pub fn serial_reference_ns<L: Loss>(
+    ds: &Dataset,
+    loss: &L,
+    epochs: usize,
+    seed: u64,
+    cost: &CostModel,
+) -> f64 {
+    let cfg = SimConfig {
+        cores: 1,
+        epochs,
+        seed,
+        cost: *cost,
+        mechanism: Mechanism::Wild, sockets: 1, };
+    simulate(ds, loss, &cfg).virtual_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::eval;
+    use crate::loss::Hinge;
+
+    fn ds() -> (Dataset, f64) {
+        let (tr, _, c) = registry::load("rcv1", 0.02).unwrap();
+        (tr, c)
+    }
+
+    fn cfg(cores: usize, mech: Mechanism, epochs: usize) -> SimConfig {
+        SimConfig {
+            cores,
+            epochs,
+            seed: 9,
+            cost: CostModel::default(),
+            mechanism: mech, sockets: 1, }
+    }
+
+    #[test]
+    fn single_core_wild_matches_serial_semantics() {
+        // One virtual core has no concurrency: no lost writes, and the
+        // final w must satisfy Eq. 3 exactly.
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let r = simulate(&ds, &loss, &cfg(1, Mechanism::Wild, 10));
+        assert_eq!(r.lost_writes, 0);
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err = r.w.iter().zip(&wbar)
+            .map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "Eq. 3 violated on 1 core: {err}");
+    }
+
+    #[test]
+    fn all_mechanisms_converge_in_simulation() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        for mech in [Mechanism::Lock, Mechanism::Atomic, Mechanism::Wild] {
+            let r = simulate(&ds, &loss, &cfg(8, mech, 30));
+            let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+            let p = eval::primal_objective(&ds, &loss, &r.w);
+            assert!(
+                gap < 0.05 * p.abs().max(1.0),
+                "{mech:?} gap {gap} (P={p})"
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_never_loses_writes_and_obeys_eq3() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let r = simulate(&ds, &loss, &cfg(8, Mechanism::Atomic, 10));
+        assert_eq!(r.lost_writes, 0);
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err = r.w.iter().zip(&wbar)
+            .map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "atomic Eq. 3 error {err}");
+    }
+
+    #[test]
+    fn wild_on_many_cores_loses_writes() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let r = simulate(&ds, &loss, &cfg(10, Mechanism::Wild, 20));
+        assert!(r.lost_writes > 0, "no memory conflicts on 10 cores?");
+    }
+
+    #[test]
+    fn speedup_shape_matches_table1() {
+        // The paper's Table 1 shape: Wild ≥ Atomic ≫ Lock, and Lock is
+        // slower than serial.
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let epochs = 10;
+        let serial =
+            serial_reference_ns(&ds, &loss, epochs, 9, &CostModel::default());
+        let t = |mech| {
+            simulate(&ds, &loss, &cfg(10, mech, epochs)).virtual_ns
+        };
+        let (lock, atomic, wild) = (
+            t(Mechanism::Lock),
+            t(Mechanism::Atomic),
+            t(Mechanism::Wild),
+        );
+        let s = |x: f64| serial / x;
+        assert!(s(wild) > 4.0, "wild speedup {} too low", s(wild));
+        assert!(s(atomic) > 3.0, "atomic speedup {}", s(atomic));
+        assert!(
+            s(wild) >= s(atomic),
+            "wild {} not ≥ atomic {}",
+            s(wild),
+            s(atomic)
+        );
+        assert!(s(lock) < 1.0, "lock speedup {} not < 1", s(lock));
+    }
+
+    #[test]
+    fn more_cores_more_staleness() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let s2 = simulate(&ds, &loss, &cfg(2, Mechanism::Atomic, 5));
+        let s10 = simulate(&ds, &loss, &cfg(10, Mechanism::Atomic, 5));
+        assert!(
+            s10.mean_staleness > s2.mean_staleness,
+            "staleness did not grow: {} vs {}",
+            s2.mean_staleness,
+            s10.mean_staleness
+        );
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let a = simulate(&ds, &loss, &cfg(4, Mechanism::Wild, 5));
+        let b = simulate(&ds, &loss, &cfg(4, Mechanism::Wild, 5));
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.virtual_ns, b.virtual_ns);
+        assert_eq!(a.lost_writes, b.lost_writes);
+    }
+
+    #[test]
+    fn numa_spread_is_slower_than_affinity() {
+        // §3.3: threads across 2 sockets pay remote-cacheline reads.
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let mut cfg1 = cfg(8, Mechanism::Wild, 5);
+        cfg1.sockets = 1;
+        let mut cfg2 = cfg1.clone();
+        cfg2.sockets = 2;
+        let t1 = simulate(&ds, &loss, &cfg1).virtual_ns;
+        let t2 = simulate(&ds, &loss, &cfg2).virtual_ns;
+        assert!(t2 > t1, "2-socket {t2} not slower than 1-socket {t1}");
+        // but not absurdly slower (penalty is a read multiplier)
+        assert!(t2 < 2.5 * t1, "NUMA penalty implausible: {}x", t2 / t1);
+    }
+
+    #[test]
+    fn epoch_marks_are_monotone() {
+        let (ds, c) = ds();
+        let loss = Hinge::new(c);
+        let r = simulate(&ds, &loss, &cfg(4, Mechanism::Atomic, 6));
+        assert!(!r.epoch_marks.is_empty());
+        for w in r.epoch_marks.windows(2) {
+            assert!(w[1].0 > w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+}

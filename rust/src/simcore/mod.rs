@@ -1,0 +1,12 @@
+//! Discrete-event multicore simulator — the hardware substitution for the
+//! paper's 2×10-core Xeon testbed (DESIGN.md §3): virtual cores, a
+//! calibrated per-operation cost model, and faithful lock/atomic/wild
+//! shared-memory semantics (bounded staleness, lost writes, lock
+//! serialization).
+
+pub mod calibrate;
+pub mod cost;
+pub mod engine;
+
+pub use cost::{CostModel, Mechanism};
+pub use engine::{serial_reference_ns, simulate, SimConfig, SimReport};

@@ -1,0 +1,276 @@
+//! Serial stochastic dual coordinate descent — Algorithm 1 of the paper,
+//! i.e. LIBLINEAR's dual solver (Hsieh et al., 2008).
+//!
+//! With `shrinking: true` this *is* the paper's "LIBLINEAR" baseline;
+//! with `shrinking: false` it is the "DCD" baseline used as the serial
+//! reference in the speedup plots (§5.3, point 2).
+
+use crate::data::Dataset;
+use crate::loss::{Loss, MIN_DELTA};
+use crate::util::{Pcg32, Phases, Timer};
+
+use super::shrinking::ShrinkState;
+use super::{Progress, ProgressFn, Sampling, SolveOptions, SolveResult};
+
+/// Serial DCD solver.
+pub struct SerialDcd;
+
+impl SerialDcd {
+    /// Run Algorithm 1.  `on_progress` fires every `opts.eval_every`
+    /// epochs (if nonzero) and may stop the run by returning `false`.
+    pub fn solve<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        mut on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        let n = ds.n();
+        let d = ds.d();
+        let mut phases = Phases::new();
+
+        // ---- init: row norms (one pass over the data, as in §5.2) -----
+        let init_t = Timer::start();
+        let qii = ds.x.all_row_sqnorms();
+        let mut alpha = vec![0.0f64; n];
+        let mut w = vec![0.0f64; d];
+        let mut rng = Pcg32::new(opts.seed, 0);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut shrink = ShrinkState::new(n, loss.upper_bound());
+        phases.add("init", init_t.secs());
+
+        // ---- main loop -------------------------------------------------
+        let train_t = Timer::start();
+        let mut updates: u64 = 0;
+        let mut epochs_run = 0;
+        'outer: for epoch in 0..opts.epochs {
+            let active = if opts.shrinking {
+                shrink.active_indices()
+            } else {
+                match opts.sampling {
+                    Sampling::Permutation => {
+                        rng.shuffle(&mut order);
+                        order.clone()
+                    }
+                    Sampling::WithReplacement => {
+                        (0..n).map(|_| rng.gen_range(n)).collect()
+                    }
+                }
+            };
+            let active = if opts.shrinking {
+                // permute the active set each epoch too
+                let mut a = active;
+                rng.shuffle(&mut a);
+                a
+            } else {
+                active
+            };
+
+            shrink.begin_epoch();
+            for &i in &active {
+                let q = qii[i];
+                if q <= 0.0 {
+                    continue; // empty row
+                }
+                let wx = ds.x.row_dot_dense(i, &w);
+                if opts.shrinking {
+                    let g = loss.dual_gradient(alpha[i], wx);
+                    if shrink.should_skip(i, alpha[i], g) {
+                        continue;
+                    }
+                }
+                let a_new = loss.solve_subproblem(alpha[i], wx, q);
+                let delta = a_new - alpha[i];
+                updates += 1;
+                if delta.abs() > MIN_DELTA {
+                    alpha[i] = a_new;
+                    let (idx, vals) = ds.x.row(i);
+                    for (j, v) in idx.iter().zip(vals) {
+                        // SAFETY: indices < d validated at construction.
+                        unsafe {
+                            *w.get_unchecked_mut(*j as usize) += delta * v;
+                        }
+                    }
+                }
+            }
+            shrink.end_epoch();
+            epochs_run = epoch + 1;
+
+            if opts.eval_every > 0 && (epoch + 1) % opts.eval_every == 0 {
+                if let Some(cb) = on_progress.as_deref_mut() {
+                    let p = Progress {
+                        epoch: epoch + 1,
+                        alpha: &alpha,
+                        w: &w,
+                        train_secs: train_t.secs(),
+                    };
+                    if !cb(&p) {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        phases.add("train", train_t.secs());
+
+        SolveResult { alpha, w_hat: w, epochs_run, updates, phases }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::eval;
+    use crate::loss::{Hinge, Logistic, SquaredHinge};
+
+    fn small() -> (Dataset, f64) {
+        let (tr, _, c) = registry::load("rcv1", 0.02).unwrap();
+        (tr, c)
+    }
+
+    #[test]
+    fn hinge_converges_to_small_gap() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { epochs: 30, ..Default::default() };
+        let r = SerialDcd::solve(&ds, &loss, &opts, None);
+        let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+        let p = eval::primal_objective(&ds, &loss, &r.w_hat);
+        assert!(
+            gap < 1e-3 * p.abs().max(1.0),
+            "gap {gap} too large (P = {p})"
+        );
+    }
+
+    #[test]
+    fn maintained_w_matches_wbar_serially() {
+        // In the serial algorithm Eq. 3 holds exactly (up to float error).
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { epochs: 5, ..Default::default() };
+        let r = SerialDcd::solve(&ds, &loss, &opts, None);
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err: f64 = r
+            .w_hat
+            .iter()
+            .zip(&wbar)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-9, "‖ŵ − w̄‖∞ = {err}");
+    }
+
+    #[test]
+    fn alpha_stays_feasible() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { epochs: 3, ..Default::default() };
+        let r = SerialDcd::solve(&ds, &loss, &opts, None);
+        assert!(r.alpha.iter().all(|&a| (0.0..=c).contains(&a)));
+    }
+
+    #[test]
+    fn objective_decreases_monotonically() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let mut duals: Vec<f64> = Vec::new();
+        let mut cb = |p: &Progress<'_>| {
+            duals.push(eval::dual_objective(&ds, &loss, p.alpha));
+            true
+        };
+        let opts = SolveOptions {
+            epochs: 8,
+            eval_every: 1,
+            ..Default::default()
+        };
+        SerialDcd::solve(&ds, &loss, &opts, Some(&mut cb));
+        for pair in duals.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-9, "dual increased: {duals:?}");
+        }
+    }
+
+    #[test]
+    fn early_stop_via_callback() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let mut calls = 0;
+        let mut cb = |_: &Progress<'_>| {
+            calls += 1;
+            calls < 2
+        };
+        let opts = SolveOptions {
+            epochs: 50,
+            eval_every: 1,
+            ..Default::default()
+        };
+        let r = SerialDcd::solve(&ds, &loss, &opts, Some(&mut cb));
+        assert_eq!(r.epochs_run, 2);
+        assert_eq!(calls, 2);
+    }
+
+    #[test]
+    fn shrinking_matches_full_solver_objective() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let full = SerialDcd::solve(
+            &ds,
+            &loss,
+            &SolveOptions { epochs: 40, ..Default::default() },
+            None,
+        );
+        let shr = SerialDcd::solve(
+            &ds,
+            &loss,
+            &SolveOptions { epochs: 40, shrinking: true, ..Default::default() },
+            None,
+        );
+        let p_full = eval::primal_objective(&ds, &loss, &full.w_hat);
+        let p_shr = eval::primal_objective(&ds, &loss, &shr.w_hat);
+        assert!(
+            (p_full - p_shr).abs() < 0.01 * p_full.abs(),
+            "shrinking changed the answer: {p_full} vs {p_shr}"
+        );
+        // and skipped work:
+        assert!(shr.updates < full.updates);
+    }
+
+    #[test]
+    fn squared_hinge_and_logistic_also_converge() {
+        let (ds, c) = small();
+        let opts = SolveOptions { epochs: 30, ..Default::default() };
+
+        let sq = SquaredHinge::new(c);
+        let r = SerialDcd::solve(&ds, &sq, &opts, None);
+        let gap = eval::duality_gap(&ds, &sq, &r.alpha);
+        assert!(gap < 1e-2, "squared hinge gap {gap}");
+
+        let lg = Logistic::new(c);
+        let r = SerialDcd::solve(&ds, &lg, &opts, None);
+        let gap = eval::duality_gap(&ds, &lg, &r.alpha);
+        let p = eval::primal_objective(&ds, &lg, &r.w_hat);
+        assert!(gap < 1e-2 * p.abs().max(1.0), "logistic gap {gap}");
+    }
+
+    #[test]
+    fn with_replacement_sampling_also_converges() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions {
+            epochs: 40,
+            sampling: Sampling::WithReplacement,
+            ..Default::default()
+        };
+        let r = SerialDcd::solve(&ds, &loss, &opts, None);
+        let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+        assert!(gap < 1e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { epochs: 3, ..Default::default() };
+        let a = SerialDcd::solve(&ds, &loss, &opts, None);
+        let b = SerialDcd::solve(&ds, &loss, &opts, None);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.w_hat, b.w_hat);
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-feature lock table for PASSCoDe-Lock.
+//!
+//! Step 1.5 of the paper: before updating coordinate `i`, lock every
+//! `w_t` with `(x_i)_t ≠ 0`.  Deadlock is avoided by the paper's own
+//! §3.3 recipe — a global ordering on locks; CSR rows are sorted by
+//! feature index, so acquiring in row order *is* the ordered protocol.
+//!
+//! Locks are one-byte spinlocks (`AtomicBool`): the critical sections are
+//! tens of nanoseconds, an OS mutex would dominate them.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// A table of `d` tiny spinlocks, one per feature.
+pub struct LockTable {
+    locks: Vec<AtomicBool>,
+}
+
+impl LockTable {
+    pub fn new(d: usize) -> Self {
+        Self { locks: (0..d).map(|_| AtomicBool::new(false)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.locks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locks.is_empty()
+    }
+
+    /// Acquire the locks for a *sorted* feature list. Spin-waits.
+    #[inline]
+    pub fn acquire_sorted(&self, features: &[u32]) {
+        debug_assert!(features.windows(2).all(|w| w[0] < w[1]));
+        for &f in features {
+            let lock = &self.locks[f as usize];
+            while lock
+                .compare_exchange_weak(
+                    false,
+                    true,
+                    Ordering::Acquire,
+                    Ordering::Relaxed,
+                )
+                .is_err()
+            {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    /// Release previously-acquired locks (any order is fine).
+    #[inline]
+    pub fn release(&self, features: &[u32]) {
+        for &f in features {
+            self.locks[f as usize].store(false, Ordering::Release);
+        }
+    }
+
+    /// Whether feature `f` is currently held (test/diagnostic only).
+    pub fn is_held(&self, f: usize) -> bool {
+        self.locks[f].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let t = LockTable::new(8);
+        t.acquire_sorted(&[1, 3, 5]);
+        assert!(t.is_held(1) && t.is_held(3) && t.is_held(5));
+        assert!(!t.is_held(0));
+        t.release(&[1, 3, 5]);
+        assert!(!t.is_held(3));
+    }
+
+    #[test]
+    fn mutual_exclusion_protects_counter() {
+        // Two threads increment a (non-atomic via UnsafeCell-free trick:
+        // use the lock to serialize accesses to a plain u64 behind a
+        // raw pointer) — here we just verify the protocol with an atomic
+        // relaxed counter that would *race* without the lock.
+        let t = Arc::new(LockTable::new(4));
+        let counter = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = Arc::clone(&t);
+                let counter = Arc::clone(&counter);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        t.acquire_sorted(&[2]);
+                        // racy read-modify-write, serialized by the lock
+                        let v = counter.load(Ordering::Relaxed);
+                        counter.store(v + 1, Ordering::Relaxed);
+                        t.release(&[2]);
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 40_000);
+    }
+
+    #[test]
+    fn ordered_acquisition_no_deadlock_on_overlap() {
+        // Threads repeatedly take overlapping sorted sets; absence of
+        // deadlock == the test terminates.
+        let t = Arc::new(LockTable::new(16));
+        std::thread::scope(|s| {
+            for k in 0..4u32 {
+                let t = Arc::clone(&t);
+                s.spawn(move || {
+                    let sets: [&[u32]; 3] =
+                        [&[0, 5, 9], &[5, 9, 12], &[0, 12, 15]];
+                    for _ in 0..5_000 {
+                        let set = sets[(k as usize) % 3];
+                        t.acquire_sorted(set);
+                        t.release(set);
+                    }
+                });
+            }
+        });
+    }
+}

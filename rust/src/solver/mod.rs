@@ -1,0 +1,125 @@
+//! Solver core: the serial DCD baseline (Algorithm 1) and the PASSCoDe
+//! family (Algorithm 2) with its three memory models.
+//!
+//! Common vocabulary:
+//! * an **epoch** is `n` coordinate updates (one pass, in expectation,
+//!   over the dual variables) — the paper's "iteration" in the figures;
+//! * solvers maintain the primal vector `w = Σ_i α_i x_i` incrementally
+//!   (the O(nnz/n)-per-update trick that makes DCD fast);
+//! * the returned [`SolveResult`] carries both the *maintained* `ŵ` and
+//!   the dual iterate `α` — for PASSCoDe-Wild these disagree (Eq. 6) and
+//!   the caller chooses which one to predict with (Table 2).
+
+pub mod dcd;
+pub mod locks;
+pub mod multiclass;
+pub mod passcode;
+pub mod shrinking;
+
+pub use dcd::SerialDcd;
+pub use multiclass::{MulticlassDataset, OvrModel};
+pub use passcode::{MemoryModel, Passcode};
+
+use crate::util::Phases;
+
+/// How coordinates are picked within an epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Fresh random permutation per epoch (LIBLINEAR's scheme; paper §3.3:
+    /// every coordinate visited exactly once per epoch).
+    Permutation,
+    /// I.i.d. uniform sampling with replacement (the scheme analysed in
+    /// the theory sections).
+    WithReplacement,
+}
+
+/// Options shared by all solvers.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Number of epochs (n updates each).
+    pub epochs: usize,
+    /// RNG seed; every run is reproducible.
+    pub seed: u64,
+    /// Shrinking heuristic (serial DCD / per-thread active sets).
+    pub shrinking: bool,
+    /// Coordinate selection scheme.
+    pub sampling: Sampling,
+    /// Worker threads (ignored by serial solvers).
+    pub threads: usize,
+    /// Pin worker threads to cores (paper §3.3 Thread Affinity).
+    pub pin_threads: bool,
+    /// Invoke the progress callback every `eval_every` epochs (0 = never;
+    /// parallel solvers then free-run with no epoch barriers at all).
+    pub eval_every: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            seed: 42,
+            shrinking: false,
+            sampling: Sampling::Permutation,
+            threads: 1,
+            pin_threads: false,
+            eval_every: 0,
+        }
+    }
+}
+
+/// Snapshot handed to the progress callback at epoch boundaries.
+#[derive(Debug)]
+pub struct Progress<'a> {
+    /// Epochs completed so far.
+    pub epoch: usize,
+    /// Dual iterate (projected view may be needed by the caller).
+    pub alpha: &'a [f64],
+    /// Maintained primal vector ŵ.
+    pub w: &'a [f64],
+    /// Seconds of training so far (excludes init).
+    pub train_secs: f64,
+}
+
+/// Progress callback: return `false` to stop early.  `Send` because the
+/// parallel solvers invoke it from the leader worker thread.
+pub type ProgressFn<'a> = dyn FnMut(&Progress<'_>) -> bool + Send + 'a;
+
+/// What a solver hands back.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// Final dual iterate.
+    pub alpha: Vec<f64>,
+    /// Final *maintained* primal vector ŵ (may violate Eq. 3 for Wild).
+    pub w_hat: Vec<f64>,
+    /// Epochs actually run (early stop may cut this short).
+    pub epochs_run: usize,
+    /// Total coordinate updates performed.
+    pub updates: u64,
+    /// Phase timings: "init" (norms, permutation setup — the paper counts
+    /// this in end-to-end time but not in speedup) and "train".
+    pub phases: Phases,
+}
+
+impl SolveResult {
+    pub fn init_secs(&self) -> f64 {
+        self.phases.get("init")
+    }
+
+    pub fn train_secs(&self) -> f64 {
+        self.phases.get("train")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_are_sane() {
+        let o = SolveOptions::default();
+        assert_eq!(o.epochs, 10);
+        assert_eq!(o.threads, 1);
+        assert!(!o.shrinking);
+        assert_eq!(o.sampling, Sampling::Permutation);
+    }
+}

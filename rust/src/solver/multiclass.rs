@@ -1,0 +1,247 @@
+//! One-vs-rest multiclass training on top of the binary solvers —
+//! LIBLINEAR's multiclass mode (cf. Keerthi et al. 2008, cited in the
+//! paper §1) built from PASSCoDe binary problems.
+//!
+//! For K classes, K binary problems are trained (class k vs rest); each
+//! binary problem is itself solved by any [`SolverKind`]-style engine —
+//! here serial DCD or PASSCoDe with a chosen memory model.  Prediction
+//! is argmax over the K margins.
+
+use crate::data::{CsrMatrix, Dataset};
+use crate::loss::Loss;
+
+use super::passcode::{MemoryModel, Passcode};
+use super::{SolveOptions, SolveResult};
+
+/// A multiclass instance set: rows (unfolded) + integer labels `0..K`.
+#[derive(Debug, Clone)]
+pub struct MulticlassDataset {
+    pub x: CsrMatrix,
+    /// Class id per row, in `0..k`.
+    pub labels: Vec<usize>,
+    pub k: usize,
+    pub name: String,
+}
+
+impl MulticlassDataset {
+    pub fn new(
+        x: CsrMatrix,
+        labels: Vec<usize>,
+        k: usize,
+        name: impl Into<String>,
+    ) -> Self {
+        assert_eq!(x.rows(), labels.len());
+        assert!(k >= 2);
+        assert!(labels.iter().all(|&l| l < k), "label out of range");
+        Self { x, labels, k, name: name.into() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// The binary one-vs-rest view for class `k`: rows folded with
+    /// y = +1 for class k, −1 otherwise.
+    pub fn ovr_view(&self, k: usize) -> Dataset {
+        assert!(k < self.k);
+        let mut rows = Vec::with_capacity(self.n());
+        let mut y = Vec::with_capacity(self.n());
+        for i in 0..self.n() {
+            let label = if self.labels[i] == k { 1.0 } else { -1.0 };
+            let (idx, vals) = self.x.row(i);
+            rows.push(
+                idx.iter()
+                    .zip(vals)
+                    .map(|(j, v)| crate::data::Entry {
+                        index: *j,
+                        value: label * v,
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            y.push(label);
+        }
+        Dataset::new(
+            CsrMatrix::from_rows(&rows, self.d()),
+            y,
+            format!("{}-ovr{}", self.name, k),
+        )
+    }
+}
+
+/// A trained one-vs-rest model: one weight vector per class.
+#[derive(Debug, Clone)]
+pub struct OvrModel {
+    /// `k` weight vectors, each of length `d`.
+    pub w: Vec<Vec<f64>>,
+}
+
+impl OvrModel {
+    /// Train with PASSCoDe (or serial when `threads == 1`).
+    pub fn train<L: Loss>(
+        ds: &MulticlassDataset,
+        loss: &L,
+        model: MemoryModel,
+        opts: &SolveOptions,
+    ) -> (OvrModel, Vec<SolveResult>) {
+        let mut w = Vec::with_capacity(ds.k);
+        let mut results = Vec::with_capacity(ds.k);
+        for k in 0..ds.k {
+            let view = ds.ovr_view(k);
+            let r = Passcode::solve(&view, loss, model, opts, None);
+            w.push(r.w_hat.clone());
+            results.push(r);
+        }
+        (OvrModel { w }, results)
+    }
+
+    /// Predicted class of a raw (unfolded) sparse row: argmax margin.
+    pub fn predict_row(&self, idx: &[u32], vals: &[f64]) -> usize {
+        let mut best = 0usize;
+        let mut best_m = f64::NEG_INFINITY;
+        for (k, wk) in self.w.iter().enumerate() {
+            let mut m = 0.0;
+            for (j, v) in idx.iter().zip(vals) {
+                m += wk[*j as usize] * v;
+            }
+            if m > best_m {
+                best_m = m;
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Accuracy over a multiclass dataset.
+    pub fn accuracy(&self, ds: &MulticlassDataset) -> f64 {
+        if ds.n() == 0 {
+            return 0.0;
+        }
+        let correct = (0..ds.n())
+            .filter(|&i| {
+                let (idx, vals) = ds.x.row(i);
+                self.predict_row(idx, vals) == ds.labels[i]
+            })
+            .count();
+        correct as f64 / ds.n() as f64
+    }
+}
+
+/// Synthetic multiclass generator: K planted separators, label = argmax.
+pub fn synthetic_multiclass(
+    n: usize,
+    d: usize,
+    k: usize,
+    avg_nnz: f64,
+    seed: u64,
+) -> MulticlassDataset {
+    use crate::util::Pcg32;
+    let mut rng = Pcg32::new(seed, 0x3C1A55);
+    let wstars: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.gen_normal()).collect())
+        .collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nnz = ((avg_nnz * (0.5 + rng.gen_f64())).round() as usize)
+            .clamp(1, d);
+        let mut feats: Vec<(u32, f64)> = Vec::with_capacity(nnz);
+        while feats.len() < nnz {
+            let j = rng.gen_range(d) as u32;
+            if feats.iter().all(|&(i, _)| i != j) {
+                feats.push((j, rng.gen_normal()));
+            }
+        }
+        feats.sort_unstable_by_key(|&(i, _)| i);
+        let label = (0..k)
+            .max_by(|&a, &b| {
+                let ma: f64 = feats
+                    .iter()
+                    .map(|&(j, v)| wstars[a][j as usize] * v)
+                    .sum();
+                let mb: f64 = feats
+                    .iter()
+                    .map(|&(j, v)| wstars[b][j as usize] * v)
+                    .sum();
+                ma.total_cmp(&mb)
+            })
+            .unwrap();
+        rows.push(
+            feats
+                .iter()
+                .map(|&(j, v)| crate::data::Entry { index: j, value: v })
+                .collect::<Vec<_>>(),
+        );
+        labels.push(label);
+    }
+    let mut x = CsrMatrix::from_rows(&rows, d);
+    x.normalize_rows_to_unit_max();
+    MulticlassDataset::new(x, labels, k, format!("synthetic-{k}class"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Hinge;
+
+    fn data() -> MulticlassDataset {
+        synthetic_multiclass(600, 80, 4, 12.0, 11)
+    }
+
+    #[test]
+    fn generator_produces_all_classes() {
+        let ds = data();
+        for k in 0..4 {
+            let c = ds.labels.iter().filter(|&&l| l == k).count();
+            assert!(c > 30, "class {k} nearly empty: {c}");
+        }
+    }
+
+    #[test]
+    fn ovr_view_folds_correctly() {
+        let ds = data();
+        let v = ds.ovr_view(1);
+        assert_eq!(v.n(), ds.n());
+        let pos = v.y.iter().filter(|&&y| y > 0.0).count();
+        let want = ds.labels.iter().filter(|&&l| l == 1).count();
+        assert_eq!(pos, want);
+    }
+
+    #[test]
+    fn ovr_training_beats_chance_by_far() {
+        let ds = data();
+        let loss = Hinge::new(1.0);
+        let opts = SolveOptions {
+            threads: 2,
+            epochs: 20,
+            eval_every: 1,
+            ..Default::default()
+        };
+        let (model, results) =
+            OvrModel::train(&ds, &loss, MemoryModel::Wild, &opts);
+        assert_eq!(model.w.len(), 4);
+        assert_eq!(results.len(), 4);
+        let acc = model.accuracy(&ds);
+        assert!(acc > 0.7, "multiclass accuracy {acc} (chance = 0.25)");
+    }
+
+    #[test]
+    fn predict_row_is_argmax() {
+        let model = OvrModel {
+            w: vec![vec![1.0, 0.0], vec![0.0, 2.0], vec![-1.0, -1.0]],
+        };
+        assert_eq!(model.predict_row(&[0], &[1.0]), 0);
+        assert_eq!(model.predict_row(&[1], &[1.0]), 1);
+        assert_eq!(model.predict_row(&[0, 1], &[-1.0, -1.0]), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn rejects_bad_labels() {
+        let x = CsrMatrix::from_rows(&[vec![]], 1);
+        MulticlassDataset::new(x, vec![5], 3, "bad");
+    }
+}

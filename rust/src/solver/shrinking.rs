@@ -1,0 +1,175 @@
+//! The LIBLINEAR shrinking heuristic (paper §3.3, Hsieh et al. 2008 §4).
+//!
+//! For box-constrained duals (hinge: α ∈ [0, C]) variables stuck at a
+//! bound with a strongly-signed projected gradient are removed from the
+//! active set; bounds `M̄`/`m̄` track the previous epoch's extreme
+//! projected gradients.  When the active set converges, it is reset once
+//! so the final pass re-checks all coordinates (LIBLINEAR's behaviour).
+
+/// Per-run shrinking state.
+#[derive(Debug)]
+pub struct ShrinkState {
+    /// None disables shrinking (no finite box → heuristic not applicable).
+    upper: Option<f64>,
+    active: Vec<bool>,
+    n_active: usize,
+    /// Extremes of the projected gradient seen in the previous epoch.
+    pg_max_old: f64,
+    pg_min_old: f64,
+    /// Extremes accumulated in the current epoch.
+    pg_max_new: f64,
+    pg_min_new: f64,
+}
+
+impl ShrinkState {
+    pub fn new(n: usize, upper: Option<f64>) -> Self {
+        Self {
+            upper,
+            active: vec![true; n],
+            n_active: n,
+            pg_max_old: f64::INFINITY,
+            pg_min_old: f64::NEG_INFINITY,
+            pg_max_new: f64::NEG_INFINITY,
+            pg_min_new: f64::INFINITY,
+        }
+    }
+
+    /// Indices currently active (callers may permute).
+    pub fn active_indices(&self) -> Vec<usize> {
+        (0..self.active.len()).filter(|&i| self.active[i]).collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.n_active
+    }
+
+    pub fn begin_epoch(&mut self) {
+        self.pg_max_new = f64::NEG_INFINITY;
+        self.pg_min_new = f64::INFINITY;
+    }
+
+    /// Decide whether coordinate `i` (dual value `alpha`, dual gradient
+    /// `g`) should be skipped this epoch; updates the PG statistics.
+    ///
+    /// Projected gradient (for the box [0, C]):
+    /// `PG = min(g, 0)` at α = 0, `max(g, 0)` at α = C, `g` inside.
+    pub fn should_skip(&mut self, i: usize, alpha: f64, g: f64) -> bool {
+        let Some(c) = self.upper else {
+            return false; // no box → no shrinking
+        };
+        let at_lower = alpha <= 0.0;
+        let at_upper = alpha >= c;
+        let pg = if at_lower {
+            if g > self.pg_max_old {
+                self.deactivate(i);
+                return true;
+            }
+            g.min(0.0)
+        } else if at_upper {
+            if g < self.pg_min_old {
+                self.deactivate(i);
+                return true;
+            }
+            g.max(0.0)
+        } else {
+            g
+        };
+        self.pg_max_new = self.pg_max_new.max(pg);
+        self.pg_min_new = self.pg_min_new.min(pg);
+        false
+    }
+
+    fn deactivate(&mut self, i: usize) {
+        if self.active[i] {
+            self.active[i] = false;
+            self.n_active -= 1;
+        }
+    }
+
+    /// Roll epoch statistics (LIBLINEAR: inflate when degenerate, and
+    /// reactivate everything when the active problem looks solved).
+    pub fn end_epoch(&mut self) {
+        self.pg_max_old = if self.pg_max_new <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.pg_max_new
+        };
+        self.pg_min_old = if self.pg_min_new >= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            self.pg_min_new
+        };
+        // Active problem nearly solved → un-shrink for a clean final pass.
+        if self.pg_max_new - self.pg_min_new < 1e-6 {
+            for a in &mut self.active {
+                *a = true;
+            }
+            self.n_active = self.active.len();
+            self.pg_max_old = f64::INFINITY;
+            self.pg_min_old = f64::NEG_INFINITY;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_box_never_skips() {
+        let mut s = ShrinkState::new(4, None);
+        assert!(!s.should_skip(0, 0.0, 100.0));
+        assert_eq!(s.n_active(), 4);
+    }
+
+    #[test]
+    fn first_epoch_never_shrinks() {
+        // pg_max_old starts at +inf so nothing can exceed it.
+        let mut s = ShrinkState::new(4, Some(1.0));
+        s.begin_epoch();
+        assert!(!s.should_skip(0, 0.0, 1e9));
+        assert_eq!(s.n_active(), 4);
+    }
+
+    #[test]
+    fn shrinks_bound_variable_with_strong_gradient() {
+        let mut s = ShrinkState::new(3, Some(1.0));
+        s.begin_epoch();
+        // Build statistics: interior coordinate with g in [-1, 1]
+        assert!(!s.should_skip(1, 0.5, 1.0));
+        assert!(!s.should_skip(2, 0.5, -1.0));
+        s.end_epoch();
+        s.begin_epoch();
+        // α = 0 with g = 2 > pg_max_old = 1 → shrink.
+        assert!(s.should_skip(0, 0.0, 2.0));
+        assert_eq!(s.n_active(), 2);
+        // α = C with g = -2 < pg_min_old = -1 → shrink.
+        assert!(s.should_skip(1, 1.0, -2.0));
+        assert_eq!(s.n_active(), 1);
+    }
+
+    #[test]
+    fn interior_variables_never_skipped() {
+        let mut s = ShrinkState::new(2, Some(1.0));
+        s.begin_epoch();
+        assert!(!s.should_skip(0, 0.5, 100.0));
+        s.end_epoch();
+        s.begin_epoch();
+        assert!(!s.should_skip(0, 0.5, 100.0));
+    }
+
+    #[test]
+    fn converged_epoch_unshrinks() {
+        let mut s = ShrinkState::new(2, Some(1.0));
+        s.begin_epoch();
+        let _ = s.should_skip(0, 0.5, 1.0);
+        let _ = s.should_skip(1, 0.5, -1.0);
+        s.end_epoch();
+        s.begin_epoch();
+        assert!(s.should_skip(0, 0.0, 5.0));
+        assert_eq!(s.n_active(), 1);
+        // A "solved" epoch: all PGs ~ 0 → everything reactivates.
+        s.end_epoch(); // pg range collapsed (nothing interior was seen)
+        assert_eq!(s.n_active(), 2);
+    }
+}

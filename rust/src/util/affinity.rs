@@ -1,0 +1,67 @@
+//! Thread affinity (paper §3.3 "Thread Affinity").
+//!
+//! The paper binds each worker to a physical core (libnuma) to avoid
+//! remote-socket access.  We implement the same with raw
+//! `sched_setaffinity`; on hosts with fewer cores than workers the pin
+//! wraps modulo the online-core count (graceful on this 1-core image,
+//! faithful on a real multi-socket box).
+
+/// Number of CPUs currently online.
+pub fn online_cpus() -> usize {
+    // SAFETY: sysconf is always safe to call.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n <= 0 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Pin the calling thread to core `core % online_cpus()`.
+///
+/// Returns the core actually pinned to, or `None` if the kernel refused
+/// (e.g. restricted cpuset) — callers treat that as a soft failure.
+pub fn pin_current_thread(core: usize) -> Option<usize> {
+    let n = online_cpus();
+    let target = core % n;
+    // SAFETY: CPU_* only write into the local cpu_set_t.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(target, &mut set);
+        let rc = libc::sched_setaffinity(
+            0, // current thread
+            std::mem::size_of::<libc::cpu_set_t>(),
+            &set,
+        );
+        if rc == 0 {
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_cpus_is_positive() {
+        assert!(online_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_wraps_modulo_core_count() {
+        // Must not error out even when `core` exceeds the host's count.
+        let got = pin_current_thread(1_000_003);
+        if let Some(c) = got {
+            assert!(c < online_cpus());
+        }
+    }
+
+    #[test]
+    fn pin_core_zero_succeeds() {
+        assert_eq!(pin_current_thread(0), Some(0));
+    }
+}

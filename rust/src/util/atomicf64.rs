@@ -1,0 +1,186 @@
+//! Shared-memory primal vector with the paper's three write disciplines.
+//!
+//! The heart of PASSCoDe is *how* `w ← w + Δα_i x_i` is written to shared
+//! memory (Algorithm 2, step 3).  [`SharedVec`] stores `w` as
+//! `AtomicU64`-encoded f64 and exposes exactly the three mechanisms:
+//!
+//! * [`SharedVec::add_atomic`] — a CAS loop (PASSCoDe-Atomic): no update
+//!   is ever lost, but each write pays the RMW penalty.
+//! * [`SharedVec::add_wild`] — relaxed load, add in register, relaxed
+//!   store (PASSCoDe-Wild): compiles to plain loads/stores; concurrent
+//!   writers can overwrite each other exactly like the paper's unguarded
+//!   C++ `+=` (while staying defined behaviour in Rust — the data race of
+//!   a literal non-atomic `+=` would be UB here, and `Relaxed` on x86 has
+//!   identical codegen).
+//! * reads are always plain relaxed loads ([`SharedVec::get`]) — all three
+//!   variants read `w` without locks; only Lock additionally guards the
+//!   *feature set* via [`crate::solver::locks::LockTable`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fixed-size shared `f64` vector supporting lock-free concurrent access.
+pub struct SharedVec {
+    bits: Vec<AtomicU64>,
+}
+
+impl SharedVec {
+    /// Zero-initialized vector of length `n`.
+    pub fn zeros(n: usize) -> Self {
+        Self { bits: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect() }
+    }
+
+    /// Build from an existing slice.
+    pub fn from_slice(v: &[f64]) -> Self {
+        Self { bits: v.iter().map(|&x| AtomicU64::new(x.to_bits())).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Relaxed read of element `j`.
+    #[inline]
+    pub fn get(&self, j: usize) -> f64 {
+        f64::from_bits(self.bits[j].load(Ordering::Relaxed))
+    }
+
+    /// Plain (relaxed) overwrite of element `j`.
+    #[inline]
+    pub fn set(&self, j: usize, v: f64) {
+        self.bits[j].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Lossless concurrent add via a compare-exchange loop
+    /// (PASSCoDe-Atomic's step 3).
+    #[inline]
+    pub fn add_atomic(&self, j: usize, delta: f64) {
+        let cell = &self.bits[j];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Racy read-modify-write (PASSCoDe-Wild's step 3): a concurrent
+    /// writer between our load and store is silently overwritten — the
+    /// memory-conflict behaviour analyzed by the paper's Theorem 3.
+    #[inline]
+    pub fn add_wild(&self, j: usize, delta: f64) {
+        let cell = &self.bits[j];
+        let cur = f64::from_bits(cell.load(Ordering::Relaxed));
+        cell.store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Snapshot into a plain `Vec<f64>` (evaluation path; not hot).
+    pub fn to_vec(&self) -> Vec<f64> {
+        (0..self.len()).map(|j| self.get(j)).collect()
+    }
+
+    /// Copy values in from a slice (lengths must match).
+    pub fn copy_from(&self, v: &[f64]) {
+        assert_eq!(v.len(), self.len());
+        for (j, &x) in v.iter().enumerate() {
+            self.set(j, x);
+        }
+    }
+}
+
+impl std::fmt::Debug for SharedVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedVec(len={})", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let v = SharedVec::zeros(4);
+        v.set(2, -3.25);
+        assert_eq!(v.get(2), -3.25);
+        assert_eq!(v.get(0), 0.0);
+    }
+
+    #[test]
+    fn from_slice_and_to_vec() {
+        let v = SharedVec::from_slice(&[1.0, 2.5, -7.0]);
+        assert_eq!(v.to_vec(), vec![1.0, 2.5, -7.0]);
+    }
+
+    #[test]
+    fn atomic_add_is_lossless_under_contention() {
+        let v = Arc::new(SharedVec::zeros(1));
+        let threads = 8;
+        let per = 10_000;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let v = Arc::clone(&v);
+                s.spawn(move || {
+                    for _ in 0..per {
+                        v.add_atomic(0, 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(v.get(0), (threads * per) as f64);
+    }
+
+    #[test]
+    fn wild_add_single_thread_is_exact() {
+        let v = SharedVec::zeros(1);
+        for _ in 0..1000 {
+            v.add_wild(0, 0.5);
+        }
+        assert_eq!(v.get(0), 500.0);
+    }
+
+    #[test]
+    fn wild_add_may_lose_updates_but_never_corrupts() {
+        // Under contention Wild can drop increments (that is the point of
+        // the paper's backward-error analysis) but each stored value is a
+        // valid f64 computed from a previously stored value: the final sum
+        // is between one thread's total and the lossless total.
+        let v = Arc::new(SharedVec::zeros(1));
+        let threads = 4;
+        let per = 50_000;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let v = Arc::clone(&v);
+                s.spawn(move || {
+                    for _ in 0..per {
+                        v.add_wild(0, 1.0);
+                    }
+                });
+            }
+        });
+        let total = v.get(0);
+        assert!(total >= per as f64, "lost more than whole threads: {total}");
+        assert!(total <= (threads * per) as f64);
+        assert_eq!(total.fract(), 0.0, "corrupted value {total}");
+    }
+
+    #[test]
+    fn copy_from_matches() {
+        let v = SharedVec::zeros(3);
+        v.copy_from(&[9.0, 8.0, 7.0]);
+        assert_eq!(v.to_vec(), vec![9.0, 8.0, 7.0]);
+    }
+}

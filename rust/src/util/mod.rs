@@ -1,0 +1,16 @@
+//! Utility substrate: RNG, shared atomic f64 vector, JSON, timers,
+//! affinity, and bench statistics.  Everything here exists because the
+//! offline image vendors no rand/serde/criterion — see DESIGN.md §7.
+
+pub mod affinity;
+pub mod atomicf64;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use atomicf64::SharedVec;
+pub use json::Json;
+pub use rng::{Pcg32, SplitMix64};
+pub use stats::Summary;
+pub use timer::{Phases, Timer};

@@ -1,0 +1,107 @@
+//! Wall-clock timing helpers and a tiny hierarchical stopwatch.
+//!
+//! The paper's timing protocol (Section 5.2) includes initialization in
+//! end-to-end timings but *excludes* it from speedup computations; the
+//! [`Phases`] stopwatch records named phases so benches can report both.
+
+use std::time::{Duration, Instant};
+
+/// One-shot stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Named phase accumulator (init / train / eval …).
+#[derive(Debug, Default, Clone)]
+pub struct Phases {
+    entries: Vec<(String, f64)>,
+}
+
+impl Phases {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`, accumulating across calls.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.secs());
+        out
+    }
+
+    /// Add `secs` to phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(t.secs() >= 0.009);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = Phases::new();
+        p.add("init", 1.0);
+        p.add("train", 2.0);
+        p.add("init", 0.5);
+        assert_eq!(p.get("init"), 1.5);
+        assert_eq!(p.get("train"), 2.0);
+        assert_eq!(p.get("missing"), 0.0);
+        assert!((p.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phases_time_closure() {
+        let mut p = Phases::new();
+        let v = p.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(p.get("work") > 0.004);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-module integration tests: driver ↔ registry ↔ solvers ↔ eval ↔
+//! metrics ↔ config files ↔ LIBSVM files ↔ simulator.
+
+use passcode::coordinator::{driver, experiments, RunConfig, SolverKind};
+use passcode::data::{libsvm, registry};
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::simcore::{self, Mechanism, SimConfig};
+use passcode::solver::{MemoryModel, SerialDcd, SolveOptions};
+use passcode::util::Json;
+
+#[test]
+fn full_run_emits_consistent_metrics_and_csv() {
+    let cfg = RunConfig {
+        dataset: "news20".into(),
+        scale: 0.1,
+        solver: SolverKind::Passcode(MemoryModel::Atomic),
+        threads: 3,
+        epochs: 6,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let out = driver::run(&cfg).unwrap();
+    assert_eq!(out.metrics.rows.len(), 3);
+    // CSV round trip: header + 3 rows; primal column is decreasing.
+    let csv = out.metrics.to_csv();
+    let rows: Vec<&str> = csv.trim().lines().skip(1).collect();
+    assert_eq!(rows.len(), 3);
+    let primals: Vec<f64> = rows
+        .iter()
+        .map(|r| r.split(',').nth(3).unwrap().parse().unwrap())
+        .collect();
+    assert!(primals.windows(2).all(|w| w[1] <= w[0] + 1e-6), "{primals:?}");
+    let last = out.metrics.final_row().unwrap();
+    assert!((last.epoch) == 6);
+    assert!(last.gap >= -1e-9);
+}
+
+#[test]
+fn config_file_round_trip_drives_runs() {
+    let dir = std::env::temp_dir().join("passcode_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    let cfg = RunConfig {
+        dataset: "rcv1".into(),
+        scale: 0.02,
+        solver: SolverKind::Cocoa,
+        epochs: 4,
+        threads: 2,
+        eval_every: 0,
+        ..Default::default()
+    };
+    std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+    let loaded = RunConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.solver, SolverKind::Cocoa);
+    assert_eq!(loaded.epochs, 4);
+    let out = driver::run(&loaded).unwrap();
+    assert!(out.primal_final.is_finite());
+}
+
+#[test]
+fn libsvm_file_to_trained_model() {
+    // Write a registry dataset to LIBSVM, reload through the data_path
+    // entry, train, and check accuracy survives the round trip.
+    let (tr, _, _) = registry::load("rcv1", 0.02).unwrap();
+    let dir = std::env::temp_dir().join("passcode_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rcv1_small.svm");
+    libsvm::save(&tr, &path).unwrap();
+
+    let cfg = RunConfig {
+        data_path: Some(path.to_str().unwrap().to_string()),
+        c: Some(1.0),
+        solver: SolverKind::Dcd,
+        epochs: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let out = driver::run(&cfg).unwrap();
+    assert!(out.acc_what > 0.6, "round-tripped accuracy {}", out.acc_what);
+}
+
+#[test]
+fn simulator_and_real_solver_agree_on_final_objective() {
+    // Same dataset, same epoch budget: the DES (8 virtual cores) and the
+    // real threaded solver (4 threads, barriers) must land on primal
+    // objectives within a few percent of each other — they run the same
+    // algorithm, differing only in interleaving.
+    let (tr, _, c) = registry::load("rcv1", 0.05).unwrap();
+    let loss = Hinge::new(c);
+    let epochs = 15;
+    let sim = simcore::simulate(
+        &tr,
+        &loss,
+        &SimConfig {
+            cores: 8,
+            epochs,
+            seed: 3,
+            cost: Default::default(),
+            mechanism: Mechanism::Atomic, sockets: 1, },
+    );
+    let p_sim = eval::primal_objective(&tr, &loss, &sim.w);
+    let real = passcode::solver::Passcode::solve(
+        &tr,
+        &loss,
+        MemoryModel::Atomic,
+        &SolveOptions {
+            threads: 4,
+            epochs,
+            eval_every: 1,
+            ..Default::default()
+        },
+        None,
+    );
+    let p_real = eval::primal_objective(&tr, &loss, &real.w_hat);
+    assert!(
+        (p_sim - p_real).abs() < 0.03 * p_real.abs(),
+        "sim {p_sim} vs real {p_real}"
+    );
+}
+
+#[test]
+fn serial_solvers_agree_across_entry_points() {
+    // SerialDcd direct vs the driver's Dcd path, same seed → identical.
+    let (tr, _, c) = registry::load("news20", 0.05).unwrap();
+    let loss = Hinge::new(c);
+    let direct = SerialDcd::solve(
+        &tr,
+        &loss,
+        &SolveOptions { epochs: 5, seed: 42, ..Default::default() },
+        None,
+    );
+    let cfg = RunConfig {
+        dataset: "news20".into(),
+        scale: 0.05,
+        solver: SolverKind::Dcd,
+        epochs: 5,
+        seed: 42,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let out = driver::run(&cfg).unwrap();
+    let p_direct = eval::primal_objective(&tr, &loss, &direct.w_hat);
+    assert!((out.primal_final - p_direct).abs() < 1e-9);
+}
+
+#[test]
+fn experiments_backward_error_consistent_with_wild_run() {
+    let be = experiments::backward_error("rcv1", 0.02, 10, 4).unwrap();
+    assert!(be.eps_norm.is_finite() && be.w_norm > 0.0);
+    // The perturbed-problem residual with ŵ should be comparable to (not
+    // wildly worse than) the unperturbed residual with w̄ — Theorem 3.
+    assert!(be.perturbed_residual < be.unperturbed_residual + 1.0);
+}
+
+#[test]
+fn metrics_json_parseable_and_labeled() {
+    let cfg = RunConfig {
+        dataset: "rcv1".into(),
+        scale: 0.02,
+        epochs: 4,
+        eval_every: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    let out = driver::run(&cfg).unwrap();
+    let j = out.metrics.to_json().to_pretty();
+    let parsed = Json::parse(&j).unwrap();
+    assert_eq!(
+        parsed.get("label").unwrap().as_str().unwrap(),
+        "passcode-wild"
+    );
+    assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn table2_shape_what_tracks_liblinear() {
+    // Scale 0.1 keeps the test splits big enough that accuracy noise
+    // (±1/√n_test) stays under the tolerance band.
+    let (_, rows) = experiments::table2(0.1, 10).unwrap();
+    assert_eq!(rows.len(), 10); // 5 datasets × 2 thread counts
+    for r in &rows {
+        assert!(
+            (r.acc_liblinear - r.acc_what).abs() < 0.08,
+            "{}@{}: ŵ {} vs LIBLINEAR {}",
+            r.dataset,
+            r.threads,
+            r.acc_what,
+            r.acc_liblinear
+        );
+    }
+}

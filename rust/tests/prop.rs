@@ -1,0 +1,300 @@
+//! Property-based tests (hand-rolled seeded sweeps — no proptest crate in
+//! the offline image; see DESIGN.md §6).  Each property runs over many
+//! randomly generated cases; failures print the offending seed so the
+//! case replays exactly.
+
+use passcode::data::{synthetic::SyntheticSpec, Dataset};
+use passcode::eval;
+use passcode::loss::{Hinge, Logistic, Loss, SquaredHinge};
+use passcode::simcore::{self, Mechanism, SimConfig};
+use passcode::solver::{MemoryModel, Passcode, SerialDcd, SolveOptions};
+use passcode::util::{Json, Pcg32};
+
+/// Random small dataset from a seed.
+fn random_dataset(seed: u64) -> (Dataset, f64) {
+    let mut rng = Pcg32::new(seed, 99);
+    let n = 40 + rng.gen_range(120);
+    let d = 30 + rng.gen_range(400);
+    let avg = 3.0 + rng.gen_f64() * 10.0;
+    let c = [0.0625, 0.5, 1.0, 2.0][rng.gen_range(4)];
+    let ds = SyntheticSpec {
+        name: format!("prop-{seed}"),
+        n,
+        d,
+        avg_nnz: avg.min(d as f64),
+        zipf_exponent: rng.gen_f64() * 1.3,
+        label_noise: rng.gen_f64() * 0.1,
+        wstar_density: 0.1 + rng.gen_f64() * 0.5,
+        seed,
+    }
+    .generate();
+    (ds, c)
+}
+
+#[test]
+fn prop_dcd_dual_monotone_and_feasible() {
+    for seed in 0..12u64 {
+        let (ds, c) = random_dataset(seed);
+        let loss = Hinge::new(c);
+        let mut duals = Vec::new();
+        let mut cb = |p: &passcode::solver::Progress<'_>| {
+            duals.push(eval::dual_objective(&ds, &loss, p.alpha));
+            p.alpha.iter().all(|&a| (-1e-9..=c + 1e-9).contains(&a))
+        };
+        let r = SerialDcd::solve(
+            &ds,
+            &loss,
+            &SolveOptions { epochs: 6, eval_every: 1, seed, ..Default::default() },
+            Some(&mut cb),
+        );
+        assert_eq!(r.epochs_run, 6, "seed {seed}: callback aborted (infeasible α)");
+        for w in duals.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "seed {seed}: dual increased {duals:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_duality_gap_nonnegative_all_losses() {
+    for seed in 0..8u64 {
+        let (ds, c) = random_dataset(seed + 100);
+        fn check<L: Loss>(ds: &Dataset, loss: &L, seed: u64) {
+            let r = SerialDcd::solve(
+                ds,
+                loss,
+                &SolveOptions { epochs: 4, seed, ..Default::default() },
+                None,
+            );
+            let gap = eval::duality_gap(ds, loss, &r.alpha);
+            assert!(gap >= -1e-7, "seed {seed} loss {}: gap {gap}", loss.name());
+        }
+        check(&ds, &Hinge::new(c), seed);
+        check(&ds, &SquaredHinge::new(c), seed);
+        check(&ds, &Logistic::new(c), seed);
+    }
+}
+
+#[test]
+fn prop_serial_eq3_exact_consistency() {
+    // Serial (and 1-thread parallel) runs must keep ŵ = Σ α_i x_i.
+    for seed in 0..10u64 {
+        let (ds, c) = random_dataset(seed + 200);
+        let loss = Hinge::new(c);
+        let r = Passcode::solve(
+            &ds,
+            &loss,
+            MemoryModel::Wild,
+            &SolveOptions { threads: 1, epochs: 4, seed, ..Default::default() },
+            None,
+        );
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err = r
+            .w_hat
+            .iter()
+            .zip(&wbar)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-9, "seed {seed}: Eq.3 error {err}");
+    }
+}
+
+#[test]
+fn prop_parallel_atomic_eq3_consistency() {
+    for seed in 0..6u64 {
+        let (ds, c) = random_dataset(seed + 300);
+        let loss = Hinge::new(c);
+        let r = Passcode::solve(
+            &ds,
+            &loss,
+            MemoryModel::Atomic,
+            &SolveOptions {
+                threads: 4,
+                epochs: 4,
+                seed,
+                eval_every: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        let wbar = eval::wbar_from_alpha(&ds, &r.alpha);
+        let err = r
+            .w_hat
+            .iter()
+            .zip(&wbar)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-6, "seed {seed}: atomic Eq.3 error {err}");
+    }
+}
+
+#[test]
+fn prop_simulator_deterministic_and_conservative() {
+    for seed in 0..6u64 {
+        let (ds, c) = random_dataset(seed + 400);
+        let loss = Hinge::new(c);
+        let cfg = SimConfig {
+            cores: 1 + (seed as usize % 12),
+            epochs: 3,
+            seed,
+            cost: Default::default(),
+            mechanism: if seed % 2 == 0 {
+                Mechanism::Atomic
+            } else {
+                Mechanism::Wild
+            },
+            sockets: 1,
+        };
+        let a = simcore::simulate(&ds, &loss, &cfg);
+        let b = simcore::simulate(&ds, &loss, &cfg);
+        assert_eq!(a.alpha, b.alpha, "seed {seed}: nondeterministic sim");
+        assert_eq!(a.virtual_ns, b.virtual_ns);
+        // Conservation: atomic never loses writes; any mechanism keeps α
+        // in the box.
+        if cfg.mechanism == Mechanism::Atomic {
+            assert_eq!(a.lost_writes, 0, "seed {seed}");
+        }
+        assert!(
+            a.alpha.iter().all(|&v| (-1e-9..=c + 1e-9).contains(&v)),
+            "seed {seed}: α outside box"
+        );
+        // Virtual time must not be shorter than perfect linear scaling.
+        let serial = simcore::serial_reference_ns(
+            &ds, &loss, 3, seed, &cfg.cost,
+        );
+        assert!(
+            a.virtual_ns * (cfg.cores as f64) >= serial * 0.7,
+            "seed {seed}: superlinear speedup {} cores {}x",
+            cfg.cores,
+            serial / a.virtual_ns
+        );
+    }
+}
+
+#[test]
+fn prop_subproblem_never_worsens_dual() {
+    // For random (α, wx, q) the solved subproblem value is never worse
+    // than staying put: D(α_new) ≤ D(α_old) along the coordinate.
+    let mut rng = Pcg32::new(77, 0);
+    for case in 0..500 {
+        let c = 0.1 + rng.gen_f64() * 3.0;
+        let q = 0.05 + rng.gen_f64() * 2.0;
+        let wx = rng.gen_normal() * 2.0;
+        let obj = |loss_cn: &dyn Fn(f64) -> f64, a0: f64, a: f64| {
+            let delta = a - a0;
+            0.5 * q * delta * delta + wx * delta + loss_cn(a)
+        };
+        // hinge
+        let h = Hinge::new(c);
+        let a0 = rng.gen_f64() * c;
+        let a1 = h.solve_subproblem(a0, wx, q);
+        let f = |a: f64| h.conjugate_neg(a);
+        assert!(
+            obj(&f, a0, a1) <= obj(&f, a0, a0) + 1e-12,
+            "case {case}: hinge subproblem worsened"
+        );
+        // squared hinge
+        let s = SquaredHinge::new(c);
+        let a0 = rng.gen_f64() * 2.0 * c;
+        let a1 = s.solve_subproblem(a0, wx, q);
+        let g = |a: f64| s.conjugate_neg(a);
+        assert!(
+            obj(&g, a0, a1) <= obj(&g, a0, a0) + 1e-12,
+            "case {case}: sq-hinge subproblem worsened"
+        );
+        // logistic
+        let l = Logistic::new(c);
+        let a0 = l.project(rng.gen_f64() * c);
+        let a1 = l.solve_subproblem(a0, wx, q);
+        let k = |a: f64| l.conjugate_neg(a);
+        assert!(
+            obj(&k, a0, a1) <= obj(&k, a0, a0) + 1e-9,
+            "case {case}: logistic subproblem worsened"
+        );
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    // Random JSON documents serialize → parse → identical.
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_f64() < 0.5),
+            2 => Json::Num((rng.gen_normal() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(
+                (0..rng.gen_range(12))
+                    .map(|_| {
+                        let opts = ['a', 'ß', '"', '\\', '\n', '☃', 'z'];
+                        opts[rng.gen_range(opts.len())]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..rng.gen_range(4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg32::new(123, 5);
+    for case in 0..200 {
+        let doc = random_json(&mut rng, 3);
+        let compact = Json::parse(&doc.to_string());
+        let pretty = Json::parse(&doc.to_pretty());
+        assert_eq!(compact.unwrap(), doc, "case {case} (compact)");
+        assert_eq!(pretty.unwrap(), doc, "case {case} (pretty)");
+    }
+}
+
+#[test]
+fn prop_failure_injection_empty_rows_and_degenerate_data() {
+    // Datasets with empty rows, all-same-label, single-feature rows must
+    // not panic any solver and must keep invariants.
+    use passcode::data::{CsrMatrix, Entry};
+    for seed in 0..5u64 {
+        let mut rng = Pcg32::new(seed, 1);
+        let n = 30;
+        let d = 10;
+        let rows: Vec<Vec<Entry>> = (0..n)
+            .map(|_| {
+                if rng.gen_f64() < 0.2 {
+                    vec![] // empty row (nnz = 0)
+                } else {
+                    let j = rng.gen_range(d) as u32;
+                    vec![Entry { index: j, value: rng.gen_normal() }]
+                }
+            })
+            .collect();
+        let x = CsrMatrix::from_rows(&rows, d);
+        let y: Vec<f64> = (0..n)
+            .map(|i| if i % 5 == 0 { -1.0 } else { 1.0 })
+            .collect();
+        let ds = Dataset::new(x, y, format!("degenerate-{seed}"));
+        let loss = Hinge::new(1.0);
+        for model in [MemoryModel::Lock, MemoryModel::Atomic, MemoryModel::Wild]
+        {
+            let r = Passcode::solve(
+                &ds,
+                &loss,
+                model,
+                &SolveOptions {
+                    threads: 3,
+                    epochs: 3,
+                    seed,
+                    eval_every: 1,
+                    ..Default::default()
+                },
+                None,
+            );
+            assert!(r.alpha.iter().all(|v| v.is_finite()));
+            assert!(r.w_hat.iter().all(|v| v.is_finite()));
+            let gap = eval::duality_gap(&ds, &loss, &r.alpha);
+            assert!(gap >= -1e-9, "seed {seed} {model:?}: gap {gap}");
+        }
+    }
+}

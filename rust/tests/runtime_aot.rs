@@ -1,0 +1,177 @@
+//! Integration: the PJRT AOT evaluation path vs the native sparse path.
+//!
+//! Requires `make artifacts` to have run (skips with a message if the
+//! artifacts directory is absent — e.g. a fresh checkout before the
+//! Python build step).
+
+use passcode::data::registry;
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::runtime::{Engine, Evaluator, Manifest};
+use passcode::solver::{SerialDcd, SolveOptions};
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(engine) = engine_or_skip() else { return };
+    for name in [
+        "margins_block",
+        "eval_block",
+        "eval_block_sqhinge",
+        "loss_stats_block",
+        "loss_stats_block_sq",
+        "sumsq_block",
+        "dcd_block_epoch",
+    ] {
+        assert!(
+            engine.manifest.artifacts.contains_key(name),
+            "missing artifact {name}"
+        );
+    }
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn margins_block_matches_manual_matmul() {
+    let Some(engine) = engine_or_skip() else { return };
+    let rb = engine.manifest.row_block;
+    let fb = engine.manifest.feat_block;
+    // x = row-index pattern, w = alternating ±1: closed-form margins.
+    let mut x = vec![0f32; rb * fb];
+    for r in 0..rb {
+        x[r * fb + (r % fb)] = (r as f32) + 1.0;
+    }
+    let w: Vec<f32> =
+        (0..fb).map(|j| if j % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let xl = Engine::literal_f32(&x, &[rb as i64, fb as i64]).unwrap();
+    let wl = Engine::literal_f32(&w, &[fb as i64, 1]).unwrap();
+    let out = engine.execute("margins_block", &[xl, wl]).unwrap();
+    let m = out[0].to_vec::<f32>().unwrap();
+    for r in 0..rb {
+        let want = ((r as f32) + 1.0) * w[r % fb];
+        assert!(
+            (m[r] - want).abs() < 1e-4,
+            "row {r}: {} vs {want}",
+            m[r]
+        );
+    }
+}
+
+#[test]
+fn aot_eval_matches_native_on_dense_dataset() {
+    let Some(engine) = engine_or_skip() else { return };
+    // covtype analog: d = 54 fits one feature block.
+    let (tr, _, c) = registry::load("covtype", 0.02).unwrap();
+    let loss = Hinge::new(c);
+    let r = SerialDcd::solve(
+        &tr,
+        &loss,
+        &SolveOptions { epochs: 5, ..Default::default() },
+        None,
+    );
+    let native_p = eval::primal_objective(&tr, &loss, &r.w_hat);
+    let native_acc = eval::accuracy(&tr, &r.w_hat);
+
+    let ev = Evaluator::new(&engine);
+    let aot = ev.eval(&tr, &r.w_hat).unwrap();
+    let aot_p = aot.primal(c);
+    assert!(
+        (aot_p - native_p).abs() < 1e-3 * native_p.abs().max(1.0),
+        "primal mismatch: aot {aot_p} vs native {native_p}"
+    );
+    // correct-count can differ by a few rows at |margin| ~ f32 eps
+    assert!(
+        (aot.accuracy() - native_acc).abs() < 5e-3,
+        "accuracy mismatch: {} vs {native_acc}",
+        aot.accuracy()
+    );
+}
+
+#[test]
+fn aot_eval_matches_native_on_sparse_multiblock_dataset() {
+    let Some(engine) = engine_or_skip() else { return };
+    // rcv1 analog scaled: d ≈ 2.1k spans multiple 512-feature blocks.
+    let (tr, _, c) = registry::load("rcv1", 0.01).unwrap();
+    assert!(tr.d() > engine.manifest.feat_block, "want multi-block d");
+    let loss = Hinge::new(c);
+    let r = SerialDcd::solve(
+        &tr,
+        &loss,
+        &SolveOptions { epochs: 5, ..Default::default() },
+        None,
+    );
+    let native_p = eval::primal_objective(&tr, &loss, &r.w_hat);
+    let ev = Evaluator::new(&engine);
+    let aot = ev.eval(&tr, &r.w_hat).unwrap();
+    let aot_p = aot.primal(c);
+    assert!(
+        (aot_p - native_p).abs() < 2e-3 * native_p.abs().max(1.0),
+        "primal mismatch: aot {aot_p} vs native {native_p}"
+    );
+}
+
+#[test]
+fn dcd_block_epoch_improves_dual_objective() {
+    let Some(engine) = engine_or_skip() else { return };
+    let db = engine.manifest.dcd_row_block;
+    let fb = engine.manifest.feat_block;
+    // Tiny dense separable problem in the exported block shape.
+    let mut rng = passcode::util::Pcg32::new(5, 0);
+    let scale = 1.0 / (fb as f64).sqrt();
+    let mut x = vec![0f32; db * fb];
+    for v in x.iter_mut() {
+        *v = (rng.gen_normal() * scale) as f32;
+    }
+    let qii: Vec<f32> = (0..db)
+        .map(|r| x[r * fb..(r + 1) * fb].iter().map(|v| v * v).sum())
+        .collect();
+    let c = 1.0f32;
+    let alpha = vec![0f32; db];
+    let w = vec![0f32; fb];
+
+    let run = |alpha: &[f32], w: &[f32]| {
+        let out = engine
+            .execute(
+                "dcd_block_epoch",
+                &[
+                    Engine::literal_f32(&x, &[db as i64, fb as i64]).unwrap(),
+                    Engine::literal_f32(&qii, &[db as i64, 1]).unwrap(),
+                    Engine::literal_f32(&[c], &[1, 1]).unwrap(),
+                    Engine::literal_f32(alpha, &[db as i64, 1]).unwrap(),
+                    Engine::literal_f32(w, &[fb as i64, 1]).unwrap(),
+                ],
+            )
+            .unwrap();
+        (
+            out[0].to_vec::<f32>().unwrap(),
+            out[1].to_vec::<f32>().unwrap(),
+        )
+    };
+    // Dual objective helper (hinge): 0.5||X^T a||^2 - sum a.
+    let dual = |a: &[f32]| {
+        let mut wbar = vec![0f64; fb];
+        for r in 0..db {
+            for j in 0..fb {
+                wbar[j] += a[r] as f64 * x[r * fb + j] as f64;
+            }
+        }
+        0.5 * wbar.iter().map(|v| v * v).sum::<f64>()
+            - a.iter().map(|&v| v as f64).sum::<f64>()
+    };
+    let d0 = dual(&alpha);
+    let (a1, w1) = run(&alpha, &w);
+    let d1 = dual(&a1);
+    let (a2, _w2) = run(&a1, &w1);
+    let d2 = dual(&a2);
+    assert!(d1 < d0, "first epoch made no progress: {d1} vs {d0}");
+    assert!(d2 <= d1 + 1e-6, "second epoch regressed: {d2} vs {d1}");
+    assert!(a1.iter().all(|&v| (0.0..=c).contains(&v)));
+}
