@@ -1,0 +1,60 @@
+//! §Serve bench: replay a held-out split through the online scoring
+//! stack at 1/2/4/8 shards and report QPS, coalescing factor, and
+//! p50/p95/p99 end-to-end latency, with the online trainer hot-swapping
+//! retrained models mid-stream.
+//!
+//! This is the before/after instrument for serve-side scaling PRs
+//! (sharding, caching, batching policy).
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use std::time::Duration;
+
+use passcode::coordinator::metrics::TextTable;
+use passcode::serve::{self, ReplayConfig};
+
+fn main() {
+    let base = ReplayConfig {
+        dataset: "rcv1".into(),
+        scale: 0.2,
+        train_epochs: 10,
+        train_threads: 2,
+        online_rounds: 3,
+        online_epochs: 1,
+        max_batch: 64,
+        max_wait: Duration::from_micros(200),
+        pin_threads: false,
+        seed: 42,
+        shards: 1,
+    };
+    println!(
+        "=== serve throughput (rcv1 analog @ {}, batch ≤ {}, wait {:?}, {} hot-swaps) ===\n",
+        base.scale, base.max_batch, base.max_wait, base.online_rounds
+    );
+    let mut table = TextTable::new(&[
+        "shards", "requests", "qps", "avg_batch", "p50_ms", "p95_ms",
+        "p99_ms", "acc", "swaps",
+    ]);
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = ReplayConfig { shards, ..base.clone() };
+        let rep = serve::replay(&cfg).expect("replay failed");
+        let t = &rep.throughput;
+        table.row(&[
+            shards.to_string(),
+            t.requests.to_string(),
+            format!("{:.0}", t.qps),
+            format!("{:.1}", t.avg_batch),
+            format!("{:.3}", t.p50_secs * 1e3),
+            format!("{:.3}", t.p95_secs * 1e3),
+            format!("{:.3}", t.p99_secs * 1e3),
+            format!("{:.4}", rep.accuracy),
+            rep.swaps.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "(offline warm-up training is excluded from the window; the \
+         synchronous online rounds are included — see each report's \
+         online_train_secs when comparing raw scoring QPS)"
+    );
+}

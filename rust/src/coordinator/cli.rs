@@ -3,9 +3,32 @@
 
 use anyhow::{bail, Result};
 
+/// One-line summaries of every subcommand, printed on parse errors and
+/// unknown commands so the CLI is self-describing.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "train a model (--dataset, --solver, --threads, ...)"),
+    ("datasets", "print Table-3 analog statistics (--scale)"),
+    ("calibrate", "probe the simulator's hardware cost model"),
+    (
+        "experiment",
+        "reproduce a paper artifact (table1|table2|table3|fig-a|fig-d|backward-error)",
+    ),
+    ("eval", "AOT vs native evaluation cross-check (--dataset, --scale)"),
+    ("predict", "batch-score a LIBSVM file (--model, --data, [--out])"),
+    (
+        "serve",
+        "score traffic through the online stack (--model|--dataset, --data|stdin, --shards)",
+    ),
+    (
+        "replay",
+        "replay a held-out split as traffic with mid-stream hot-swaps (--dataset, --shards)",
+    ),
+];
+
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cli {
+    /// The subcommand (first non-flag token).
     pub command: String,
     /// Positional arguments after the command.
     pub positional: Vec<String>,
@@ -14,12 +37,28 @@ pub struct Cli {
 }
 
 impl Cli {
+    /// The full usage listing (all subcommands, one per line).
+    pub fn usage() -> String {
+        let width = SUBCOMMANDS
+            .iter()
+            .map(|(name, _)| name.len())
+            .max()
+            .unwrap_or(0);
+        let mut s = String::from(
+            "usage: passcode <command> [--key value]...\n\ncommands:\n",
+        );
+        for (name, what) in SUBCOMMANDS {
+            s.push_str(&format!("  {name:<width$}  {what}\n"));
+        }
+        s
+    }
+
     /// Parse an argv (excluding the binary name).
     pub fn parse(args: &[String]) -> Result<Cli> {
         let mut it = args.iter().peekable();
         let command = match it.next() {
             Some(c) if !c.starts_with('-') => c.clone(),
-            _ => bail!("usage: passcode <command> [--key value]..."),
+            _ => bail!("{}", Cli::usage()),
         };
         let mut positional = Vec::new();
         let mut options = Vec::new();
@@ -41,6 +80,7 @@ impl Cli {
         Ok(Cli { command, positional, options })
     }
 
+    /// Last value of `--key` (later occurrences win), if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options
             .iter()
@@ -49,10 +89,12 @@ impl Cli {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.opt(key).unwrap_or(default)
     }
 
+    /// Parse `--key` as `T`, or `default` when absent.
     pub fn opt_parse<T: std::str::FromStr>(
         &self,
         key: &str,
@@ -111,5 +153,18 @@ mod tests {
     fn later_options_win() {
         let c = Cli::parse(&argv("x --k 1 --k 2")).unwrap();
         assert_eq!(c.opt("k"), Some("2"));
+    }
+
+    #[test]
+    fn usage_lists_every_subcommand() {
+        let u = Cli::usage();
+        for (name, _) in SUBCOMMANDS {
+            assert!(u.contains(name), "usage missing {name}");
+        }
+        assert!(u.contains("serve"));
+        assert!(u.contains("replay"));
+        // Parse errors carry the listing too.
+        let err = format!("{:#}", Cli::parse(&[]).unwrap_err());
+        assert!(err.contains("commands:"));
     }
 }

@@ -14,6 +14,7 @@ use crate::solver::{
 
 use super::config::{LossKind, RunConfig, SolverKind};
 use super::metrics::{MetricRow, MetricsLog};
+use super::model_io::Model;
 
 /// Everything a run produces.
 #[derive(Debug)]
@@ -41,6 +42,23 @@ pub fn load_data(cfg: &RunConfig) -> Result<(Dataset, Dataset, f64)> {
     }
     let (tr, te, c_default) = registry::load(&cfg.dataset, cfg.scale)?;
     Ok((tr, te, cfg.c.unwrap_or(c_default)))
+}
+
+/// Train a model for the serving path: run `cfg` end to end and package
+/// the result as `(Model, SolveResult)` — `ŵ` for scoring plus the dual
+/// iterate `α` for the online trainer's warm starts
+/// (`crate::serve::OnlineTrainer`).
+pub fn train_model(cfg: &RunConfig) -> Result<(Model, SolveResult)> {
+    // Resolve C the same way load_data does, but without generating the
+    // dataset a second time (run() loads it already).
+    let c = match (cfg.c, &cfg.data_path) {
+        (Some(c), _) => c,
+        (None, Some(_)) => 1.0,
+        (None, None) => registry::spec(&cfg.dataset)?.c,
+    };
+    let out = run(cfg)?;
+    let model = Model::from_run(cfg, c, out.result.w_hat.clone());
+    Ok((model, out.result))
 }
 
 /// Run a config end to end.
@@ -192,6 +210,17 @@ mod tests {
                 solver
             );
         }
+    }
+
+    #[test]
+    fn train_model_packages_w_and_alpha() {
+        let mut cfg = base();
+        cfg.eval_every = 0;
+        let (model, result) = train_model(&cfg).unwrap();
+        assert_eq!(model.w, result.w_hat);
+        assert_eq!(model.loss, "hinge");
+        assert_eq!(model.solver, "passcode-wild");
+        assert!(result.alpha.iter().any(|&a| a != 0.0));
     }
 
     #[test]

@@ -80,10 +80,18 @@ impl Model {
             .with_context(|| format!("write {}", path.as_ref().display()))
     }
 
+    /// Load a model from disk; errors carry the offending path and what
+    /// went wrong (unreadable file, malformed JSON, wrong schema) —
+    /// corrupted model files must never panic the serving path.
     pub fn load(path: impl AsRef<Path>) -> Result<Model> {
-        let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("read {}", path.as_ref().display()))?;
-        Model::from_json(&Json::parse(&text)?)
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let json = Json::parse(&text).with_context(|| {
+            format!("parse model JSON from {}", path.display())
+        })?;
+        Model::from_json(&json)
+            .with_context(|| format!("invalid model file {}", path.display()))
     }
 
     /// Margin of a sparse row given as (indices, values) — raw,
@@ -177,6 +185,65 @@ mod tests {
         let bad = r#"{"format":"passcode-model-v1","loss":"hinge","c":1,
                       "solver":"dcd","dataset":"x","d":3,"w":[1,2]}"#;
         assert!(Model::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let (m, _) = trained();
+        let dir = std::env::temp_dir().join("passcode_model_io_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        assert_eq!(Model::load(&path).unwrap(), m);
+    }
+
+    #[test]
+    fn truncated_file_errors_descriptively_instead_of_panicking() {
+        let (m, _) = trained();
+        let dir = std::env::temp_dir().join("passcode_model_io_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.json");
+        let full = m.to_json().to_pretty();
+        // Chop the serialized model mid-document.
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = Model::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated.json"),
+            "error should name the file: {msg}"
+        );
+        assert!(
+            msg.contains("parse model JSON"),
+            "error should say what failed: {msg}"
+        );
+    }
+
+    #[test]
+    fn corrupted_fields_error_with_path_context() {
+        let dir = std::env::temp_dir().join("passcode_model_io_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Valid JSON, wrong schema (missing every model key).
+        let path = dir.join("foreign.json");
+        std::fs::write(&path, "{\"hello\": 1}").unwrap();
+        let msg = format!("{:#}", Model::load(&path).unwrap_err());
+        assert!(msg.contains("foreign.json"), "{msg}");
+        assert!(msg.contains("invalid model file"), "{msg}");
+
+        // Valid JSON + format tag, but w/d disagree.
+        let path = dir.join("dim_mismatch.json");
+        std::fs::write(
+            &path,
+            r#"{"format":"passcode-model-v1","loss":"hinge","c":1,
+                "solver":"dcd","dataset":"x","d":3,"w":[1,2]}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", Model::load(&path).unwrap_err());
+        assert!(msg.contains("dimension mismatch"), "{msg}");
+
+        // Missing file: error, not panic.
+        let missing = dir.join("does_not_exist.json");
+        assert!(Model::load(&missing).is_err());
     }
 
     #[test]

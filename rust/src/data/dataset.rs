@@ -53,6 +53,15 @@ impl Dataset {
         (take(train_rows, "train"), take(test_rows, "test"))
     }
 
+    /// Row `i` with the label folding undone: `(indices, y_i · x_i)` =
+    /// the raw features `ẋ_i` as a caller outside the training loop
+    /// (e.g. the serving path) would see them.
+    pub fn raw_row(&self, i: usize) -> (Vec<u32>, Vec<f64>) {
+        let (idx, vals) = self.x.row(i);
+        let y = self.y[i];
+        (idx.to_vec(), vals.iter().map(|v| v * y).collect())
+    }
+
     /// Fraction of rows with margin > 0 under `w` (accuracy on folded rows).
     pub fn accuracy(&self, w: &[f64]) -> f64 {
         if self.n() == 0 {
@@ -97,6 +106,17 @@ mod tests {
         let d = toy();
         // w = (1, 1): margins = [1, 1, .5, -.5] -> 3/4 correct
         assert!((d.accuracy(&[1.0, 1.0]) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raw_row_unfolds_labels() {
+        let d = toy();
+        // Row 3 is folded with y = -1: raw values flip sign.
+        let (idx, vals) = d.raw_row(3);
+        assert_eq!(idx, vec![1]);
+        assert_eq!(vals, vec![0.5]);
+        // Row 0 (y = +1) is unchanged.
+        assert_eq!(d.raw_row(0).1, vec![1.0]);
     }
 
     #[test]

@@ -13,9 +13,10 @@
 //! * **Layer 2/1 (python/, build-time only)** — the JAX evaluation graph
 //!   and its Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **Runtime** — [`runtime`] loads those artifacts through the PJRT C
-//!   API (`xla` crate) so evaluation runs with no Python anywhere.
+//!   API (behind the `xla` cargo feature; the default build ships a stub
+//!   engine so no external toolchain is required).
 //!
-//! Quick start:
+//! Training quick start:
 //!
 //! ```no_run
 //! use passcode::data::registry;
@@ -28,6 +29,28 @@
 //! let r = Passcode::solve(&train, &loss, MemoryModel::Wild, &opts, None);
 //! println!("accuracy = {}", passcode::eval::accuracy(&test, &r.w_hat));
 //! ```
+//!
+//! Serving quick start ([`serve`] — the inference side): a trained model
+//! becomes a traffic-serving engine with wait-free hot-swap, request
+//! microbatching, sharded scoring, and continuous training:
+//!
+//! ```no_run
+//! use passcode::coordinator::Model;
+//! use passcode::serve::{ServeConfig, ServeEngine};
+//!
+//! let model = Model::load("model.json").unwrap();
+//! let engine = ServeEngine::start(model, None, &ServeConfig::default());
+//! let ticket = engine.submit(vec![0, 7], vec![0.5, -1.0]);
+//! println!("margin = {}", ticket.wait().margin);
+//! println!("{}", engine.shutdown().render());
+//! ```
+//!
+//! Or end to end from the CLI: `passcode replay --dataset rcv1 --shards 4`
+//! replays a held-out split through the stack and reports QPS and
+//! p50/p95/p99 latency while the online trainer hot-swaps models
+//! mid-stream.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod coordinator;
@@ -35,6 +58,7 @@ pub mod data;
 pub mod eval;
 pub mod loss;
 pub mod runtime;
+pub mod serve;
 pub mod simcore;
 pub mod solver;
 pub mod util;

@@ -10,7 +10,13 @@
 //!                [--dataset rcv1] [--scale 0.05] [--epochs 10] ...
 //! passcode eval --dataset rcv1 --scale 0.05    # AOT vs native cross-check
 //! passcode predict --model m.json --data f.svm [--out preds.txt]
+//! passcode serve [--model m.json | --dataset rcv1] [--data f.svm]
+//!                [--shards 4] [--batch 64] [--batch-wait-us 200]
+//! passcode replay [--dataset rcv1] [--scale 0.05] [--shards 4]
+//!                [--rounds 3] [--batch 64] [--batch-wait-us 200]
 //! ```
+
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -20,6 +26,7 @@ use passcode::coordinator::{
 use passcode::data::registry;
 use passcode::loss::Hinge;
 use passcode::runtime::{Engine, Evaluator};
+use passcode::serve::{self, ReplayConfig, ServeConfig, ServeEngine};
 use passcode::simcore;
 use passcode::solver::SerialDcd;
 
@@ -40,11 +47,9 @@ fn real_main(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&cli),
         "eval" => cmd_eval(&cli),
         "predict" => cmd_predict(&cli),
-        other => bail!(
-            "unknown command {other:?}; see `passcode --help` banner in \
-             README.md (commands: train, datasets, calibrate, experiment, \
-             eval)"
-        ),
+        "serve" => cmd_serve(&cli),
+        "replay" => cmd_replay(&cli),
+        other => bail!("unknown command {other:?}\n\n{}", Cli::usage()),
     }
 }
 
@@ -205,6 +210,117 @@ fn cmd_predict(cli: &Cli) -> Result<()> {
         std::fs::write(out, text)?;
         println!("wrote predictions to {out}");
     }
+    Ok(())
+}
+
+/// Shared flags → [`ServeConfig`].
+fn serve_config_from_cli(cli: &Cli) -> Result<ServeConfig> {
+    Ok(ServeConfig {
+        shards: cli.opt_parse("shards", 4usize)?,
+        max_batch: cli.opt_parse("batch", 64usize)?,
+        max_wait: Duration::from_micros(cli.opt_parse("batch-wait-us", 200u64)?),
+        pin_threads: cli.opt_parse("pin-threads", false)?,
+    })
+}
+
+/// `passcode serve` — stand up the online scoring stack around a model
+/// (loaded from `--model`, or trained fresh from `--dataset`) and stream
+/// scoring traffic through it from `--data <file.svm>` (or stdin), then
+/// report QPS + latency percentiles.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let (model, alpha) = match cli.opt("model") {
+        Some(path) => (Model::load(path)?, None),
+        None => {
+            // Only the training-relevant flags feed the RunConfig here;
+            // serve flags (--shards, --batch, ...) are not config keys.
+            let mut cfg = RunConfig::default();
+            cfg.eval_every = 0;
+            cfg.scale = 0.05;
+            for key in
+                ["dataset", "scale", "epochs", "threads", "solver", "loss",
+                 "c", "seed"]
+            {
+                if let Some(v) = cli.opt(key) {
+                    cfg.set(key, v).with_context(|| format!("--{key} {v}"))?;
+                }
+            }
+            println!(
+                "no --model given; training one: {}",
+                cfg.to_json().to_string()
+            );
+            let (model, result) = driver::train_model(&cfg)?;
+            (model, Some(result.alpha))
+        }
+    };
+    let scfg = serve_config_from_cli(cli)?;
+    println!(
+        "serving `{}` model (d = {}) on {} shards (batch ≤ {}, wait {:?})",
+        model.dataset,
+        model.w.len(),
+        scfg.shards,
+        scfg.max_batch,
+        scfg.max_wait,
+    );
+    let engine = ServeEngine::start(model, alpha, &scfg);
+
+    // Traffic source: a LIBSVM file, or stdin lines in the same format.
+    let ds = match cli.opt("data") {
+        Some(path) => passcode::data::libsvm::load(path)?,
+        None => {
+            println!("reading LIBSVM lines from stdin (EOF ends)...");
+            passcode::data::libsvm::parse_reader(
+                std::io::stdin(),
+                "stdin",
+                0,
+            )?
+        }
+    };
+    let mut tickets = Vec::with_capacity(ds.n());
+    for i in 0..ds.n() {
+        // rows are folded (x = y·ẋ): serve the raw features
+        let (idx, raw) = ds.raw_row(i);
+        tickets.push((engine.submit(idx, raw), ds.y[i]));
+    }
+    let mut correct = 0usize;
+    for (t, y) in tickets {
+        let p = t.wait();
+        if p.label == y {
+            correct += 1;
+        }
+    }
+    println!(
+        "scored {} rows, accuracy {:.4}",
+        ds.n(),
+        correct as f64 / ds.n().max(1) as f64
+    );
+    println!("{}", engine.shutdown().render());
+    Ok(())
+}
+
+/// `passcode replay` — replay a held-out split through the batcher /
+/// scorer stack while the online trainer hot-swaps retrained models
+/// mid-stream; reports QPS and p50/p95/p99 latency.
+fn cmd_replay(cli: &Cli) -> Result<()> {
+    let scfg = serve_config_from_cli(cli)?;
+    let cfg = ReplayConfig {
+        dataset: cli.opt_or("dataset", "rcv1").to_string(),
+        scale: cli.opt_parse("scale", 0.05f64)?,
+        shards: scfg.shards,
+        train_epochs: cli.opt_parse("epochs", 10usize)?,
+        train_threads: cli.opt_parse("threads", 2usize)?,
+        online_rounds: cli.opt_parse("rounds", 3usize)?,
+        online_epochs: cli.opt_parse("online-epochs", 2usize)?,
+        max_batch: scfg.max_batch,
+        max_wait: scfg.max_wait,
+        pin_threads: scfg.pin_threads,
+        seed: cli.opt_parse("seed", 42u64)?,
+    };
+    println!(
+        "replaying {}@{} through {} shards ({} online rounds)...",
+        cfg.dataset, cfg.scale, cfg.shards, cfg.online_rounds
+    );
+    let report = serve::replay(&cfg)?;
+    print!("{}", report.render());
     Ok(())
 }
 

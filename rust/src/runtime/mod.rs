@@ -1,5 +1,23 @@
-//! placeholder
-pub mod engine;
+//! AOT/PJRT runtime: loads the HLO-text artifacts exported by
+//! `python/compile/aot.py` and executes them through the PJRT C API — so
+//! evaluation runs with no Python anywhere on the path.
+//!
+//! The PJRT backend needs the `xla` crate from the baked toolchain
+//! image, so the real [`engine`] is gated behind the `xla` cargo
+//! feature.  Default builds get [`stub`], an API-identical engine whose
+//! `load` returns a descriptive error: every AOT call site compiles and
+//! degrades to "skipped" at run time.  [`Manifest`] parsing is pure Rust
+//! and available in both builds.
+
 pub mod manifest;
-pub use engine::{AotEval, Engine, Evaluator};
 pub use manifest::Manifest;
+
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(feature = "xla")]
+pub use engine::{AotEval, Engine, Evaluator};
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{AotEval, Engine, Evaluator};

@@ -1,0 +1,126 @@
+//! Graceful stand-ins for the PJRT engine when the crate is built
+//! without the `xla` cargo feature (the default — the offline image has
+//! no PJRT toolchain).
+//!
+//! The stub mirrors the public surface of [`super::engine`] exactly, but
+//! [`Engine::load`] always returns a descriptive error, so every AOT
+//! call site (CLI `--aot-eval`, `passcode eval`, benches, examples,
+//! `rust/tests/runtime_aot.rs`) compiles unchanged and degrades to a
+//! printed "skipped" at run time.  No value of [`Engine`] or [`Literal`]
+//! can ever be constructed in a stub build, so the `&self` methods are
+//! statically unreachable.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+
+use super::manifest::Manifest;
+
+const NO_XLA: &str = "PJRT runtime unavailable: built without the `xla` \
+                      cargo feature (enable it and provide the `xla` \
+                      crate from the toolchain image to run AOT paths)";
+
+/// Stand-in for `xla::Literal`; never constructible in stub builds.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Unreachable in stub builds (no [`Literal`] can exist).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unreachable!("{}", NO_XLA)
+    }
+
+    /// Unreachable in stub builds (no [`Literal`] can exist).
+    pub fn reshape(&self, _shape: &[i64]) -> Result<Literal> {
+        unreachable!("{}", NO_XLA)
+    }
+}
+
+/// Stub engine: [`Engine::load`] always fails with a clear message.
+pub struct Engine {
+    /// Present for API parity with the real engine; never populated.
+    pub manifest: Manifest,
+    /// Present for API parity with the real engine; never populated.
+    pub compile_secs: f64,
+    _priv: (),
+}
+
+impl Engine {
+    /// Always fails: this build has no PJRT backend.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Engine> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails: this build has no PJRT backend.
+    pub fn load_default() -> Result<Engine> {
+        bail!(NO_XLA)
+    }
+
+    /// Unreachable in stub builds (no [`Engine`] can exist).
+    pub fn platform(&self) -> String {
+        unreachable!("{}", NO_XLA)
+    }
+
+    /// Unreachable in stub builds (no [`Engine`] can exist).
+    pub fn execute(
+        &self,
+        _name: &str,
+        _inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        unreachable!("{}", NO_XLA)
+    }
+
+    /// Always fails: literals require the PJRT backend.
+    pub fn literal_f32(_data: &[f32], _shape: &[i64]) -> Result<Literal> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Dataset-level evaluation statistics (API parity with the real engine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AotEval {
+    /// Σ_i max(0, 1 − m_i) — unweighted hinge sum (caller multiplies C).
+    pub hinge_sum: f64,
+    /// Rows with margin > 0.
+    pub correct: usize,
+    /// ½‖w‖².
+    pub half_sqnorm: f64,
+    /// Rows evaluated.
+    pub rows: usize,
+}
+
+impl AotEval {
+    /// Primal objective for hinge loss with penalty `c`.
+    pub fn primal(&self, c: f64) -> f64 {
+        self.half_sqnorm + c * self.hinge_sum
+    }
+
+    /// Fraction of rows with positive margin.
+    pub fn accuracy(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.rows as f64
+        }
+    }
+}
+
+/// Stub evaluator; unreachable because no [`Engine`] can exist.
+pub struct Evaluator<'e> {
+    _engine: &'e Engine,
+}
+
+impl<'e> Evaluator<'e> {
+    /// Unreachable in stub builds (no [`Engine`] can exist).
+    pub fn new(engine: &'e Engine) -> Self {
+        Self { _engine: engine }
+    }
+
+    /// Unreachable in stub builds (no [`Engine`] can exist).
+    pub fn eval(&self, _ds: &Dataset, _w: &[f64]) -> Result<AotEval> {
+        unreachable!("{}", NO_XLA)
+    }
+}

@@ -1,0 +1,321 @@
+//! Microbatching request queue: scoring requests are coalesced up to a
+//! batch-size / latency budget and scored in one sparse pass.
+//!
+//! A [`Batcher::submit`] hands back a [`Ticket`] immediately; scorer
+//! shards call [`Batcher::next_batch`], which blocks until work arrives,
+//! then gives late arrivals up to `max_wait` (measured from the oldest
+//! queued request, so the budget is a hard bound on queueing delay) to
+//! fill the batch before draining up to `max_batch` requests.  One
+//! registry read then scores the whole batch against a consistent model
+//! snapshot (`serve::scorer`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// The scored outcome of one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Raw margin `w·x` under the model that scored the request.
+    pub margin: f64,
+    /// Predicted label: `+1` if `margin > 0`, else `-1`.
+    pub label: f64,
+    /// Epoch of the registry version that scored it (observing this span
+    /// a hot-swap is how tests prove mid-stream publishes land).
+    pub model_epoch: u64,
+}
+
+/// One-shot response slot (hand-rolled oneshot: no channels in std that
+/// fit the fulfil-from-any-shard shape better than a mutex + condvar).
+#[derive(Debug, Default)]
+struct Slot {
+    ready: Mutex<Option<Prediction>>,
+    cv: Condvar,
+}
+
+/// The caller's handle to an in-flight request.
+#[derive(Debug)]
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the request is scored.
+    pub fn wait(self) -> Prediction {
+        let mut g = self.slot.ready.lock().expect("slot poisoned");
+        while g.is_none() {
+            g = self.slot.cv.wait(g).expect("slot poisoned");
+        }
+        g.take().expect("checked above")
+    }
+
+    /// Block up to `timeout`; `None` if the request is still in flight
+    /// (used by tests so a dropped request fails fast instead of
+    /// hanging).
+    pub fn wait_timeout(self, timeout: Duration) -> Option<Prediction> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.ready.lock().expect("slot poisoned");
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self
+                .slot
+                .cv
+                .wait_timeout(g, deadline - now)
+                .expect("slot poisoned");
+            g = ng;
+        }
+        g.take()
+    }
+}
+
+/// One queued scoring request: a raw (unfolded) sparse row plus the
+/// response slot and its enqueue time (for end-to-end latency).
+#[derive(Debug)]
+pub struct ScoreRequest {
+    /// Sparse feature indices (strictly increasing).
+    pub idx: Vec<u32>,
+    /// Values parallel to `idx`.
+    pub vals: Vec<f64>,
+    /// When the request entered the queue.
+    pub enqueued: Instant,
+    slot: Arc<Slot>,
+}
+
+impl ScoreRequest {
+    /// Deliver the prediction to the waiting ticket.
+    pub fn fulfil(&self, p: Prediction) {
+        let mut g = self.slot.ready.lock().expect("slot poisoned");
+        *g = Some(p);
+        self.slot.cv.notify_one();
+    }
+}
+
+#[derive(Debug, Default)]
+struct Queue {
+    q: VecDeque<ScoreRequest>,
+    closed: bool,
+}
+
+/// The microbatching queue shared between submitters and scorer shards.
+#[derive(Debug)]
+pub struct Batcher {
+    inner: Mutex<Queue>,
+    not_empty: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    submitted: AtomicU64,
+}
+
+impl Batcher {
+    /// A queue that coalesces up to `max_batch` requests, waiting at
+    /// most `max_wait` past the oldest request's arrival to fill up.
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            inner: Mutex::new(Queue::default()),
+            not_empty: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            submitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue a raw sparse row for scoring; returns immediately.
+    ///
+    /// Panics if the batcher was closed — closing is the caller's own
+    /// end-of-stream signal, so a submit afterwards is a logic error
+    /// (better a loud panic than a ticket that never resolves).
+    pub fn submit(&self, idx: Vec<u32>, vals: Vec<f64>) -> Ticket {
+        let slot = Arc::new(Slot::default());
+        let req = ScoreRequest {
+            idx,
+            vals,
+            enqueued: Instant::now(),
+            slot: Arc::clone(&slot),
+        };
+        {
+            let mut g = self.inner.lock().expect("batcher poisoned");
+            assert!(!g.closed, "submit on a closed Batcher");
+            g.q.push_back(req);
+            self.not_empty.notify_one();
+        }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ticket { slot }
+    }
+
+    /// Signal end-of-stream: blocked shards drain what is queued and
+    /// then [`Batcher::next_batch`] returns `None` so they can exit.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("batcher poisoned");
+        g.closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Whether [`Batcher::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("batcher poisoned").closed
+    }
+
+    /// Requests submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently queued (not yet drained into a batch).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("batcher poisoned").q.len()
+    }
+
+    /// Blocking drain of the next microbatch; `None` once the batcher is
+    /// closed *and* empty (shard exit signal).
+    pub fn next_batch(&self) -> Option<Vec<ScoreRequest>> {
+        let mut g = self.inner.lock().expect("batcher poisoned");
+        'restart: loop {
+            loop {
+                if !g.q.is_empty() {
+                    break;
+                }
+                if g.closed {
+                    return None;
+                }
+                g = self.not_empty.wait(g).expect("batcher poisoned");
+            }
+            // Coalesce: wait out the latency budget (anchored at the
+            // oldest request so no request queues longer than `max_wait`
+            // on our account) unless the batch fills or the stream
+            // closes first.
+            let deadline =
+                g.q.front().expect("nonempty").enqueued + self.max_wait;
+            while g.q.len() < self.max_batch && !g.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (ng, timed_out) = self
+                    .not_empty
+                    .wait_timeout(g, deadline - now)
+                    .expect("batcher poisoned");
+                g = ng;
+                if timed_out.timed_out() {
+                    break;
+                }
+            }
+            if g.q.is_empty() {
+                // A competing shard drained the queue while this one was
+                // waiting out the budget (the lock is released inside
+                // `wait_timeout`); go back to sleep instead of handing
+                // out an empty batch.
+                continue 'restart;
+            }
+            let take = g.q.len().min(self.max_batch);
+            let batch: Vec<ScoreRequest> = g.q.drain(..take).collect();
+            if !g.q.is_empty() {
+                // Hand the remainder to another waiting shard.
+                self.not_empty.notify_one();
+            }
+            return Some(batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fulfil_all(batch: &[ScoreRequest], epoch: u64) {
+        for r in batch {
+            r.fulfil(Prediction { margin: 1.0, label: 1.0, model_epoch: epoch });
+        }
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let b = Batcher::new(8, Duration::from_millis(0));
+        let t = b.submit(vec![0, 3], vec![1.0, -2.0]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].idx, vec![0, 3]);
+        fulfil_all(&batch, 7);
+        let p = t.wait();
+        assert_eq!(p.model_epoch, 7);
+    }
+
+    #[test]
+    fn queued_requests_coalesce_into_batches() {
+        let b = Batcher::new(4, Duration::from_millis(0));
+        let tickets: Vec<Ticket> =
+            (0..10).map(|i| b.submit(vec![i as u32], vec![1.0])).collect();
+        assert_eq!(b.depth(), 10);
+        assert_eq!(b.submitted(), 10);
+        let mut sizes = Vec::new();
+        for _ in 0..3 {
+            let batch = b.next_batch().unwrap();
+            sizes.push(batch.len());
+            fulfil_all(&batch, 0);
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+        for t in tickets {
+            assert!(t.wait_timeout(Duration::from_secs(5)).is_some());
+        }
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let b = Batcher::new(4, Duration::from_millis(0));
+        let t = b.submit(vec![0], vec![1.0]);
+        b.close();
+        assert!(b.is_closed());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        fulfil_all(&batch, 0);
+        t.wait();
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none(), "None must be sticky");
+    }
+
+    #[test]
+    fn next_batch_blocks_until_submit() {
+        let b = Arc::new(Batcher::new(2, Duration::from_millis(0)));
+        std::thread::scope(|s| {
+            let bc = Arc::clone(&b);
+            let h = s.spawn(move || bc.next_batch());
+            std::thread::sleep(Duration::from_millis(20));
+            let t = b.submit(vec![1], vec![2.0]);
+            let batch = h.join().unwrap().unwrap();
+            assert_eq!(batch.len(), 1);
+            fulfil_all(&batch, 0);
+            t.wait();
+        });
+    }
+
+    #[test]
+    fn latency_budget_waits_for_stragglers() {
+        // First request arrives alone; a straggler lands inside the
+        // budget window and must ride the same batch.
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(200)));
+        std::thread::scope(|s| {
+            let bc = Arc::clone(&b);
+            let straggler = s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                bc.submit(vec![2], vec![1.0])
+            });
+            let t0 = b.submit(vec![1], vec![1.0]);
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 2, "straggler missed the batch");
+            fulfil_all(&batch, 0);
+            t0.wait();
+            straggler.join().unwrap().wait();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "closed Batcher")]
+    fn submit_after_close_panics() {
+        let b = Batcher::new(2, Duration::from_millis(0));
+        b.close();
+        let _ = b.submit(vec![0], vec![1.0]);
+    }
+}

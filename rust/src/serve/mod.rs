@@ -1,0 +1,412 @@
+//! Online scoring subsystem: hot-swappable models, microbatching, and
+//! async continuous training.
+//!
+//! This is the inference side of the crate — it turns a trained
+//! [`Model`](crate::coordinator::model_io::Model) into a traffic-serving
+//! engine:
+//!
+//! * [`registry`] — versioned in-process model store with atomic
+//!   hot-swap; readers are wait-free, publishers bump an epoch-tagged
+//!   pointer.
+//! * [`batcher`] — microbatching request queue: score requests coalesce
+//!   up to a batch-size / latency budget and are scored in one sparse
+//!   pass.
+//! * [`scorer`] — sharded worker pool (reusing
+//!   [`crate::util::affinity`] pinning) with per-shard throughput
+//!   counters.
+//! * [`online`] — async continuous trainer: PASSCoDe-Wild epochs over a
+//!   stream of freshly labeled rows, warm-started from the live
+//!   `(α, ŵ)` via [`Passcode::solve_warm`], published back through the
+//!   registry.
+//! * [`stats`] — latency histograms (p50/p95/p99) and QPS reporting
+//!   through [`crate::coordinator::metrics`].
+//!
+//! The theory license is the paper's Theorem 3: a `ŵ` maintained under
+//! racy updates is the exact solution of a perturbed primal, so serving
+//! threads may read the model lock-free while trainer threads keep
+//! folding in new examples — the same shared-memory asynchrony
+//! Hybrid-DCA and AsySCD exploit for training, repurposed for serving.
+//!
+//! Entry points: [`ServeEngine`] (embed a scoring service), [`replay`]
+//! (drive a held-out split through the stack as traffic — the
+//! `passcode replay` subcommand and `benches/serve_throughput.rs`).
+
+pub mod batcher;
+pub mod online;
+pub mod registry;
+pub mod scorer;
+pub mod stats;
+
+pub use batcher::{Batcher, Prediction, ScoreRequest, Ticket};
+pub use online::{OnlineConfig, OnlineTrainer};
+pub use registry::{ModelRegistry, ModelVersion};
+pub use scorer::{ScorerConfig, ShardPool};
+pub use stats::{LatencyHistogram, ServeStats, ThroughputReport};
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::model_io::Model;
+use crate::data::registry as data_registry;
+use crate::loss::Hinge;
+use crate::solver::{MemoryModel, Passcode, SolveOptions};
+
+/// Engine-level configuration (queue + pool shape).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Scorer shards.
+    pub shards: usize,
+    /// Microbatch size cap.
+    pub max_batch: usize,
+    /// Latency budget a partial batch waits for stragglers.
+    pub max_wait: Duration,
+    /// Pin shard threads to cores.
+    pub pin_threads: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            pin_threads: false,
+        }
+    }
+}
+
+/// A running scoring service: registry + batcher + shard pool.
+///
+/// ```no_run
+/// use passcode::coordinator::Model;
+/// use passcode::serve::{ServeConfig, ServeEngine};
+///
+/// let model = Model::load("m.json").unwrap();
+/// let engine = ServeEngine::start(model, None, &ServeConfig::default());
+/// let ticket = engine.submit(vec![0, 7], vec![0.5, -1.0]);
+/// println!("margin = {}", ticket.wait().margin);
+/// let report = engine.shutdown();
+/// println!("{}", report.render());
+/// ```
+#[derive(Debug)]
+pub struct ServeEngine {
+    registry: Arc<ModelRegistry>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    pool: Option<ShardPool>,
+}
+
+impl ServeEngine {
+    /// Start serving `model` (optionally with its dual iterate for
+    /// warm-started continuous training).
+    pub fn start(
+        model: Model,
+        alpha: Option<Vec<f64>>,
+        cfg: &ServeConfig,
+    ) -> ServeEngine {
+        let registry = Arc::new(ModelRegistry::new(model, alpha));
+        let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait));
+        let stats = Arc::new(ServeStats::new(cfg.shards));
+        let pool = ShardPool::start(
+            Arc::clone(&registry),
+            Arc::clone(&batcher),
+            Arc::clone(&stats),
+            &ScorerConfig { shards: cfg.shards, pin_threads: cfg.pin_threads },
+        );
+        ServeEngine { registry, batcher, stats, pool: Some(pool) }
+    }
+
+    /// The model registry (hand this to an [`OnlineTrainer`] to publish
+    /// retrained models into the live engine).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Enqueue a raw sparse row for scoring.
+    pub fn submit(&self, idx: Vec<u32>, vals: Vec<f64>) -> Ticket {
+        self.batcher.submit(idx, vals)
+    }
+
+    /// Live telemetry.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Drain outstanding requests, stop the shards, and report.
+    pub fn shutdown(mut self) -> ThroughputReport {
+        self.batcher.close();
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+        self.stats.report()
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        // An engine dropped without an explicit `shutdown()` (early `?`
+        // return, panic unwind) must still wind its shard threads down:
+        // closing the batcher unblocks their condvar waits so they drain
+        // and exit instead of leaking forever.  `close` is idempotent,
+        // so the post-`shutdown` drop is a no-op.
+        self.batcher.close();
+    }
+}
+
+/// Configuration for [`replay`]: replay a registry dataset's held-out
+/// split through the serving stack as traffic.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Registry dataset name (`data::registry`).
+    pub dataset: String,
+    /// Scale factor in (0, 1].
+    pub scale: f64,
+    /// Scorer shards.
+    pub shards: usize,
+    /// Epochs for the initial (offline) PASSCoDe-Wild training run.
+    pub train_epochs: usize,
+    /// Solver threads (initial training and online rounds).
+    pub train_threads: usize,
+    /// Mid-replay online training rounds (each publishes a hot-swap).
+    pub online_rounds: usize,
+    /// Wild epochs per online round.
+    pub online_epochs: usize,
+    /// Microbatch size cap.
+    pub max_batch: usize,
+    /// Microbatch latency budget.
+    pub max_wait: Duration,
+    /// Pin scorer shards to cores.
+    pub pin_threads: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "rcv1".into(),
+            scale: 0.05,
+            shards: 4,
+            train_epochs: 10,
+            train_threads: 2,
+            online_rounds: 3,
+            online_epochs: 2,
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            pin_threads: false,
+            seed: 42,
+        }
+    }
+}
+
+/// What a replay run produced.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// QPS + latency percentiles from the scorer pool.
+    pub throughput: ThroughputReport,
+    /// Held-out accuracy of the served predictions.
+    pub accuracy: f64,
+    /// Models hot-swapped in during the replay (registry epoch at end).
+    pub swaps: u64,
+    /// Smallest model epoch that scored a request.
+    pub epoch_min: u64,
+    /// Largest model epoch that scored a request.
+    pub epoch_max: u64,
+    /// Requests replayed (== held-out rows; none may be dropped).
+    pub requests: u64,
+    /// Wall-clock seconds the replay thread spent inside synchronous
+    /// online-training rounds.  The throughput window includes this time
+    /// (scorers keep draining concurrently while a round runs), so
+    /// subtract it mentally when comparing raw scoring QPS across
+    /// configurations with different round counts.
+    pub online_train_secs: f64,
+}
+
+impl ReplayReport {
+    /// Human-readable summary (CLI output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.throughput.render().trim_end());
+        let _ = writeln!(
+            s,
+            "accuracy {:.4} over {} requests; {} hot-swaps (scored by \
+             model epochs {}..={}; {:.3}s in online rounds, included in \
+             the window)",
+            self.accuracy,
+            self.requests,
+            self.swaps,
+            self.epoch_min,
+            self.epoch_max,
+            self.online_train_secs
+        );
+        s
+    }
+}
+
+/// Replay a dataset's held-out split through the batcher/scorer stack
+/// while the online trainer hot-swaps retrained models mid-stream.
+///
+/// The replay thread streams raw (unfolded) test rows into the batcher;
+/// after each of `online_rounds` evenly spaced chunks it runs one
+/// synchronous online-training round — scorer shards keep draining
+/// concurrently, so each publish lands while requests are in flight.
+/// Every ticket is waited on: a dropped request would hang the replay,
+/// so a completed run *is* the no-drop proof (the integration test adds
+/// timeouts).
+pub fn replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
+    let (train, test, c) = data_registry::load(&cfg.dataset, cfg.scale)?;
+    let loss = Hinge::new(c);
+
+    // ---- offline warm-up: train the initial model -------------------
+    let r = Passcode::solve(
+        &train,
+        &loss,
+        MemoryModel::Wild,
+        &SolveOptions {
+            epochs: cfg.train_epochs,
+            threads: cfg.train_threads.max(1),
+            seed: cfg.seed,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    );
+    let model = Model {
+        w: r.w_hat,
+        loss: "hinge".into(),
+        c,
+        solver: "passcode-wild".into(),
+        dataset: cfg.dataset.clone(),
+    };
+
+    // ---- bring up the serving stack ---------------------------------
+    let registry = Arc::new(ModelRegistry::new(model, Some(r.alpha)));
+    let batcher = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait));
+    let stats = Arc::new(ServeStats::new(cfg.shards));
+    let pool = ShardPool::start(
+        Arc::clone(&registry),
+        Arc::clone(&batcher),
+        Arc::clone(&stats),
+        &ScorerConfig { shards: cfg.shards, pin_threads: cfg.pin_threads },
+    );
+    let trainer = OnlineTrainer::new(
+        Arc::clone(&registry),
+        loss,
+        OnlineConfig {
+            epochs_per_round: cfg.online_epochs,
+            threads: cfg.train_threads.max(1),
+            max_window: test.n().max(1),
+            seed: cfg.seed,
+        },
+    );
+
+    // ---- replay the held-out split as traffic -----------------------
+    let n = test.n();
+    let chunk = n.div_ceil(cfg.online_rounds + 1).max(1);
+    let mut next_round_at = chunk;
+    let mut online_train_secs = 0.0f64;
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = test.y[i];
+        // Stored rows are folded (x = y·ẋ); serve the raw features.
+        let (idx, raw) = test.raw_row(i);
+        tickets.push((batcher.submit(idx.clone(), raw.clone()), y));
+        // The label "arrives" right after the request: feed the trainer.
+        trainer.ingest(idx, raw, y);
+        if i + 1 == next_round_at && i + 1 < n {
+            // Hot-swap mid-replay: retrain + publish while the shards
+            // keep draining the queue.
+            let t = crate::util::Timer::start();
+            trainer.train_round();
+            online_train_secs += t.secs();
+            next_round_at += chunk;
+        }
+    }
+    batcher.close();
+
+    // ---- collect every response (no request may be dropped) ---------
+    let mut correct = 0usize;
+    let mut epoch_min = u64::MAX;
+    let mut epoch_max = 0u64;
+    for (t, y) in tickets {
+        let p = t.wait();
+        if p.label == y {
+            correct += 1;
+        }
+        epoch_min = epoch_min.min(p.model_epoch);
+        epoch_max = epoch_max.max(p.model_epoch);
+    }
+    pool.join();
+    if n == 0 {
+        epoch_min = 0;
+    }
+
+    Ok(ReplayReport {
+        throughput: stats.report(),
+        accuracy: correct as f64 / n.max(1) as f64,
+        swaps: registry.epoch(),
+        epoch_min,
+        epoch_max,
+        requests: n as u64,
+        online_train_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_engine_scores_and_reports() {
+        let model = Model {
+            w: vec![2.0, -1.0],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "test".into(),
+            dataset: "toy".into(),
+        };
+        let engine = ServeEngine::start(
+            model,
+            None,
+            &ServeConfig {
+                shards: 2,
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                pin_threads: false,
+            },
+        );
+        let t1 = engine.submit(vec![0], vec![1.0]);
+        let t2 = engine.submit(vec![1], vec![3.0]);
+        assert_eq!(t1.wait().margin, 2.0);
+        assert_eq!(t2.wait().label, -1.0);
+        assert_eq!(engine.registry().epoch(), 0);
+        let report = engine.shutdown();
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.shards, 2);
+    }
+
+    #[test]
+    fn replay_smoke_tiny() {
+        let cfg = ReplayConfig {
+            scale: 0.02,
+            shards: 2,
+            train_epochs: 5,
+            online_rounds: 2,
+            online_epochs: 1,
+            ..Default::default()
+        };
+        let rep = replay(&cfg).unwrap();
+        assert_eq!(rep.swaps, 2);
+        assert!(rep.requests > 0);
+        assert_eq!(rep.epoch_max, rep.swaps, "final chunk sees last swap");
+        assert!(rep.accuracy > 0.6, "served accuracy {}", rep.accuracy);
+        assert_eq!(
+            rep.throughput.requests, rep.requests,
+            "scored != submitted"
+        );
+        assert!(rep.render().contains("hot-swaps"));
+    }
+}

@@ -1,0 +1,356 @@
+//! Async continuous training: PASSCoDe-Wild epochs over a stream of
+//! freshly labeled rows, warm-started from the registry's live `(α, ŵ)`
+//! and published back via atomic hot-swap.
+//!
+//! This is the paper's shared-memory asynchrony repurposed for the serve
+//! path (the Hybrid-DCA / AsySCD observation): scorer threads read `w`
+//! lock-free while trainer threads keep folding in new examples —
+//! Theorem 3's backward-error analysis is what licenses predicting with
+//! a `ŵ` that racy updates perturbed.  The trainer keeps a sliding
+//! window of the most recent labeled rows with a per-row dual iterate
+//! `α`; each round runs a few Wild epochs over the window, warm-started
+//! via [`Passcode::solve_warm`] from the live model, and publishes the
+//! result ([`ModelRegistry::publish`]) without ever blocking scorers.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::model_io::Model;
+use crate::data::{CsrMatrix, Dataset, Entry};
+use crate::loss::Loss;
+use crate::solver::{MemoryModel, Passcode, SolveOptions};
+
+use super::registry::ModelRegistry;
+
+/// Online-trainer configuration.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// PASSCoDe-Wild epochs per training round (each round publishes).
+    pub epochs_per_round: usize,
+    /// Solver worker threads per round.
+    pub threads: usize,
+    /// Most recent labeled rows retained in the sliding window.
+    pub max_window: usize,
+    /// Base RNG seed (xor-ed with the round counter).
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self { epochs_per_round: 2, threads: 1, max_window: 4096, seed: 42 }
+    }
+}
+
+/// One labeled raw (unfolded) row awaiting training.
+#[derive(Debug, Clone)]
+struct LabeledRow {
+    idx: Vec<u32>,
+    vals: Vec<f64>,
+    label: f64,
+}
+
+#[derive(Debug, Default)]
+struct Window {
+    rows: VecDeque<LabeledRow>,
+    /// Dual iterate per window row, parallel to `rows` (warm-start state;
+    /// new rows enter at `α = 0`, evicted rows take their α with them).
+    alpha: VecDeque<f64>,
+    /// Rows evicted since construction (aligns write-backs after a round
+    /// trained on a snapshot that has since slid).
+    evicted: u64,
+}
+
+/// The continuous trainer.
+///
+/// Thread-safe: `ingest` may race with a concurrent `train_round` (the
+/// window is briefly locked to snapshot / write back); run one training
+/// loop per registry — rounds are not meant to run concurrently with
+/// each other.
+#[derive(Debug)]
+pub struct OnlineTrainer<L: Loss> {
+    registry: Arc<ModelRegistry>,
+    loss: L,
+    cfg: OnlineConfig,
+    window: Mutex<Window>,
+    rounds: AtomicU64,
+}
+
+impl<L: Loss> OnlineTrainer<L> {
+    /// A trainer feeding `registry`, optimizing `loss` (must match the
+    /// loss the served model was trained with).
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        loss: L,
+        cfg: OnlineConfig,
+    ) -> OnlineTrainer<L> {
+        assert!(cfg.max_window > 0, "max_window must be positive");
+        OnlineTrainer {
+            registry,
+            loss,
+            cfg,
+            window: Mutex::new(Window::default()),
+            rounds: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed one freshly labeled raw row (indices strictly increasing;
+    /// any label > 0 maps to +1, else −1).  Oldest rows are evicted once
+    /// the window is full.
+    pub fn ingest(&self, idx: Vec<u32>, vals: Vec<f64>, label: f64) {
+        debug_assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "row indices must be strictly increasing"
+        );
+        debug_assert_eq!(idx.len(), vals.len());
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut w = self.window.lock().expect("window poisoned");
+        if w.rows.len() == self.cfg.max_window {
+            w.rows.pop_front();
+            w.alpha.pop_front();
+            w.evicted += 1;
+        }
+        w.rows.push_back(LabeledRow { idx, vals, label });
+        w.alpha.push_back(0.0);
+    }
+
+    /// Rows currently buffered in the window.
+    pub fn buffered(&self) -> usize {
+        self.window.lock().expect("window poisoned").rows.len()
+    }
+
+    /// Training rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Run one training round: snapshot the window, run
+    /// `epochs_per_round` PASSCoDe-Wild epochs warm-started from the
+    /// registry's live `ŵ` and the window's `α`, write the updated `α`
+    /// back to surviving window rows, and publish the new model.
+    ///
+    /// Returns the published epoch, or `None` if the window is empty.
+    /// Scorers are never blocked: the only lock taken is the trainer's
+    /// own window mutex (shared with `ingest`, not with scoring).
+    pub fn train_round(&self) -> Option<u64> {
+        // ---- snapshot the window ------------------------------------
+        let (snapshot, alpha0, snap_evicted) = {
+            let w = self.window.lock().expect("window poisoned");
+            if w.rows.is_empty() {
+                return None;
+            }
+            (
+                w.rows.iter().cloned().collect::<Vec<LabeledRow>>(),
+                w.alpha.iter().copied().collect::<Vec<f64>>(),
+                w.evicted,
+            )
+        };
+        let base = self.registry.current();
+        let d = base.model.w.len();
+
+        // ---- build the folded window dataset (x_i = y_i ẋ_i) --------
+        let folded: Vec<Vec<Entry>> = snapshot
+            .iter()
+            .map(|r| {
+                r.idx
+                    .iter()
+                    .zip(&r.vals)
+                    .filter(|(&j, _)| (j as usize) < d)
+                    .map(|(&j, &v)| Entry { index: j, value: r.label * v })
+                    .collect()
+            })
+            .collect();
+        let labels: Vec<f64> = snapshot.iter().map(|r| r.label).collect();
+        let ds = Dataset::new(
+            CsrMatrix::from_rows(&folded, d),
+            labels,
+            "online-window",
+        );
+
+        // ---- warm-started Wild epochs -------------------------------
+        let round = self.rounds.fetch_add(1, Ordering::Relaxed);
+        let opts = SolveOptions {
+            epochs: self.cfg.epochs_per_round.max(1),
+            threads: self.cfg.threads.max(1),
+            seed: self.cfg.seed ^ (round.wrapping_mul(0x9E37_79B9)),
+            eval_every: 0,
+            ..Default::default()
+        };
+        let r = Passcode::solve_warm(
+            &ds,
+            &self.loss,
+            MemoryModel::Wild,
+            &opts,
+            &alpha0,
+            &base.model.w,
+            None,
+        );
+
+        // ---- write α back to window rows that survived --------------
+        {
+            let mut w = self.window.lock().expect("window poisoned");
+            let shift = (w.evicted - snap_evicted) as usize;
+            for (i, &a) in r.alpha.iter().enumerate().skip(shift) {
+                let pos = i - shift;
+                if pos < w.alpha.len() {
+                    w.alpha[pos] = a;
+                }
+            }
+        }
+
+        // ---- publish (atomic hot-swap; scorers never block) ---------
+        let model = Model {
+            w: r.w_hat,
+            loss: base.model.loss.clone(),
+            c: base.model.c,
+            solver: "online-passcode-wild".into(),
+            dataset: base.model.dataset.clone(),
+        };
+        Some(self.registry.publish(model, Some(r.alpha)))
+    }
+
+    /// Spawn the continuous-training loop: a detached round runs
+    /// whenever at least `min_rows` rows are buffered, until `stop` is
+    /// raised.  Returns the loop's join handle.
+    pub fn spawn_loop(
+        trainer: Arc<OnlineTrainer<L>>,
+        stop: Arc<AtomicBool>,
+        min_rows: usize,
+    ) -> JoinHandle<u64> {
+        std::thread::Builder::new()
+            .name("online-trainer".into())
+            .spawn(move || {
+                let mut published = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    if trainer.buffered() >= min_rows.max(1) {
+                        if trainer.train_round().is_some() {
+                            published += 1;
+                        }
+                    } else {
+                        std::thread::sleep(Duration::from_micros(500));
+                    }
+                }
+                published
+            })
+            .expect("spawn online trainer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry as data_registry;
+    use crate::eval;
+    use crate::loss::Hinge;
+
+    fn zero_registry(d: usize, c: f64) -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::new(
+            Model {
+                w: vec![0.0; d],
+                loss: "hinge".into(),
+                c,
+                solver: "cold".into(),
+                dataset: "rcv1".into(),
+            },
+            None,
+        ))
+    }
+
+    #[test]
+    fn rounds_learn_from_ingested_stream() {
+        let (tr, te, c) = data_registry::load("rcv1", 0.02).unwrap();
+        let reg = zero_registry(tr.d(), c);
+        let trainer = OnlineTrainer::new(
+            Arc::clone(&reg),
+            Hinge::new(c),
+            OnlineConfig {
+                epochs_per_round: 3,
+                max_window: tr.n(),
+                ..Default::default()
+            },
+        );
+        // Stream the training rows in as "freshly labeled" raw rows
+        // (raw_row unfolds the stored x = y·ẋ).
+        for i in 0..tr.n() {
+            let (idx, raw) = tr.raw_row(i);
+            trainer.ingest(idx, raw, tr.y[i]);
+        }
+        assert_eq!(trainer.buffered(), tr.n());
+        let acc0 = eval::accuracy(&te, &reg.current().model.w);
+        for _ in 0..3 {
+            assert!(trainer.train_round().is_some());
+        }
+        assert_eq!(reg.epoch(), 3);
+        assert_eq!(trainer.rounds(), 3);
+        let v = reg.current();
+        let acc = eval::accuracy(&te, &v.model.w);
+        assert!(
+            acc > acc0 && acc > 0.7,
+            "online training did not learn: {acc0} -> {acc}"
+        );
+        // Warm-start state published and feasible.
+        let alpha = v.alpha.as_ref().unwrap();
+        assert_eq!(alpha.len(), tr.n());
+        assert!(alpha.iter().all(|&a| (-1e-9..=c + 1e-9).contains(&a)));
+    }
+
+    #[test]
+    fn empty_window_trains_nothing() {
+        let reg = zero_registry(4, 1.0);
+        let trainer =
+            OnlineTrainer::new(reg, Hinge::new(1.0), OnlineConfig::default());
+        assert!(trainer.train_round().is_none());
+        assert_eq!(trainer.rounds(), 0);
+    }
+
+    #[test]
+    fn window_evicts_oldest_and_realigns_alpha() {
+        let reg = zero_registry(3, 1.0);
+        let trainer = OnlineTrainer::new(
+            Arc::clone(&reg),
+            Hinge::new(1.0),
+            OnlineConfig { max_window: 2, ..Default::default() },
+        );
+        trainer.ingest(vec![0], vec![1.0], 1.0);
+        trainer.ingest(vec![1], vec![1.0], -1.0);
+        trainer.ingest(vec![2], vec![1.0], 1.0); // evicts the first
+        assert_eq!(trainer.buffered(), 2);
+        assert!(trainer.train_round().is_some());
+        // Out-of-range features are dropped rather than panicking.
+        trainer.ingest(vec![0, 999], vec![1.0, 5.0], 1.0);
+        assert!(trainer.train_round().is_some());
+        assert_eq!(reg.epoch(), 2);
+    }
+
+    #[test]
+    fn spawn_loop_publishes_until_stopped() {
+        let (tr, _, c) = data_registry::load("rcv1", 0.02).unwrap();
+        let reg = zero_registry(tr.d(), c);
+        let trainer = Arc::new(OnlineTrainer::new(
+            Arc::clone(&reg),
+            Hinge::new(c),
+            OnlineConfig { epochs_per_round: 1, ..Default::default() },
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = OnlineTrainer::spawn_loop(
+            Arc::clone(&trainer),
+            Arc::clone(&stop),
+            8,
+        );
+        for i in 0..64 {
+            let (idx, raw) = tr.raw_row(i);
+            trainer.ingest(idx, raw, tr.y[i]);
+        }
+        // Wait until at least one round lands, then stop.
+        let t0 = std::time::Instant::now();
+        while reg.epoch() == 0 && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::Release);
+        let published = h.join().unwrap();
+        assert!(published >= 1, "loop never published");
+        assert_eq!(reg.epoch(), published);
+    }
+}

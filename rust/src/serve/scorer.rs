@@ -1,0 +1,185 @@
+//! Sharded scorer pool: worker threads drain microbatches from the
+//! [`Batcher`](super::batcher::Batcher) and score them against the
+//! registry's live model.
+//!
+//! Each shard reads the registry **once per microbatch** — the whole
+//! batch is scored against one consistent
+//! [`ModelVersion`](super::registry::ModelVersion) snapshot, so
+//! a hot-swap landing mid-batch affects only subsequent batches (and a
+//! swap can never block a shard: registry reads are wait-free).  Shards
+//! reuse [`crate::util::affinity`] pinning, same as the solver's worker
+//! threads (paper §3.3 "Thread Affinity").
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::affinity;
+
+use super::batcher::{Batcher, Prediction};
+use super::registry::ModelRegistry;
+use super::stats::ServeStats;
+
+/// Scorer pool configuration.
+#[derive(Debug, Clone)]
+pub struct ScorerConfig {
+    /// Worker threads (each drains whole microbatches).
+    pub shards: usize,
+    /// Pin shard `t` to core `t % online_cpus()`.
+    pub pin_threads: bool,
+}
+
+impl Default for ScorerConfig {
+    fn default() -> Self {
+        Self { shards: 4, pin_threads: false }
+    }
+}
+
+/// A running pool of scorer shards.
+///
+/// Shards exit when the batcher is closed and drained; [`ShardPool::join`]
+/// then reaps them.  Dropping the pool without joining detaches the
+/// threads (they still exit on close).
+#[derive(Debug)]
+pub struct ShardPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `cfg.shards` scorer threads over a shared queue.
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        batcher: Arc<Batcher>,
+        stats: Arc<ServeStats>,
+        cfg: &ScorerConfig,
+    ) -> ShardPool {
+        assert!(
+            stats.shards() >= cfg.shards.max(1),
+            "ServeStats sized for {} shards, pool wants {}",
+            stats.shards(),
+            cfg.shards
+        );
+        let handles = (0..cfg.shards.max(1))
+            .map(|t| {
+                let registry = Arc::clone(&registry);
+                let batcher = Arc::clone(&batcher);
+                let stats = Arc::clone(&stats);
+                let pin = cfg.pin_threads;
+                std::thread::Builder::new()
+                    .name(format!("scorer-{t}"))
+                    .spawn(move || {
+                        if pin {
+                            affinity::pin_current_thread(t);
+                        }
+                        while let Some(batch) = batcher.next_batch() {
+                            // One wait-free registry read per batch: the
+                            // microbatch scores against one snapshot.
+                            let version = registry.current();
+                            for req in &batch {
+                                let margin =
+                                    version.model.margin(&req.idx, &req.vals);
+                                req.fulfil(Prediction {
+                                    margin,
+                                    label: if margin > 0.0 { 1.0 } else { -1.0 },
+                                    model_epoch: version.epoch,
+                                });
+                                stats.latency.record(req.enqueued.elapsed());
+                            }
+                            let shard = stats.shard(t);
+                            shard
+                                .requests
+                                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                            shard.batches.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                    .expect("spawn scorer shard")
+            })
+            .collect();
+        ShardPool { handles }
+    }
+
+    /// Number of shards in the pool.
+    pub fn shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Wait for every shard to exit (call after closing the batcher).
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().expect("scorer shard panicked");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model_io::Model;
+    use std::time::Duration;
+
+    fn registry(w: Vec<f64>) -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::new(
+            Model {
+                w,
+                loss: "hinge".into(),
+                c: 1.0,
+                solver: "test".into(),
+                dataset: "toy".into(),
+            },
+            None,
+        ))
+    }
+
+    #[test]
+    fn pool_scores_and_counts_then_exits_on_close() {
+        let reg = registry(vec![1.0, -2.0, 0.5]);
+        let batcher = Arc::new(Batcher::new(4, Duration::from_millis(1)));
+        let stats = Arc::new(ServeStats::new(2));
+        let pool = ShardPool::start(
+            Arc::clone(&reg),
+            Arc::clone(&batcher),
+            Arc::clone(&stats),
+            &ScorerConfig { shards: 2, pin_threads: false },
+        );
+        assert_eq!(pool.shards(), 2);
+        let tickets: Vec<_> = (0..20)
+            .map(|i| {
+                // row = e_{i mod 3}: margin = w[i mod 3]
+                batcher.submit(vec![(i % 3) as u32], vec![1.0])
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let p = t
+                .wait_timeout(Duration::from_secs(30))
+                .expect("request dropped");
+            let want = [1.0, -2.0, 0.5][i % 3];
+            assert_eq!(p.margin, want);
+            assert_eq!(p.label, if want > 0.0 { 1.0 } else { -1.0 });
+            assert_eq!(p.model_epoch, 0);
+        }
+        batcher.close();
+        pool.join();
+        assert_eq!(stats.total_requests(), 20);
+        assert!(stats.total_batches() >= 5, "20 reqs / max_batch 4");
+        assert_eq!(stats.latency.count(), 20);
+    }
+
+    #[test]
+    fn out_of_range_features_score_zero() {
+        let reg = registry(vec![1.0]);
+        let batcher = Arc::new(Batcher::new(2, Duration::from_millis(0)));
+        let stats = Arc::new(ServeStats::new(1));
+        let pool = ShardPool::start(
+            reg,
+            Arc::clone(&batcher),
+            stats,
+            &ScorerConfig { shards: 1, pin_threads: false },
+        );
+        let t = batcher.submit(vec![5], vec![9.0]); // feature 5 ∉ model
+        let p = t.wait_timeout(Duration::from_secs(30)).expect("dropped");
+        assert_eq!(p.margin, 0.0);
+        assert_eq!(p.label, -1.0);
+        batcher.close();
+        pool.join();
+    }
+}

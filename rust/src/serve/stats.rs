@@ -1,0 +1,354 @@
+//! Serving telemetry: a lock-free latency histogram (p50/p95/p99),
+//! per-shard throughput counters, and the QPS report the `replay`
+//! command and `benches/serve_throughput.rs` print through
+//! [`crate::coordinator::metrics::TextTable`].
+//!
+//! Scorer shards record into shared atomics on every request — the same
+//! "contended plain adds are fine" discipline PASSCoDe-Wild applies to
+//! `w` is applied here to counters (where relaxed atomics are exact
+//! anyway), so telemetry never serializes the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::TextTable;
+use crate::util::Json;
+
+/// Number of power-of-two latency buckets (covers 1 ns … ~584 years).
+const BUCKETS: usize = 64;
+
+/// A concurrent histogram over request latencies with geometric
+/// (power-of-two nanosecond) buckets.
+///
+/// `record` is wait-free (two relaxed `fetch_add`s); quantiles are read
+/// with relaxed loads, so a report taken while shards are still scoring
+/// is a consistent-enough snapshot, exact once they have joined.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency measurement in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        // Bucket b holds values with highest set bit b-1, i.e. the range
+        // [2^(b-1), 2^b); ns == 0 lands in bucket 0.  The bucket is
+        // bumped before the count so Σ buckets ≥ count in program order
+        // (a racing quantile read may still see them out of order; see
+        // `quantile_secs`).
+        let b = (u64::BITS - ns.leading_zeros()) as usize;
+        self.buckets[b.min(BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one latency measurement from a [`Duration`].
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total number of recorded measurements.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e9
+    }
+
+    /// Approximate `q`-quantile latency in seconds (bucket midpoint; 0
+    /// when empty).  `q` is clamped to `[0, 1]`.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target =
+            ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        let mut top = 0usize;
+        for (b, cell) in self.buckets.iter().enumerate() {
+            let n = cell.load(Ordering::Relaxed);
+            if n > 0 {
+                top = b;
+            }
+            cum += n;
+            if cum >= target {
+                return Self::bucket_midpoint_secs(b);
+            }
+        }
+        // A quantile racing an in-flight `record_ns` can observe `count`
+        // ahead of the bucket array (relaxed loads); fall back to the
+        // highest populated bucket rather than panicking.
+        Self::bucket_midpoint_secs(top)
+    }
+
+    /// Representative latency for bucket `b` (midpoint of [2^(b-1), 2^b)).
+    fn bucket_midpoint_secs(b: usize) -> f64 {
+        if b == 0 {
+            0.0
+        } else {
+            1.5 * 2f64.powi(b as i32 - 1) / 1e9
+        }
+    }
+}
+
+/// Per-shard throughput counters (relaxed atomics, exact).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    /// Requests this shard scored.
+    pub requests: AtomicU64,
+    /// Microbatches this shard drained.
+    pub batches: AtomicU64,
+}
+
+/// Shared serving telemetry: one latency histogram plus per-shard
+/// counters, all recordable concurrently from scorer threads.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// End-to-end (enqueue → response) latency across all shards.
+    pub latency: LatencyHistogram,
+    shards: Vec<ShardCounters>,
+    started: Instant,
+}
+
+impl ServeStats {
+    /// Fresh stats for a pool of `shards` scorer threads.
+    pub fn new(shards: usize) -> Self {
+        Self {
+            latency: LatencyHistogram::new(),
+            shards: (0..shards.max(1)).map(|_| ShardCounters::default()).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Counters for shard `i`.
+    pub fn shard(&self, i: usize) -> &ShardCounters {
+        &self.shards[i]
+    }
+
+    /// Number of shards tracked.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total requests scored across all shards.
+    pub fn total_requests(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.requests.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Total microbatches drained across all shards.
+    pub fn total_batches(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.batches.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Seconds since the stats object was created.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Per-shard `(requests, batches)` snapshot.
+    pub fn per_shard(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                (
+                    s.requests.load(Ordering::Relaxed),
+                    s.batches.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Snapshot a throughput/latency report.
+    pub fn report(&self) -> ThroughputReport {
+        let requests = self.total_requests();
+        let batches = self.total_batches();
+        let elapsed = self.elapsed_secs();
+        ThroughputReport {
+            requests,
+            batches,
+            shards: self.shards.len(),
+            elapsed_secs: elapsed,
+            qps: if elapsed > 0.0 {
+                requests as f64 / elapsed
+            } else {
+                0.0
+            },
+            avg_batch: if batches > 0 {
+                requests as f64 / batches as f64
+            } else {
+                0.0
+            },
+            mean_secs: self.latency.mean_secs(),
+            p50_secs: self.latency.quantile_secs(0.50),
+            p95_secs: self.latency.quantile_secs(0.95),
+            p99_secs: self.latency.quantile_secs(0.99),
+        }
+    }
+}
+
+/// One QPS + latency-percentile snapshot of a serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputReport {
+    /// Requests scored.
+    pub requests: u64,
+    /// Microbatches drained.
+    pub batches: u64,
+    /// Scorer shards in the pool.
+    pub shards: usize,
+    /// Wall-clock seconds covered by the counters.
+    pub elapsed_secs: f64,
+    /// Requests per second.
+    pub qps: f64,
+    /// Mean requests per microbatch (coalescing factor).
+    pub avg_batch: f64,
+    /// Mean end-to-end latency (seconds).
+    pub mean_secs: f64,
+    /// Median end-to-end latency (seconds).
+    pub p50_secs: f64,
+    /// 95th-percentile latency (seconds).
+    pub p95_secs: f64,
+    /// 99th-percentile latency (seconds).
+    pub p99_secs: f64,
+}
+
+impl ThroughputReport {
+    /// Render as the fixed-width table the CLI and benches print.
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new(&[
+            "shards", "requests", "batches", "avg_batch", "qps", "p50_ms",
+            "p95_ms", "p99_ms",
+        ]);
+        t.row(&[
+            self.shards.to_string(),
+            self.requests.to_string(),
+            self.batches.to_string(),
+            format!("{:.1}", self.avg_batch),
+            format!("{:.0}", self.qps),
+            format!("{:.3}", self.p50_secs * 1e3),
+            format!("{:.3}", self.p95_secs * 1e3),
+            format!("{:.3}", self.p99_secs * 1e3),
+        ]);
+        t.render()
+    }
+
+    /// JSON export (provenance logs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("elapsed_secs", Json::num(self.elapsed_secs)),
+            ("qps", Json::num(self.qps)),
+            ("avg_batch", Json::num(self.avg_batch)),
+            ("mean_secs", Json::num(self.mean_secs)),
+            ("p50_secs", Json::num(self.p50_secs)),
+            ("p95_secs", Json::num(self.p95_secs)),
+            ("p99_secs", Json::num(self.p99_secs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered_and_sane() {
+        let h = LatencyHistogram::new();
+        // 90 fast (~1 µs) and 10 slow (~1 ms) measurements.
+        for _ in 0..90 {
+            h.record_ns(1_000);
+        }
+        for _ in 0..10 {
+            h.record_ns(1_000_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_secs(0.50);
+        let p95 = h.quantile_secs(0.95);
+        let p99 = h.quantile_secs(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 in the microsecond regime, p95/p99 in the millisecond one.
+        assert!(p50 < 1e-5, "p50 {p50}");
+        assert!(p95 > 1e-4, "p95 {p95}");
+        let mean = h.mean_secs();
+        assert!((mean - (90.0 * 1e-6 + 10.0 * 1e-3) / 100.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_secs(0.5), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_records_are_lossless() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record_ns(1 + i % 1000);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn report_math() {
+        let stats = ServeStats::new(2);
+        stats.shard(0).requests.fetch_add(30, Ordering::Relaxed);
+        stats.shard(0).batches.fetch_add(3, Ordering::Relaxed);
+        stats.shard(1).requests.fetch_add(10, Ordering::Relaxed);
+        stats.shard(1).batches.fetch_add(2, Ordering::Relaxed);
+        for _ in 0..40 {
+            stats.latency.record_ns(10_000);
+        }
+        let r = stats.report();
+        assert_eq!(r.requests, 40);
+        assert_eq!(r.batches, 5);
+        assert_eq!(r.shards, 2);
+        assert!((r.avg_batch - 8.0).abs() < 1e-12);
+        assert!(r.qps > 0.0);
+        assert_eq!(stats.per_shard(), vec![(30, 3), (10, 2)]);
+        let rendered = r.render();
+        assert!(rendered.contains("qps"));
+        let j = r.to_json().to_pretty();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_usize().unwrap(), 40);
+    }
+}

@@ -64,7 +64,8 @@ impl MemoryModel {
 pub struct Passcode;
 
 impl Passcode {
-    /// Run Algorithm 2 with `opts.threads` workers.
+    /// Run Algorithm 2 with `opts.threads` workers, cold-started from
+    /// `α = 0`, `w = 0`.
     ///
     /// The progress callback (leader-only) fires at epoch barriers every
     /// `opts.eval_every` epochs; returning `false` stops all workers at
@@ -74,6 +75,40 @@ impl Passcode {
         loss: &L,
         model: MemoryModel,
         opts: &SolveOptions,
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        Self::solve_impl(ds, loss, model, opts, None, on_progress)
+    }
+
+    /// Run Algorithm 2 warm-started from an existing `(α, ŵ)` pair — the
+    /// continuous-training entry point used by [`crate::serve::online`]:
+    /// the online trainer resumes from the registry's live model instead
+    /// of re-solving from zero on every publish.
+    ///
+    /// `alpha0.len()` must equal `ds.n()` and `w0.len()` must equal
+    /// `ds.d()`.  The caller is responsible for `w0 ≈ Σ α0_i x_i` if it
+    /// wants the dual/primal pairing to stay meaningful (PASSCoDe-Wild's
+    /// Theorem 3 tolerates the drift either way).
+    pub fn solve_warm<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        model: MemoryModel,
+        opts: &SolveOptions,
+        alpha0: &[f64],
+        w0: &[f64],
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        assert_eq!(alpha0.len(), ds.n(), "warm-start α dimension");
+        assert_eq!(w0.len(), ds.d(), "warm-start w dimension");
+        Self::solve_impl(ds, loss, model, opts, Some((alpha0, w0)), on_progress)
+    }
+
+    fn solve_impl<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        model: MemoryModel,
+        opts: &SolveOptions,
+        warm: Option<(&[f64], &[f64])>,
         mut on_progress: Option<&mut ProgressFn<'_>>,
     ) -> SolveResult {
         let n = ds.n();
@@ -84,8 +119,12 @@ impl Passcode {
         // ---- init (counted separately, as in §5.2) ----------------------
         let init_t = Timer::start();
         let qii = ds.x.all_row_sqnorms();
-        let w = SharedVec::zeros(d);
-        let alpha = SharedVec::zeros(n);
+        let (w, alpha) = match warm {
+            Some((a0, w0)) => {
+                (SharedVec::from_slice(w0), SharedVec::from_slice(a0))
+            }
+            None => (SharedVec::zeros(d), SharedVec::zeros(n)),
+        };
         let locks = match model {
             MemoryModel::Lock => Some(LockTable::new(d)),
             _ => None,
@@ -445,6 +484,58 @@ mod tests {
             shr.updates,
             full.updates
         );
+    }
+
+    #[test]
+    fn warm_start_resumes_where_cold_left_off() {
+        // Solve 20 epochs cold; then warm-start one extra epoch from the
+        // result.  The warm run must (a) not regress the objective and
+        // (b) beat a 1-epoch cold start by a wide margin.
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let base = Passcode::solve(
+            &ds, &loss, MemoryModel::Wild, &opts(1, 20), None,
+        );
+        let p_base = eval::primal_objective(&ds, &loss, &base.w_hat);
+        let warm = Passcode::solve_warm(
+            &ds,
+            &loss,
+            MemoryModel::Wild,
+            &opts(1, 1),
+            &base.alpha,
+            &base.w_hat,
+            None,
+        );
+        let p_warm = eval::primal_objective(&ds, &loss, &warm.w_hat);
+        assert!(p_warm <= p_base + 1e-6, "warm regressed: {p_warm} vs {p_base}");
+        let cold1 = Passcode::solve(
+            &ds, &loss, MemoryModel::Wild, &opts(1, 1), None,
+        );
+        let p_cold1 = eval::primal_objective(&ds, &loss, &cold1.w_hat);
+        assert!(
+            p_warm < p_cold1,
+            "warm start no better than cold 1-epoch: {p_warm} vs {p_cold1}"
+        );
+    }
+
+    #[test]
+    fn warm_start_from_zeros_matches_cold_start() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let cold = Passcode::solve(
+            &ds, &loss, MemoryModel::Wild, &opts(1, 5), None,
+        );
+        let warm = Passcode::solve_warm(
+            &ds,
+            &loss,
+            MemoryModel::Wild,
+            &opts(1, 5),
+            &vec![0.0; ds.n()],
+            &vec![0.0; ds.d()],
+            None,
+        );
+        assert_eq!(cold.alpha, warm.alpha);
+        assert_eq!(cold.w_hat, warm.w_hat);
     }
 
     #[test]

@@ -2,44 +2,58 @@
 //!
 //! The paper binds each worker to a physical core (libnuma) to avoid
 //! remote-socket access.  We implement the same with raw
-//! `sched_setaffinity`; on hosts with fewer cores than workers the pin
-//! wraps modulo the online-core count (graceful on this 1-core image,
-//! faithful on a real multi-socket box).
+//! `sched_setaffinity`, declared directly against the platform C library
+//! so the crate carries no `libc` dependency (the offline image vendors
+//! only `anyhow`); on hosts with fewer cores than workers the pin wraps
+//! modulo the online-core count (graceful on a 1-core image, faithful on
+//! a real multi-socket box).
 
-/// Number of CPUs currently online.
+/// Linux `cpu_set_t`: a 1024-bit mask (16 × u64).
+#[cfg(target_os = "linux")]
+type CpuSet = [u64; 16];
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// `int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask)`
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+}
+
+/// Number of CPUs currently usable by this process.
 pub fn online_cpus() -> usize {
-    // SAFETY: sysconf is always safe to call.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n <= 0 {
-        1
-    } else {
-        n as usize
-    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 /// Pin the calling thread to core `core % online_cpus()`.
 ///
 /// Returns the core actually pinned to, or `None` if the kernel refused
 /// (e.g. restricted cpuset) — callers treat that as a soft failure.
+#[cfg(target_os = "linux")]
 pub fn pin_current_thread(core: usize) -> Option<usize> {
     let n = online_cpus();
     let target = core % n;
-    // SAFETY: CPU_* only write into the local cpu_set_t.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(target, &mut set);
-        let rc = libc::sched_setaffinity(
-            0, // current thread
-            std::mem::size_of::<libc::cpu_set_t>(),
-            &set,
-        );
-        if rc == 0 {
-            Some(target)
-        } else {
-            None
-        }
+    let mut set: CpuSet = [0; 16];
+    if target / 64 >= set.len() {
+        return None; // beyond the 1024-cpu mask
     }
+    set[target / 64] |= 1u64 << (target % 64);
+    // SAFETY: the mask is a valid, fully initialized cpu_set_t-sized
+    // buffer owned by this frame; pid 0 addresses the calling thread.
+    let rc = unsafe {
+        sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr())
+    };
+    if rc == 0 {
+        Some(target)
+    } else {
+        None
+    }
+}
+
+/// Non-Linux hosts: affinity is a soft no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_core: usize) -> Option<usize> {
+    None
 }
 
 #[cfg(test)]
@@ -60,6 +74,7 @@ mod tests {
         }
     }
 
+    #[cfg(target_os = "linux")]
     #[test]
     fn pin_core_zero_succeeds() {
         assert_eq!(pin_current_thread(0), Some(0));

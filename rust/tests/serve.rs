@@ -1,0 +1,244 @@
+//! Integration tests for the online scoring subsystem: registry ↔
+//! batcher ↔ scorer ↔ online trainer ↔ replay harness.
+//!
+//! The acceptance property under test: hot-swapping a model mid-replay
+//! (published by the online trainer) never blocks scorers and never
+//! drops a request.  Every wait uses a generous timeout so a dropped
+//! request fails the test instead of hanging it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use passcode::coordinator::model_io::Model;
+use passcode::data::registry as data_registry;
+use passcode::eval;
+use passcode::loss::Hinge;
+use passcode::serve::{
+    self, Batcher, ModelRegistry, OnlineConfig, OnlineTrainer, ReplayConfig,
+    ScorerConfig, ServeConfig, ServeEngine, ServeStats, ShardPool,
+};
+
+const WAIT: Duration = Duration::from_secs(60);
+
+fn toy_model(w: Vec<f64>) -> Model {
+    Model {
+        w,
+        loss: "hinge".into(),
+        c: 1.0,
+        solver: "test".into(),
+        dataset: "toy".into(),
+    }
+}
+
+#[test]
+fn hot_swap_mid_stream_never_blocks_or_drops() {
+    // A publisher hammers the registry with hot-swaps while requests
+    // stream through a 2-shard pool.  Every request must come back
+    // (none dropped), scorers must keep making progress throughout
+    // (never blocked by a publish), and each response must carry a
+    // coherent model version.
+    let d = 32;
+    let registry = Arc::new(ModelRegistry::new(toy_model(vec![1.0; d]), None));
+    let batcher = Arc::new(Batcher::new(8, Duration::from_micros(100)));
+    let stats = Arc::new(ServeStats::new(2));
+    let pool = ShardPool::start(
+        Arc::clone(&registry),
+        Arc::clone(&batcher),
+        Arc::clone(&stats),
+        &ScorerConfig { shards: 2, pin_threads: false },
+    );
+
+    let publishes = 50u64;
+    let stop = Arc::new(AtomicBool::new(false));
+    let publisher = {
+        let registry = Arc::clone(&registry);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            // Version e serves w = e+1 everywhere, so margin/(d·x) tells
+            // us which version scored a request.
+            for e in 1..=publishes {
+                registry.publish(toy_model(vec![(e + 1) as f64; d]), None);
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let n = 500usize;
+    let tickets: Vec<_> = (0..n)
+        .map(|i| batcher.submit(vec![(i % d) as u32], vec![1.0]))
+        .collect();
+    let mut received = 0usize;
+    for t in tickets {
+        let p = t.wait_timeout(WAIT).expect("request dropped under hot-swap");
+        // Internally consistent scoring: version epoch e has w ≡ e+1.
+        assert_eq!(
+            p.margin,
+            (p.model_epoch + 1) as f64,
+            "torn model read at epoch {}",
+            p.model_epoch
+        );
+        received += 1;
+    }
+    assert_eq!(received, n, "scorers dropped requests");
+    stop.store(true, Ordering::Release);
+    publisher.join().unwrap();
+    batcher.close();
+    pool.join();
+    assert_eq!(stats.total_requests(), n as u64);
+    assert_eq!(stats.latency.count(), n as u64);
+}
+
+#[test]
+fn microbatcher_coalesces_under_load() {
+    // Queue everything first, then start the pool: shards must drain in
+    // full batches, so the batch counter stays well under the request
+    // count.
+    let registry = Arc::new(ModelRegistry::new(toy_model(vec![1.0; 4]), None));
+    let batcher = Arc::new(Batcher::new(16, Duration::from_micros(50)));
+    let stats = Arc::new(ServeStats::new(1));
+    let n = 64usize;
+    let tickets: Vec<_> =
+        (0..n).map(|i| batcher.submit(vec![(i % 4) as u32], vec![1.0])).collect();
+    let pool = ShardPool::start(
+        registry,
+        Arc::clone(&batcher),
+        Arc::clone(&stats),
+        &ScorerConfig { shards: 1, pin_threads: false },
+    );
+    for t in tickets {
+        assert!(t.wait_timeout(WAIT).is_some(), "request dropped");
+    }
+    batcher.close();
+    pool.join();
+    let report = stats.report();
+    assert_eq!(report.requests, n as u64);
+    assert_eq!(report.batches, 4, "64 queued requests / batch cap 16");
+    assert!((report.avg_batch - 16.0).abs() < 1e-9);
+}
+
+#[test]
+fn online_trainer_publishes_while_engine_serves() {
+    // Continuous-training loop against a live ServeEngine: scoring
+    // traffic flows while the trainer ingests labeled rows and
+    // hot-swaps retrained models into the same registry.
+    let (tr, te, c) = data_registry::load("rcv1", 0.02).unwrap();
+    let cold = Model {
+        w: vec![0.0; tr.d()],
+        loss: "hinge".into(),
+        c,
+        solver: "cold".into(),
+        dataset: "rcv1".into(),
+    };
+    let engine = ServeEngine::start(
+        cold,
+        None,
+        &ServeConfig {
+            shards: 2,
+            max_batch: 32,
+            max_wait: Duration::from_micros(100),
+            pin_threads: false,
+        },
+    );
+    let trainer = Arc::new(OnlineTrainer::new(
+        Arc::clone(engine.registry()),
+        Hinge::new(c),
+        OnlineConfig {
+            epochs_per_round: 3,
+            max_window: tr.n(),
+            ..Default::default()
+        },
+    ));
+
+    // Stream labeled training rows in while traffic is being scored
+    // (raw_row unfolds the stored x = y·ẋ).
+    let mut tickets = Vec::new();
+    for i in 0..tr.n() {
+        let (idx, raw) = tr.raw_row(i);
+        trainer.ingest(idx, raw, tr.y[i]);
+        if i % 50 == 0 {
+            let (tidx, traw) = te.raw_row(i % te.n());
+            tickets.push(engine.submit(tidx, traw));
+        }
+    }
+    for _ in 0..3 {
+        assert!(trainer.train_round().is_some());
+    }
+    for t in tickets {
+        assert!(t.wait_timeout(WAIT).is_some(), "request dropped");
+    }
+    assert_eq!(engine.registry().epoch(), 3);
+    // The published model actually learned something.
+    let live = engine.registry().current();
+    let acc = eval::accuracy(&te, &live.model.w);
+    assert!(acc > 0.7, "online-trained model accuracy {acc}");
+    let report = engine.shutdown();
+    assert!(report.requests > 0);
+    assert!(report.p50_secs <= report.p95_secs);
+    assert!(report.p95_secs <= report.p99_secs);
+}
+
+#[test]
+fn replay_serves_heldout_split_with_hot_swaps() {
+    // The acceptance-criteria run: replay a held-out split through the
+    // batcher/scorer at 4 shards with mid-replay hot-swaps published by
+    // the online trainer; nothing may be dropped and the report must
+    // carry QPS + ordered latency percentiles.
+    let cfg = ReplayConfig {
+        dataset: "rcv1".into(),
+        scale: 0.05,
+        shards: 4,
+        train_epochs: 8,
+        train_threads: 2,
+        online_rounds: 3,
+        online_epochs: 1,
+        max_batch: 32,
+        max_wait: Duration::from_micros(100),
+        pin_threads: false,
+        seed: 42,
+    };
+    let (_, te, _) = data_registry::load(&cfg.dataset, cfg.scale).unwrap();
+    let rep = serve::replay(&cfg).unwrap();
+
+    // Never drops a request: every held-out row was scored exactly once.
+    assert_eq!(rep.requests, te.n() as u64);
+    assert_eq!(rep.throughput.requests, rep.requests);
+
+    // The online trainer hot-swapped mid-replay...
+    assert_eq!(rep.swaps, 3, "expected one publish per online round");
+    // ...and the tail of the stream was scored by the newest model
+    // (requests submitted after a publish must see it: registry reads
+    // are monotone across the submit→score handoff).
+    assert_eq!(rep.epoch_max, rep.swaps);
+    assert!(rep.epoch_min <= rep.epoch_max);
+
+    // Throughput/latency report is coherent.
+    assert!(rep.throughput.qps > 0.0);
+    assert!(rep.throughput.p50_secs <= rep.throughput.p95_secs);
+    assert!(rep.throughput.p95_secs <= rep.throughput.p99_secs);
+    assert!(rep.throughput.avg_batch >= 1.0);
+    assert!(rep.accuracy > 0.6, "served accuracy {}", rep.accuracy);
+}
+
+#[test]
+fn replay_scales_across_shard_counts() {
+    // The bench harness shape (1/2/4 shards) must hold its invariants
+    // at every width — same requests scored, nothing dropped.
+    for shards in [1usize, 2, 4] {
+        let cfg = ReplayConfig {
+            scale: 0.02,
+            shards,
+            train_epochs: 4,
+            online_rounds: 1,
+            online_epochs: 1,
+            ..Default::default()
+        };
+        let rep = serve::replay(&cfg).unwrap();
+        assert_eq!(rep.throughput.shards, shards);
+        assert_eq!(rep.throughput.requests, rep.requests);
+        assert_eq!(rep.swaps, 1);
+    }
+}
