@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 1,
         ..Default::default()
     };
-    println!("PASSCoDe quickstart — config {}", cfg.to_json().to_string());
+    println!("PASSCoDe quickstart — config {}", cfg.to_json());
 
     let out = driver::run(&cfg)?;
     println!("\n  epoch   time(s)       P(ŵ)          gap      test acc");

@@ -1,0 +1,109 @@
+//! §Net bench: end-to-end HTTP scoring throughput over loopback.
+//!
+//! Trains one model on the rcv1 analog, serves it on two routes, and
+//! drives `POST /v1/score` traffic through real sockets with the
+//! self-contained load generator at 1/2/4 server workers — QPS plus
+//! client-observed p50/p95/p99 end-to-end latency per width.
+//!
+//! This is the before/after instrument for network-path PRs (parser
+//! cost, keep-alive policy, worker pool shape, listener sharding).
+//!
+//! Run: `cargo bench --bench net_throughput`
+
+use passcode::coordinator::config::RunConfig;
+use passcode::coordinator::driver;
+use passcode::coordinator::metrics::TextTable;
+use passcode::data::registry as data_registry;
+use passcode::net::{
+    run_load, HttpClient, LoadConfig, Router, RoutesConfig, Server,
+    ServerConfig, SparseRow,
+};
+
+fn main() {
+    // ---- train once, save, and build a reusable two-route config ----
+    let scale = 0.05;
+    let cfg = RunConfig {
+        dataset: "rcv1".into(),
+        scale,
+        epochs: 8,
+        threads: 2,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let (model, _) = driver::train_model(&cfg).expect("train");
+    let dir = std::env::temp_dir().join("passcode_net_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.json");
+    model.save(&model_path).expect("save model");
+    let routes = RoutesConfig::from_json_text(&format!(
+        r#"{{"routes": [
+            {{"name": "a", "model": {path:?}, "shards": 2, "max_wait_us": 100}},
+            {{"name": "b", "model": {path:?}, "shards": 2, "max_wait_us": 100}}
+        ]}}"#,
+        path = model_path.to_str().unwrap(),
+    ))
+    .expect("routes config");
+
+    // Traffic: raw held-out rows, cycled by the load generator.
+    let (_, test, _) = data_registry::load("rcv1", scale).expect("load data");
+    let rows: Vec<SparseRow> =
+        (0..test.n().min(256)).map(|i| test.raw_row(i)).collect();
+
+    let load = LoadConfig { connections: 4, requests_per_conn: 500 };
+    println!(
+        "=== net throughput (rcv1 analog @ {scale}, {} rows cycled, \
+         {} conns x {} reqs, 2 routes x 2 shards) ===\n",
+        rows.len(),
+        load.connections,
+        load.requests_per_conn
+    );
+    let mut table = TextTable::new(&[
+        "workers", "requests", "errors", "qps", "p50_ms", "p95_ms",
+        "p99_ms", "srv_reqs",
+    ]);
+    for workers in [1usize, 2, 4] {
+        let server = Server::start(
+            Router::start(&routes).expect("router"),
+            &ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers,
+                ..Default::default()
+            },
+        )
+        .expect("server");
+        let addr = server.addr();
+        let report = run_load(addr, "a", &rows, &load).expect("load");
+
+        // Server-side cross-check via the admin plane.
+        let mut admin = HttpClient::new(addr);
+        let stats = admin
+            .get("/v1/stats")
+            .and_then(|r| r.ok())
+            .and_then(|r| r.json())
+            .expect("stats");
+        let srv_reqs = stats
+            .get("routes")
+            .and_then(|r| r.get("a"))
+            .and_then(|a| a.get("requests"))
+            .and_then(|n| n.as_usize())
+            .expect("stats.requests");
+
+        table.row(&[
+            workers.to_string(),
+            report.requests.to_string(),
+            report.errors.to_string(),
+            format!("{:.0}", report.qps),
+            format!("{:.3}", report.p50_secs * 1e3),
+            format!("{:.3}", report.p95_secs * 1e3),
+            format!("{:.3}", report.p99_secs * 1e3),
+            srv_reqs.to_string(),
+        ]);
+        server.shutdown();
+    }
+    println!("{}", table.render());
+    println!(
+        "(latency is client-observed end-to-end over loopback, so it \
+         includes connect/parse/dispatch/microbatch/score/serialize; \
+         srv_reqs is route a's own counter and must equal requests)"
+    );
+}

@@ -23,6 +23,10 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
         "replay",
         "replay a held-out split as traffic with mid-stream hot-swaps (--dataset, --shards)",
     ),
+    (
+        "listen",
+        "serve scoring traffic over HTTP (--routes cfg.json | --model|--dataset; --addr, --workers)",
+    ),
 ];
 
 /// Parsed command line.
@@ -94,6 +98,22 @@ impl Cli {
         self.opt(key).unwrap_or(default)
     }
 
+    /// Reject flags outside `allowed`, printing the offending flag plus
+    /// the full usage listing — a typo'd `--shard` must not be silently
+    /// ignored (nor bubble up as a bare anyhow error).
+    pub fn check_flags(&self, allowed: &[&str]) -> Result<()> {
+        for (k, _) in &self.options {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown flag --{k} for `{}`\n\n{}",
+                    self.command,
+                    Cli::usage()
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Parse `--key` as `T`, or `default` when absent.
     pub fn opt_parse<T: std::str::FromStr>(
         &self,
@@ -153,6 +173,16 @@ mod tests {
     fn later_options_win() {
         let c = Cli::parse(&argv("x --k 1 --k 2")).unwrap();
         assert_eq!(c.opt("k"), Some("2"));
+    }
+
+    #[test]
+    fn check_flags_rejects_unknown_with_usage() {
+        let c = Cli::parse(&argv("serve --model m.json --bogus 1")).unwrap();
+        assert!(c.check_flags(&["model", "bogus"]).is_ok());
+        let err = format!("{:#}", c.check_flags(&["model"]).unwrap_err());
+        assert!(err.contains("--bogus"), "{err}");
+        assert!(err.contains("serve"), "{err}");
+        assert!(err.contains("commands:"), "{err}");
     }
 
     #[test]

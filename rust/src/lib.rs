@@ -49,6 +49,37 @@
 //! replays a held-out split through the stack and reports QPS and
 //! p50/p95/p99 latency while the online trainer hot-swaps models
 //! mid-stream.
+//!
+//! HTTP serving ([`net`] — the network front end): `passcode listen`
+//! puts a std-only HTTP/1.1 server in front of one [`serve`] engine
+//! per route, with hot-swap publishes and stats on an admin plane:
+//!
+//! ```text
+//! passcode listen --routes routes.json --addr 127.0.0.1:8080 --workers 4
+//!
+//! # score one sparse row (single-route setups may omit ?route=)
+//! curl -s -X POST 'http://127.0.0.1:8080/v1/score?route=a' \
+//!      -d '{"idx": [0, 7], "vals": [0.5, -1.0]}'
+//! # batch rows, or LIBSVM lines (labels are scored for accuracy and
+//! # fed to the route's online trainer when one is attached)
+//! curl -s -X POST 'http://127.0.0.1:8080/v1/score?route=a' \
+//!      -d '{"rows": [{"idx": [0], "vals": [1.0]}, {"idx": [3], "vals": [2.0]}]}'
+//! curl -s -X POST 'http://127.0.0.1:8080/v1/score?route=a' \
+//!      --data-binary @heldout.svm
+//! # hot-swap a retrained model into route a; b is untouched
+//! curl -s -X POST http://127.0.0.1:8080/v1/models/a/publish \
+//!      -d '{"path": "retrained.json"}'
+//! # per-route QPS/latency plus registry depth (versions_alive, epoch)
+//! curl -s http://127.0.0.1:8080/v1/stats
+//! curl -s http://127.0.0.1:8080/healthz
+//! ```
+//!
+//! `routes.json` maps route/tenant names to independent engines —
+//! `{"routes": [{"name": "a", "model": "a.json", "shards": 2},
+//! {"name": "b", "dataset": "rcv1", "online": true}]}` — so A/B models
+//! and per-dataset models serve side by side in one process
+//! ([`net::router`]).  `benches/net_throughput.rs` measures the wire
+//! path end to end over loopback.
 
 #![warn(missing_docs)]
 
@@ -57,6 +88,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod loss;
+pub mod net;
 pub mod runtime;
 pub mod serve;
 pub mod simcore;

@@ -14,6 +14,8 @@
 //!                [--shards 4] [--batch 64] [--batch-wait-us 200]
 //! passcode replay [--dataset rcv1] [--scale 0.05] [--shards 4]
 //!                [--rounds 3] [--batch 64] [--batch-wait-us 200]
+//! passcode listen [--routes routes.json | --model m.json | --dataset rcv1]
+//!                [--addr 127.0.0.1:8080] [--workers 4] [--for-secs 0]
 //! ```
 
 use std::time::Duration;
@@ -25,6 +27,7 @@ use passcode::coordinator::{
 };
 use passcode::data::registry;
 use passcode::loss::Hinge;
+use passcode::net::{Router, RouteSpec, RoutesConfig, Server, ServerConfig};
 use passcode::runtime::{Engine, Evaluator};
 use passcode::serve::{self, ReplayConfig, ServeConfig, ServeEngine};
 use passcode::simcore;
@@ -49,8 +52,20 @@ fn real_main(args: &[String]) -> Result<()> {
         "predict" => cmd_predict(&cli),
         "serve" => cmd_serve(&cli),
         "replay" => cmd_replay(&cli),
+        "listen" => cmd_listen(&cli),
         other => bail!("unknown command {other:?}\n\n{}", Cli::usage()),
     }
+}
+
+/// Parse `--key`, attaching the usage listing on malformed values so a
+/// typo'd `--shards x` prints the offending flag plus the command list
+/// instead of a bare error bubble-up.
+fn flag<T: std::str::FromStr>(cli: &Cli, key: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    cli.opt_parse(key, default)
+        .map_err(|e| anyhow::anyhow!("{e:#}\n\n{}", Cli::usage()))
 }
 
 fn config_from_cli(cli: &Cli) -> Result<RunConfig> {
@@ -72,7 +87,7 @@ fn config_from_cli(cli: &Cli) -> Result<RunConfig> {
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
-    println!("config: {}", cfg.to_json().to_string());
+    println!("config: {}", cfg.to_json());
     let out = driver::run(&cfg)?;
     println!(
         "epochs={} updates={} init={:.3}s train={:.3}s",
@@ -213,29 +228,49 @@ fn cmd_predict(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// Shared flags → [`ServeConfig`].
+/// Shared flags → [`ServeConfig`] (malformed values carry the usage
+/// listing via [`flag`]).
 fn serve_config_from_cli(cli: &Cli) -> Result<ServeConfig> {
     Ok(ServeConfig {
-        shards: cli.opt_parse("shards", 4usize)?,
-        max_batch: cli.opt_parse("batch", 64usize)?,
-        max_wait: Duration::from_micros(cli.opt_parse("batch-wait-us", 200u64)?),
-        pin_threads: cli.opt_parse("pin-threads", false)?,
+        shards: flag(cli, "shards", 4usize)?,
+        max_batch: flag(cli, "batch", 64usize)?,
+        max_wait: Duration::from_micros(flag(cli, "batch-wait-us", 200u64)?),
+        pin_threads: flag(cli, "pin-threads", false)?,
     })
 }
+
+/// Flags `passcode serve` accepts (checked up front so typos fail loudly).
+const SERVE_FLAGS: &[&str] = &[
+    "model", "dataset", "scale", "epochs", "threads", "solver", "loss", "c",
+    "seed", "data", "shards", "batch", "batch-wait-us", "pin-threads",
+];
+
+/// Flags `passcode replay` accepts.
+const REPLAY_FLAGS: &[&str] = &[
+    "dataset", "scale", "shards", "epochs", "threads", "rounds",
+    "online-epochs", "batch", "batch-wait-us", "pin-threads", "seed",
+];
+
+/// Flags `passcode listen` accepts.
+const LISTEN_FLAGS: &[&str] = &[
+    "routes", "addr", "workers", "for-secs", "model", "dataset", "scale",
+    "epochs", "threads", "seed", "shards", "batch", "batch-wait-us",
+    "pin-threads",
+];
 
 /// `passcode serve` — stand up the online scoring stack around a model
 /// (loaded from `--model`, or trained fresh from `--dataset`) and stream
 /// scoring traffic through it from `--data <file.svm>` (or stdin), then
 /// report QPS + latency percentiles.
 fn cmd_serve(cli: &Cli) -> Result<()> {
+    cli.check_flags(SERVE_FLAGS)?;
     let (model, alpha) = match cli.opt("model") {
         Some(path) => (Model::load(path)?, None),
         None => {
             // Only the training-relevant flags feed the RunConfig here;
             // serve flags (--shards, --batch, ...) are not config keys.
-            let mut cfg = RunConfig::default();
-            cfg.eval_every = 0;
-            cfg.scale = 0.05;
+            let mut cfg =
+                RunConfig { eval_every: 0, scale: 0.05, ..Default::default() };
             for key in
                 ["dataset", "scale", "epochs", "threads", "solver", "loss",
                  "c", "seed"]
@@ -244,10 +279,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                     cfg.set(key, v).with_context(|| format!("--{key} {v}"))?;
                 }
             }
-            println!(
-                "no --model given; training one: {}",
-                cfg.to_json().to_string()
-            );
+            println!("no --model given; training one: {}", cfg.to_json());
             let (model, result) = driver::train_model(&cfg)?;
             (model, Some(result.alpha))
         }
@@ -301,19 +333,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
 /// scorer stack while the online trainer hot-swaps retrained models
 /// mid-stream; reports QPS and p50/p95/p99 latency.
 fn cmd_replay(cli: &Cli) -> Result<()> {
+    cli.check_flags(REPLAY_FLAGS)?;
     let scfg = serve_config_from_cli(cli)?;
     let cfg = ReplayConfig {
         dataset: cli.opt_or("dataset", "rcv1").to_string(),
-        scale: cli.opt_parse("scale", 0.05f64)?,
+        scale: flag(cli, "scale", 0.05f64)?,
         shards: scfg.shards,
-        train_epochs: cli.opt_parse("epochs", 10usize)?,
-        train_threads: cli.opt_parse("threads", 2usize)?,
-        online_rounds: cli.opt_parse("rounds", 3usize)?,
-        online_epochs: cli.opt_parse("online-epochs", 2usize)?,
+        train_epochs: flag(cli, "epochs", 10usize)?,
+        train_threads: flag(cli, "threads", 2usize)?,
+        online_rounds: flag(cli, "rounds", 3usize)?,
+        online_epochs: flag(cli, "online-epochs", 2usize)?,
         max_batch: scfg.max_batch,
         max_wait: scfg.max_wait,
         pin_threads: scfg.pin_threads,
-        seed: cli.opt_parse("seed", 42u64)?,
+        seed: flag(cli, "seed", 42u64)?,
     };
     println!(
         "replaying {}@{} through {} shards ({} online rounds)...",
@@ -321,6 +354,89 @@ fn cmd_replay(cli: &Cli) -> Result<()> {
     );
     let report = serve::replay(&cfg)?;
     print!("{}", report.render());
+    Ok(())
+}
+
+/// `passcode listen` — the HTTP front end: bring up one engine per
+/// configured route and serve `POST /v1/score` plus the admin plane
+/// (`/v1/stats`, `/v1/models/{route}/publish`, `/healthz`) until
+/// interrupted (or for `--for-secs` seconds, then report per route).
+fn cmd_listen(cli: &Cli) -> Result<()> {
+    cli.check_flags(LISTEN_FLAGS)?;
+    // Every flag parses before any training/binding work starts, so a
+    // malformed value fails in milliseconds, not after model bring-up.
+    let for_secs = flag(cli, "for-secs", 0u64)?;
+    let routes_cfg = match cli.opt("routes") {
+        Some(path) => {
+            // With a config file the single-route flags have no effect;
+            // reject them instead of silently ignoring them.
+            cli.check_flags(&["routes", "addr", "workers", "for-secs"])
+                .map_err(|_| {
+                    anyhow::anyhow!(
+                        "--routes provides the per-route settings; drop the \
+                         single-route flags (--model/--dataset/--shards/...)\
+                         \n\n{}",
+                        Cli::usage()
+                    )
+                })?;
+            RoutesConfig::from_file(path)?
+        }
+        None => {
+            // Single-route fallback: --model file, or train from
+            // --dataset (rcv1 analog by default) at startup.
+            let mut spec = RouteSpec {
+                scale: flag(cli, "scale", 0.05f64)?,
+                epochs: flag(cli, "epochs", 10usize)?,
+                threads: flag(cli, "threads", 2usize)?,
+                seed: flag(cli, "seed", 42u64)?,
+                serve: serve_config_from_cli(cli)?,
+                ..Default::default()
+            };
+            match (cli.opt("model"), cli.opt("dataset")) {
+                (Some(_), Some(_)) => bail!(
+                    "--model and --dataset are mutually exclusive (a route \
+                     serves a saved model or trains one, not both)\n\n{}",
+                    Cli::usage()
+                ),
+                (Some(m), None) => spec.model = Some(m.to_string()),
+                (None, ds) => {
+                    spec.dataset = Some(ds.unwrap_or("rcv1").to_string());
+                }
+            }
+            RoutesConfig { routes: vec![spec] }
+        }
+    };
+    let scfg = ServerConfig {
+        addr: cli.opt_or("addr", "127.0.0.1:8080").to_string(),
+        workers: flag(cli, "workers", 4usize)?,
+        ..Default::default()
+    };
+    println!(
+        "bringing up {} route(s): {}",
+        routes_cfg.routes.len(),
+        routes_cfg
+            .routes
+            .iter()
+            .map(|r| r.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let server = Server::start(Router::start(&routes_cfg)?, &scfg)?;
+    println!("listening on http://{}", server.addr());
+    println!(
+        "  POST /v1/score   POST /v1/models/{{route}}/publish   \
+         GET /v1/stats   GET /healthz"
+    );
+    if for_secs == 0 {
+        // Serve until the process is killed.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(for_secs));
+    for (name, report) in server.shutdown() {
+        println!("route {name}:\n{}", report.render());
+    }
     Ok(())
 }
 

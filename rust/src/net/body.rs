@@ -1,0 +1,169 @@
+//! Score-request body decoding: JSON (single or batch) and LIBSVM text.
+//!
+//! `POST /v1/score` accepts either encoding; the decoder sniffs the
+//! `Content-Type` first and falls back on the payload's first byte, so
+//! `curl -d '{"idx":[1],"vals":[2.0]}'` and piping a `.svm` file both
+//! work without ceremony.
+//!
+//! JSON forms (indices are 0-based, strictly increasing):
+//!
+//! ```json
+//! {"route": "a", "idx": [0, 7], "vals": [0.5, -1.0]}
+//! {"route": "a", "rows": [{"idx": [0], "vals": [1.0]},
+//!                          {"idx": [2, 3], "vals": [1.0, 2.0]}]}
+//! ```
+//!
+//! LIBSVM form (1-based indices, one row per line, labels required by
+//! the format and carried through so callers can report accuracy):
+//!
+//! ```text
+//! +1 1:0.5 8:-1.0
+//! -1 3:1.0
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::libsvm;
+use crate::util::Json;
+
+/// One decoded sparse row: parallel `(indices, values)`.
+pub type SparseRow = (Vec<u32>, Vec<f64>);
+
+/// The decoded payload of a score request.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreBody {
+    /// Route/tenant name, when the body carries one (`"route"` field;
+    /// LIBSVM bodies rely on the `?route=` query parameter instead).
+    pub route: Option<String>,
+    /// Raw (unfolded) sparse rows to score.
+    pub rows: Vec<SparseRow>,
+    /// Ground-truth labels, when the encoding carries them (LIBSVM).
+    pub labels: Option<Vec<f64>>,
+}
+
+/// Decode one `POST /v1/score` body.
+pub fn decode_score_body(content_type: Option<&str>, body: &[u8]) -> Result<ScoreBody> {
+    ensure!(!body.is_empty(), "empty request body");
+    let looks_json = match content_type {
+        Some(ct) if ct.contains("json") => true,
+        Some(ct) if ct.starts_with("text/") => false,
+        _ => body.iter().find(|b| !b.is_ascii_whitespace()) == Some(&b'{'),
+    };
+    if looks_json {
+        decode_json(body)
+    } else {
+        decode_libsvm(body)
+    }
+}
+
+fn decode_json(body: &[u8]) -> Result<ScoreBody> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let v = Json::parse(text).context("malformed JSON body")?;
+    let route = match v.opt("route") {
+        Some(r) => Some(r.as_str().context("\"route\" must be a string")?.to_string()),
+        None => None,
+    };
+    let rows = match v.opt("rows") {
+        Some(rows) => rows
+            .as_arr()
+            .context("\"rows\" must be an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| decode_json_row(r).with_context(|| format!("rows[{i}]")))
+            .collect::<Result<Vec<SparseRow>>>()?,
+        None => vec![decode_json_row(&v)?],
+    };
+    ensure!(!rows.is_empty(), "\"rows\" is empty");
+    Ok(ScoreBody { route, rows, labels: None })
+}
+
+fn decode_json_row(v: &Json) -> Result<SparseRow> {
+    let idx: Vec<u32> = v
+        .get("idx")?
+        .as_arr()?
+        .iter()
+        .map(|j| {
+            let u = j.as_usize()?;
+            ensure!(u <= u32::MAX as usize, "index {u} exceeds u32");
+            Ok(u as u32)
+        })
+        .collect::<Result<_>>()?;
+    let vals: Vec<f64> = v
+        .get("vals")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_f64())
+        .collect::<Result<_>>()?;
+    ensure!(
+        idx.len() == vals.len(),
+        "idx has {} entries, vals has {}",
+        idx.len(),
+        vals.len()
+    );
+    if !idx.windows(2).all(|w| w[0] < w[1]) {
+        bail!("indices must be strictly increasing");
+    }
+    if let Some(bad) = vals.iter().find(|x| !x.is_finite()) {
+        bail!("non-finite value {bad}");
+    }
+    Ok((idx, vals))
+}
+
+fn decode_libsvm(body: &[u8]) -> Result<ScoreBody> {
+    // Reuse the dataset reader for validation (1-based, sorted, well
+    // formed); `raw_row` un-folds the stored x = y·ẋ back to features.
+    let ds = libsvm::parse_reader(body, "http", 0).context("malformed LIBSVM body")?;
+    ensure!(ds.n() > 0, "LIBSVM body has no rows");
+    let rows = (0..ds.n()).map(|i| ds.raw_row(i)).collect();
+    Ok(ScoreBody { route: None, rows, labels: Some(ds.y.clone()) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_json_row() {
+        let b = decode_score_body(
+            Some("application/json"),
+            br#"{"route": "a", "idx": [0, 7], "vals": [0.5, -1.0]}"#,
+        )
+        .unwrap();
+        assert_eq!(b.route.as_deref(), Some("a"));
+        assert_eq!(b.rows, vec![(vec![0, 7], vec![0.5, -1.0])]);
+        assert!(b.labels.is_none());
+    }
+
+    #[test]
+    fn batch_json_rows() {
+        let b = decode_score_body(
+            None, // sniffed from the leading '{'
+            br#"{"rows": [{"idx": [0], "vals": [1.0]}, {"idx": [2, 3], "vals": [1.0, 2.0]}]}"#,
+        )
+        .unwrap();
+        assert!(b.route.is_none());
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[1], (vec![2, 3], vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn libsvm_rows_carry_labels() {
+        let b = decode_score_body(Some("text/plain"), b"+1 1:0.5 8:-1.0\n-1 3:1.0\n").unwrap();
+        assert_eq!(b.rows.len(), 2);
+        // 1-based LIBSVM index 1 -> feature 0; raw values are unfolded.
+        assert_eq!(b.rows[0], (vec![0, 7], vec![0.5, -1.0]));
+        assert_eq!(b.rows[1], (vec![2], vec![1.0]));
+        assert_eq!(b.labels, Some(vec![1.0, -1.0]));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode_score_body(None, b"").is_err());
+        assert!(decode_score_body(None, b"{").is_err());
+        assert!(decode_score_body(None, br#"{"idx": [0], "vals": [1.0, 2.0]}"#).is_err());
+        assert!(decode_score_body(None, br#"{"idx": [3, 1], "vals": [1.0, 2.0]}"#).is_err());
+        assert!(decode_score_body(None, br#"{"rows": []}"#).is_err());
+        assert!(decode_score_body(Some("text/plain"), b"+1 0:1.0\n").is_err());
+        assert!(decode_score_body(Some("text/plain"), b"\n# nothing\n").is_err());
+    }
+}

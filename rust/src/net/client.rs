@@ -1,0 +1,347 @@
+//! Self-contained HTTP/1.1 client and load generator for the `net`
+//! front end — what `benches/net_throughput.rs` and the integration
+//! tests drive traffic with (no curl in the offline image).
+//!
+//! [`HttpClient`] keeps one keep-alive connection; [`run_load`] spawns
+//! a fleet of them and reports end-to-end QPS + latency percentiles
+//! through the same [`LatencyHistogram`] the server side uses.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::serve::LatencyHistogram;
+use crate::util::Json;
+
+use super::body::SparseRow;
+
+/// Marker error: the request failed in a way consistent with a stale
+/// keep-alive connection — the send itself failed, or the peer closed
+/// before a single response byte.  Retrying on a *reused* connection
+/// is then almost certainly safe (the typical cause is the server
+/// idle-closing the socket before this request arrived); any failure
+/// after response bytes started flowing is never retried.
+#[derive(Debug)]
+struct StaleConn;
+
+impl std::fmt::Display for StaleConn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("connection failed before any response byte")
+    }
+}
+
+impl std::error::Error for StaleConn {}
+
+/// A decoded client-side response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    /// HTTP status code.
+    pub status: u16,
+    /// Raw body bytes.
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        Json::parse(std::str::from_utf8(&self.body).context("non-UTF-8 body")?)
+    }
+
+    /// Bail unless the status is 2xx (error message carries the body).
+    pub fn ok(self) -> Result<ClientResponse> {
+        ensure!(
+            (200..300).contains(&self.status),
+            "HTTP {}: {}",
+            self.status,
+            String::from_utf8_lossy(&self.body)
+        );
+        Ok(self)
+    }
+}
+
+/// One keep-alive HTTP/1.1 connection to the server.
+#[derive(Debug)]
+pub struct HttpClient {
+    addr: SocketAddr,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl HttpClient {
+    /// Connect to `addr` (lazily — the socket opens on first request).
+    pub fn new(addr: SocketAddr) -> HttpClient {
+        HttpClient { addr, conn: None }
+    }
+
+    fn connect(&mut self) -> Result<&mut BufReader<TcpStream>> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect(self.addr)
+                .with_context(|| format!("connect {}", self.addr))?;
+            stream.set_nodelay(true).ok();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(60)))
+                .ok();
+            self.conn = Some(BufReader::new(stream));
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// Issue one request on the keep-alive connection.
+    ///
+    /// Retries exactly once, and only when a *reused* connection
+    /// failed before any response byte arrived (see [`StaleConn`]) —
+    /// the overwhelmingly likely cause is the server idle-closing the
+    /// socket between our requests, before it ever saw this one.
+    /// Failures on fresh connections, or after response bytes started
+    /// flowing, propagate: retrying those risks duplicating a
+    /// non-idempotent POST the server may already have processed.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<ClientResponse> {
+        let reused = self.conn.is_some();
+        match self.request_once(method, path, content_type, body) {
+            Err(e) if reused && e.downcast_ref::<StaleConn>().is_some() => {
+                self.conn = None;
+                self.request_once(method, path, content_type, body)
+            }
+            other => other,
+        }
+    }
+
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<ClientResponse> {
+        let conn = self.connect()?;
+        // One write_all for the whole request: per-fragment writes on a
+        // TCP_NODELAY socket would emit a packet per fragment.
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: passcode\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let mut wire = Vec::with_capacity(head.len() + body.len());
+        wire.extend_from_slice(head.as_bytes());
+        wire.extend_from_slice(body);
+        let sent: std::io::Result<()> = {
+            let stream = conn.get_mut();
+            stream.write_all(&wire).and_then(|()| stream.flush())
+        };
+        if let Err(e) = sent {
+            self.conn = None;
+            return Err(anyhow::Error::new(StaleConn)
+                .context(format!("send {method} {path}: {e}")));
+        }
+        let resp = read_response(conn);
+        if resp.is_err() {
+            self.conn = None;
+        }
+        resp
+    }
+
+    /// `GET path` convenience.
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, "text/plain", b"")
+    }
+
+    /// `POST /v1/score` of one sparse row against `route`.
+    pub fn score(&mut self, route: &str, row: &SparseRow) -> Result<ClientResponse> {
+        self.request(
+            "POST",
+            &format!("/v1/score?route={route}"),
+            "application/json",
+            score_row_json(row).as_bytes(),
+        )
+    }
+}
+
+/// Serialize one row as a single-row score body.
+pub fn score_row_json((idx, vals): &SparseRow) -> String {
+    Json::obj(vec![
+        (
+            "idx",
+            Json::Arr(idx.iter().map(|&j| Json::num(j as f64)).collect()),
+        ),
+        ("vals", Json::arr_f64(vals)),
+    ])
+    .to_string()
+}
+
+fn read_response<R: BufRead>(r: &mut R) -> Result<ClientResponse> {
+    let mut status_line = String::new();
+    match r.read_line(&mut status_line) {
+        Ok(0) => {
+            return Err(anyhow::Error::new(StaleConn)
+                .context("connection closed before status line"))
+        }
+        Ok(_) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+            ) =>
+        {
+            return Err(anyhow::Error::new(StaleConn)
+                .context(format!("read status line: {e}")))
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let mut parts = status_line.split_ascii_whitespace();
+    let version = parts.next().context("empty status line")?;
+    ensure!(version.starts_with("HTTP/1."), "not HTTP: {status_line:?}");
+    let status: u16 = parts
+        .next()
+        .context("status line missing code")?
+        .parse()
+        .context("bad status code")?;
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        ensure!(r.read_line(&mut line)? > 0, "connection closed in headers");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad Content-Length")?;
+            }
+        } else {
+            bail!("malformed response header {line:?}");
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("connection closed mid-body")?;
+    Ok(ClientResponse { status, body })
+}
+
+/// Load-generator shape.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Requests each connection issues.
+    pub requests_per_conn: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self { connections: 4, requests_per_conn: 250 }
+    }
+}
+
+/// What a load run measured (client-side, end to end over loopback).
+#[derive(Debug, Clone, Copy)]
+pub struct LoadReport {
+    /// Requests that completed with HTTP 200.
+    pub requests: u64,
+    /// Requests that failed (transport error or non-200).
+    pub errors: u64,
+    /// Wall-clock seconds for the whole run.
+    pub elapsed_secs: f64,
+    /// Completed requests per second.
+    pub qps: f64,
+    /// Median end-to-end latency (seconds).
+    pub p50_secs: f64,
+    /// 95th-percentile latency (seconds).
+    pub p95_secs: f64,
+    /// 99th-percentile latency (seconds).
+    pub p99_secs: f64,
+}
+
+/// Hammer `POST /v1/score` on `route` with `rows` (cycled) from
+/// `cfg.connections` concurrent keep-alive connections; client-side
+/// QPS and latency percentiles.
+pub fn run_load(
+    addr: SocketAddr,
+    route: &str,
+    rows: &[SparseRow],
+    cfg: &LoadConfig,
+) -> Result<LoadReport> {
+    ensure!(!rows.is_empty(), "no rows to send");
+    // Pre-serialize the request bodies once; the wire bytes are
+    // identical across connections.
+    let bodies: Arc<Vec<String>> =
+        Arc::new(rows.iter().map(score_row_json).collect());
+    let hist = Arc::new(LatencyHistogram::new());
+    let errors = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..cfg.connections.max(1) {
+            let bodies = Arc::clone(&bodies);
+            let hist = Arc::clone(&hist);
+            let errors = Arc::clone(&errors);
+            let path = format!("/v1/score?route={route}");
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                for i in 0..cfg.requests_per_conn {
+                    let body = &bodies[(t + i) % bodies.len()];
+                    let sent = Instant::now();
+                    match client.request(
+                        "POST",
+                        &path,
+                        "application/json",
+                        body.as_bytes(),
+                    ) {
+                        Ok(r) if r.status == 200 => hist.record(sent.elapsed()),
+                        _ => {
+                            errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = started.elapsed().as_secs_f64();
+    let requests = hist.count();
+    Ok(LoadReport {
+        requests,
+        errors: errors.load(std::sync::atomic::Ordering::Relaxed),
+        elapsed_secs: elapsed,
+        qps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+        p50_secs: hist.quantile_secs(0.50),
+        p95_secs: hist.quantile_secs(0.95),
+        p99_secs: hist.quantile_secs(0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_row_json_shape() {
+        let s = score_row_json(&(vec![0, 7], vec![0.5, -1.0]));
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("idx").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.get("vals").unwrap().as_arr().unwrap()[1].as_f64().unwrap(),
+            -1.0
+        );
+    }
+
+    #[test]
+    fn read_response_parses_and_rejects() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Type: x\r\nContent-Length: 2\r\n\r\nhi";
+        let r = read_response(&mut BufReader::new(&raw[..])).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, b"hi");
+        assert!(r.clone().ok().is_ok());
+        let err = ClientResponse { status: 500, body: b"boom".to_vec() };
+        assert!(err.ok().is_err());
+
+        assert!(read_response(&mut BufReader::new(&b""[..])).is_err());
+        assert!(read_response(&mut BufReader::new(&b"garbage\r\n\r\n"[..])).is_err());
+    }
+}

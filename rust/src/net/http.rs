@@ -1,0 +1,493 @@
+//! Minimal HTTP/1.1 wire protocol: request parsing and response
+//! serialization over any `Read`/`Write` pair (no new dependencies —
+//! the offline image vendors no hyper/tiny_http).
+//!
+//! Covers exactly what the `net` front end needs: request line +
+//! headers + `Content-Length` bodies, keep-alive semantics
+//! (HTTP/1.1 persistent by default, `Connection: close` honored),
+//! and bounded sizes so a misbehaving client cannot balloon memory.
+//! Chunked transfer encoding is intentionally rejected (413/501-style
+//! errors) rather than half-implemented.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufRead, Read as _, Write};
+use std::time::{Duration, Instant};
+
+use crate::util::Json;
+
+/// Hard cap on a single header line (start line included).
+const MAX_LINE: usize = 8 * 1024;
+/// Hard cap on header count per request.
+const MAX_HEADERS: usize = 64;
+
+/// Marker error: the connection hit its read timeout while completely
+/// idle at a request boundary (no bytes of a next request consumed).
+/// The caller may safely keep waiting on the same connection; any
+/// other timeout means a request was abandoned mid-wire and the
+/// connection must be closed (resuming would desynchronize parsing).
+#[derive(Debug)]
+pub struct IdleTimeout;
+
+impl std::fmt::Display for IdleTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("idle read timeout at request boundary")
+    }
+}
+
+impl std::error::Error for IdleTimeout {}
+
+/// Marker error: a request body exceeded the configured cap (the
+/// server answers `413 Payload Too Large`, not a generic 400).
+#[derive(Debug)]
+pub struct PayloadTooLarge;
+
+impl std::fmt::Display for PayloadTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("payload exceeds the configured cap")
+    }
+}
+
+impl std::error::Error for PayloadTooLarge {}
+
+/// Marker error: the client stalled past the request deadline after
+/// the request had started (the server answers `408 Request Timeout`).
+#[derive(Debug)]
+pub struct RequestTimeout;
+
+impl std::fmt::Display for RequestTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("request deadline exceeded")
+    }
+}
+
+impl std::error::Error for RequestTimeout {}
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Upper-case method token (`GET`, `POST`, ...).
+    pub method: String,
+    /// Decoded path without the query string (`/v1/score`).
+    pub path: String,
+    /// `key=value` pairs from the query string, in order.
+    pub query: Vec<(String, String)>,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+    /// True for an `HTTP/1.0` request (keep-alive must be explicit).
+    pub http10: bool,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter `name`, if present.
+    pub fn query(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after the response:
+    /// HTTP/1.1 defaults to keep-alive unless the client sent
+    /// `Connection: close`; HTTP/1.0 defaults to close unless the
+    /// client sent `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection");
+        if self.http10 {
+            conn.map(|v| v.eq_ignore_ascii_case("keep-alive"))
+                .unwrap_or(false)
+        } else {
+            !conn
+                .map(|v| v.eq_ignore_ascii_case("close"))
+                .unwrap_or(false)
+        }
+    }
+}
+
+/// Whether an I/O error is a socket read-timeout expiry.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one CRLF- (or LF-) terminated line, bounded by [`MAX_LINE`].
+///
+/// The socket's short read timeout is the caller's poll point, not a
+/// hard per-byte budget: once a request has started (`deadline` is
+/// set), timeouts are retried until the request deadline so a slow
+/// client (TCP retransmit, `Expect: 100-continue` pause) is not 400'd.
+/// A timeout *before* any byte of the request (`deadline` still
+/// `None`) surfaces as [`IdleTimeout`] — the connection is idle at a
+/// request boundary and the caller may safely keep waiting.  The
+/// first consumed byte arms `deadline`.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    deadline: &mut Option<Instant>,
+    timeout: Duration,
+) -> Result<Option<String>> {
+    let mut buf = Vec::with_capacity(80);
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                // EOF: clean only if nothing was read yet.
+                if buf.is_empty() && deadline.is_none() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-line");
+            }
+            Ok(_) => {
+                if deadline.is_none() {
+                    *deadline = Some(Instant::now() + timeout);
+                }
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return Ok(Some(String::from_utf8(buf)?));
+                }
+                buf.push(byte[0]);
+                ensure!(buf.len() <= MAX_LINE, "header line exceeds {MAX_LINE} bytes");
+            }
+            Err(e) if is_timeout(&e) => match *deadline {
+                None => return Err(anyhow::Error::new(IdleTimeout)),
+                Some(d) if Instant::now() < d => continue,
+                Some(_) => {
+                    return Err(anyhow::Error::new(RequestTimeout)
+                        .context("request timed out mid-line"))
+                }
+            },
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// `read_exact` that rides out read timeouts until `deadline`.
+fn read_body<R: BufRead>(
+    r: &mut R,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => bail!("connection closed mid-body"),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow::Error::new(RequestTimeout)
+                        .context("request timed out mid-body"));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Split `path?query` and parse the query string (no percent-decoding:
+/// route names and numeric parameters never need it).
+fn parse_target(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect();
+            (path.to_string(), query)
+        }
+    }
+}
+
+/// Read one request off the connection, answering
+/// `Expect: 100-continue` on `w` before the body so clients like curl
+/// do not stall waiting for the interim response.
+///
+/// Returns `Ok(None)` on clean EOF before any bytes (the keep-alive
+/// peer hung up between requests); [`IdleTimeout`] on a read timeout
+/// at the request boundary; errors on malformed, oversized, or
+/// mid-request-stalled input (budget: `timeout` from the request's
+/// first byte) — the caller answers with a 4xx and closes.
+pub fn read_request<R: BufRead, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    max_body: usize,
+    timeout: Duration,
+) -> Result<Option<Request>> {
+    let mut deadline: Option<Instant> = None;
+    let start = match read_line(r, &mut deadline, timeout)? {
+        None => return Ok(None),
+        Some(line) => line,
+    };
+    let mut parts = start.split_ascii_whitespace();
+    let method = parts
+        .next()
+        .context("empty request line")?
+        .to_ascii_uppercase();
+    let target = parts.next().context("request line missing target")?;
+    let version = parts.next().context("request line missing version")?;
+    ensure!(
+        version == "HTTP/1.1" || version == "HTTP/1.0",
+        "unsupported version {version:?}"
+    );
+    let (path, query) = parse_target(target);
+    let http10 = version == "HTTP/1.0";
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, &mut deadline, timeout)?
+            .context("connection closed in headers")?;
+        if line.is_empty() {
+            break;
+        }
+        ensure!(headers.len() < MAX_HEADERS, "too many headers");
+        let (k, v) = line
+            .split_once(':')
+            .with_context(|| format!("malformed header {line:?}"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let mut req =
+        Request { method, path, query, headers, body: Vec::new(), http10 };
+    if let Some(te) = req.header("transfer-encoding") {
+        bail!("transfer-encoding {te:?} not supported (use Content-Length)");
+    }
+    if let Some(len) = req.header("content-length") {
+        let len: usize = len
+            .parse()
+            .with_context(|| format!("bad Content-Length {len:?}"))?;
+        if len > max_body {
+            return Err(anyhow::Error::new(PayloadTooLarge).context(
+                format!("body of {len} bytes exceeds cap {max_body}"),
+            ));
+        }
+        if req
+            .header("expect")
+            .map(|v| v.eq_ignore_ascii_case("100-continue"))
+            .unwrap_or(false)
+        {
+            // The client is holding the body back until we nod.
+            w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .and_then(|()| w.flush())
+                .context("write 100 Continue")?;
+        }
+        let mut body = vec![0u8; len];
+        let d = deadline.unwrap_or_else(|| Instant::now() + timeout);
+        read_body(r, &mut body, d)?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// One HTTP response to serialize.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code (200, 404, ...).
+    pub status: u16,
+    /// `Content-Type` of `body`.
+    pub content_type: &'static str,
+    /// Response payload.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    /// A plain-text response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// A JSON error envelope (`{"error": msg}`).
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Standard reason phrase for the status code.
+    pub fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize onto the wire.  `keep_alive` picks the `Connection`
+    /// header the server advertises back.  The whole response is
+    /// assembled first and sent as one `write_all` — per-fragment
+    /// writes on a `TCP_NODELAY` socket would cost a syscall (and a
+    /// tiny packet) each on the hot scoring path.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        let mut wire = Vec::with_capacity(head.len() + self.body.len());
+        wire.extend_from_slice(head.as_bytes());
+        wire.extend_from_slice(&self.body);
+        w.write_all(&wire)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Option<Request>> {
+        read_request(
+            &mut BufReader::new(raw.as_bytes()),
+            &mut Vec::new(),
+            1024,
+            Duration::from_secs(5),
+        )
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /v1/stats?route=a&verbose HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/stats");
+        assert_eq!(r.query("route"), Some("a"));
+        assert_eq!(r.query("verbose"), Some(""));
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.keep_alive());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body_and_close() {
+        let r = parse(
+            "POST /v1/score HTTP/1.1\r\nContent-Length: 5\r\nConnection: close\r\n\r\nhello",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"hello");
+        assert!(!r.keep_alive());
+    }
+
+    #[test]
+    fn expect_100_continue_is_answered_before_body() {
+        let raw = "POST /v1/score HTTP/1.1\r\nExpect: 100-continue\r\n\
+                   Content-Length: 5\r\n\r\nhello";
+        let mut interim = Vec::new();
+        let req = read_request(
+            &mut BufReader::new(raw.as_bytes()),
+            &mut interim,
+            1024,
+            Duration::from_secs(5),
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"hello");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // Without the Expect header nothing interim is written.
+        let mut silent = Vec::new();
+        read_request(
+            &mut BufReader::new(
+                "POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nok".as_bytes(),
+            ),
+            &mut silent,
+            1024,
+            Duration::from_secs(5),
+        )
+        .unwrap()
+        .unwrap();
+        assert!(silent.is_empty());
+    }
+
+    #[test]
+    fn http10_defaults_to_close_unless_explicit() {
+        let r = parse("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(r.http10);
+        assert!(!r.keep_alive(), "HTTP/1.0 default is close");
+        let r = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive());
+        let r = parse("GET / HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(!r.http10);
+        assert!(r.keep_alive(), "HTTP/1.1 default is keep-alive");
+    }
+
+    #[test]
+    fn bare_lf_lines_are_tolerated() {
+        let r = parse("GET / HTTP/1.1\nHost: y\n\n").unwrap().unwrap();
+        assert_eq!(r.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn clean_eof_is_none_midstream_is_error() {
+        assert!(parse("").unwrap().is_none());
+        assert!(parse("GET / HTTP/1.1\r\nHost").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(parse("NOT-HTTP\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/2\r\n\r\n").is_err());
+        let too_big =
+            parse("POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n").unwrap_err();
+        assert!(
+            too_big.downcast_ref::<PayloadTooLarge>().is_some(),
+            "oversize must carry the 413 marker: {too_big:#}"
+        );
+        assert!(parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn response_round_trips_on_the_wire() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]));
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive"));
+        assert!(text.ends_with("{\"ok\":true}"));
+        let err = Response::error(404, "nope");
+        assert_eq!(err.reason(), "Not Found");
+    }
+}

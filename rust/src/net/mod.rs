@@ -1,0 +1,61 @@
+//! Network front end: a std-only HTTP/1.1 server with multi-model
+//! routing over [`serve::ServeEngine`](crate::serve::ServeEngine).
+//!
+//! PR 2 made the PASSCoDe solver an in-process scoring engine; this
+//! subsystem puts a real socket in front of it so traffic can enter
+//! over the network — the ROADMAP's "heavy traffic from millions of
+//! users" north star needs a listener, not a replay harness.  No new
+//! dependencies: the protocol layer is hand-rolled on
+//! `std::net::TcpListener`, matching the repo's no-serde/no-hyper
+//! discipline.
+//!
+//! * [`http`] — minimal HTTP/1.1 request parsing / response writing
+//!   (keep-alive, `Content-Length` bodies, bounded sizes).
+//! * [`body`] — `POST /v1/score` body decoding: JSON (single or batch
+//!   sparse rows) and LIBSVM text.
+//! * [`router`] — route/tenant names → independent
+//!   [`ServeEngine`](crate::serve::ServeEngine)s (each with its own
+//!   registry and optional online trainer), built from a multi-model
+//!   JSON config.
+//! * [`server`] — the accept loop + bounded worker pool, request
+//!   dispatch, and the admin plane (`/v1/models/{route}/publish`,
+//!   `/v1/stats`, `/healthz`).
+//! * [`client`] — keep-alive HTTP client + load generator
+//!   (`benches/net_throughput.rs`).
+//!
+//! Serving many independently trained models side by side mirrors the
+//! multi-worker decomposition in Hybrid-DCA (Pal et al., 2016); each
+//! route's optional online trainer keeps running the racy
+//! PASSCoDe-Wild updates whose backward error Theorem 3 bounds, and a
+//! publish on one route can never perturb another (isolated
+//! registries, queues, and shard pools).
+//!
+//! ```no_run
+//! use passcode::net::{Router, RoutesConfig, Server, ServerConfig};
+//!
+//! let routes = RoutesConfig::from_file("routes.json").unwrap();
+//! let server = Server::start(
+//!     Router::start(&routes).unwrap(),
+//!     &ServerConfig { addr: "127.0.0.1:8080".into(), ..Default::default() },
+//! )
+//! .unwrap();
+//! println!("listening on {}", server.addr());
+//! // ... later:
+//! for (route, report) in server.shutdown() {
+//!     println!("{route}: {}", report.render());
+//! }
+//! ```
+
+pub mod body;
+pub mod client;
+pub mod http;
+pub mod router;
+pub mod server;
+
+pub use body::{decode_score_body, ScoreBody, SparseRow};
+pub use client::{run_load, ClientResponse, HttpClient, LoadConfig, LoadReport};
+pub use http::{
+    IdleTimeout, PayloadTooLarge, Request, RequestTimeout, Response,
+};
+pub use router::{Route, Router, RouteSpec, RoutesConfig};
+pub use server::{dispatch, Server, ServerConfig};

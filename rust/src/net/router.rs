@@ -1,0 +1,589 @@
+//! Multi-model routing: route/tenant names mapped to independent
+//! [`ServeEngine`] instances, each with its own
+//! [`ModelRegistry`](crate::serve::ModelRegistry) and (optionally) a
+//! continuously-running [`OnlineTrainer`].
+//!
+//! One route = one isolated serving universe: its own registry epochs,
+//! its own microbatch queue, its own scorer shards, its own stats.
+//! A hot-swap publish on route A can therefore never perturb route B —
+//! the per-route isolation the Hybrid-DCA decomposition suggests for
+//! serving many independently trained models side by side.
+//!
+//! Routes come from a JSON config file ([`RoutesConfig`]):
+//!
+//! ```json
+//! {"routes": [
+//!   {"name": "a", "model": "a-model.json", "shards": 2},
+//!   {"name": "b", "dataset": "rcv1", "scale": 0.05, "epochs": 10,
+//!    "online": true, "online_min_rows": 256}
+//! ]}
+//! ```
+//!
+//! A route serves either a saved model file (`"model"`) or a model
+//! trained at startup from a registry dataset (`"dataset"`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::driver;
+use crate::coordinator::model_io::Model;
+use crate::loss::Hinge;
+use crate::serve::{
+    OnlineConfig, OnlineTrainer, Prediction, ServeConfig, ServeEngine,
+    ThroughputReport,
+};
+use crate::util::Json;
+
+use super::body::SparseRow;
+
+/// Configuration of one route (see module docs for the JSON shape).
+#[derive(Debug, Clone)]
+pub struct RouteSpec {
+    /// Route name (the `route` selector in requests); `[A-Za-z0-9_-]+`.
+    pub name: String,
+    /// Path to a saved model JSON (mutually exclusive with `dataset`).
+    pub model: Option<String>,
+    /// Registry dataset to train a fresh model from at startup.
+    pub dataset: Option<String>,
+    /// Dataset scale factor for startup training.
+    pub scale: f64,
+    /// Epochs for startup training.
+    pub epochs: usize,
+    /// Solver threads for startup/online training.
+    pub threads: usize,
+    /// Scoring engine shape for this route.
+    pub serve: ServeConfig,
+    /// Attach a continuous online trainer (requires hinge loss).
+    pub online: bool,
+    /// Wild epochs per online round.
+    pub online_epochs: usize,
+    /// Sliding-window capacity of the online trainer.
+    pub online_window: usize,
+    /// Buffered rows before the background loop runs a round.
+    pub online_min_rows: usize,
+    /// RNG seed for training on this route.
+    pub seed: u64,
+}
+
+impl Default for RouteSpec {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            model: None,
+            dataset: None,
+            scale: 0.05,
+            epochs: 10,
+            threads: 2,
+            serve: ServeConfig::default(),
+            online: false,
+            online_epochs: 2,
+            online_window: 4096,
+            online_min_rows: 256,
+            seed: 42,
+        }
+    }
+}
+
+/// Keys a route object may carry — anything else is a typo and fails
+/// loudly, the same policy `Cli::check_flags` applies to CLI flags.
+const ROUTE_KEYS: &[&str] = &[
+    "name", "model", "dataset", "scale", "epochs", "threads", "shards",
+    "max_batch", "max_wait_us", "pin_threads", "online", "online_epochs",
+    "online_window", "online_min_rows", "seed",
+];
+
+impl RouteSpec {
+    /// Parse one route object from config JSON.
+    pub fn from_json(v: &Json) -> Result<RouteSpec> {
+        for key in v.as_obj()?.keys() {
+            ensure!(
+                ROUTE_KEYS.contains(&key.as_str()),
+                "unknown key {key:?} in route config (known: {})",
+                ROUTE_KEYS.join(", ")
+            );
+        }
+        let mut s = RouteSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            ..Default::default()
+        };
+        ensure!(
+            !s.name.is_empty()
+                && s.name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "route name {:?} must be [A-Za-z0-9_-]+",
+            s.name
+        );
+        if let Some(m) = v.opt("model") {
+            s.model = Some(m.as_str()?.to_string());
+        }
+        if let Some(d) = v.opt("dataset") {
+            s.dataset = Some(d.as_str()?.to_string());
+        }
+        ensure!(
+            s.model.is_some() != s.dataset.is_some(),
+            "route {:?} needs exactly one of \"model\" or \"dataset\"",
+            s.name
+        );
+        if let Some(x) = v.opt("scale") {
+            s.scale = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("epochs") {
+            s.epochs = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("threads") {
+            s.threads = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("shards") {
+            s.serve.shards = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("max_batch") {
+            s.serve.max_batch = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("max_wait_us") {
+            s.serve.max_wait = Duration::from_micros(x.as_usize()? as u64);
+        }
+        if let Some(x) = v.opt("pin_threads") {
+            s.serve.pin_threads = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("online") {
+            s.online = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("online_epochs") {
+            s.online_epochs = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("online_window") {
+            s.online_window = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("online_min_rows") {
+            s.online_min_rows = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("seed") {
+            s.seed = x.as_usize()? as u64;
+        }
+        ensure!(
+            !s.online || s.online_min_rows <= s.online_window,
+            "route {:?}: online_min_rows ({}) exceeds online_window ({}) — \
+             the window evicts down to {} rows, so the trainer would never \
+             reach its trigger",
+            s.name,
+            s.online_min_rows,
+            s.online_window,
+            s.online_window
+        );
+        Ok(s)
+    }
+}
+
+/// The multi-route config file: `{"routes": [...]}`.
+#[derive(Debug, Clone, Default)]
+pub struct RoutesConfig {
+    /// One spec per route.
+    pub routes: Vec<RouteSpec>,
+}
+
+impl RoutesConfig {
+    /// Parse from config JSON text.
+    pub fn from_json_text(text: &str) -> Result<RoutesConfig> {
+        let v = Json::parse(text).context("malformed routes config JSON")?;
+        let routes = v
+            .get("routes")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| RouteSpec::from_json(r).with_context(|| format!("routes[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!routes.is_empty(), "config declares no routes");
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &routes {
+            ensure!(seen.insert(r.name.clone()), "duplicate route {:?}", r.name);
+        }
+        Ok(RoutesConfig { routes })
+    }
+
+    /// Load from a config file on disk.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<RoutesConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read routes config {}", path.display()))?;
+        Self::from_json_text(&text)
+            .with_context(|| format!("routes config {}", path.display()))
+    }
+}
+
+/// One live route: a serving engine plus its optional online trainer
+/// (with the trainer's background round loop).
+pub struct Route {
+    /// Route name.
+    pub name: String,
+    engine: ServeEngine,
+    trainer: Option<Arc<OnlineTrainer<Hinge>>>,
+    trainer_stop: Arc<AtomicBool>,
+    trainer_loop: Option<JoinHandle<u64>>,
+}
+
+impl Route {
+    /// Bring a route up from its spec: load or train the model, start
+    /// the engine, and (when `online`) spawn the training loop.
+    pub fn start(spec: &RouteSpec) -> Result<Route> {
+        let (model, alpha) = match (&spec.model, &spec.dataset) {
+            (Some(path), _) => (
+                Model::load(path).with_context(|| format!("route {:?}", spec.name))?,
+                None,
+            ),
+            (None, Some(dataset)) => {
+                let cfg = RunConfig {
+                    dataset: dataset.clone(),
+                    scale: spec.scale,
+                    epochs: spec.epochs,
+                    threads: spec.threads,
+                    seed: spec.seed,
+                    eval_every: 0,
+                    ..Default::default()
+                };
+                let (model, result) = driver::train_model(&cfg)
+                    .with_context(|| format!("train route {:?}", spec.name))?;
+                (model, Some(result.alpha))
+            }
+            (None, None) => bail!("route {:?} has neither model nor dataset", spec.name),
+        };
+        if spec.online {
+            ensure!(
+                model.loss == "hinge",
+                "route {:?}: online training supports hinge loss, model has {:?}",
+                spec.name,
+                model.loss
+            );
+        }
+        let c = model.c;
+        let engine = ServeEngine::start(model, alpha, &spec.serve);
+        let trainer_stop = Arc::new(AtomicBool::new(false));
+        let (trainer, trainer_loop) = if spec.online {
+            let t = Arc::new(OnlineTrainer::new(
+                Arc::clone(engine.registry()),
+                Hinge::new(c),
+                OnlineConfig {
+                    epochs_per_round: spec.online_epochs,
+                    threads: spec.threads.max(1),
+                    max_window: spec.online_window,
+                    seed: spec.seed,
+                },
+            ));
+            let h = OnlineTrainer::spawn_loop(
+                Arc::clone(&t),
+                Arc::clone(&trainer_stop),
+                spec.online_min_rows,
+            );
+            (Some(t), Some(h))
+        } else {
+            (None, None)
+        };
+        Ok(Route { name: spec.name.clone(), engine, trainer, trainer_stop, trainer_loop })
+    }
+
+    /// Score a batch of raw sparse rows (submit all, then wait all, so
+    /// rows of one request coalesce into shared microbatches).
+    pub fn score(&self, rows: &[SparseRow]) -> Vec<Prediction> {
+        self.score_owned(rows.to_vec())
+    }
+
+    /// [`Route::score`] without the copy: rows move straight into the
+    /// microbatch queue (the HTTP handler's hot path — it owns the
+    /// decoded body, so cloning per row would be pure overhead).
+    pub fn score_owned(&self, rows: Vec<SparseRow>) -> Vec<Prediction> {
+        let tickets: Vec<_> = rows
+            .into_iter()
+            .map(|(idx, vals)| self.engine.submit(idx, vals))
+            .collect();
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+
+    /// Feed labeled rows to the route's online trainer.  Returns how
+    /// many rows were ingested (0 when the route has no trainer).
+    pub fn ingest(&self, rows: &[SparseRow], labels: &[f64]) -> usize {
+        match &self.trainer {
+            None => 0,
+            Some(t) => {
+                let n = rows.len().min(labels.len());
+                for ((idx, vals), &y) in rows.iter().zip(labels).take(n) {
+                    t.ingest(idx.clone(), vals.clone(), y);
+                }
+                n
+            }
+        }
+    }
+
+    /// Hot-swap a model file into this route's registry; returns the
+    /// new epoch.  The new model must match the served dimension —
+    /// publishing a mismatched model would silently zero-score live
+    /// features.
+    pub fn publish_from_file(&self, path: &str) -> Result<u64> {
+        let model = Model::load(path)?;
+        let current = self.engine.registry().current();
+        ensure!(
+            model.w.len() == current.model.w.len(),
+            "dimension mismatch: route serves d={}, file has d={}",
+            current.model.w.len(),
+            model.w.len()
+        );
+        Ok(self.engine.registry().publish(model, None))
+    }
+
+    /// The route's serving engine.
+    pub fn engine(&self) -> &ServeEngine {
+        &self.engine
+    }
+
+    /// Live report for this route (includes registry depth).
+    pub fn report(&self) -> ThroughputReport {
+        self.engine.report()
+    }
+
+    fn shutdown(mut self) -> ThroughputReport {
+        self.trainer_stop.store(true, Ordering::Release);
+        if let Some(h) = self.trainer_loop.take() {
+            let _ = h.join();
+        }
+        self.engine.shutdown()
+    }
+}
+
+impl std::fmt::Debug for Route {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Route({}, online={})",
+            self.name,
+            self.trainer.is_some()
+        )
+    }
+}
+
+/// The dispatch table: route name → live [`Route`].
+#[derive(Debug)]
+pub struct Router {
+    routes: BTreeMap<String, Route>,
+}
+
+impl Router {
+    /// Bring up every route in the config.
+    pub fn start(cfg: &RoutesConfig) -> Result<Router> {
+        ensure!(!cfg.routes.is_empty(), "config declares no routes");
+        let mut routes = BTreeMap::new();
+        for spec in &cfg.routes {
+            ensure!(
+                !routes.contains_key(&spec.name),
+                "duplicate route {:?}",
+                spec.name
+            );
+            routes.insert(spec.name.clone(), Route::start(spec)?);
+        }
+        Ok(Router { routes })
+    }
+
+    /// A single-route router around an already-built engine (the
+    /// `passcode listen --model` fast path and tests).
+    pub fn single(name: &str, engine: ServeEngine) -> Router {
+        let mut routes = BTreeMap::new();
+        routes.insert(
+            name.to_string(),
+            Route {
+                name: name.to_string(),
+                engine,
+                trainer: None,
+                trainer_stop: Arc::new(AtomicBool::new(false)),
+                trainer_loop: None,
+            },
+        );
+        Router { routes }
+    }
+
+    /// Look up a route by name.
+    pub fn route(&self, name: &str) -> Option<&Route> {
+        self.routes.get(name)
+    }
+
+    /// The sole route, when exactly one exists (lets single-tenant
+    /// clients omit the `route` selector).
+    pub fn sole_route(&self) -> Option<&Route> {
+        if self.routes.len() == 1 {
+            self.routes.values().next()
+        } else {
+            None
+        }
+    }
+
+    /// Route names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Number of routes.
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    /// Whether the router has no routes (never true post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    /// Per-route stats as JSON: `{"routes": {name: report...}}`.
+    pub fn stats_json(&self) -> Json {
+        let routes = self
+            .routes
+            .iter()
+            .map(|(name, r)| (name.clone(), r.report().to_json()))
+            .collect();
+        Json::obj(vec![("routes", Json::Obj(routes))])
+    }
+
+    /// Shut every route down; per-route final reports in name order.
+    pub fn shutdown(self) -> Vec<(String, ThroughputReport)> {
+        self.routes
+            .into_iter()
+            .map(|(name, r)| (name, r.shutdown()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model(tag: f64, d: usize) -> Model {
+        Model {
+            w: vec![tag; d],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "test".into(),
+            dataset: "toy".into(),
+        }
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("passcode_net_router").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn config_parses_and_validates() {
+        let cfg = RoutesConfig::from_json_text(
+            r#"{"routes": [
+                {"name": "a", "model": "a.json", "shards": 2, "max_batch": 16},
+                {"name": "b", "dataset": "rcv1", "online": true,
+                 "max_wait_us": 50, "online_min_rows": 10}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.routes.len(), 2);
+        assert_eq!(cfg.routes[0].serve.shards, 2);
+        assert_eq!(cfg.routes[0].serve.max_batch, 16);
+        assert_eq!(cfg.routes[1].serve.max_wait, Duration::from_micros(50));
+        assert!(cfg.routes[1].online);
+
+        for bad in [
+            r#"{"routes": []}"#,
+            r#"{"routes": [{"name": "a"}]}"#,
+            r#"{"routes": [{"name": "a", "model": "m", "dataset": "d"}]}"#,
+            r#"{"routes": [{"name": "a/b", "model": "m"}]}"#,
+            r#"{"routes": [{"name": "a", "model": "m"},
+                            {"name": "a", "model": "m"}]}"#,
+            // Typo'd keys fail loudly, like typo'd CLI flags.
+            r#"{"routes": [{"name": "a", "model": "m", "shard": 4}]}"#,
+            // online_min_rows above the window would never trigger.
+            r#"{"routes": [{"name": "a", "model": "m", "online": true,
+                             "online_window": 100}]}"#,
+        ] {
+            assert!(RoutesConfig::from_json_text(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn routes_are_isolated_and_publishable() {
+        let dir = tmpdir("isolated");
+        let path_b2 = dir.join("b2.json");
+        toy_model(5.0, 4).save(&path_b2).unwrap();
+
+        let engine_a = ServeEngine::start(toy_model(1.0, 4), None, &ServeConfig::default());
+        let mut router = Router::single("a", engine_a);
+        let engine_b = ServeEngine::start(toy_model(2.0, 4), None, &ServeConfig::default());
+        router.routes.insert(
+            "b".to_string(),
+            Route {
+                name: "b".into(),
+                engine: engine_b,
+                trainer: None,
+                trainer_stop: Arc::new(AtomicBool::new(false)),
+                trainer_loop: None,
+            },
+        );
+        assert_eq!(router.names(), vec!["a", "b"]);
+        assert!(router.sole_route().is_none());
+
+        let rows = vec![(vec![0u32], vec![1.0])];
+        assert_eq!(router.route("a").unwrap().score(&rows)[0].margin, 1.0);
+        assert_eq!(router.route("b").unwrap().score(&rows)[0].margin, 2.0);
+
+        // Publish on b: a's epoch and scores are untouched.
+        let epoch = router.route("b").unwrap().publish_from_file(path_b2.to_str().unwrap()).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(router.route("b").unwrap().score(&rows)[0].margin, 5.0);
+        assert_eq!(router.route("a").unwrap().score(&rows)[0].margin, 1.0);
+        assert_eq!(router.route("a").unwrap().report().epoch, 0);
+        assert_eq!(router.route("b").unwrap().report().epoch, 1);
+        assert_eq!(router.route("b").unwrap().report().versions_alive, 2);
+
+        // Dimension-mismatched publishes are refused.
+        let bad = dir.join("bad.json");
+        toy_model(1.0, 9).save(&bad).unwrap();
+        assert!(router
+            .route("a")
+            .unwrap()
+            .publish_from_file(bad.to_str().unwrap())
+            .is_err());
+
+        let stats = router.stats_json();
+        let routes = stats.get("routes").unwrap();
+        assert!(routes.opt("a").is_some() && routes.opt("b").is_some());
+
+        let reports = router.shutdown();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].0, "a");
+        assert_eq!(reports[0].1.requests, 2);
+    }
+
+    #[test]
+    fn route_start_from_model_file_and_ingest_without_trainer() {
+        let dir = tmpdir("from_file");
+        let path = dir.join("m.json");
+        toy_model(3.0, 2).save(&path).unwrap();
+        let spec = RouteSpec {
+            name: "m".into(),
+            model: Some(path.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        let route = Route::start(&spec).unwrap();
+        assert_eq!(route.score(&[(vec![1], vec![2.0])])[0].margin, 6.0);
+        // No trainer attached: ingest is a no-op.
+        assert_eq!(route.ingest(&[(vec![0], vec![1.0])], &[1.0]), 0);
+        route.shutdown();
+
+        // Missing file surfaces the route name in the error.
+        let missing = RouteSpec {
+            name: "ghost".into(),
+            model: Some(dir.join("nope.json").to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        let err = format!("{:#}", Route::start(&missing).unwrap_err());
+        assert!(err.contains("ghost"), "{err}");
+    }
+}

@@ -1,0 +1,696 @@
+//! The HTTP server: a `std::net::TcpListener` accept loop feeding a
+//! bounded pool of worker threads, each handling keep-alive
+//! connections and dispatching requests against a [`Router`].
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/score` — score one or many sparse rows (JSON or LIBSVM
+//!   body, see [`super::body`]); route chosen by `?route=` query
+//!   parameter or the JSON `"route"` field (optional when exactly one
+//!   route is configured).  Rows with labels (LIBSVM) are also fed to
+//!   the route's online trainer when one is attached.
+//! * `POST /v1/models/{route}/publish` — hot-swap a model file into
+//!   the route's registry (body: `{"path": "model.json"}`).
+//! * `GET /v1/stats` — per-route [`ThroughputReport`] JSON, including
+//!   `versions_alive` and `epoch`.
+//! * `GET /healthz` — liveness plus the route list.
+//!
+//! Back-pressure: at most `queue_cap` accepted connections may be
+//! waiting for a worker; beyond that the server answers `503` and
+//! closes — bounded memory under accept floods, matching the bounded
+//! microbatch queue behind it.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::ThroughputReport;
+use crate::util::Json;
+
+use super::body::decode_score_body;
+use super::http::{
+    read_request, IdleTimeout, PayloadTooLarge, Request, RequestTimeout,
+    Response,
+};
+use super::router::{Route, Router};
+
+/// Server shape.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address (`127.0.0.1:0` picks a free port — tests/benches).
+    pub addr: String,
+    /// Worker threads handling connections.
+    pub workers: usize,
+    /// Accepted connections allowed to wait for a worker.
+    pub queue_cap: usize,
+    /// Per-request body cap in bytes.
+    pub max_body: usize,
+    /// Requests served per connection before the server closes it
+    /// (bounds how long one client can monopolize a worker).
+    pub keep_alive_max: usize,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it and hands its worker back (a few
+    /// idle sockets must not starve the whole pool).
+    pub idle_timeout: Duration,
+    /// Budget for receiving one request (first byte → full body); a
+    /// client stalled longer than this mid-request is disconnected.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            queue_cap: 128,
+            max_body: 4 << 20,
+            keep_alive_max: 10_000,
+            idle_timeout: Duration::from_secs(10),
+            request_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One queued connection: the socket, when it last completed a request
+/// (the idle budget, preserved across requeues), and when it entered
+/// its current queue (pop fairness — reset on every requeue so a
+/// silent parked client cannot perpetually outrank fresh arrivals).
+struct Conn {
+    stream: TcpStream,
+    idle_since: Instant,
+    enqueued: Instant,
+}
+
+/// The two connection pools workers draw from.  `fresh` holds newly
+/// accepted sockets and is bounded by `queue_cap`; `parked` holds idle
+/// keep-alive connections rotated out by workers — kept separate so
+/// a crowd of quiet keep-alive clients can never exhaust the accept
+/// budget and 503 new arrivals (each parked socket still dies at
+/// `idle_timeout`).
+#[derive(Default)]
+struct Queues {
+    fresh: VecDeque<Conn>,
+    parked: VecDeque<Conn>,
+}
+
+impl Queues {
+    /// Pop the longest-queued connection across both pools, so a
+    /// sustained accept flood cannot starve a parked connection whose
+    /// client has started sending again (and vice versa).
+    fn pop(&mut self) -> Option<Conn> {
+        let fresh_t = self.fresh.front().map(|c| c.enqueued);
+        let parked_t = self.parked.front().map(|c| c.enqueued);
+        match (fresh_t, parked_t) {
+            (Some(f), Some(p)) if p < f => self.parked.pop_front(),
+            (Some(_), _) => self.fresh.pop_front(),
+            (None, Some(_)) => self.parked.pop_front(),
+            (None, None) => None,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.fresh.is_empty() && self.parked.is_empty()
+    }
+}
+
+/// Shared state between the accept loop and the workers.
+struct Shared {
+    router: Router,
+    queue: Mutex<Queues>,
+    ready: Condvar,
+    stop: AtomicBool,
+    cfg: ServerConfig,
+}
+
+/// A running HTTP front end.  Dropping without [`Server::shutdown`]
+/// leaves threads running until the process exits — call `shutdown`
+/// (tests and `passcode listen` both do).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start the accept loop plus `cfg.workers`
+    /// worker threads serving `router`.
+    pub fn start(router: Router, cfg: &ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+        let shared = Arc::new(Shared {
+            router,
+            queue: Mutex::new(Queues::default()),
+            ready: Condvar::new(),
+            stop: AtomicBool::new(false),
+            cfg: cfg.clone(),
+        });
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, &shared))
+                .context("spawn accept thread")?
+        };
+        let workers = (0..cfg.workers.max(1))
+            .map(|t| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("net-worker-{t}"))
+                    .spawn(move || worker_loop(&shared))
+                    .context("spawn worker thread")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Server { addr, shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The router being served.
+    pub fn router(&self) -> &Router {
+        &self.shared.router
+    }
+
+    /// Stop accepting, finish in-flight requests, join every thread,
+    /// and shut each route's engine down; per-route final reports.
+    pub fn shutdown(mut self) -> Vec<(String, ThroughputReport)> {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.ready.notify_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // Sole owner now: every thread holding a Shared clone has
+        // exited, so unwrap the router out and wind the engines down.
+        let shared = Arc::try_unwrap(self.shared)
+            .map_err(|_| ())
+            .expect("server threads joined");
+        shared.router.shutdown()
+    }
+}
+
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Server({}, workers={})", self.addr, self.workers.len())
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Shared) {
+    while !shared.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // BSD/macOS accepted sockets inherit the listener's
+                // O_NONBLOCK; force blocking so read timeouts pace the
+                // workers instead of instant WouldBlock busy-spins.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let mut q = shared.queue.lock().expect("net queue poisoned");
+                if q.fresh.len() >= shared.cfg.queue_cap {
+                    drop(q);
+                    // Shed load instead of queueing unboundedly (write
+                    // timeout: a non-reading flooder must not pin the
+                    // accept loop either).
+                    let mut s = stream;
+                    let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+                    let _ = Response::error(503, "server overloaded")
+                        .write_to(&mut s, false);
+                } else {
+                    let now = Instant::now();
+                    q.fresh.push_back(Conn {
+                        stream,
+                        idle_since: now,
+                        enqueued: now,
+                    });
+                    shared.ready.notify_one();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Nonblocking accept doubles as the stop-flag poll point.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let conn = {
+            let mut q = shared.queue.lock().expect("net queue poisoned");
+            loop {
+                if let Some(c) = q.pop() {
+                    break c;
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let (nq, _) = shared
+                    .ready
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .expect("net queue poisoned");
+                q = nq;
+            }
+        };
+        if let Some(conn) = handle_connection(conn, shared) {
+            // The connection went idle while others were waiting:
+            // park it so one slow-polling client cannot pin this
+            // worker (and parked idlers never crowd out fresh work).
+            let mut q = shared.queue.lock().expect("net queue poisoned");
+            q.parked.push_back(conn);
+            shared.ready.notify_one();
+        }
+    }
+}
+
+/// Serve one (possibly keep-alive) connection until it closes, goes
+/// over budget, or — `Some(conn)` — goes idle while other connections
+/// are waiting for a worker (the caller parks it).
+fn handle_connection(conn: Conn, shared: &Shared) -> Option<Conn> {
+    let Conn { stream, mut idle_since, .. } = conn;
+    // The short read timeout is the worker's poll point: it observes
+    // shutdown and the per-connection idle budget without dedicating a
+    // thread to a silent socket forever.  The write timeout keeps a
+    // client that stops *reading* from pinning the worker in write_all
+    // once the kernel send buffer fills.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(shared.cfg.request_timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return None,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut served = 0usize;
+    while served < shared.cfg.keep_alive_max {
+        let req = match read_request(
+            &mut reader,
+            &mut writer,
+            shared.cfg.max_body,
+            shared.cfg.request_timeout,
+        ) {
+            Ok(None) => return None, // peer closed between requests
+            Ok(Some(req)) => req,
+            Err(e) => {
+                if e.downcast_ref::<IdleTimeout>().is_some() {
+                    // Idle at a request boundary (nothing consumed):
+                    // safe to keep waiting — until shutdown or the
+                    // idle budget runs out.
+                    if shared.stop.load(Ordering::Acquire)
+                        || idle_since.elapsed() >= shared.cfg.idle_timeout
+                    {
+                        return None;
+                    }
+                    let waiting = !shared
+                        .queue
+                        .lock()
+                        .expect("net queue poisoned")
+                        .is_empty();
+                    if waiting {
+                        // Nothing buffered at a boundary: safe to hand
+                        // the raw socket back and serve someone else.
+                        // Fresh `enqueued` stamp — a silent client must
+                        // not perpetually outrank newer arrivals.
+                        return Some(Conn {
+                            stream: reader.into_inner(),
+                            idle_since,
+                            enqueued: Instant::now(),
+                        });
+                    }
+                    continue;
+                }
+                // Anything else — malformed bytes, oversize, or a
+                // timeout mid-request — poisons the stream position;
+                // answer (best effort) and close rather than resume
+                // parsing at a desynchronized offset.
+                let status = if e.downcast_ref::<PayloadTooLarge>().is_some()
+                {
+                    413
+                } else if e.downcast_ref::<RequestTimeout>().is_some() {
+                    408
+                } else {
+                    400
+                };
+                let _ = Response::error(status, &format!("{e:#}"))
+                    .write_to(&mut writer, false);
+                return None;
+            }
+        };
+        // Close after the in-flight response on shutdown so a busy
+        // client cannot stall `Server::shutdown` for keep_alive_max
+        // requests.
+        let keep = req.keep_alive()
+            && served + 1 < shared.cfg.keep_alive_max
+            && !shared.stop.load(Ordering::Acquire);
+        let resp = dispatch(&shared.router, &req);
+        if resp.write_to(&mut writer, keep).is_err() {
+            return None;
+        }
+        served += 1;
+        idle_since = Instant::now();
+        if !keep {
+            return None;
+        }
+    }
+    None
+}
+
+/// Route one request to its handler.
+pub fn dispatch(router: &Router, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(router),
+        ("GET", "/v1/stats") => Response::json(200, &router.stats_json()),
+        ("POST", "/v1/score") => handle_score(router, req),
+        (method, path) => {
+            if let Some(route) = path
+                .strip_prefix("/v1/models/")
+                .and_then(|rest| rest.strip_suffix("/publish"))
+            {
+                if method != "POST" {
+                    return Response::error(405, "publish requires POST");
+                }
+                return handle_publish(router, route, req);
+            }
+            if matches!(path, "/healthz" | "/v1/stats") {
+                return Response::error(405, "method not allowed");
+            }
+            if path == "/v1/score" {
+                return Response::error(405, "score requires POST");
+            }
+            Response::error(404, &format!("no handler for {method} {path}"))
+        }
+    }
+}
+
+fn handle_healthz(router: &Router) -> Response {
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::str("ok")),
+            (
+                "routes",
+                Json::Arr(router.names().into_iter().map(Json::str).collect()),
+            ),
+        ]),
+    )
+}
+
+/// Resolve the route a score request targets: `?route=` wins, then the
+/// JSON body's `"route"`, then the sole configured route.
+fn resolve_route<'r>(
+    router: &'r Router,
+    req: &Request,
+    body_route: Option<&str>,
+) -> Result<&'r Route, Response> {
+    let name = req.query("route").or(body_route);
+    match name {
+        Some(name) => router.route(name).ok_or_else(|| {
+            Response::error(404, &format!("unknown route {name:?}"))
+        }),
+        None => router.sole_route().ok_or_else(|| {
+            Response::error(
+                400,
+                &format!(
+                    "multiple routes configured; pick one with ?route= (have: {})",
+                    router.names().join(", ")
+                ),
+            )
+        }),
+    }
+}
+
+fn handle_score(router: &Router, req: &Request) -> Response {
+    let body = match decode_score_body(req.header("content-type"), &req.body) {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let route = match resolve_route(router, req, body.route.as_deref()) {
+        Ok(r) => r,
+        Err(resp) => return resp,
+    };
+    // Score before feeding the online trainer, as `replay` does: the
+    // reported accuracy must come from the model that served the
+    // request, not one the background trainer already fit on these
+    // very rows.  The labeled (LIBSVM) path pays a per-row clone for
+    // that; the label-less JSON hot path moves rows straight into the
+    // queue.
+    let labels = body.labels;
+    let (preds, ingested) = match &labels {
+        Some(l) => {
+            let preds = route.score(&body.rows);
+            (preds, route.ingest(&body.rows, l))
+        }
+        None => (route.score_owned(body.rows), 0),
+    };
+    let mut extra = Vec::new();
+    if let Some(labels) = &labels {
+        let correct = preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, &y)| p.label == if y > 0.0 { 1.0 } else { -1.0 })
+            .count();
+        extra.push((
+            "accuracy",
+            Json::num(correct as f64 / preds.len().max(1) as f64),
+        ));
+        extra.push(("ingested", Json::num(ingested as f64)));
+    }
+    let predictions = Json::Arr(
+        preds
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("margin", Json::num(p.margin)),
+                    ("label", Json::num(p.label)),
+                    ("model_epoch", Json::num(p.model_epoch as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("route", Json::str(&route.name)),
+        ("predictions", predictions),
+    ];
+    fields.extend(extra);
+    Response::json(200, &Json::obj(fields))
+}
+
+fn handle_publish(router: &Router, route_name: &str, req: &Request) -> Response {
+    let route = match router.route(route_name) {
+        Some(r) => r,
+        None => return Response::error(404, &format!("unknown route {route_name:?}")),
+    };
+    let path = std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|text| Json::parse(text).ok())
+        .and_then(|v| v.get("path").ok().cloned())
+        .and_then(|p| p.as_str().ok().map(str::to_string));
+    let path = match path {
+        Some(p) => p,
+        None => {
+            return Response::error(400, "body must be {\"path\": \"model.json\"}")
+        }
+    };
+    match route.publish_from_file(&path) {
+        Ok(epoch) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("route", Json::str(&route.name)),
+                ("epoch", Json::num(epoch as f64)),
+            ]),
+        ),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model_io::Model;
+    use crate::serve::{ServeConfig, ServeEngine};
+
+    fn single_router(tag: f64, d: usize) -> Router {
+        let model = Model {
+            w: vec![tag; d],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "test".into(),
+            dataset: "toy".into(),
+        };
+        Router::single(
+            "only",
+            ServeEngine::start(
+                model,
+                None,
+                &ServeConfig { shards: 1, ..Default::default() },
+            ),
+        )
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        let (path, query) = match path.split_once('?') {
+            None => (path.to_string(), Vec::new()),
+            Some((p, q)) => (
+                p.to_string(),
+                q.split('&')
+                    .map(|kv| {
+                        let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+                        (k.to_string(), v.to_string())
+                    })
+                    .collect(),
+            ),
+        };
+        Request {
+            method: method.into(),
+            path,
+            query,
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+            http10: false,
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn dispatch_health_stats_and_errors() {
+        let router = single_router(1.0, 4);
+        let h = dispatch(&router, &req("GET", "/healthz", ""));
+        assert_eq!(h.status, 200);
+        assert_eq!(
+            body_json(&h).get("status").unwrap().as_str().unwrap(),
+            "ok"
+        );
+        let s = dispatch(&router, &req("GET", "/v1/stats", ""));
+        assert_eq!(s.status, 200);
+        assert!(body_json(&s).get("routes").unwrap().opt("only").is_some());
+
+        assert_eq!(dispatch(&router, &req("GET", "/nope", "")).status, 404);
+        assert_eq!(dispatch(&router, &req("POST", "/healthz", "")).status, 405);
+        assert_eq!(dispatch(&router, &req("GET", "/v1/score", "")).status, 405);
+        assert_eq!(
+            dispatch(&router, &req("GET", "/v1/models/only/publish", "")).status,
+            405
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn dispatch_score_single_batch_and_libsvm() {
+        let router = single_router(2.0, 4);
+        // Sole route: no selector needed.
+        let r = dispatch(
+            &router,
+            &req("POST", "/v1/score", r#"{"idx": [0, 2], "vals": [1.0, 1.0]}"#),
+        );
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 1);
+        assert_eq!(preds[0].get("margin").unwrap().as_f64().unwrap(), 4.0);
+
+        let r = dispatch(
+            &router,
+            &req(
+                "POST",
+                "/v1/score?route=only",
+                r#"{"rows": [{"idx": [0], "vals": [1.0]}, {"idx": [1], "vals": [-1.0]}]}"#,
+            ),
+        );
+        let preds_j = body_json(&r);
+        let preds = preds_j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[1].get("label").unwrap().as_f64().unwrap(), -1.0);
+
+        // LIBSVM body: labels come back as accuracy (w = 2·1 ⇒ margins
+        // positive whenever the row sum is positive).
+        let r = dispatch(&router, &req("POST", "/v1/score", "+1 1:1.0\n-1 2:1.0\n"));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("accuracy").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(j.get("ingested").unwrap().as_usize().unwrap(), 0);
+
+        // Unknown routes and malformed bodies are 4xx.
+        assert_eq!(
+            dispatch(
+                &router,
+                &req(
+                    "POST",
+                    "/v1/score?route=ghost",
+                    r#"{"idx": [0], "vals": [1.0]}"#
+                )
+            )
+            .status,
+            404
+        );
+        assert_eq!(
+            dispatch(&router, &req("POST", "/v1/score", "not json {")).status,
+            400
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn dispatch_publish_round_trip() {
+        let dir = std::env::temp_dir().join("passcode_net_server");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pub.json");
+        Model {
+            w: vec![9.0; 4],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "test".into(),
+            dataset: "toy".into(),
+        }
+        .save(&path)
+        .unwrap();
+
+        let router = single_router(1.0, 4);
+        let body = format!("{{\"path\": {:?}}}", path.to_str().unwrap());
+        let r = dispatch(&router, &req("POST", "/v1/models/only/publish", &body));
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        assert_eq!(body_json(&r).get("epoch").unwrap().as_usize().unwrap(), 1);
+        let score = dispatch(
+            &router,
+            &req("POST", "/v1/score", r#"{"idx": [0], "vals": [1.0]}"#),
+        );
+        let score_j = body_json(&score);
+        let p = &score_j.get("predictions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("margin").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(p.get("model_epoch").unwrap().as_usize().unwrap(), 1);
+
+        assert_eq!(
+            dispatch(&router, &req("POST", "/v1/models/ghost/publish", &body)).status,
+            404
+        );
+        assert_eq!(
+            dispatch(&router, &req("POST", "/v1/models/only/publish", "{}")).status,
+            400
+        );
+        assert_eq!(
+            dispatch(
+                &router,
+                &req("POST", "/v1/models/only/publish", "{\"path\": \"/no/such\"}")
+            )
+            .status,
+            400
+        );
+        router.shutdown();
+    }
+}

@@ -135,13 +135,19 @@ impl ServeEngine {
         &self.stats
     }
 
+    /// Snapshot a live throughput report (engine keeps serving),
+    /// including registry depth (`versions_alive`, `epoch`).
+    pub fn report(&self) -> ThroughputReport {
+        self.stats.report_for(&self.registry)
+    }
+
     /// Drain outstanding requests, stop the shards, and report.
     pub fn shutdown(mut self) -> ThroughputReport {
         self.batcher.close();
         if let Some(pool) = self.pool.take() {
             pool.join();
         }
-        self.stats.report()
+        self.stats.report_for(&self.registry)
     }
 }
 
@@ -345,7 +351,7 @@ pub fn replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     }
 
     Ok(ReplayReport {
-        throughput: stats.report(),
+        throughput: stats.report_for(&registry),
         accuracy: correct as f64 / n.max(1) as f64,
         swaps: registry.epoch(),
         epoch_min,

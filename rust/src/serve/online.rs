@@ -76,6 +76,7 @@ pub struct OnlineTrainer<L: Loss> {
     cfg: OnlineConfig,
     window: Mutex<Window>,
     rounds: AtomicU64,
+    ingested: AtomicU64,
 }
 
 impl<L: Loss> OnlineTrainer<L> {
@@ -93,6 +94,7 @@ impl<L: Loss> OnlineTrainer<L> {
             cfg,
             window: Mutex::new(Window::default()),
             rounds: AtomicU64::new(0),
+            ingested: AtomicU64::new(0),
         }
     }
 
@@ -114,6 +116,14 @@ impl<L: Loss> OnlineTrainer<L> {
         }
         w.rows.push_back(LabeledRow { idx, vals, label });
         w.alpha.push_back(0.0);
+        drop(w);
+        self.ingested.fetch_add(1, Ordering::Release);
+    }
+
+    /// Total rows ever ingested (monotone; drives [`Self::spawn_loop`]'s
+    /// "only retrain on new data" gate).
+    pub fn ingested(&self) -> u64 {
+        self.ingested.load(Ordering::Acquire)
     }
 
     /// Rows currently buffered in the window.
@@ -211,9 +221,15 @@ impl<L: Loss> OnlineTrainer<L> {
         Some(self.registry.publish(model, Some(r.alpha)))
     }
 
-    /// Spawn the continuous-training loop: a detached round runs
-    /// whenever at least `min_rows` rows are buffered, until `stop` is
-    /// raised.  Returns the loop's join handle.
+    /// Spawn the continuous-training loop: a round runs whenever at
+    /// least `min_rows` rows are buffered *and* new rows have arrived
+    /// since the previous round, until `stop` is raised.  Returns the
+    /// loop's join handle.
+    ///
+    /// The new-data gate matters for long-running servers: without it
+    /// a full-but-quiet window would retrain on identical data
+    /// back-to-back, pegging a core and publishing an unbounded stream
+    /// of versions into the registry's retained history.
     pub fn spawn_loop(
         trainer: Arc<OnlineTrainer<L>>,
         stop: Arc<AtomicBool>,
@@ -223,8 +239,13 @@ impl<L: Loss> OnlineTrainer<L> {
             .name("online-trainer".into())
             .spawn(move || {
                 let mut published = 0u64;
+                let mut trained_at = 0u64;
                 while !stop.load(Ordering::Acquire) {
-                    if trainer.buffered() >= min_rows.max(1) {
+                    let ingested = trainer.ingested();
+                    if trainer.buffered() >= min_rows.max(1)
+                        && ingested != trained_at
+                    {
+                        trained_at = ingested;
                         if trainer.train_round().is_some() {
                             published += 1;
                         }
@@ -322,6 +343,46 @@ mod tests {
         trainer.ingest(vec![0, 999], vec![1.0, 5.0], 1.0);
         assert!(trainer.train_round().is_some());
         assert_eq!(reg.epoch(), 2);
+    }
+
+    #[test]
+    fn spawn_loop_goes_quiet_without_new_data() {
+        let reg = zero_registry(3, 1.0);
+        let trainer = Arc::new(OnlineTrainer::new(
+            Arc::clone(&reg),
+            Hinge::new(1.0),
+            OnlineConfig { epochs_per_round: 1, ..Default::default() },
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = OnlineTrainer::spawn_loop(
+            Arc::clone(&trainer),
+            Arc::clone(&stop),
+            2,
+        );
+        trainer.ingest(vec![0], vec![1.0], 1.0);
+        trainer.ingest(vec![1], vec![1.0], -1.0);
+        assert_eq!(trainer.ingested(), 2);
+        let t0 = std::time::Instant::now();
+        while reg.epoch() == 0 && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // The gate allows at most one round per observed ingest count:
+        // once the epoch stabilizes it must stay put (no retraining on
+        // identical data), and a fresh ingest must wake the loop again.
+        std::thread::sleep(Duration::from_millis(100));
+        let settled = reg.epoch();
+        assert!((1..=2).contains(&settled), "epoch {settled}");
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(reg.epoch(), settled, "retrained without new data");
+        trainer.ingest(vec![2], vec![1.0], 1.0);
+        let t1 = std::time::Instant::now();
+        while reg.epoch() == settled && t1.elapsed() < Duration::from_secs(30)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(reg.epoch() > settled, "new row did not trigger a round");
+        stop.store(true, Ordering::Release);
+        assert_eq!(h.join().unwrap(), reg.epoch());
     }
 
     #[test]

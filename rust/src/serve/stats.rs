@@ -14,6 +14,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::TextTable;
 use crate::util::Json;
 
+use super::registry::ModelRegistry;
+
 /// Number of power-of-two latency buckets (covers 1 ns … ~584 years).
 const BUCKETS: usize = 64;
 
@@ -188,7 +190,9 @@ impl ServeStats {
             .collect()
     }
 
-    /// Snapshot a throughput/latency report.
+    /// Snapshot a throughput/latency report.  Registry observability
+    /// (`versions_alive`, `epoch`) is zero here — use
+    /// [`ServeStats::report_for`] when a [`ModelRegistry`] is at hand.
     pub fn report(&self) -> ThroughputReport {
         let requests = self.total_requests();
         let batches = self.total_batches();
@@ -212,6 +216,20 @@ impl ServeStats {
             p50_secs: self.latency.quantile_secs(0.50),
             p95_secs: self.latency.quantile_secs(0.95),
             p99_secs: self.latency.quantile_secs(0.99),
+            versions_alive: 0,
+            epoch: 0,
+        }
+    }
+
+    /// [`ServeStats::report`] plus registry depth observability: how
+    /// many model versions the registry is keeping alive for wait-free
+    /// readers and which epoch is current — the first instrument for
+    /// the ROADMAP's epoch-based-reclamation item.
+    pub fn report_for(&self, registry: &ModelRegistry) -> ThroughputReport {
+        ThroughputReport {
+            versions_alive: registry.versions(),
+            epoch: registry.epoch(),
+            ..self.report()
         }
     }
 }
@@ -239,6 +257,11 @@ pub struct ThroughputReport {
     pub p95_secs: f64,
     /// 99th-percentile latency (seconds).
     pub p99_secs: f64,
+    /// Model versions the registry retains for wait-free readers
+    /// (0 when the report was taken without a registry).
+    pub versions_alive: usize,
+    /// Registry epoch of the currently served model.
+    pub epoch: u64,
 }
 
 impl ThroughputReport {
@@ -246,7 +269,7 @@ impl ThroughputReport {
     pub fn render(&self) -> String {
         let mut t = TextTable::new(&[
             "shards", "requests", "batches", "avg_batch", "qps", "p50_ms",
-            "p95_ms", "p99_ms",
+            "p95_ms", "p99_ms", "epoch", "alive",
         ]);
         t.row(&[
             self.shards.to_string(),
@@ -257,6 +280,8 @@ impl ThroughputReport {
             format!("{:.3}", self.p50_secs * 1e3),
             format!("{:.3}", self.p95_secs * 1e3),
             format!("{:.3}", self.p99_secs * 1e3),
+            self.epoch.to_string(),
+            self.versions_alive.to_string(),
         ]);
         t.render()
     }
@@ -274,6 +299,8 @@ impl ThroughputReport {
             ("p50_secs", Json::num(self.p50_secs)),
             ("p95_secs", Json::num(self.p95_secs)),
             ("p99_secs", Json::num(self.p99_secs)),
+            ("versions_alive", Json::num(self.versions_alive as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
         ])
     }
 }
@@ -326,6 +353,115 @@ mod tests {
             }
         });
         assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn histogram_single_sample_all_quantiles_agree() {
+        let h = LatencyHistogram::new();
+        h.record_ns(1_000);
+        let v = h.quantile_secs(0.5);
+        assert!(v > 0.0);
+        // With one sample, every quantile (extremes included) lands in
+        // the same bucket.
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_secs(q), v, "q={q}");
+        }
+        assert!((h.mean_secs() - 1e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_extreme_quantiles_hit_first_and_last_bucket() {
+        let h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record_ns(1_000); // ~µs bucket
+        }
+        h.record_ns(1_000_000_000); // ~s bucket
+        // q=0 clamps to the smallest recorded bucket, q=1 to the largest;
+        // out-of-range q is clamped into [0, 1].
+        assert!(h.quantile_secs(0.0) < 1e-5);
+        assert!(h.quantile_secs(1.0) > 0.5);
+        assert_eq!(h.quantile_secs(-3.0), h.quantile_secs(0.0));
+        assert_eq!(h.quantile_secs(7.0), h.quantile_secs(1.0));
+    }
+
+    #[test]
+    fn histogram_overflow_clamps_to_top_bucket() {
+        let h = LatencyHistogram::new();
+        // u64::MAX ns would index bucket 64; it must clamp to the
+        // overflow bucket (63) instead of panicking.
+        h.record_ns(u64::MAX);
+        h.record_ns(u64::MAX - 1);
+        assert_eq!(h.count(), 2);
+        let top = h.quantile_secs(1.0);
+        assert_eq!(top, 1.5 * 2f64.powi(62) / 1e9);
+        assert_eq!(h.quantile_secs(0.0), top);
+    }
+
+    #[test]
+    fn histogram_empty_extremes_are_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_secs(0.0), 0.0);
+        assert_eq!(h.quantile_secs(1.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_records_with_racing_reader() {
+        // Writers hammer record_ns while a reader takes quantile
+        // snapshots mid-flight: snapshots must never panic and the
+        // final tallies must be exact.
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let writers = 4;
+        let per_writer = 25_000u64;
+        std::thread::scope(|s| {
+            for t in 0..writers {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..per_writer {
+                        // Spread across several buckets per thread.
+                        h.record_ns(1 + (i + t) % 100_000);
+                    }
+                });
+            }
+            let h = std::sync::Arc::clone(&h);
+            s.spawn(move || {
+                while h.count() < writers * per_writer {
+                    let q = h.quantile_secs(0.99);
+                    assert!(q >= 0.0);
+                    std::hint::spin_loop();
+                }
+            });
+        });
+        assert_eq!(h.count(), writers * per_writer);
+        let p0 = h.quantile_secs(0.0);
+        let p100 = h.quantile_secs(1.0);
+        assert!(p0 <= p100);
+        assert!(p100 < 1e-3, "largest sample is < 100 µs");
+    }
+
+    #[test]
+    fn report_for_carries_registry_depth() {
+        use crate::coordinator::model_io::Model;
+        let m = |tag: f64| Model {
+            w: vec![tag; 2],
+            loss: "hinge".into(),
+            c: 1.0,
+            solver: "test".into(),
+            dataset: "toy".into(),
+        };
+        let reg = ModelRegistry::new(m(0.0), None);
+        let stats = ServeStats::new(1);
+        let r0 = stats.report_for(&reg);
+        assert_eq!((r0.versions_alive, r0.epoch), (1, 0));
+        reg.publish(m(1.0), None);
+        reg.publish(m(2.0), None);
+        let r = stats.report_for(&reg);
+        assert_eq!((r.versions_alive, r.epoch), (3, 2));
+        let j = r.to_json();
+        assert_eq!(j.get("versions_alive").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("epoch").unwrap().as_usize().unwrap(), 2);
+        assert!(r.render().contains("alive"));
+        // Registry-less reports stay well defined.
+        assert_eq!(stats.report().versions_alive, 0);
     }
 
     #[test]

@@ -12,16 +12,22 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always an f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// BTreeMap: deterministic key order on output.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -34,6 +40,7 @@ impl Json {
     }
 
     // ---- typed accessors -------------------------------------------------
+    /// The value as a number, or an error naming what it actually is.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -41,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer (rejects fractions).
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -49,6 +57,7 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -56,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -63,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -70,6 +81,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Ok(o),
@@ -93,27 +105,24 @@ impl Json {
     }
 
     // ---- construction helpers --------------------------------------------
+    /// An object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// A number value.
     pub fn num(v: f64) -> Json {
         Json::Num(v)
     }
 
+    /// A string value.
     pub fn str(v: &str) -> Json {
         Json::Str(v.to_string())
     }
 
+    /// An array of numbers.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
-    }
-
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
     }
 
     /// Serialize with 2-space indentation.
@@ -185,6 +194,15 @@ impl Json {
             }
             other => other.write(out),
         }
+    }
+}
+
+/// Compact serialization (and `to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,0 +1,278 @@
+//! Integration tests for the `net` front end: a real
+//! `TcpListener`-backed server with two routes, driven by the
+//! self-contained HTTP client over loopback.
+//!
+//! The acceptance property: routes are isolated serving universes —
+//! a batch scored on route A is unaffected by hot-swap publishes on
+//! route B (distinct registries, queues, shard pools), while both
+//! serve concurrent keep-alive clients without dropping a request.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use passcode::coordinator::model_io::Model;
+use passcode::net::{HttpClient, Router, RoutesConfig, Server, ServerConfig};
+
+const D: usize = 8;
+
+fn toy_model(tag: f64) -> Model {
+    Model {
+        w: vec![tag; D],
+        loss: "hinge".into(),
+        c: 1.0,
+        solver: "test".into(),
+        dataset: "toy".into(),
+    }
+}
+
+/// Two-route server over loopback: route `a` serves w ≡ 1, route `b`
+/// serves w ≡ 2.  Returns the server and the temp dir for model files.
+fn two_route_server(tag: &str, workers: usize) -> (Server, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join("passcode_net_it").join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path_a = dir.join("a.json");
+    let path_b = dir.join("b.json");
+    toy_model(1.0).save(&path_a).unwrap();
+    toy_model(2.0).save(&path_b).unwrap();
+    let cfg = RoutesConfig::from_json_text(&format!(
+        r#"{{"routes": [
+            {{"name": "a", "model": {:?}, "shards": 2, "max_wait_us": 100}},
+            {{"name": "b", "model": {:?}, "shards": 2, "max_wait_us": 100}}
+        ]}}"#,
+        path_a.to_str().unwrap(),
+        path_b.to_str().unwrap(),
+    ))
+    .unwrap();
+    let server = Server::start(
+        Router::start(&cfg).unwrap(),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (server, dir)
+}
+
+fn score_one(client: &mut HttpClient, route: &str, idx: u32) -> (f64, u64) {
+    let resp = client
+        .score(route, &(vec![idx], vec![1.0]))
+        .unwrap()
+        .ok()
+        .unwrap();
+    let j = resp.json().unwrap();
+    let p = &j.get("predictions").unwrap().as_arr().unwrap()[0];
+    (
+        p.get("margin").unwrap().as_f64().unwrap(),
+        p.get("model_epoch").unwrap().as_usize().unwrap() as u64,
+    )
+}
+
+#[test]
+fn route_a_unaffected_by_hot_swaps_on_route_b() {
+    let (server, dir) = two_route_server("isolation", 4);
+    let addr = server.addr();
+
+    // The model a publisher will hammer into route b.
+    let path_b5 = dir.join("b5.json");
+    toy_model(5.0).save(&path_b5).unwrap();
+    let publish_body =
+        format!("{{\"path\": {:?}}}", path_b5.to_str().unwrap());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let a_requests = Arc::new(AtomicU64::new(0));
+
+    std::thread::scope(|s| {
+        // Route-a scorer: batches of 4 rows, continuously, on one
+        // keep-alive connection.  Every response must be scored by
+        // epoch 0 with w ≡ 1 — publishes on b must never leak in.
+        {
+            let stop = Arc::clone(&stop);
+            let a_requests = Arc::clone(&a_requests);
+            s.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let body = br#"{"rows": [
+                    {"idx": [0], "vals": [1.0]},
+                    {"idx": [1, 2], "vals": [1.0, 1.0]},
+                    {"idx": [3], "vals": [-2.0]},
+                    {"idx": [0, 7], "vals": [0.5, 0.5]}
+                ]}"#;
+                let want = [1.0, 2.0, -2.0, 1.0];
+                while !stop.load(Ordering::Acquire) {
+                    let resp = client
+                        .request("POST", "/v1/score?route=a", "application/json", body)
+                        .unwrap()
+                        .ok()
+                        .unwrap();
+                    let j = resp.json().unwrap();
+                    let preds = j.get("predictions").unwrap().as_arr().unwrap();
+                    assert_eq!(preds.len(), 4);
+                    for (p, w) in preds.iter().zip(want) {
+                        assert_eq!(
+                            p.get("margin").unwrap().as_f64().unwrap(),
+                            w,
+                            "route a scored by a foreign model"
+                        );
+                        assert_eq!(
+                            p.get("model_epoch").unwrap().as_usize().unwrap(),
+                            0,
+                            "route a saw an epoch bump from b's publishes"
+                        );
+                    }
+                    a_requests.fetch_add(4, Ordering::Relaxed);
+                }
+            });
+        }
+
+        // Publisher: 20 hot-swaps on route b over HTTP, interleaved
+        // with scores proving b actually swapped.
+        let mut client = HttpClient::new(addr);
+        assert_eq!(score_one(&mut client, "b", 0), (2.0, 0));
+        for round in 1..=20u64 {
+            let resp = client
+                .request(
+                    "POST",
+                    "/v1/models/b/publish",
+                    "application/json",
+                    publish_body.as_bytes(),
+                )
+                .unwrap()
+                .ok()
+                .unwrap();
+            let epoch = resp
+                .json()
+                .unwrap()
+                .get("epoch")
+                .unwrap()
+                .as_usize()
+                .unwrap() as u64;
+            assert_eq!(epoch, round);
+            let (margin, seen_epoch) = score_one(&mut client, "b", 0);
+            assert_eq!(margin, 5.0, "publish did not land on b");
+            assert_eq!(seen_epoch, round, "b served a stale epoch");
+        }
+        // Let the a-scorer overlap the publish storm a little longer
+        // (bounded wait: a panicked scorer must fail the test, not
+        // wedge it — the scope join below rethrows its panic).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while a_requests.load(Ordering::Relaxed) < 40
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    let scored_on_a = a_requests.load(Ordering::Relaxed);
+    assert!(scored_on_a >= 40, "route-a scorer made no progress");
+
+    // Server-side observability agrees: a is untouched at epoch 0 with
+    // one live version; b holds 21 versions at epoch 20.
+    let mut client = HttpClient::new(addr);
+    let stats = client.get("/v1/stats").unwrap().ok().unwrap().json().unwrap();
+    let routes = stats.get("routes").unwrap();
+    let a = routes.get("a").unwrap();
+    let b = routes.get("b").unwrap();
+    assert_eq!(a.get("epoch").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(a.get("versions_alive").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(b.get("epoch").unwrap().as_usize().unwrap(), 20);
+    assert_eq!(b.get("versions_alive").unwrap().as_usize().unwrap(), 21);
+    // Every row the a-scorer got an answer for was counted by a's own
+    // engine (the publisher's probes all went to b).
+    assert_eq!(
+        a.get("requests").unwrap().as_usize().unwrap() as u64,
+        scored_on_a
+    );
+
+    let reports = server.shutdown();
+    assert_eq!(reports.len(), 2);
+}
+
+#[test]
+fn concurrent_keep_alive_clients_across_routes() {
+    let (server, _) = two_route_server("concurrent", 4);
+    let addr = server.addr();
+    let per_client = 50usize;
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            s.spawn(move || {
+                let route = if t % 2 == 0 { "a" } else { "b" };
+                let want = if t % 2 == 0 { 1.0 } else { 2.0 };
+                let mut client = HttpClient::new(addr);
+                for i in 0..per_client {
+                    let mut c = HttpClient::new(addr);
+                    // Alternate between a shared keep-alive connection
+                    // and a fresh one (exercises both paths).
+                    let cl = if i % 10 == 9 { &mut c } else { &mut client };
+                    let (margin, epoch) =
+                        score_one(cl, route, (i % D) as u32);
+                    assert_eq!(margin, want, "client {t} row {i}");
+                    assert_eq!(epoch, 0);
+                }
+            });
+        }
+    });
+    let reports = server.shutdown();
+    let total: u64 = reports.iter().map(|(_, r)| r.requests).sum();
+    assert_eq!(total, 4 * per_client as u64, "dropped requests");
+}
+
+#[test]
+fn protocol_surface_over_socket() {
+    let (server, _) = two_route_server("protocol", 2);
+    let addr = server.addr();
+    let mut client = HttpClient::new(addr);
+
+    // Liveness + route listing.
+    let health = client.get("/healthz").unwrap().ok().unwrap().json().unwrap();
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    let names: Vec<String> = health
+        .get("routes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["a", "b"]);
+
+    // LIBSVM body with labels: accuracy comes back (w ≡ 1 ⇒ both rows
+    // score +1; the -1 labeled row is wrong).
+    let resp = client
+        .request(
+            "POST",
+            "/v1/score?route=a",
+            "text/plain",
+            b"+1 1:1.0\n-1 2:1.0\n",
+        )
+        .unwrap()
+        .ok()
+        .unwrap();
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("accuracy").unwrap().as_f64().unwrap(), 0.5);
+
+    // Error surface: unknown route, missing selector with two routes,
+    // malformed body, unknown path, wrong method.
+    let cases: &[(&str, &str, &str, u16)] = &[
+        ("POST", "/v1/score?route=ghost", r#"{"idx":[0],"vals":[1.0]}"#, 404),
+        ("POST", "/v1/score", r#"{"idx":[0],"vals":[1.0]}"#, 400),
+        ("POST", "/v1/score?route=a", "{ not json", 400),
+        ("POST", "/v1/score?route=a", r#"{"idx":[2,1],"vals":[1.0,1.0]}"#, 400),
+        ("GET", "/v1/score", "", 405),
+        ("GET", "/nope", "", 404),
+        ("POST", "/v1/models/ghost/publish", r#"{"path":"x"}"#, 404),
+        ("POST", "/v1/models/a/publish", r#"{"nope": 1}"#, 400),
+    ];
+    for (method, path, body, want) in cases {
+        let resp = client
+            .request(method, path, "application/json", body.as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, *want, "{method} {path}");
+    }
+
+    // The connection survived all of the above (keep-alive).
+    let (margin, _) = score_one(&mut client, "b", 3);
+    assert_eq!(margin, 2.0);
+    server.shutdown();
+}
