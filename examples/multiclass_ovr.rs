@@ -11,7 +11,7 @@ use passcode::data::registry;
 use passcode::loss::Hinge;
 use passcode::solver::{
     multiclass::{synthetic_multiclass, OvrModel},
-    MemoryModel, SolveOptions,
+    lookup, MemoryModel, SolveOptions,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -54,7 +54,9 @@ fn main() -> anyhow::Result<()> {
         eval_every: 1,
         ..Default::default()
     };
-    let (points, best) = tuning::grid_search_c(&tr, &grid, 3, &cv_opts)?;
+    let trainer = lookup("passcode-wild")?;
+    let (points, best) =
+        tuning::grid_search_c(&tr, &grid, 3, &cv_opts, trainer.as_ref())?;
     println!("      C     mean val acc   folds");
     for p in &points {
         println!(

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use passcode::coordinator::{driver, RunConfig, SolverKind};
 use passcode::data::registry;
-use passcode::loss::Hinge;
+use passcode::loss::LossKind;
 use passcode::serve::{OnlineConfig, OnlineTrainer, ServeConfig, ServeEngine};
 use passcode::solver::MemoryModel;
 
@@ -55,12 +55,14 @@ fn main() -> anyhow::Result<()> {
     // ---- 3: continuous training against the live registry -----------
     let trainer = Arc::new(OnlineTrainer::new(
         Arc::clone(engine.registry()),
-        Hinge::new(c),
+        LossKind::Hinge,
+        c,
         OnlineConfig {
             epochs_per_round: 2,
             threads: 2,
             max_window: test.n().max(1),
             seed: 7,
+            ..Default::default()
         },
     ));
 

@@ -3,17 +3,18 @@
 //!  * shrinking on/off (the LIBLINEAR heuristic),
 //! measured on the rcv1 analog: epochs-to-gap and updates performed.
 //!
+//! Dispatch goes through the solver registry (`solver::lookup` +
+//! `TrainSession`) so this bench cannot drift from the public API.
+//!
 //! Run: `cargo bench --bench ablation_sampling`
 
 use passcode::data::registry;
-use passcode::eval;
-use passcode::loss::Hinge;
-use passcode::solver::{Sampling, SerialDcd, SolveOptions};
+use passcode::loss::LossKind;
+use passcode::solver::{lookup, Sampling, Solver, SolveOptions};
 use passcode::util::Timer;
 
 fn main() {
     let (tr, _, c) = registry::load("rcv1", 0.1).unwrap();
-    let loss = Hinge::new(c);
     println!("=== Ablation: sampling scheme + shrinking (rcv1 analog) ===\n");
     println!(
         "{:<28} {:>8} {:>12} {:>12} {:>10}",
@@ -25,23 +26,31 @@ fn main() {
         ("permutation + shrinking", Sampling::Permutation, true),
     ] {
         for epochs in [5usize, 15, 30] {
+            let solver = lookup("dcd").unwrap();
             let t = Timer::start();
-            let r = SerialDcd::solve(
-                &tr,
-                &loss,
-                &SolveOptions {
-                    epochs,
-                    sampling,
-                    shrinking,
-                    ..Default::default()
-                },
-                None,
-            );
+            let mut session = solver
+                .session(
+                    &tr,
+                    LossKind::Hinge,
+                    c,
+                    SolveOptions {
+                        epochs,
+                        sampling,
+                        shrinking,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            session.run_epochs(epochs).unwrap();
             let secs = t.secs();
-            let gap = eval::duality_gap(&tr, &loss, &r.alpha);
+            let gap = session.duality_gap();
             println!(
                 "{:<28} {:>8} {:>12} {:>12.4e} {:>10.3}",
-                name, epochs, r.updates, gap, secs
+                name,
+                epochs,
+                session.updates(),
+                gap,
+                secs
             );
         }
         println!();

@@ -10,9 +10,9 @@
 
 use passcode::data::registry;
 use passcode::eval;
-use passcode::loss::Hinge;
+use passcode::loss::{Hinge, LossKind};
 use passcode::simcore::{self, CostModel, Mechanism, SimConfig};
-use passcode::solver::{SerialDcd, SolveOptions};
+use passcode::solver::{lookup, Solver, SolveOptions};
 
 fn main() {
     let scale = std::env::var("PASSCODE_BENCH_SCALE")
@@ -26,14 +26,18 @@ fn main() {
         let (tr, te, c) = registry::load(dataset, scale).unwrap();
         let loss = Hinge::new(c);
         let cost = CostModel::default();
-        // LIBLINEAR-style reference accuracy: serial DCD w/ shrinking.
-        let reference = SerialDcd::solve(
-            &tr,
-            &loss,
-            &SolveOptions { epochs: 30, shrinking: true, ..Default::default() },
-            None,
-        );
-        let ref_acc = eval::accuracy(&te, &reference.w_hat);
+        // LIBLINEAR-style reference accuracy via the solver registry.
+        let mut reference = lookup("liblinear")
+            .unwrap()
+            .session(
+                &tr,
+                LossKind::Hinge,
+                c,
+                SolveOptions { epochs: 30, ..Default::default() },
+            )
+            .unwrap();
+        reference.run_epochs(30).unwrap();
+        let ref_acc = eval::accuracy(&te, reference.w_hat());
         let target = 0.99 * ref_acc;
         println!("\n--- {dataset} (reference acc {ref_acc:.4}, target {target:.4}) ---");
         println!("series,epoch,sim_secs,test_acc");

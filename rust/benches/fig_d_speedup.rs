@@ -10,11 +10,10 @@
 //!
 //! Run: `cargo bench --bench fig_d_speedup`
 
-use passcode::baselines::Asyscd;
 use passcode::coordinator::experiments;
 use passcode::data::registry;
-use passcode::loss::Hinge;
-use passcode::solver::SolveOptions;
+use passcode::loss::LossKind;
+use passcode::solver::{lookup, Solver, SolveOptions};
 use passcode::util::Timer;
 
 fn main() {
@@ -42,28 +41,26 @@ fn main() {
     }
 
     // AsySCD's "scaling without speedup" (news20 only, like the paper):
-    // wall-clock per epoch is dominated by the O(n) gradient scan.
+    // wall-clock per epoch is dominated by the O(n) gradient scan.  Both
+    // runs dispatch through the solver registry.
     println!("\n--- AsySCD vs serial DCD (news20 analog, real wall-clock) ---");
     let (tr, _, c) = registry::load("news20", (scale * 0.5).min(0.05)).unwrap();
-    let loss = Hinge::new(c);
-    let t = Timer::start();
-    let _ = passcode::solver::SerialDcd::solve(
-        &tr,
-        &loss,
-        &SolveOptions { epochs, ..Default::default() },
-        None,
-    );
-    let dcd_secs = t.secs();
-    let t = Timer::start();
-    let _ = Asyscd::default()
-        .solve(
-            &tr,
-            &loss,
-            &SolveOptions { epochs, threads: 2, ..Default::default() },
-            None,
-        )
-        .unwrap();
-    let asy_secs = t.secs();
+    let run = |name: &str, threads: usize| -> f64 {
+        let solver = lookup(name).unwrap();
+        let t = Timer::start();
+        let mut session = solver
+            .session(
+                &tr,
+                LossKind::Hinge,
+                c,
+                SolveOptions { epochs, threads, ..Default::default() },
+            )
+            .unwrap();
+        session.run_epochs(epochs).unwrap();
+        t.secs()
+    };
+    let dcd_secs = run("dcd", 1);
+    let asy_secs = run("asyscd", 2);
     println!("  serial DCD: {dcd_secs:.3}s   AsySCD(2 threads incl. Q init): {asy_secs:.3}s");
     println!(
         "  [{}] AsySCD slower than serial DCD ({:.0}x) — paper Fig 2(d)",

@@ -9,9 +9,11 @@
 //! Run: `cargo bench --bench perf_hotpath`
 
 use passcode::data::registry;
-use passcode::loss::Hinge;
+use passcode::loss::{Hinge, LossKind};
 use passcode::simcore::{self, Mechanism, SimConfig};
-use passcode::solver::{MemoryModel, Passcode, SerialDcd, SolveOptions};
+use passcode::solver::{
+    lookup, MemoryModel, Passcode, SerialDcd, Solver, SolveOptions,
+};
 use passcode::util::stats::bench_secs;
 
 fn main() {
@@ -67,6 +69,31 @@ fn main() {
             );
         });
         report(name, s.median);
+    }
+
+    // Registry/session path for the same solvers: measures the cost of
+    // the `solver::api` dispatch (enum-loss calls + per-epoch warm-start
+    // rendezvous) against the raw monomorphized rows above — the number
+    // to watch if the TrainSession layer ever lands on a hot path.
+    for name in ["dcd", "passcode-wild"] {
+        let solver = lookup(name).unwrap();
+        let s = bench_secs(1, 5, || {
+            let mut session = solver
+                .session(
+                    &tr,
+                    LossKind::Hinge,
+                    c,
+                    SolveOptions {
+                        threads: 1,
+                        epochs,
+                        eval_every: 0,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            session.run_epochs(epochs).unwrap();
+        });
+        report(&format!("session:{name}@1"), s.median);
     }
 
     // Simulator event throughput (events ≈ updates).

@@ -29,6 +29,7 @@ use super::super::solver::{Progress, ProgressFn, SolveOptions, SolveResult};
 pub const DEFAULT_Q_BUDGET: usize = 1 << 30;
 
 /// AsySCD solver.
+#[derive(Debug, Clone)]
 pub struct Asyscd {
     /// Step size γ (paper: 1/2).
     pub gamma: f64,
@@ -45,19 +46,12 @@ impl Default for Asyscd {
 }
 
 impl Asyscd {
-    /// Run AsySCD.  Errors out (like the paper's OOM) when `n²·8` exceeds
-    /// the budget.
-    pub fn solve<L: Loss>(
-        &self,
-        ds: &Dataset,
-        loss: &L,
-        opts: &SolveOptions,
-        mut on_progress: Option<&mut ProgressFn<'_>>,
-    ) -> Result<SolveResult> {
-        let n = ds.n();
+    /// Check the dense-Q memory guard for an `n`-row problem.  Errors out
+    /// (like the paper's OOM) when `n²·8` exceeds the budget.
+    pub fn check_budget(&self, n: usize) -> Result<()> {
         let need = n.checked_mul(n).and_then(|x| x.checked_mul(8));
         match need {
-            Some(bytes) if bytes <= self.q_budget => {}
+            Some(bytes) if bytes <= self.q_budget => Ok(()),
             _ => bail!(
                 "AsySCD needs {} bytes for the dense {n}x{n} Hessian Q, \
                  budget is {} — the paper hit the same wall on all \
@@ -66,14 +60,64 @@ impl Asyscd {
                 self.q_budget
             ),
         }
+    }
+
+    /// Form the dense Gram matrix `Q` behind the memory guard — split out
+    /// so a [`crate::solver::TrainSession`] can pay the `O(n·nnz)` cost
+    /// once and reuse `Q` across epochs.
+    pub fn gram(&self, ds: &Dataset) -> Result<Vec<f64>> {
+        self.check_budget(ds.n())?;
+        Ok(form_gram(ds))
+    }
+
+    /// Run AsySCD end to end (guard + Q formation + updates).
+    ///
+    /// Thin shim over [`Asyscd::gram`] + [`Asyscd::solve_with_gram`];
+    /// prefer the [`crate::solver::Solver`] registry for resumable runs.
+    pub fn solve<L: Loss>(
+        &self,
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> Result<SolveResult> {
+        let gram_t = Timer::start();
+        let q = self.gram(ds)?;
+        let gram_secs = gram_t.secs();
+        let mut r =
+            self.solve_with_gram(ds, loss, opts, &q, None, on_progress);
+        // Q formation is init-stage work (the paper counts it that way).
+        r.phases.add("init", gram_secs);
+        Ok(r)
+    }
+
+    /// Run AsySCD over a precomputed Gram matrix `q` (row-major `n×n`),
+    /// optionally warm-started from `α₀`.  `ŵ` is not maintained — the
+    /// returned `w_hat` is materialized as `Σ α_i x_i` at the end.
+    pub fn solve_with_gram<L: Loss>(
+        &self,
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        q: &[f64],
+        alpha0: Option<&[f64]>,
+        mut on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        let n = ds.n();
+        assert_eq!(q.len(), n * n, "Gram matrix dimension");
 
         let p = opts.threads.max(1);
         let mut phases = Phases::new();
 
-        // ---- init: form Q (the expensive part the paper calls out) ----
+        // ---- init: partition setup (Q is formed by the caller) --------
         let init_t = Timer::start();
-        let q = form_gram(ds);
-        let alpha = SharedVec::zeros(n);
+        let alpha = match alpha0 {
+            Some(a0) => {
+                assert_eq!(a0.len(), n, "warm-start α dimension");
+                SharedVec::from_slice(a0)
+            }
+            None => SharedVec::zeros(n),
+        };
         let mut rng = Pcg32::new(opts.seed, 0xA57);
         let perm = rng.permutation(n);
         let blocks: Vec<Vec<usize>> = {
@@ -176,13 +220,13 @@ impl Asyscd {
 
         let alpha_v = alpha.to_vec();
         let w_hat = ds.x.transpose_dot(&alpha_v);
-        Ok(SolveResult {
+        SolveResult {
             alpha: alpha_v,
             w_hat,
             epochs_run: epochs_done.load(Ordering::SeqCst) as usize,
             updates: updates.load(Ordering::Relaxed),
             phases,
-        })
+        }
     }
 }
 

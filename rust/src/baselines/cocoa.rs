@@ -26,10 +26,26 @@ use super::super::solver::{Progress, ProgressFn, SolveOptions, SolveResult};
 pub struct Cocoa;
 
 impl Cocoa {
+    /// Run CoCoA cold-started from `α = 0`, `w = 0`.
+    ///
+    /// Thin shim over [`Cocoa::solve_from`]; prefer the
+    /// [`crate::solver::Solver`] registry for resumable training.
     pub fn solve<L: Loss>(
         ds: &Dataset,
         loss: &L,
         opts: &SolveOptions,
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        Self::solve_from(ds, loss, opts, None, on_progress)
+    }
+
+    /// Run CoCoA, optionally warm-started from `(α₀, ŵ₀)` — the resumable
+    /// core [`crate::solver::TrainSession`] drives round by round.
+    pub fn solve_from<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        warm: Option<(&[f64], &[f64])>,
         mut on_progress: Option<&mut ProgressFn<'_>>,
     ) -> SolveResult {
         let n = ds.n();
@@ -38,9 +54,15 @@ impl Cocoa {
         let mut phases = Phases::new();
 
         let init_t = Timer::start();
-        let qii = ds.x.all_row_sqnorms();
-        let mut alpha = vec![0.0f64; n];
-        let mut w = vec![0.0f64; d];
+        let qii = ds.x.row_sqnorms_cached();
+        let (mut alpha, mut w) = match warm {
+            Some((a0, w0)) => {
+                assert_eq!(a0.len(), n, "warm-start α dimension");
+                assert_eq!(w0.len(), d, "warm-start w dimension");
+                (a0.to_vec(), w0.to_vec())
+            }
+            None => (vec![0.0f64; n], vec![0.0f64; d]),
+        };
         let mut rng = Pcg32::new(opts.seed, 0xC0C0A);
         let perm = rng.permutation(n);
         let blocks: Vec<Vec<usize>> = split_blocks(&perm, k);

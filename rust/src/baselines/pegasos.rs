@@ -15,42 +15,84 @@
 //! with the optional `1/√λ`-ball projection of the original paper.
 
 use crate::data::Dataset;
+use crate::loss::Loss;
 use crate::util::{Pcg32, Phases, Timer};
 
 use super::super::solver::{Progress, ProgressFn, SolveOptions, SolveResult};
 
 /// Pegasos solver for hinge-loss SVM.
+///
+/// Takes the family-standard `(dataset, loss, options, progress)` shape:
+/// the penalty `C` is read off the hinge loss itself (`ℓ(0) = C·max(0,
+/// 1−0) = C`) and mapped to `λ = 1/(Cn)` internally.
+#[derive(Debug, Clone)]
 pub struct Pegasos {
-    /// Penalty parameter of the paper's formulation (Eq. 1); mapped to
-    /// λ = 1/(Cn) internally.
-    pub c: f64,
     /// Apply the 1/√λ ball projection after each step.
     pub project_ball: bool,
 }
 
+impl Default for Pegasos {
+    fn default() -> Self {
+        Self { project_ball: true }
+    }
+}
+
 impl Pegasos {
-    pub fn new(c: f64) -> Self {
-        Self { c, project_ball: true }
+    /// Pegasos with the original paper's ball projection enabled.
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    pub fn solve(
+    /// Run Pegasos cold-started from `w = 0`.  `loss` must be the hinge
+    /// loss (the driver and registry reject anything else up front).
+    ///
+    /// Thin shim over [`Pegasos::solve_from`]; prefer the
+    /// [`crate::solver::Solver`] registry for resumable training.
+    pub fn solve<L: Loss>(
         &self,
         ds: &Dataset,
+        loss: &L,
         opts: &SolveOptions,
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        self.solve_from(ds, loss, opts, None, on_progress)
+    }
+
+    /// Run Pegasos, optionally warm-started from `(w₀, t₀)` where `t₀`
+    /// is the global step counter the `1/(λt)` rate resumes from (after
+    /// `e` uninterrupted epochs, `t = e·n`).
+    pub fn solve_from<L: Loss>(
+        &self,
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        warm: Option<(&[f64], u64)>,
         mut on_progress: Option<&mut ProgressFn<'_>>,
     ) -> SolveResult {
+        assert_eq!(
+            loss.name(),
+            "hinge",
+            "Pegasos optimizes the hinge loss only"
+        );
         let n = ds.n();
         let d = ds.d();
-        let lambda = 1.0 / (self.c * n as f64);
+        // ℓ(0) = C for hinge: recover the penalty from the loss object.
+        let c = loss.primal(0.0);
+        let lambda = 1.0 / (c * n as f64);
         let mut phases = Phases::new();
 
         let init_t = Timer::start();
-        let mut w = vec![0.0f64; d];
+        let (mut w, mut t) = match warm {
+            Some((w0, t0)) => {
+                assert_eq!(w0.len(), d, "warm-start w dimension");
+                (w0.to_vec(), t0)
+            }
+            None => (vec![0.0f64; d], 0),
+        };
         let mut rng = Pcg32::new(opts.seed, 0x9E6A);
         phases.add("init", init_t.secs());
 
         let train_t = Timer::start();
-        let mut t: u64 = 0;
         let mut updates = 0u64;
         let mut epochs_run = 0;
         'outer: for epoch in 0..opts.epochs {
@@ -129,8 +171,9 @@ mod tests {
             &SolveOptions { epochs: 30, ..Default::default() }, None);
         let p_star = eval::primal_objective(&ds, &loss, &dcd.w_hat);
 
-        let peg = Pegasos::new(c).solve(
+        let peg = Pegasos::default().solve(
             &ds,
+            &loss,
             &SolveOptions { epochs: 50, ..Default::default() },
             None,
         );
@@ -148,8 +191,9 @@ mod tests {
     #[test]
     fn accuracy_reasonable() {
         let (tr, te, c) = registry::load("rcv1", 0.02).unwrap();
-        let peg = Pegasos::new(c).solve(
+        let peg = Pegasos::new().solve(
             &tr,
+            &Hinge::new(c),
             &SolveOptions { epochs: 30, ..Default::default() },
             None,
         );

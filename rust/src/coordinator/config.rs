@@ -9,83 +9,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::solver::{MemoryModel, Sampling};
 use crate::util::Json;
 
-/// Which algorithm to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SolverKind {
-    /// Serial DCD (Algorithm 1), shrinking off.
-    Dcd,
-    /// Serial DCD with shrinking = the paper's LIBLINEAR baseline.
-    Liblinear,
-    /// PASSCoDe with the given memory model.
-    Passcode(MemoryModel),
-    /// CoCoA (β_K = 1, local DCD).
-    Cocoa,
-    /// AsySCD (γ = 1/2, dense Q).
-    Asyscd,
-    /// Pegasos primal SGD.
-    Pegasos,
-}
-
-impl SolverKind {
-    pub fn parse(s: &str) -> Result<SolverKind> {
-        Ok(match s {
-            "dcd" => SolverKind::Dcd,
-            "liblinear" => SolverKind::Liblinear,
-            "passcode-lock" => SolverKind::Passcode(MemoryModel::Lock),
-            "passcode-atomic" => SolverKind::Passcode(MemoryModel::Atomic),
-            "passcode-wild" => SolverKind::Passcode(MemoryModel::Wild),
-            "cocoa" => SolverKind::Cocoa,
-            "asyscd" => SolverKind::Asyscd,
-            "pegasos" => SolverKind::Pegasos,
-            other => bail!(
-                "unknown solver {other:?}; expected one of dcd, liblinear, \
-                 passcode-{{lock,atomic,wild}}, cocoa, asyscd, pegasos"
-            ),
-        })
-    }
-
-    pub fn name(&self) -> String {
-        match self {
-            SolverKind::Dcd => "dcd".into(),
-            SolverKind::Liblinear => "liblinear".into(),
-            SolverKind::Passcode(m) => format!("passcode-{}", m.name()),
-            SolverKind::Cocoa => "cocoa".into(),
-            SolverKind::Asyscd => "asyscd".into(),
-            SolverKind::Pegasos => "pegasos".into(),
-        }
-    }
-}
-
-/// Which loss to optimize.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum LossKind {
-    Hinge,
-    SquaredHinge,
-    Logistic,
-    /// Square loss (LS-SVM / ridge on folded labels).
-    Square,
-}
-
-impl LossKind {
-    pub fn parse(s: &str) -> Result<LossKind> {
-        Ok(match s {
-            "hinge" => LossKind::Hinge,
-            "squared-hinge" | "squared_hinge" | "l2svm" => LossKind::SquaredHinge,
-            "logistic" | "logreg" => LossKind::Logistic,
-            "square" | "ridge" | "lssvm" => LossKind::Square,
-            other => bail!("unknown loss {other:?}"),
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            LossKind::Hinge => "hinge",
-            LossKind::SquaredHinge => "squared-hinge",
-            LossKind::Logistic => "logistic",
-            LossKind::Square => "square",
-        }
-    }
-}
+// The kind enums live with the layers they key into: `SolverKind` is the
+// solver registry's key type (one name table shared by the CLI, configs,
+// and `solver::lookup`), `LossKind` the loss library's.  Re-exported here
+// so config-level code keeps its historical import paths.
+pub use crate::loss::LossKind;
+pub use crate::solver::SolverKind;
 
 /// Full run configuration.
 #[derive(Debug, Clone)]
@@ -199,7 +128,7 @@ impl RunConfig {
         Json::obj(vec![
             ("dataset", Json::str(&self.dataset)),
             ("scale", Json::num(self.scale)),
-            ("solver", Json::str(&self.solver.name())),
+            ("solver", Json::str(self.solver.name())),
             ("loss", Json::str(self.loss.name())),
             (
                 "c",

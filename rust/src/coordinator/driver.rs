@@ -1,18 +1,21 @@
-//! The experiment driver: dataset loading, solver dispatch, per-epoch
-//! evaluation, and provenance — one [`RunConfig`] in, one [`RunOutput`]
-//! out.  Every bench and example funnels through here.
+//! The experiment driver: dataset loading, registry-dispatched training,
+//! per-epoch evaluation, and provenance — one [`RunConfig`] in, one
+//! [`RunOutput`] out.  Every bench and example funnels through here.
+//!
+//! Dispatch goes through the `solver::api` registry: the config's
+//! [`SolverKind`](super::config::SolverKind) instantiates a `dyn Solver`,
+//! and the driver drives its `TrainSession` `eval_every` epochs at a
+//! time — evaluation happens *between* `run_epochs` calls, so the logged
+//! `train_secs` exclude it by construction (paper §5.3 protocol).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::baselines::{Asyscd, Cocoa, Pegasos};
 use crate::data::{libsvm, registry, Dataset};
 use crate::eval;
-use crate::loss::{Hinge, Logistic, Loss, Square, SquaredHinge};
-use crate::solver::{
-    Passcode, Progress, SerialDcd, SolveOptions, SolveResult,
-};
+use crate::loss::DynLoss;
+use crate::solver::{Solver, SolveOptions, SolveResult};
 
-use super::config::{LossKind, RunConfig, SolverKind};
+use super::config::RunConfig;
 use super::metrics::{MetricRow, MetricsLog};
 use super::model_io::Model;
 
@@ -64,92 +67,46 @@ pub fn train_model(cfg: &RunConfig) -> Result<(Model, SolveResult)> {
 /// Run a config end to end.
 pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let (train, test, c) = load_data(cfg)?;
-    match cfg.loss {
-        LossKind::Hinge => run_with_loss(cfg, &train, &test, Hinge::new(c)),
-        LossKind::SquaredHinge => {
-            run_with_loss(cfg, &train, &test, SquaredHinge::new(c))
-        }
-        LossKind::Logistic => {
-            run_with_loss(cfg, &train, &test, Logistic::new(c))
-        }
-        LossKind::Square => {
-            run_with_loss(cfg, &train, &test, Square::new(c))
-        }
-    }
-}
-
-fn run_with_loss<L: Loss>(
-    cfg: &RunConfig,
-    train: &Dataset,
-    test: &Dataset,
-    loss: L,
-) -> Result<RunOutput> {
+    let loss = DynLoss::new(cfg.loss, c);
     let opts = SolveOptions {
         epochs: cfg.epochs,
         seed: cfg.seed,
-        shrinking: cfg.shrinking
-            || matches!(cfg.solver, SolverKind::Liblinear),
+        shrinking: cfg.shrinking,
         sampling: cfg.sampling,
         threads: cfg.threads,
         pin_threads: cfg.pin_threads,
         eval_every: cfg.eval_every,
     };
 
+    let solver = cfg.solver.instantiate();
+    let mut session = solver
+        .session(&train, cfg.loss, c, opts)
+        .with_context(|| format!("open {} session", solver.name()))?;
+
     let mut metrics = MetricsLog::new(cfg.solver.name());
-    // Evaluation runs inside the progress callback while workers hold an
-    // epoch barrier; subtract its cumulative cost from reported times so
-    // the curves measure *training* seconds (paper §5.3 protocol).
-    let mut eval_overhead = 0.0f64;
-    let mut callback = |p: &Progress<'_>| -> bool {
-        let t0 = crate::util::Timer::start();
-        let primal = eval::primal_objective(train, &loss, p.w);
-        let dual = eval::dual_objective(train, &loss, p.alpha);
-        let gap = eval::duality_gap(train, &loss, p.alpha);
-        let test_acc = eval::accuracy(test, p.w);
-        metrics.push(MetricRow {
-            epoch: p.epoch,
-            train_secs: (p.train_secs - eval_overhead).max(0.0),
-            primal,
-            dual,
-            gap,
-            test_acc,
-        });
-        eval_overhead += t0.secs();
-        true
-    };
-
-    let has_eval = cfg.eval_every > 0;
-    let cb: Option<&mut crate::solver::ProgressFn<'_>> =
-        if has_eval { Some(&mut callback) } else { None };
-
-    let result: SolveResult = match cfg.solver {
-        SolverKind::Dcd | SolverKind::Liblinear => {
-            SerialDcd::solve(train, &loss, &opts, cb)
+    if cfg.eval_every > 0 {
+        while session.epochs() < cfg.epochs {
+            let k = cfg.eval_every.min(cfg.epochs - session.epochs());
+            session.run_epochs(k)?;
+            metrics.push(MetricRow {
+                epoch: session.epochs(),
+                train_secs: session.train_secs(),
+                primal: eval::primal_objective(&train, &loss, session.w_hat()),
+                dual: eval::dual_objective(&train, &loss, session.alpha()),
+                gap: eval::duality_gap(&train, &loss, session.alpha()),
+                test_acc: eval::accuracy(&test, session.w_hat()),
+            });
         }
-        SolverKind::Passcode(model) => {
-            Passcode::solve(train, &loss, model, &opts, cb)
-        }
-        SolverKind::Cocoa => Cocoa::solve(train, &loss, &opts, cb),
-        SolverKind::Asyscd => Asyscd::default()
-            .solve(train, &loss, &opts, cb)
-            .context("AsySCD failed (dense Q guard?)")?,
-        SolverKind::Pegasos => {
-            if loss.name() != "hinge" {
-                bail!("Pegasos baseline supports hinge loss only");
-            }
-            Pegasos::new(
-                // recover C from the loss (hinge) via its primal at z=0
-                loss.primal(0.0),
-            )
-            .solve(train, &opts, cb)
-        }
-    };
+    } else {
+        session.run_epochs(cfg.epochs)?;
+    }
+    let result: SolveResult = session.into_result();
 
-    let acc_what = eval::accuracy(test, &result.w_hat);
-    let wbar = eval::wbar_from_alpha(train, &result.alpha);
-    let acc_wbar = eval::accuracy(test, &wbar);
-    let primal_final = eval::primal_objective(train, &loss, &result.w_hat);
-    let gap_final = eval::duality_gap(train, &loss, &result.alpha);
+    let acc_what = eval::accuracy(&test, &result.w_hat);
+    let wbar = eval::wbar_from_alpha(&train, &result.alpha);
+    let acc_wbar = eval::accuracy(&test, &wbar);
+    let primal_final = eval::primal_objective(&train, &loss, &result.w_hat);
+    let gap_final = eval::duality_gap(&train, &loss, &result.alpha);
 
     Ok(RunOutput {
         config: cfg.clone(),
@@ -164,6 +121,7 @@ fn run_with_loss<L: Loss>(
 
 #[cfg(test)]
 mod tests {
+    use super::super::config::{LossKind, SolverKind};
     use super::*;
     use crate::solver::MemoryModel;
 

@@ -195,10 +195,7 @@ pub fn fig_convergence(
             scale,
             solver,
             epochs,
-            threads: match solver {
-                SolverKind::Dcd | SolverKind::Liblinear => 1,
-                _ => threads,
-            },
+            threads: if solver.is_serial() { 1 } else { threads },
             eval_every: 1,
             ..Default::default()
         };

@@ -1,13 +1,15 @@
 //! Trained-model serialization: save/load `ŵ` (plus provenance) as JSON,
-//! and a batch prediction service over LIBSVM files — the deployment
-//! surface a downstream user of this library actually touches
-//! (`passcode train --save-model m.json` → `passcode predict`).
+//! training [`Checkpoint`] persistence for `TrainSession` restore, and a
+//! batch prediction service over LIBSVM files — the deployment surface a
+//! downstream user of this library actually touches (`passcode train
+//! --save-model m.json` → `passcode predict`).
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
+use crate::solver::Checkpoint;
 use crate::util::Json;
 
 use super::config::RunConfig;
@@ -34,7 +36,7 @@ impl Model {
             w,
             loss: cfg.loss.name().to_string(),
             c,
-            solver: cfg.solver.name(),
+            solver: cfg.solver.name().to_string(),
             dataset: cfg.dataset.clone(),
         }
     }
@@ -137,6 +139,31 @@ impl Model {
         }
         (correct as f64 / ds.n().max(1) as f64, preds)
     }
+}
+
+/// Persist a training [`Checkpoint`] (the `TrainSession` snapshot) as
+/// pretty JSON — the on-disk leg of checkpoint/restore.
+pub fn save_checkpoint(
+    ckpt: &Checkpoint,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    std::fs::write(path.as_ref(), ckpt.to_json().to_pretty()).with_context(
+        || format!("write checkpoint {}", path.as_ref().display()),
+    )
+}
+
+/// Load a training [`Checkpoint`] from disk; errors carry the offending
+/// path and what went wrong (unreadable file, malformed JSON, wrong
+/// schema) — corrupted checkpoints must never panic a restore path.
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let json = Json::parse(&text).with_context(|| {
+        format!("parse checkpoint JSON from {}", path.display())
+    })?;
+    Checkpoint::from_json(&json)
+        .with_context(|| format!("invalid checkpoint file {}", path.display()))
 }
 
 #[cfg(test)]
@@ -244,6 +271,61 @@ mod tests {
         // Missing file: error, not panic.
         let missing = dir.join("does_not_exist.json");
         assert!(Model::load(&missing).is_err());
+    }
+
+    #[test]
+    fn checkpoint_save_load_roundtrip_is_exact() {
+        let ckpt = Checkpoint {
+            solver: "passcode-wild".into(),
+            loss: "hinge".into(),
+            c: 0.5,
+            // Needs all 64 bits: JSON numbers (f64) would corrupt it.
+            seed: (1u64 << 60) + 3,
+            epochs_done: 3,
+            updates: 123,
+            alpha: vec![0.0, 0.25, 0.5],
+            w_hat: vec![1.5, -2.0],
+            shrink: None,
+        };
+        let dir = std::env::temp_dir().join("passcode_ckpt_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        save_checkpoint(&ckpt, &path).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), ckpt);
+    }
+
+    #[test]
+    fn corrupted_checkpoint_errors_with_path_context() {
+        let dir = std::env::temp_dir().join("passcode_ckpt_io");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Truncated JSON.
+        let path = dir.join("truncated_ckpt.json");
+        std::fs::write(&path, "{\"format\": \"passcode-ch").unwrap();
+        let msg = format!("{:#}", load_checkpoint(&path).unwrap_err());
+        assert!(msg.contains("truncated_ckpt.json"), "{msg}");
+        assert!(msg.contains("parse checkpoint JSON"), "{msg}");
+
+        // Valid JSON, wrong schema.
+        let path = dir.join("foreign_ckpt.json");
+        std::fs::write(&path, "{\"hello\": 1}").unwrap();
+        let msg = format!("{:#}", load_checkpoint(&path).unwrap_err());
+        assert!(msg.contains("invalid checkpoint file"), "{msg}");
+
+        // α / n disagreement.
+        let path = dir.join("dim_ckpt.json");
+        std::fs::write(
+            &path,
+            r#"{"format":"passcode-checkpoint-v1","solver":"dcd",
+                "loss":"hinge","c":1,"seed":1,"epochs_done":0,"updates":0,
+                "n":3,"d":1,"alpha":[0,0],"w_hat":[0]}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", load_checkpoint(&path).unwrap_err());
+        assert!(msg.contains("dimension mismatch"), "{msg}");
+
+        // Missing file: error, not panic.
+        assert!(load_checkpoint(dir.join("nope.json")).is_err());
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Hyper-parameter tuning: k-fold cross-validated grid search over the
 //! penalty `C` — how the paper's Table-3 `C` values would be picked in
 //! practice (LIBLINEAR ships the same facility as `-C`).
+//!
+//! The trainer is any [`Solver`] registry entry — fold models are fit
+//! through `TrainSession`s, so every algorithm in the family can back
+//! the grid search.
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::eval;
-use crate::loss::Hinge;
-use crate::solver::{MemoryModel, Passcode, SolveOptions};
+use crate::loss::LossKind;
+use crate::solver::{Solver, SolveOptions};
 use crate::util::Pcg32;
 
 /// Result of one grid point.
@@ -20,7 +24,8 @@ pub struct GridPoint {
     pub fold_accs: Vec<f64>,
 }
 
-/// k-fold CV over a C grid with PASSCoDe-Wild as the trainer.
+/// k-fold CV over a C grid with `solver` (any registry entry) as the
+/// trainer, optimizing the hinge loss.
 ///
 /// Returns all grid points (sorted by C) and the argmax.
 pub fn grid_search_c(
@@ -28,6 +33,7 @@ pub fn grid_search_c(
     grid: &[f64],
     folds: usize,
     opts: &SolveOptions,
+    solver: &dyn Solver,
 ) -> Result<(Vec<GridPoint>, f64)> {
     anyhow::ensure!(folds >= 2, "need at least 2 folds");
     anyhow::ensure!(!grid.is_empty(), "empty C grid");
@@ -48,7 +54,6 @@ pub fn grid_search_c(
 
     let mut points = Vec::with_capacity(grid.len());
     for &c in grid {
-        let loss = Hinge::new(c);
         let mut fold_accs = Vec::with_capacity(folds);
         for f in 0..folds {
             let val_rows = &fold_rows[f];
@@ -66,14 +71,10 @@ pub fn grid_search_c(
                 val_rows.iter().map(|&i| ds.y[i]).collect(),
                 format!("{}-val{f}", ds.name),
             );
-            let r = Passcode::solve(
-                &train,
-                &loss,
-                MemoryModel::Wild,
-                opts,
-                None,
-            );
-            fold_accs.push(eval::accuracy(&val, &r.w_hat));
+            let mut session =
+                solver.session(&train, LossKind::Hinge, c, opts.clone())?;
+            session.run_epochs(opts.epochs)?;
+            fold_accs.push(eval::accuracy(&val, session.w_hat()));
         }
         let mean_acc = fold_accs.iter().sum::<f64>() / folds as f64;
         points.push(GridPoint { c, mean_acc, fold_accs });
@@ -90,6 +91,7 @@ pub fn grid_search_c(
 mod tests {
     use super::*;
     use crate::data::registry;
+    use crate::solver::{lookup, MemoryModel, PasscodeSolver};
 
     #[test]
     fn grid_search_runs_and_orders_sanely() {
@@ -101,7 +103,9 @@ mod tests {
             ..Default::default()
         };
         let grid = [0.01, 1.0, 100.0];
-        let (points, best) = grid_search_c(&tr, &grid, 3, &opts).unwrap();
+        let solver = PasscodeSolver(MemoryModel::Wild);
+        let (points, best) =
+            grid_search_c(&tr, &grid, 3, &opts, &solver).unwrap();
         assert_eq!(points.len(), 3);
         assert!(grid.contains(&best));
         for p in &points {
@@ -114,8 +118,9 @@ mod tests {
     fn rejects_degenerate_inputs() {
         let (tr, _, _) = registry::load("rcv1", 0.01).unwrap();
         let opts = SolveOptions::default();
-        assert!(grid_search_c(&tr, &[], 3, &opts).is_err());
-        assert!(grid_search_c(&tr, &[1.0], 1, &opts).is_err());
+        let solver = PasscodeSolver(MemoryModel::Wild);
+        assert!(grid_search_c(&tr, &[], 3, &opts, &solver).is_err());
+        assert!(grid_search_c(&tr, &[1.0], 1, &opts, &solver).is_err());
     }
 
     #[test]
@@ -128,7 +133,22 @@ mod tests {
             epochs: 2,
             ..Default::default()
         };
-        let (points, _) = grid_search_c(&tr, &[1.0], 4, &opts).unwrap();
+        let solver = lookup("passcode-wild").unwrap();
+        let (points, _) =
+            grid_search_c(&tr, &[1.0], 4, &opts, solver.as_ref()).unwrap();
         assert_eq!(points[0].fold_accs.len(), 4);
+    }
+
+    #[test]
+    fn any_registry_solver_can_back_the_grid() {
+        let (tr, _, _) = registry::load("rcv1", 0.02).unwrap();
+        let opts =
+            SolveOptions { threads: 1, epochs: 3, ..Default::default() };
+        let solver = lookup("dcd").unwrap();
+        let (points, best) =
+            grid_search_c(&tr, &[0.5, 2.0], 2, &opts, solver.as_ref())
+                .unwrap();
+        assert_eq!(points.len(), 2);
+        assert!([0.5, 2.0].contains(&best));
     }
 }

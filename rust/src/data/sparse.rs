@@ -20,6 +20,9 @@ pub struct CsrMatrix {
     values: Vec<f64>,
     /// Number of columns.
     cols: usize,
+    /// Memoized row squared norms ([`CsrMatrix::row_sqnorms_cached`]);
+    /// reset by the one mutating method (`normalize_rows_to_unit_max`).
+    sqnorms: std::sync::OnceLock<Vec<f64>>,
 }
 
 impl CsrMatrix {
@@ -49,7 +52,7 @@ impl CsrMatrix {
             }
             indptr.push(indices.len());
         }
-        Self { indptr, indices, values, cols }
+        Self { indptr, indices, values, cols, sqnorms: Default::default() }
     }
 
     /// Build directly from raw CSR arrays (trusted caller).
@@ -62,7 +65,7 @@ impl CsrMatrix {
         assert!(!indptr.is_empty());
         assert_eq!(indices.len(), values.len());
         assert_eq!(*indptr.last().unwrap(), indices.len());
-        Self { indptr, indices, values, cols }
+        Self { indptr, indices, values, cols, sqnorms: Default::default() }
     }
 
     #[inline]
@@ -111,6 +114,14 @@ impl CsrMatrix {
     /// Algorithm 1; one pass over the data, counted as init time).
     pub fn all_row_sqnorms(&self) -> Vec<f64> {
         (0..self.rows()).map(|i| self.row_sqnorm(i)).collect()
+    }
+
+    /// Memoized view of [`CsrMatrix::all_row_sqnorms`]: computed on the
+    /// first call, shared afterwards.  Solver `TrainSession`s re-enter
+    /// the cores once per epoch and must not pay the O(nnz) norm pass
+    /// each time; repeated `solve` calls over one dataset benefit too.
+    pub fn row_sqnorms_cached(&self) -> &[f64] {
+        self.sqnorms.get_or_init(|| self.all_row_sqnorms())
     }
 
     /// Sparse dot `x_i . w` against a dense vector.
@@ -167,6 +178,8 @@ impl CsrMatrix {
         for v in &mut self.values {
             *v *= scale;
         }
+        // Values changed: drop any memoized norms.
+        self.sqnorms = Default::default();
         scale
     }
 
@@ -191,7 +204,13 @@ impl CsrMatrix {
             values.extend_from_slice(vals);
             indptr.push(indices.len());
         }
-        CsrMatrix { indptr, indices, values, cols: self.cols }
+        CsrMatrix {
+            indptr,
+            indices,
+            values,
+            cols: self.cols,
+            sqnorms: Default::default(),
+        }
     }
 }
 
@@ -237,6 +256,9 @@ mod tests {
         let m = sample();
         assert_eq!(m.row_sqnorm(0), 5.0);
         assert_eq!(m.all_row_sqnorms(), vec![5.0, 9.0, 0.0]);
+        // Memoized view agrees and is stable across calls.
+        assert_eq!(m.row_sqnorms_cached(), &[5.0, 9.0, 0.0]);
+        assert_eq!(m.row_sqnorms_cached(), &[5.0, 9.0, 0.0]);
     }
 
     #[test]

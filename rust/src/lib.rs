@@ -16,19 +16,36 @@
 //!   API (behind the `xla` cargo feature; the default build ships a stub
 //!   engine so no external toolchain is required).
 //!
-//! Training quick start:
+//! Training quick start — every solver in the family (serial DCD, the
+//! three PASSCoDe memory models, CoCoA, AsySCD, Pegasos) sits behind the
+//! [`solver::Solver`] trait; [`solver::lookup`] resolves a registry name
+//! and [`solver::TrainSession`] gives epoch-granular control with warm
+//! starts, deadlines, and checkpoint/restore uniform across the family:
 //!
 //! ```no_run
 //! use passcode::data::registry;
-//! use passcode::loss::Hinge;
-//! use passcode::solver::{MemoryModel, Passcode, SolveOptions};
+//! use passcode::loss::LossKind;
+//! use passcode::solver::{lookup, Solver, SolveOptions, StopWhen};
 //!
 //! let (train, test, c) = registry::load("rcv1", 0.1).unwrap();
-//! let loss = Hinge::new(c);
+//! let solver = lookup("passcode-wild").unwrap();
 //! let opts = SolveOptions { threads: 4, epochs: 10, ..Default::default() };
-//! let r = Passcode::solve(&train, &loss, MemoryModel::Wild, &opts, None);
-//! println!("accuracy = {}", passcode::eval::accuracy(&test, &r.w_hat));
+//! let mut session = solver.session(&train, LossKind::Hinge, c, opts).unwrap();
+//! session.run_epochs(5).unwrap();          // first half of the budget
+//! let ckpt = session.snapshot();           // resumable state (α, ŵ, epoch)
+//! // ... persist via coordinator::model_io::save_checkpoint, or resume
+//! // in place; run_until bounds work by deadline/tolerance/updates:
+//! session.run_until(StopWhen::Tolerance(1e-3)).unwrap();
+//! println!("accuracy = {}", passcode::eval::accuracy(&test, session.w_hat()));
+//! # let _ = ckpt;
 //! ```
+//!
+//! **Migration note:** the inherent entry points (`SerialDcd::solve`,
+//! `Passcode::solve` / `solve_warm`, `Cocoa::solve`, `Asyscd::solve`,
+//! `Pegasos::solve`) remain as thin cold-start shims over the same
+//! cores — existing code keeps working — but they are soft-deprecated
+//! for new code: the registry + session API is the supported surface
+//! for dispatch, warm starts, and resumable training.
 //!
 //! Serving quick start ([`serve`] — the inference side): a trained model
 //! becomes a traffic-serving engine with wait-free hot-swap, request

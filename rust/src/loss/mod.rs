@@ -15,6 +15,8 @@
 //! the margin `z = w·x_i` and the dual variable lives in the conjugate's
 //! domain (e.g. `[0, C]` for hinge).
 
+use anyhow::{bail, Result};
+
 pub mod hinge;
 pub mod logistic;
 pub mod square;
@@ -24,6 +26,164 @@ pub use hinge::Hinge;
 pub use logistic::Logistic;
 pub use square::Square;
 pub use squared_hinge::SquaredHinge;
+
+/// Which loss to optimize — the config/registry-facing key for the loss
+/// library.  [`DynLoss::new`] turns a kind plus a penalty `C` into a
+/// concrete [`Loss`] without monomorphizing the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Hinge loss (L1-SVM) — the paper's experimental workhorse.
+    Hinge,
+    /// Squared hinge (L2-SVM).
+    SquaredHinge,
+    /// ℓ2-regularized logistic regression.
+    Logistic,
+    /// Square loss (LS-SVM / ridge on folded labels).
+    Square,
+}
+
+/// The one loss name table: canonical name first, aliases after.
+const LOSS_NAMES: &[(&str, LossKind)] = &[
+    ("hinge", LossKind::Hinge),
+    ("squared-hinge", LossKind::SquaredHinge),
+    ("squared_hinge", LossKind::SquaredHinge),
+    ("l2svm", LossKind::SquaredHinge),
+    ("logistic", LossKind::Logistic),
+    ("logreg", LossKind::Logistic),
+    ("square", LossKind::Square),
+    ("ridge", LossKind::Square),
+    ("lssvm", LossKind::Square),
+];
+
+impl LossKind {
+    /// Every kind, in canonical order.
+    pub const ALL: [LossKind; 4] = [
+        LossKind::Hinge,
+        LossKind::SquaredHinge,
+        LossKind::Logistic,
+        LossKind::Square,
+    ];
+
+    /// Parse a loss name (canonical or alias); unknown names list the
+    /// valid ones.
+    pub fn parse(s: &str) -> Result<LossKind> {
+        for (name, kind) in LOSS_NAMES {
+            if *name == s {
+                return Ok(*kind);
+            }
+        }
+        bail!(
+            "unknown loss {s:?}; valid losses: {}",
+            LOSS_NAMES
+                .iter()
+                .map(|(n, _)| *n)
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// Canonical name (what configs/logs print).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Hinge => "hinge",
+            LossKind::SquaredHinge => "squared-hinge",
+            LossKind::Logistic => "logistic",
+            LossKind::Square => "square",
+        }
+    }
+}
+
+/// Runtime-dispatched loss: a [`LossKind`] plus its penalty `C`, packaged
+/// as a concrete [`Loss`] implementation.  This is the type-erasure point
+/// of the solver API — `solver::api::TrainSession` works for every loss
+/// without a generic parameter, at the cost of one enum branch per loss
+/// call (the monomorphized inherent solver paths remain for hot loops).
+#[derive(Debug, Clone, Copy)]
+pub enum DynLoss {
+    /// Hinge loss.
+    Hinge(Hinge),
+    /// Squared hinge.
+    SquaredHinge(SquaredHinge),
+    /// Logistic loss.
+    Logistic(Logistic),
+    /// Square loss.
+    Square(Square),
+}
+
+macro_rules! dispatch_loss {
+    ($self:expr, $l:ident => $e:expr) => {
+        match $self {
+            DynLoss::Hinge($l) => $e,
+            DynLoss::SquaredHinge($l) => $e,
+            DynLoss::Logistic($l) => $e,
+            DynLoss::Square($l) => $e,
+        }
+    };
+}
+
+impl DynLoss {
+    /// Build the concrete loss for `kind` with penalty `c > 0`.
+    pub fn new(kind: LossKind, c: f64) -> DynLoss {
+        match kind {
+            LossKind::Hinge => DynLoss::Hinge(Hinge::new(c)),
+            LossKind::SquaredHinge => {
+                DynLoss::SquaredHinge(SquaredHinge::new(c))
+            }
+            LossKind::Logistic => DynLoss::Logistic(Logistic::new(c)),
+            LossKind::Square => DynLoss::Square(Square::new(c)),
+        }
+    }
+
+    /// The kind this loss dispatches to.
+    pub fn kind(&self) -> LossKind {
+        match self {
+            DynLoss::Hinge(_) => LossKind::Hinge,
+            DynLoss::SquaredHinge(_) => LossKind::SquaredHinge,
+            DynLoss::Logistic(_) => LossKind::Logistic,
+            DynLoss::Square(_) => LossKind::Square,
+        }
+    }
+
+    /// The penalty parameter `C` it was built with.
+    pub fn c(&self) -> f64 {
+        dispatch_loss!(self, l => l.c)
+    }
+}
+
+impl Loss for DynLoss {
+    fn name(&self) -> &'static str {
+        dispatch_loss!(self, l => l.name())
+    }
+
+    #[inline]
+    fn primal(&self, z: f64) -> f64 {
+        dispatch_loss!(self, l => l.primal(z))
+    }
+
+    #[inline]
+    fn conjugate_neg(&self, alpha: f64) -> f64 {
+        dispatch_loss!(self, l => l.conjugate_neg(alpha))
+    }
+
+    #[inline]
+    fn project(&self, alpha: f64) -> f64 {
+        dispatch_loss!(self, l => l.project(alpha))
+    }
+
+    #[inline]
+    fn solve_subproblem(&self, alpha: f64, wx: f64, q: f64) -> f64 {
+        dispatch_loss!(self, l => l.solve_subproblem(alpha, wx, q))
+    }
+
+    #[inline]
+    fn dual_gradient(&self, alpha: f64, wx: f64) -> f64 {
+        dispatch_loss!(self, l => l.dual_gradient(alpha, wx))
+    }
+
+    fn upper_bound(&self) -> Option<f64> {
+        dispatch_loss!(self, l => l.upper_bound())
+    }
+}
 
 /// A loss with everything the solvers need.  Implementations are
 /// zero-sized-plus-C structs; solver loops are monomorphized over them.
@@ -89,5 +249,44 @@ pub(crate) mod testutil {
             }
         }
         0.5 * (a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_kind_roundtrip_and_aliases() {
+        for kind in LossKind::ALL {
+            assert_eq!(LossKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(LossKind::parse("l2svm").unwrap(), LossKind::SquaredHinge);
+        assert_eq!(LossKind::parse("logreg").unwrap(), LossKind::Logistic);
+        assert_eq!(LossKind::parse("ridge").unwrap(), LossKind::Square);
+        let err = format!("{:#}", LossKind::parse("huber").unwrap_err());
+        assert!(err.contains("hinge") && err.contains("logistic"), "{err}");
+    }
+
+    #[test]
+    fn dyn_loss_matches_concrete_loss() {
+        let c = 1.5;
+        let h = Hinge::new(c);
+        let d = DynLoss::new(LossKind::Hinge, c);
+        assert_eq!(d.kind(), LossKind::Hinge);
+        assert_eq!(d.c(), c);
+        assert_eq!(d.name(), "hinge");
+        for &(a, wx, q) in &[(0.0, -0.5, 1.0), (0.7, 2.0, 0.3), (1.5, 1.0, 2.0)] {
+            assert_eq!(d.solve_subproblem(a, wx, q), h.solve_subproblem(a, wx, q));
+            assert_eq!(d.dual_gradient(a, wx), h.dual_gradient(a, wx));
+            assert_eq!(d.project(a), h.project(a));
+            assert_eq!(d.primal(wx), h.primal(wx));
+        }
+        assert_eq!(d.upper_bound(), h.upper_bound());
+
+        let lg = Logistic::new(c);
+        let dl = DynLoss::new(LossKind::Logistic, c);
+        let a = dl.project(0.3 * c);
+        assert_eq!(dl.solve_subproblem(a, 0.4, 1.2), lg.solve_subproblem(a, 0.4, 1.2));
     }
 }

@@ -26,12 +26,12 @@ use passcode::coordinator::{
     cli::Cli, config::RunConfig, driver, experiments, model_io::Model,
 };
 use passcode::data::registry;
-use passcode::loss::Hinge;
+use passcode::loss::{Hinge, LossKind};
 use passcode::net::{Router, RouteSpec, RoutesConfig, Server, ServerConfig};
 use passcode::runtime::{Engine, Evaluator};
 use passcode::serve::{self, ReplayConfig, ServeConfig, ServeEngine};
 use passcode::simcore;
-use passcode::solver::SerialDcd;
+use passcode::solver::{lookup, Solver, SolveOptions};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -446,12 +446,15 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
     let epochs = cli.opt_parse("epochs", 5usize)?;
     let (train, _, c) = registry::load(&dataset, scale)?;
     let loss = Hinge::new(c);
-    let r = SerialDcd::solve(
+    let solver = lookup("dcd")?;
+    let mut session = solver.session(
         &train,
-        &loss,
-        &passcode::solver::SolveOptions { epochs, ..Default::default() },
-        None,
-    );
+        LossKind::Hinge,
+        c,
+        SolveOptions { epochs, ..Default::default() },
+    )?;
+    session.run_epochs(epochs)?;
+    let r = session.into_result();
     let native = passcode::eval::primal_objective(&train, &loss, &r.w_hat);
     let engine = Engine::load_default()?;
     let aot = Evaluator::new(&engine).eval(&train, &r.w_hat)?;

@@ -34,7 +34,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::driver;
 use crate::coordinator::model_io::Model;
-use crate::loss::Hinge;
+use crate::loss::LossKind;
 use crate::serve::{
     OnlineConfig, OnlineTrainer, Prediction, ServeConfig, ServeEngine,
     ThroughputReport,
@@ -224,7 +224,7 @@ pub struct Route {
     /// Route name.
     pub name: String,
     engine: ServeEngine,
-    trainer: Option<Arc<OnlineTrainer<Hinge>>>,
+    trainer: Option<Arc<OnlineTrainer>>,
     trainer_stop: Arc<AtomicBool>,
     trainer_loop: Option<JoinHandle<u64>>,
 }
@@ -268,12 +268,14 @@ impl Route {
         let (trainer, trainer_loop) = if spec.online {
             let t = Arc::new(OnlineTrainer::new(
                 Arc::clone(engine.registry()),
-                Hinge::new(c),
+                LossKind::Hinge,
+                c,
                 OnlineConfig {
                     epochs_per_round: spec.online_epochs,
                     threads: spec.threads.max(1),
                     max_window: spec.online_window,
                     seed: spec.seed,
+                    ..Default::default()
                 },
             ));
             let h = OnlineTrainer::spawn_loop(

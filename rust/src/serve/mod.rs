@@ -15,8 +15,9 @@
 //!   [`crate::util::affinity`] pinning) with per-shard throughput
 //!   counters.
 //! * [`online`] — async continuous trainer: PASSCoDe-Wild epochs over a
-//!   stream of freshly labeled rows, warm-started from the live
-//!   `(α, ŵ)` via [`Passcode::solve_warm`], published back through the
+//!   stream of freshly labeled rows, run as a deadline-bounded
+//!   `TrainSession` resumed from the live `(α, ŵ)` (see
+//!   [`crate::solver::TrainSession`]), published back through the
 //!   registry.
 //! * [`stats`] — latency histograms (p50/p95/p99) and QPS reporting
 //!   through [`crate::coordinator::metrics`].
@@ -51,8 +52,8 @@ use anyhow::Result;
 
 use crate::coordinator::model_io::Model;
 use crate::data::registry as data_registry;
-use crate::loss::Hinge;
-use crate::solver::{MemoryModel, Passcode, SolveOptions};
+use crate::loss::LossKind;
+use crate::solver::{MemoryModel, PasscodeSolver, Solver, SolveOptions};
 
 /// Engine-level configuration (queue + pool shape).
 #[derive(Debug, Clone)]
@@ -264,22 +265,23 @@ impl ReplayReport {
 /// timeouts).
 pub fn replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     let (train, test, c) = data_registry::load(&cfg.dataset, cfg.scale)?;
-    let loss = Hinge::new(c);
 
     // ---- offline warm-up: train the initial model -------------------
-    let r = Passcode::solve(
+    let solver = PasscodeSolver(MemoryModel::Wild);
+    let mut session = solver.session(
         &train,
-        &loss,
-        MemoryModel::Wild,
-        &SolveOptions {
+        LossKind::Hinge,
+        c,
+        SolveOptions {
             epochs: cfg.train_epochs,
             threads: cfg.train_threads.max(1),
             seed: cfg.seed,
             eval_every: 0,
             ..Default::default()
         },
-        None,
-    );
+    )?;
+    session.run_epochs(cfg.train_epochs)?;
+    let r = session.into_result();
     let model = Model {
         w: r.w_hat,
         loss: "hinge".into(),
@@ -300,12 +302,14 @@ pub fn replay(cfg: &ReplayConfig) -> Result<ReplayReport> {
     );
     let trainer = OnlineTrainer::new(
         Arc::clone(&registry),
-        loss,
+        LossKind::Hinge,
+        c,
         OnlineConfig {
             epochs_per_round: cfg.online_epochs,
             threads: cfg.train_threads.max(1),
             max_window: test.n().max(1),
             seed: cfg.seed,
+            ..Default::default()
         },
     );
 

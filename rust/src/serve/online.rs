@@ -8,20 +8,24 @@
 //! Theorem 3's backward-error analysis is what licenses predicting with
 //! a `ŵ` that racy updates perturbed.  The trainer keeps a sliding
 //! window of the most recent labeled rows with a per-row dual iterate
-//! `α`; each round runs a few Wild epochs over the window, warm-started
-//! via [`Passcode::solve_warm`] from the live model, and publishes the
-//! result ([`ModelRegistry::publish`]) without ever blocking scorers.
+//! `α`; each round opens a [`crate::solver::TrainSession`], resumes it
+//! from a [`Checkpoint`] built of the live model's `ŵ` and the window's
+//! `α`, runs it under `run_until(Deadline)` so retraining respects the
+//! serving latency budget, and publishes the result
+//! ([`ModelRegistry::publish`]) without ever blocking scorers.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::model_io::Model;
 use crate::data::{CsrMatrix, Dataset, Entry};
-use crate::loss::Loss;
-use crate::solver::{MemoryModel, Passcode, SolveOptions};
+use crate::loss::LossKind;
+use crate::solver::{
+    Checkpoint, MemoryModel, PasscodeSolver, Solver, SolveOptions, StopWhen,
+};
 
 use super::registry::ModelRegistry;
 
@@ -36,11 +40,23 @@ pub struct OnlineConfig {
     pub max_window: usize,
     /// Base RNG seed (xor-ed with the round counter).
     pub seed: u64,
+    /// Wall-clock budget per training round: the round's session stops
+    /// at `now + round_budget` (epoch-granular — an epoch in flight
+    /// finishes) even if `epochs_per_round` epochs have not all run, so
+    /// a retrain can never blow the serving latency budget.  The default
+    /// is effectively unbounded.
+    pub round_budget: Duration,
 }
 
 impl Default for OnlineConfig {
     fn default() -> Self {
-        Self { epochs_per_round: 2, threads: 1, max_window: 4096, seed: 42 }
+        Self {
+            epochs_per_round: 2,
+            threads: 1,
+            max_window: 4096,
+            seed: 42,
+            round_budget: Duration::from_secs(3600),
+        }
     }
 }
 
@@ -70,27 +86,31 @@ struct Window {
 /// loop per registry — rounds are not meant to run concurrently with
 /// each other.
 #[derive(Debug)]
-pub struct OnlineTrainer<L: Loss> {
+pub struct OnlineTrainer {
     registry: Arc<ModelRegistry>,
-    loss: L,
+    loss: LossKind,
+    c: f64,
     cfg: OnlineConfig,
     window: Mutex<Window>,
     rounds: AtomicU64,
     ingested: AtomicU64,
 }
 
-impl<L: Loss> OnlineTrainer<L> {
-    /// A trainer feeding `registry`, optimizing `loss` (must match the
-    /// loss the served model was trained with).
+impl OnlineTrainer {
+    /// A trainer feeding `registry`, optimizing `loss` with penalty `c`
+    /// (both must match the loss the served model was trained with).
     pub fn new(
         registry: Arc<ModelRegistry>,
-        loss: L,
+        loss: LossKind,
+        c: f64,
         cfg: OnlineConfig,
-    ) -> OnlineTrainer<L> {
+    ) -> OnlineTrainer {
         assert!(cfg.max_window > 0, "max_window must be positive");
+        assert!(c > 0.0, "penalty C must be positive");
         OnlineTrainer {
             registry,
             loss,
+            c,
             cfg,
             window: Mutex::new(Window::default()),
             rounds: AtomicU64::new(0),
@@ -136,15 +156,26 @@ impl<L: Loss> OnlineTrainer<L> {
         self.rounds.load(Ordering::Relaxed)
     }
 
-    /// Run one training round: snapshot the window, run
-    /// `epochs_per_round` PASSCoDe-Wild epochs warm-started from the
-    /// registry's live `ŵ` and the window's `α`, write the updated `α`
-    /// back to surviving window rows, and publish the new model.
-    ///
-    /// Returns the published epoch, or `None` if the window is empty.
-    /// Scorers are never blocked: the only lock taken is the trainer's
-    /// own window mutex (shared with `ingest`, not with scoring).
+    /// Run one training round under the configured `round_budget`
+    /// deadline.  See [`OnlineTrainer::train_round_with_deadline`].
     pub fn train_round(&self) -> Option<u64> {
+        self.train_round_with_deadline(Instant::now() + self.cfg.round_budget)
+    }
+
+    /// Run one training round: snapshot the window, open a PASSCoDe-Wild
+    /// `TrainSession`, resume it from a checkpoint of the registry's
+    /// live `ŵ` plus the window's `α`, run it with
+    /// `run_until(Deadline(deadline))` (at most `epochs_per_round`
+    /// epochs), write the updated `α` back to surviving window rows, and
+    /// publish the new model.
+    ///
+    /// A deadline already in the past publishes the resumed state
+    /// unchanged — accumulated dual state is never lost to a missed
+    /// budget.  Returns the published epoch, or `None` if the window is
+    /// empty.  Scorers are never blocked: the only lock taken is the
+    /// trainer's own window mutex (shared with `ingest`, not with
+    /// scoring).
+    pub fn train_round_with_deadline(&self, deadline: Instant) -> Option<u64> {
         // ---- snapshot the window ------------------------------------
         let (snapshot, alpha0, snap_evicted) = {
             let w = self.window.lock().expect("window poisoned");
@@ -179,24 +210,36 @@ impl<L: Loss> OnlineTrainer<L> {
             "online-window",
         );
 
-        // ---- warm-started Wild epochs -------------------------------
+        // ---- deadline-bounded Wild session, resumed warm ------------
         let round = self.rounds.fetch_add(1, Ordering::Relaxed);
+        let seed = self.cfg.seed ^ (round.wrapping_mul(0x9E37_79B9));
         let opts = SolveOptions {
             epochs: self.cfg.epochs_per_round.max(1),
             threads: self.cfg.threads.max(1),
-            seed: self.cfg.seed ^ (round.wrapping_mul(0x9E37_79B9)),
+            seed,
             eval_every: 0,
             ..Default::default()
         };
-        let r = Passcode::solve_warm(
-            &ds,
-            &self.loss,
-            MemoryModel::Wild,
-            &opts,
-            &alpha0,
-            &base.model.w,
-            None,
-        );
+        let solver = PasscodeSolver(MemoryModel::Wild);
+        let mut session = solver
+            .session(&ds, self.loss, self.c, opts)
+            .expect("open online Wild session");
+        let ckpt = Checkpoint {
+            solver: solver.name().to_string(),
+            loss: self.loss.name().to_string(),
+            c: self.c,
+            seed,
+            epochs_done: 0,
+            updates: 0,
+            alpha: alpha0,
+            w_hat: base.model.w.clone(),
+            shrink: None,
+        };
+        session.resume(&ckpt).expect("resume online checkpoint");
+        session
+            .run_until(StopWhen::Deadline(deadline))
+            .expect("online training round");
+        let r = session.into_result();
 
         // ---- write α back to window rows that survived --------------
         {
@@ -231,7 +274,7 @@ impl<L: Loss> OnlineTrainer<L> {
     /// back-to-back, pegging a core and publishing an unbounded stream
     /// of versions into the registry's retained history.
     pub fn spawn_loop(
-        trainer: Arc<OnlineTrainer<L>>,
+        trainer: Arc<OnlineTrainer>,
         stop: Arc<AtomicBool>,
         min_rows: usize,
     ) -> JoinHandle<u64> {
@@ -264,7 +307,6 @@ mod tests {
     use super::*;
     use crate::data::registry as data_registry;
     use crate::eval;
-    use crate::loss::Hinge;
 
     fn zero_registry(d: usize, c: f64) -> Arc<ModelRegistry> {
         Arc::new(ModelRegistry::new(
@@ -285,7 +327,8 @@ mod tests {
         let reg = zero_registry(tr.d(), c);
         let trainer = OnlineTrainer::new(
             Arc::clone(&reg),
-            Hinge::new(c),
+            LossKind::Hinge,
+            c,
             OnlineConfig {
                 epochs_per_round: 3,
                 max_window: tr.n(),
@@ -320,8 +363,12 @@ mod tests {
     #[test]
     fn empty_window_trains_nothing() {
         let reg = zero_registry(4, 1.0);
-        let trainer =
-            OnlineTrainer::new(reg, Hinge::new(1.0), OnlineConfig::default());
+        let trainer = OnlineTrainer::new(
+            reg,
+            LossKind::Hinge,
+            1.0,
+            OnlineConfig::default(),
+        );
         assert!(trainer.train_round().is_none());
         assert_eq!(trainer.rounds(), 0);
     }
@@ -331,7 +378,8 @@ mod tests {
         let reg = zero_registry(3, 1.0);
         let trainer = OnlineTrainer::new(
             Arc::clone(&reg),
-            Hinge::new(1.0),
+            LossKind::Hinge,
+            1.0,
             OnlineConfig { max_window: 2, ..Default::default() },
         );
         trainer.ingest(vec![0], vec![1.0], 1.0);
@@ -350,7 +398,8 @@ mod tests {
         let reg = zero_registry(3, 1.0);
         let trainer = Arc::new(OnlineTrainer::new(
             Arc::clone(&reg),
-            Hinge::new(1.0),
+            LossKind::Hinge,
+            1.0,
             OnlineConfig { epochs_per_round: 1, ..Default::default() },
         ));
         let stop = Arc::new(AtomicBool::new(false));
@@ -391,7 +440,8 @@ mod tests {
         let reg = zero_registry(tr.d(), c);
         let trainer = Arc::new(OnlineTrainer::new(
             Arc::clone(&reg),
-            Hinge::new(c),
+            LossKind::Hinge,
+            c,
             OnlineConfig { epochs_per_round: 1, ..Default::default() },
         ));
         let stop = Arc::new(AtomicBool::new(false));

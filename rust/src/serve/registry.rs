@@ -32,7 +32,7 @@ pub struct ModelVersion {
     /// The model scorers read (`Model::margin` on the live `ŵ`).
     pub model: Model,
     /// Optional dual iterate paired with `model.w` — the warm-start
-    /// state the online trainer resumes from (`Passcode::solve_warm`).
+    /// state the online trainer's `TrainSession` resumes from.
     pub alpha: Option<Vec<f64>>,
 }
 

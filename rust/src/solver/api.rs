@@ -1,0 +1,1108 @@
+//! The unified solver API: one [`Solver`] trait over the whole family
+//! (serial DCD, PASSCoDe-Lock/Atomic/Wild, CoCoA, AsySCD, Pegasos) and a
+//! resumable [`TrainSession`] that makes warm starts, deadline-bounded
+//! retraining, and checkpoint/restore uniform instead of Passcode-only.
+//!
+//! The paper frames all of these as one family — "each thread repeatedly
+//! selects a random dual variable and conducts coordinate updates" — and
+//! this module is that framing as an API:
+//!
+//! * [`SolverKind`] + the single name table behind
+//!   [`SolverKind::parse`] / [`lookup`] / [`solver_names`] — the CLI,
+//!   `RunConfig::set`, and the registry all share it;
+//! * [`Solver::session`] erases the `L: Loss` generic (enum dispatch via
+//!   [`crate::loss::DynLoss`]) so a `Box<dyn Solver>` replaces per-call
+//!   `match` dispatch blocks;
+//! * [`TrainSession`] owns `(α, ŵ, epoch counter, phases)` and exposes
+//!   [`TrainSession::run_epochs`], [`TrainSession::run_until`]
+//!   (deadline / tolerance / update-budget), [`TrainSession::snapshot`]
+//!   and [`TrainSession::resume`].
+//!
+//! **Determinism contract:** epoch `e` of a session always runs with the
+//! same derived RNG stream regardless of how the run was chunked, so
+//! `run k epochs → snapshot → resume → run to n` is bit-for-bit identical
+//! to an uninterrupted `n`-epoch run for deterministic (single-worker)
+//! solvers, and equal up to racy-float noise for the parallel ones.
+//! Sessions rendezvous at every epoch boundary (each epoch is one
+//! warm-started call into the solver core); the inherent `solve` entry
+//! points remain for barrier-free free-running.
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::baselines::{Asyscd, Cocoa, Pegasos};
+use crate::data::Dataset;
+use crate::eval;
+use crate::loss::{DynLoss, Loss, LossKind};
+use crate::util::{Json, Phases, SplitMix64, Timer};
+
+use super::dcd::SerialDcd;
+use super::passcode::{MemoryModel, Passcode};
+use super::shrinking::ShrinkState;
+use super::{SolveOptions, SolveResult};
+
+/// Which algorithm to run — the registry's key type.  The name table
+/// behind [`SolverKind::parse`] / [`SolverKind::name`] is the single
+/// source of solver names for the CLI, configs, and the registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Serial DCD (Algorithm 1), shrinking off.
+    Dcd,
+    /// Serial DCD with shrinking = the paper's LIBLINEAR baseline.
+    Liblinear,
+    /// PASSCoDe with the given memory model.
+    Passcode(MemoryModel),
+    /// CoCoA (β_K = 1, local DCD).
+    Cocoa,
+    /// AsySCD (γ = 1/2, dense Q).
+    Asyscd,
+    /// Pegasos primal SGD.
+    Pegasos,
+}
+
+/// The one solver name table (`--solver <name>`, `RunConfig::set`, and
+/// [`lookup`] all resolve through it).
+const NAME_TABLE: &[(&str, SolverKind)] = &[
+    ("dcd", SolverKind::Dcd),
+    ("liblinear", SolverKind::Liblinear),
+    ("passcode-lock", SolverKind::Passcode(MemoryModel::Lock)),
+    ("passcode-atomic", SolverKind::Passcode(MemoryModel::Atomic)),
+    ("passcode-wild", SolverKind::Passcode(MemoryModel::Wild)),
+    ("cocoa", SolverKind::Cocoa),
+    ("asyscd", SolverKind::Asyscd),
+    ("pegasos", SolverKind::Pegasos),
+];
+
+impl SolverKind {
+    /// Parse a solver name; unknown names list the valid ones.
+    pub fn parse(s: &str) -> Result<SolverKind> {
+        for (name, kind) in NAME_TABLE {
+            if *name == s {
+                return Ok(*kind);
+            }
+        }
+        bail!(
+            "unknown solver {s:?}; valid solvers: {}",
+            solver_names().join(", ")
+        )
+    }
+
+    /// Registry name (what configs/logs print and `parse` accepts).
+    pub fn name(&self) -> &'static str {
+        NAME_TABLE
+            .iter()
+            .find(|(_, k)| k == self)
+            .map(|(n, _)| *n)
+            .expect("every SolverKind appears in NAME_TABLE")
+    }
+
+    /// All kinds, in registry order.
+    pub fn all() -> impl Iterator<Item = SolverKind> {
+        NAME_TABLE.iter().map(|(_, k)| *k)
+    }
+
+    /// Whether the solver runs single-threaded regardless of
+    /// `SolveOptions::threads` (drives thread-count defaults in the
+    /// experiment harness).
+    pub fn is_serial(&self) -> bool {
+        matches!(
+            self,
+            SolverKind::Dcd | SolverKind::Liblinear | SolverKind::Pegasos
+        )
+    }
+
+    /// Build the registry entry for this kind.
+    pub fn instantiate(&self) -> Box<dyn Solver> {
+        match self {
+            SolverKind::Dcd => Box::new(SerialDcd),
+            SolverKind::Liblinear => Box::new(Liblinear),
+            SolverKind::Passcode(m) => Box::new(PasscodeSolver(*m)),
+            SolverKind::Cocoa => Box::new(Cocoa),
+            SolverKind::Asyscd => Box::new(Asyscd::default()),
+            SolverKind::Pegasos => Box::new(Pegasos::default()),
+        }
+    }
+}
+
+/// Every registry solver name, in table order.
+pub fn solver_names() -> Vec<&'static str> {
+    NAME_TABLE.iter().map(|(n, _)| *n).collect()
+}
+
+/// Look a solver up by registry name; unknown names error listing the
+/// valid ones.
+pub fn lookup(name: &str) -> Result<Box<dyn Solver>> {
+    Ok(SolverKind::parse(name)?.instantiate())
+}
+
+/// A training algorithm as a first-class object.  Object-safe, so a
+/// `Box<dyn Solver>` registry replaces the per-call-site `match
+/// cfg.solver` dispatch the driver, tuner, benches, and serving path
+/// used to hand-roll.
+pub trait Solver: Send + Sync {
+    /// The [`SolverKind`] this entry dispatches to.
+    fn kind(&self) -> SolverKind;
+
+    /// Registry name (the `--solver <name>` string).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Open a resumable training session on `ds` optimizing `loss` with
+    /// penalty `c`.  Fails fast on unsupported combinations (Pegasos ×
+    /// non-hinge losses, AsySCD × problems whose dense `Q` exceeds the
+    /// memory budget) instead of erroring mid-run.
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>>;
+}
+
+impl Solver for SerialDcd {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Dcd
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        TrainSession::new(
+            ds,
+            SolverKind::Dcd,
+            Backend::Serial { shrink: None },
+            loss,
+            c,
+            opts,
+        )
+    }
+}
+
+/// Serial DCD with the shrinking heuristic forced on — the paper's
+/// LIBLINEAR baseline as a registry entry.
+pub struct Liblinear;
+
+impl Solver for Liblinear {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Liblinear
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        mut opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        opts.shrinking = true;
+        TrainSession::new(
+            ds,
+            SolverKind::Liblinear,
+            Backend::Serial { shrink: None },
+            loss,
+            c,
+            opts,
+        )
+    }
+}
+
+/// PASSCoDe as a registry entry: the memory model is part of the solver
+/// identity (`passcode-lock` / `passcode-atomic` / `passcode-wild`).
+pub struct PasscodeSolver(
+    /// Which mechanism guards the shared-`w` writes.
+    pub MemoryModel,
+);
+
+impl Solver for PasscodeSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Passcode(self.0)
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        TrainSession::new(
+            ds,
+            self.kind(),
+            Backend::Passcode(self.0),
+            loss,
+            c,
+            opts,
+        )
+    }
+}
+
+impl Solver for Cocoa {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Cocoa
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        TrainSession::new(ds, SolverKind::Cocoa, Backend::Cocoa, loss, c, opts)
+    }
+}
+
+impl Solver for Asyscd {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Asyscd
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        // Fail the dense-Q memory guard at session-open time; the O(n·nnz)
+        // Gram formation itself is deferred to the first epoch and cached
+        // for the session's lifetime.
+        self.check_budget(ds.n())?;
+        TrainSession::new(
+            ds,
+            SolverKind::Asyscd,
+            Backend::Asyscd { cfg: self.clone(), gram: None },
+            loss,
+            c,
+            opts,
+        )
+    }
+}
+
+impl Solver for Pegasos {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Pegasos
+    }
+
+    fn session<'a>(
+        &self,
+        ds: &'a Dataset,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        ensure!(
+            loss == LossKind::Hinge,
+            "Pegasos baseline supports hinge loss only (got {})",
+            loss.name()
+        );
+        TrainSession::new(
+            ds,
+            SolverKind::Pegasos,
+            Backend::Pegasos { project_ball: self.project_ball },
+            loss,
+            c,
+            opts,
+        )
+    }
+}
+
+/// Per-solver session state (cached cross-epoch artifacts live here).
+enum Backend {
+    Serial {
+        /// Persistent shrinking state (created lazily when
+        /// `SolveOptions::shrinking` is on): the heuristic's active set
+        /// and PG bounds must survive across 1-epoch calls, or a fresh
+        /// per-epoch state (bounds at ±∞) could never skip anything.
+        shrink: Option<ShrinkState>,
+    },
+    Passcode(MemoryModel),
+    Cocoa,
+    Asyscd {
+        cfg: Asyscd,
+        /// Dense Gram matrix, formed on the first epoch and reused.
+        gram: Option<Vec<f64>>,
+    },
+    Pegasos {
+        project_ball: bool,
+    },
+}
+
+/// Stop condition for [`TrainSession::run_until`].  Every condition is
+/// checked at epoch boundaries only — an epoch in flight always finishes
+/// (the family's unit of work is one pass over the coordinates).
+#[derive(Debug, Clone, Copy)]
+pub enum StopWhen {
+    /// Stop at the wall-clock deadline (checked *before* each epoch, so
+    /// a deadline already in the past runs zero epochs).
+    Deadline(Instant),
+    /// Stop once the duality gap drops to `tol` (absolute; evaluated
+    /// after each epoch at the cost of one pass over the data).
+    Tolerance(f64),
+    /// Stop once this many additional coordinate updates have been spent.
+    Budget(u64),
+}
+
+/// Why a [`TrainSession::run_until`] / [`TrainSession::run_epochs`] call
+/// returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The call's epoch budget (`SolveOptions::epochs` for `run_until`,
+    /// `k` for `run_epochs`) was exhausted without the condition firing.
+    Completed,
+    /// The wall-clock deadline passed.
+    DeadlineReached,
+    /// The duality-gap tolerance was met.
+    ToleranceReached,
+    /// The update budget was spent.
+    BudgetExhausted,
+}
+
+/// What one `run_*` call did.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Epochs completed by this call.
+    pub epochs_run: usize,
+    /// Coordinate updates performed by this call.
+    pub updates: u64,
+    /// Why the call stopped.
+    pub stopped: StopReason,
+}
+
+/// Cross-epoch state of the shrinking heuristic, captured so a resumed
+/// liblinear session continues with exactly the active set and PG bounds
+/// an uninterrupted run would have.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShrinkCheckpoint {
+    /// Active-set membership per coordinate.
+    pub active: Vec<bool>,
+    /// Previous epoch's max projected gradient `M̄` (may be `+∞`).
+    pub pg_max_old: f64,
+    /// Previous epoch's min projected gradient `m̄` (may be `−∞`).
+    pub pg_min_old: f64,
+}
+
+/// Serializable training state: everything a [`TrainSession::resume`]
+/// needs to continue a run, on this process or after a round trip
+/// through `coordinator::model_io::save_checkpoint`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Registry name of the solver that produced it.
+    pub solver: String,
+    /// Canonical loss name.
+    pub loss: String,
+    /// Penalty parameter.
+    pub c: f64,
+    /// Base RNG seed of the session (adopted by `resume` so the derived
+    /// per-epoch streams continue exactly).
+    pub seed: u64,
+    /// Epochs completed when the snapshot was taken.
+    pub epochs_done: usize,
+    /// Coordinate updates performed so far.
+    pub updates: u64,
+    /// Dual iterate.
+    pub alpha: Vec<f64>,
+    /// Maintained primal vector ŵ.
+    pub w_hat: Vec<f64>,
+    /// Shrinking-heuristic state (`Some` only for serial sessions that
+    /// ran with shrinking on and materialized it).
+    pub shrink: Option<ShrinkCheckpoint>,
+}
+
+impl Checkpoint {
+    /// A zeroed checkpoint (`α = 0`, `ŵ = 0`, epoch 0) — resuming from
+    /// it is identical to a cold start.
+    pub fn zeroed(
+        solver: &str,
+        loss: &str,
+        c: f64,
+        seed: u64,
+        n: usize,
+        d: usize,
+    ) -> Checkpoint {
+        Checkpoint {
+            solver: solver.to_string(),
+            loss: loss.to_string(),
+            c,
+            seed,
+            epochs_done: 0,
+            updates: 0,
+            alpha: vec![0.0; n],
+            w_hat: vec![0.0; d],
+            shrink: None,
+        }
+    }
+
+    /// Serialize (the `passcode-checkpoint-v1` schema
+    /// `coordinator::model_io` persists).  `seed`/`updates` are written
+    /// as decimal strings and PG bounds as f64 bit patterns: both must
+    /// round-trip *exactly* (JSON numbers are f64, which would corrupt
+    /// 64-bit seeds and cannot carry ±∞).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("format", Json::str("passcode-checkpoint-v1")),
+            ("solver", Json::str(&self.solver)),
+            ("loss", Json::str(&self.loss)),
+            ("c", Json::num(self.c)),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("epochs_done", Json::num(self.epochs_done as f64)),
+            ("updates", Json::str(&self.updates.to_string())),
+            ("n", Json::num(self.alpha.len() as f64)),
+            ("d", Json::num(self.w_hat.len() as f64)),
+            ("alpha", Json::arr_f64(&self.alpha)),
+            ("w_hat", Json::arr_f64(&self.w_hat)),
+        ];
+        let shrink_json;
+        if let Some(s) = &self.shrink {
+            shrink_json = Json::obj(vec![
+                (
+                    "active",
+                    Json::arr_f64(
+                        &s.active
+                            .iter()
+                            .map(|&a| if a { 1.0 } else { 0.0 })
+                            .collect::<Vec<f64>>(),
+                    ),
+                ),
+                (
+                    "pg_max_old_bits",
+                    Json::str(&format!("{:016x}", s.pg_max_old.to_bits())),
+                ),
+                (
+                    "pg_min_old_bits",
+                    Json::str(&format!("{:016x}", s.pg_min_old.to_bits())),
+                ),
+            ]);
+            pairs.push(("shrink", shrink_json));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Deserialize, validating the format tag and dimension fields.
+    pub fn from_json(json: &Json) -> Result<Checkpoint> {
+        ensure!(
+            json.get("format")?.as_str()? == "passcode-checkpoint-v1",
+            "not a passcode checkpoint file"
+        );
+        let alpha: Vec<f64> = json
+            .get("alpha")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Result<_>>()?;
+        let w_hat: Vec<f64> = json
+            .get("w_hat")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Result<_>>()?;
+        ensure!(
+            alpha.len() == json.get("n")?.as_usize()?,
+            "checkpoint α dimension mismatch"
+        );
+        ensure!(
+            w_hat.len() == json.get("d")?.as_usize()?,
+            "checkpoint ŵ dimension mismatch"
+        );
+        let shrink = match json.opt("shrink") {
+            None => None,
+            Some(s) => {
+                let active: Vec<bool> = s
+                    .get("active")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_f64()? != 0.0))
+                    .collect::<Result<_>>()?;
+                Some(ShrinkCheckpoint {
+                    active,
+                    pg_max_old: f64_from_bits_hex(
+                        s.get("pg_max_old_bits")?.as_str()?,
+                    )?,
+                    pg_min_old: f64_from_bits_hex(
+                        s.get("pg_min_old_bits")?.as_str()?,
+                    )?,
+                })
+            }
+        };
+        Ok(Checkpoint {
+            solver: json.get("solver")?.as_str()?.to_string(),
+            loss: json.get("loss")?.as_str()?.to_string(),
+            c: json.get("c")?.as_f64()?,
+            seed: json.get("seed")?.as_str()?.parse()?,
+            epochs_done: json.get("epochs_done")?.as_usize()?,
+            updates: json.get("updates")?.as_str()?.parse()?,
+            alpha,
+            w_hat,
+            shrink,
+        })
+    }
+}
+
+/// Exact f64 decode from the 16-hex-digit bit pattern `to_json` writes.
+fn f64_from_bits_hex(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(u64::from_str_radix(s, 16)?))
+}
+
+/// Derived per-epoch seed: epoch `e` always runs the same RNG stream no
+/// matter how the surrounding run was chunked — the property that makes
+/// `snapshot → resume` bit-for-bit equal to an uninterrupted run.
+fn epoch_seed(seed: u64, epoch: usize) -> u64 {
+    let mut sm = SplitMix64::new(
+        seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    sm.next_u64()
+}
+
+/// A resumable training session: owns `(α, ŵ)`, the epoch counter that
+/// drives the per-epoch RNG streams, and the accumulated phase timings.
+/// Created by [`Solver::session`]; borrow of the dataset lasts for the
+/// session's lifetime.
+pub struct TrainSession<'a> {
+    ds: &'a Dataset,
+    kind: SolverKind,
+    backend: Backend,
+    loss: DynLoss,
+    opts: SolveOptions,
+    alpha: Vec<f64>,
+    w_hat: Vec<f64>,
+    epochs_done: usize,
+    updates: u64,
+    phases: Phases,
+}
+
+impl<'a> TrainSession<'a> {
+    fn new(
+        ds: &'a Dataset,
+        kind: SolverKind,
+        backend: Backend,
+        loss: LossKind,
+        c: f64,
+        opts: SolveOptions,
+    ) -> Result<TrainSession<'a>> {
+        ensure!(c > 0.0, "penalty C must be positive (got {c})");
+        Ok(TrainSession {
+            ds,
+            kind,
+            backend,
+            loss: DynLoss::new(loss, c),
+            opts,
+            alpha: vec![0.0; ds.n()],
+            w_hat: vec![0.0; ds.d()],
+            epochs_done: 0,
+            updates: 0,
+            phases: Phases::new(),
+        })
+    }
+
+    /// The solver kind driving this session.
+    pub fn kind(&self) -> SolverKind {
+        self.kind
+    }
+
+    /// The dual iterate after the epochs run so far.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// The maintained primal vector ŵ.
+    pub fn w_hat(&self) -> &[f64] {
+        &self.w_hat
+    }
+
+    /// Epochs completed over the session's lifetime (resume included).
+    pub fn epochs(&self) -> usize {
+        self.epochs_done
+    }
+
+    /// Coordinate updates performed over the session's lifetime.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Cumulative training seconds (excludes init work and everything
+    /// the caller does between `run_*` calls — evaluation is free).
+    pub fn train_secs(&self) -> f64 {
+        self.phases.get("train")
+    }
+
+    /// Cumulative init seconds (row norms, partitions, Gram formation).
+    pub fn init_secs(&self) -> f64 {
+        self.phases.get("init")
+    }
+
+    /// Duality gap of the current iterate (one pass over the data).
+    pub fn duality_gap(&self) -> f64 {
+        eval::duality_gap(self.ds, &self.loss, &self.alpha)
+    }
+
+    /// Run one epoch with its derived seed, folding the result back into
+    /// the session state.
+    fn run_one_epoch(&mut self) -> Result<()> {
+        let mut o = self.opts.clone();
+        o.epochs = 1;
+        o.eval_every = 0;
+        o.seed = epoch_seed(self.opts.seed, self.epochs_done);
+        let loss = self.loss;
+        let r = match &mut self.backend {
+            Backend::Serial { shrink } => {
+                if o.shrinking && shrink.is_none() {
+                    *shrink = Some(ShrinkState::new(
+                        self.ds.n(),
+                        loss.upper_bound(),
+                    ));
+                }
+                SerialDcd::solve_from(
+                    self.ds,
+                    &loss,
+                    &o,
+                    Some((&self.alpha, &self.w_hat)),
+                    shrink.as_mut(),
+                    None,
+                )
+            }
+            Backend::Passcode(m) => Passcode::solve_warm(
+                self.ds,
+                &loss,
+                *m,
+                &o,
+                &self.alpha,
+                &self.w_hat,
+                None,
+            ),
+            Backend::Cocoa => Cocoa::solve_from(
+                self.ds,
+                &loss,
+                &o,
+                Some((&self.alpha, &self.w_hat)),
+                None,
+            ),
+            Backend::Asyscd { cfg, gram } => {
+                if gram.is_none() {
+                    let t = Timer::start();
+                    *gram = Some(cfg.gram(self.ds)?);
+                    self.phases.add("init", t.secs());
+                }
+                cfg.solve_with_gram(
+                    self.ds,
+                    &loss,
+                    &o,
+                    gram.as_ref().expect("gram formed above"),
+                    Some(&self.alpha),
+                    None,
+                )
+            }
+            Backend::Pegasos { project_ball } => {
+                Pegasos { project_ball: *project_ball }.solve_from(
+                    self.ds,
+                    &loss,
+                    &o,
+                    Some((
+                        &self.w_hat,
+                        self.epochs_done as u64 * self.ds.n() as u64,
+                    )),
+                    None,
+                )
+            }
+        };
+        self.alpha = r.alpha;
+        self.w_hat = r.w_hat;
+        self.updates += r.updates;
+        self.epochs_done += 1;
+        self.phases.add("init", r.phases.get("init"));
+        self.phases.add("train", r.phases.get("train"));
+        Ok(())
+    }
+
+    /// Run exactly `k` more epochs.
+    pub fn run_epochs(&mut self, k: usize) -> Result<RunReport> {
+        let before = self.updates;
+        for _ in 0..k {
+            self.run_one_epoch()?;
+        }
+        Ok(RunReport {
+            epochs_run: k,
+            updates: self.updates - before,
+            stopped: StopReason::Completed,
+        })
+    }
+
+    /// Run until `stop` fires, capped at `SolveOptions::epochs` epochs
+    /// per call (the configured round length) so a stalled tolerance or
+    /// a generous deadline cannot spin forever.
+    pub fn run_until(&mut self, stop: StopWhen) -> Result<RunReport> {
+        let max_epochs = self.opts.epochs.max(1);
+        let before = self.updates;
+        let mut epochs_run = 0;
+        let mut stopped = StopReason::Completed;
+        for _ in 0..max_epochs {
+            if let StopWhen::Deadline(d) = stop {
+                if Instant::now() >= d {
+                    stopped = StopReason::DeadlineReached;
+                    break;
+                }
+            }
+            self.run_one_epoch()?;
+            epochs_run += 1;
+            match stop {
+                StopWhen::Tolerance(tol) => {
+                    if self.duality_gap() <= tol {
+                        stopped = StopReason::ToleranceReached;
+                        break;
+                    }
+                }
+                StopWhen::Budget(b) => {
+                    if self.updates - before >= b {
+                        stopped = StopReason::BudgetExhausted;
+                        break;
+                    }
+                }
+                StopWhen::Deadline(_) => {}
+            }
+        }
+        Ok(RunReport {
+            epochs_run,
+            updates: self.updates - before,
+            stopped,
+        })
+    }
+
+    /// Snapshot the full resumable state (including the shrinking
+    /// heuristic's active set for serial sessions that use it).
+    pub fn snapshot(&self) -> Checkpoint {
+        let shrink = match &self.backend {
+            Backend::Serial { shrink: Some(s) } => {
+                let (active, pg_max_old, pg_min_old) = s.export();
+                Some(ShrinkCheckpoint { active, pg_max_old, pg_min_old })
+            }
+            _ => None,
+        };
+        Checkpoint {
+            solver: self.kind.name().to_string(),
+            loss: self.loss.kind().name().to_string(),
+            c: self.loss.c(),
+            seed: self.opts.seed,
+            epochs_done: self.epochs_done,
+            updates: self.updates,
+            alpha: self.alpha.clone(),
+            w_hat: self.w_hat.clone(),
+            shrink,
+        }
+    }
+
+    /// Restore a snapshot into this session.  The checkpoint must come
+    /// from the same solver, loss, penalty `C`, and dimensions; its
+    /// `seed` is adopted so the derived per-epoch RNG streams — and thus
+    /// the remaining epochs — replay exactly what an uninterrupted run
+    /// would have executed.
+    pub fn resume(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        ensure!(
+            ckpt.solver == self.kind.name(),
+            "checkpoint is from solver {:?}, session runs {:?}",
+            ckpt.solver,
+            self.kind.name()
+        );
+        ensure!(
+            ckpt.loss == self.loss.kind().name(),
+            "checkpoint is for loss {:?}, session optimizes {:?}",
+            ckpt.loss,
+            self.loss.kind().name()
+        );
+        ensure!(
+            ckpt.c.to_bits() == self.loss.c().to_bits(),
+            "checkpoint penalty C = {} != session C = {}",
+            ckpt.c,
+            self.loss.c()
+        );
+        ensure!(
+            ckpt.alpha.len() == self.ds.n(),
+            "checkpoint α dimension {} != dataset n {}",
+            ckpt.alpha.len(),
+            self.ds.n()
+        );
+        ensure!(
+            ckpt.w_hat.len() == self.ds.d(),
+            "checkpoint ŵ dimension {} != dataset d {}",
+            ckpt.w_hat.len(),
+            self.ds.d()
+        );
+        if let Some(s) = &ckpt.shrink {
+            ensure!(
+                s.active.len() == self.ds.n(),
+                "checkpoint shrink state dimension {} != dataset n {}",
+                s.active.len(),
+                self.ds.n()
+            );
+        }
+        if let Backend::Serial { shrink } = &mut self.backend {
+            *shrink = ckpt.shrink.as_ref().map(|s| {
+                ShrinkState::import(
+                    self.loss.upper_bound(),
+                    s.active.clone(),
+                    s.pg_max_old,
+                    s.pg_min_old,
+                )
+            });
+        }
+        self.opts.seed = ckpt.seed;
+        self.alpha = ckpt.alpha.clone();
+        self.w_hat = ckpt.w_hat.clone();
+        self.epochs_done = ckpt.epochs_done;
+        self.updates = ckpt.updates;
+        Ok(())
+    }
+
+    /// Finish the session, yielding the family-standard [`SolveResult`].
+    pub fn into_result(self) -> SolveResult {
+        SolveResult {
+            alpha: self.alpha,
+            w_hat: self.w_hat,
+            epochs_run: self.epochs_done,
+            updates: self.updates,
+            phases: self.phases,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    fn small() -> (Dataset, f64) {
+        let (tr, _, c) = registry::load("rcv1", 0.02).unwrap();
+        (tr, c)
+    }
+
+    fn opts(epochs: usize) -> SolveOptions {
+        SolveOptions { epochs, eval_every: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn name_table_roundtrips_and_lists_on_error() {
+        for (name, kind) in NAME_TABLE {
+            assert_eq!(SolverKind::parse(name).unwrap(), *kind);
+            assert_eq!(kind.name(), *name);
+            assert_eq!(kind.instantiate().name(), *name);
+        }
+        let err = format!("{:#}", SolverKind::parse("sgd").unwrap_err());
+        for (name, _) in NAME_TABLE {
+            assert!(err.contains(name), "error should list {name}: {err}");
+        }
+        assert_eq!(SolverKind::all().count(), NAME_TABLE.len());
+    }
+
+    #[test]
+    fn run_until_deadline_in_past_runs_zero_epochs() {
+        let (ds, c) = small();
+        let solver = lookup("passcode-wild").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(50)).unwrap();
+        s.run_epochs(2).unwrap();
+        let alpha_before = s.alpha().to_vec();
+        let r = s.run_until(StopWhen::Deadline(Instant::now())).unwrap();
+        assert_eq!(r.epochs_run, 0);
+        assert_eq!(r.stopped, StopReason::DeadlineReached);
+        assert_eq!(s.alpha(), &alpha_before[..], "state must be untouched");
+        assert_eq!(s.epochs(), 2);
+    }
+
+    #[test]
+    fn run_until_budget_stops_after_one_epoch() {
+        let (ds, c) = small();
+        let solver = lookup("dcd").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(50)).unwrap();
+        let r = s.run_until(StopWhen::Budget(1)).unwrap();
+        assert_eq!(r.epochs_run, 1, "first epoch must overshoot the budget");
+        assert_eq!(r.stopped, StopReason::BudgetExhausted);
+        assert!(r.updates >= 1);
+    }
+
+    #[test]
+    fn run_until_tolerance_reaches_gap() {
+        let (ds, c) = small();
+        let solver = lookup("dcd").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(60)).unwrap();
+        let r = s.run_until(StopWhen::Tolerance(1e-2)).unwrap();
+        assert_eq!(r.stopped, StopReason::ToleranceReached);
+        assert!(s.duality_gap() <= 1e-2);
+        assert!(r.epochs_run < 60, "tolerance should fire before the cap");
+    }
+
+    #[test]
+    fn run_until_caps_at_configured_epochs() {
+        let (ds, c) = small();
+        let solver = lookup("dcd").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(3)).unwrap();
+        let r = s.run_until(StopWhen::Tolerance(0.0)).unwrap();
+        assert_eq!(r.epochs_run, 3);
+        assert_eq!(r.stopped, StopReason::Completed);
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrip() {
+        let (ds, c) = small();
+        let solver = lookup("passcode-atomic").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(3)).unwrap();
+        s.run_epochs(3).unwrap();
+        let ckpt = s.snapshot();
+        let back =
+            Checkpoint::from_json(&Json::parse(&ckpt.to_json().to_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, ckpt);
+        assert_eq!(back.solver, "passcode-atomic");
+        assert_eq!(back.loss, "hinge");
+        assert_eq!(back.epochs_done, 3);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoints() {
+        let (ds, c) = small();
+        let wild = lookup("passcode-wild").unwrap();
+        let mut s = wild.session(&ds, LossKind::Hinge, c, opts(2)).unwrap();
+        // Wrong solver.
+        let ckpt =
+            Checkpoint::zeroed("dcd", "hinge", c, 42, ds.n(), ds.d());
+        assert!(s.resume(&ckpt).is_err());
+        // Wrong dimensions.
+        let ckpt = Checkpoint::zeroed(
+            "passcode-wild",
+            "hinge",
+            c,
+            42,
+            ds.n() + 1,
+            ds.d(),
+        );
+        assert!(s.resume(&ckpt).is_err());
+        // Matching checkpoint resumes fine.
+        let ckpt = Checkpoint::zeroed(
+            "passcode-wild",
+            "hinge",
+            c,
+            42,
+            ds.n(),
+            ds.d(),
+        );
+        s.resume(&ckpt).unwrap();
+        assert_eq!(s.epochs(), 0);
+    }
+
+    #[test]
+    fn session_shrinking_persists_across_epochs_and_skips_work() {
+        // The heuristic only works if its state survives the per-epoch
+        // session calls: a fresh ShrinkState each epoch (bounds at ±∞)
+        // can never deactivate anything.
+        use crate::loss::Hinge;
+        let (ds, c) = small();
+        let mut full =
+            lookup("dcd").unwrap().session(&ds, LossKind::Hinge, c, opts(40)).unwrap();
+        full.run_epochs(40).unwrap();
+        let mut shr = lookup("liblinear")
+            .unwrap()
+            .session(&ds, LossKind::Hinge, c, opts(40))
+            .unwrap();
+        shr.run_epochs(40).unwrap();
+        assert!(
+            shr.updates() < full.updates(),
+            "shrinking skipped nothing through the session path: {} vs {}",
+            shr.updates(),
+            full.updates()
+        );
+        let loss = Hinge::new(c);
+        let p_full = eval::primal_objective(&ds, &loss, full.w_hat());
+        let p_shr = eval::primal_objective(&ds, &loss, shr.w_hat());
+        assert!(
+            (p_full - p_shr).abs() < 0.01 * p_full.abs(),
+            "shrinking changed the answer: {p_full} vs {p_shr}"
+        );
+    }
+
+    #[test]
+    fn shrink_state_rides_checkpoints_exactly() {
+        let (ds, c) = small();
+        let solver = lookup("liblinear").unwrap();
+        let (k, n) = (6usize, 14usize);
+        let mut uninterrupted =
+            solver.session(&ds, LossKind::Hinge, c, opts(n)).unwrap();
+        uninterrupted.run_epochs(n).unwrap();
+
+        let mut first =
+            solver.session(&ds, LossKind::Hinge, c, opts(n)).unwrap();
+        first.run_epochs(k).unwrap();
+        let ckpt = first.snapshot();
+        assert!(
+            ckpt.shrink.is_some(),
+            "liblinear snapshot must carry the shrinking state"
+        );
+        // The shrink state (±∞ bounds included) survives JSON exactly.
+        let back = Checkpoint::from_json(
+            &Json::parse(&ckpt.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, ckpt);
+
+        let mut second =
+            solver.session(&ds, LossKind::Hinge, c, opts(n)).unwrap();
+        second.resume(&back).unwrap();
+        second.run_epochs(n - k).unwrap();
+        assert_eq!(second.alpha(), uninterrupted.alpha(), "α diverged");
+        assert_eq!(second.w_hat(), uninterrupted.w_hat(), "ŵ diverged");
+        assert_eq!(second.updates(), uninterrupted.updates());
+    }
+
+    #[test]
+    fn resume_adopts_seed_and_rejects_foreign_c() {
+        let (ds, c) = small();
+        let solver = lookup("dcd").unwrap();
+        // Session opened with a different seed: resume adopts the
+        // checkpoint's, so the continuation still replays exactly.
+        let mut a = solver.session(&ds, LossKind::Hinge, c, opts(4)).unwrap();
+        a.run_epochs(2).unwrap();
+        let ckpt = a.snapshot();
+        let mut o = opts(4);
+        o.seed = 999;
+        let mut b = solver.session(&ds, LossKind::Hinge, c, o).unwrap();
+        b.resume(&ckpt).unwrap();
+        a.run_epochs(2).unwrap();
+        b.run_epochs(2).unwrap();
+        assert_eq!(a.alpha(), b.alpha(), "seed not adopted on resume");
+
+        // A checkpoint for a different penalty C must be refused.
+        let bad = Checkpoint::zeroed("dcd", "hinge", c * 2.0, 42, ds.n(), ds.d());
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(4)).unwrap();
+        assert!(s.resume(&bad).is_err(), "mismatched C accepted");
+    }
+
+    #[test]
+    fn session_matches_inherent_serial_solver_quality() {
+        // The session path (per-epoch derived seeds) must reach the same
+        // objective neighbourhood as the legacy inherent path.
+        use crate::loss::Hinge;
+        let (ds, c) = small();
+        let legacy = SerialDcd::solve(
+            &ds,
+            &Hinge::new(c),
+            &SolveOptions { epochs: 20, ..Default::default() },
+            None,
+        );
+        let solver = lookup("dcd").unwrap();
+        let mut s =
+            solver.session(&ds, LossKind::Hinge, c, opts(20)).unwrap();
+        s.run_epochs(20).unwrap();
+        let loss = Hinge::new(c);
+        let p_legacy = eval::primal_objective(&ds, &loss, &legacy.w_hat);
+        let p_session = eval::primal_objective(&ds, &loss, s.w_hat());
+        assert!(
+            (p_legacy - p_session).abs() < 0.03 * p_legacy.abs(),
+            "session {p_session} vs legacy {p_legacy}"
+        );
+        assert_eq!(s.epochs(), 20);
+        assert!(s.updates() > 0);
+        assert!(s.train_secs() >= 0.0 && s.init_secs() >= 0.0);
+    }
+}

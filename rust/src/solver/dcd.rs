@@ -16,26 +16,65 @@ use super::{Progress, ProgressFn, Sampling, SolveOptions, SolveResult};
 pub struct SerialDcd;
 
 impl SerialDcd {
-    /// Run Algorithm 1.  `on_progress` fires every `opts.eval_every`
-    /// epochs (if nonzero) and may stop the run by returning `false`.
+    /// Run Algorithm 1 cold-started from `α = 0`, `w = 0`.  `on_progress`
+    /// fires every `opts.eval_every` epochs (if nonzero) and may stop the
+    /// run by returning `false`.
+    ///
+    /// Thin shim over [`SerialDcd::solve_from`]; new code that wants
+    /// epoch-granular control, deadlines, or checkpoint/restore should go
+    /// through the [`crate::solver::Solver`] registry instead.
     pub fn solve<L: Loss>(
         ds: &Dataset,
         loss: &L,
         opts: &SolveOptions,
+        on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> SolveResult {
+        Self::solve_from(ds, loss, opts, None, None, on_progress)
+    }
+
+    /// Run Algorithm 1, optionally warm-started from an `(α₀, ŵ₀)` pair —
+    /// the resumable core that [`crate::solver::TrainSession`] drives one
+    /// epoch at a time.  The caller is responsible for `ŵ₀ = Σ α₀_i x_i`
+    /// if the primal/dual pairing is to stay exact.
+    ///
+    /// `shrink` optionally supplies a *persistent* [`ShrinkState`] so the
+    /// shrinking heuristic's active set and PG bounds survive across
+    /// 1-epoch session calls (a fresh state per epoch can never shrink:
+    /// its bounds start at ±∞).  `None` uses a run-local state — the
+    /// right thing for a single multi-epoch call.
+    pub fn solve_from<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        opts: &SolveOptions,
+        warm: Option<(&[f64], &[f64])>,
+        shrink: Option<&mut ShrinkState>,
         mut on_progress: Option<&mut ProgressFn<'_>>,
     ) -> SolveResult {
         let n = ds.n();
         let d = ds.d();
         let mut phases = Phases::new();
 
-        // ---- init: row norms (one pass over the data, as in §5.2) -----
+        // ---- init: row norms (memoized; one pass on first use, §5.2) --
         let init_t = Timer::start();
-        let qii = ds.x.all_row_sqnorms();
-        let mut alpha = vec![0.0f64; n];
-        let mut w = vec![0.0f64; d];
+        let qii = ds.x.row_sqnorms_cached();
+        let (mut alpha, mut w) = match warm {
+            Some((a0, w0)) => {
+                assert_eq!(a0.len(), n, "warm-start α dimension");
+                assert_eq!(w0.len(), d, "warm-start w dimension");
+                (a0.to_vec(), w0.to_vec())
+            }
+            None => (vec![0.0f64; n], vec![0.0f64; d]),
+        };
         let mut rng = Pcg32::new(opts.seed, 0);
         let mut order: Vec<usize> = (0..n).collect();
-        let mut shrink = ShrinkState::new(n, loss.upper_bound());
+        let mut local_shrink;
+        let shrink: &mut ShrinkState = match shrink {
+            Some(s) => s,
+            None => {
+                local_shrink = ShrinkState::new(n, loss.upper_bound());
+                &mut local_shrink
+            }
+        };
         phases.add("init", init_t.secs());
 
         // ---- main loop -------------------------------------------------
@@ -261,6 +300,47 @@ mod tests {
         let r = SerialDcd::solve(&ds, &loss, &opts, None);
         let gap = eval::duality_gap(&ds, &loss, &r.alpha);
         assert!(gap < 1e-2, "gap {gap}");
+    }
+
+    #[test]
+    fn warm_start_from_zeros_matches_cold_start() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let opts = SolveOptions { epochs: 4, ..Default::default() };
+        let cold = SerialDcd::solve(&ds, &loss, &opts, None);
+        let warm = SerialDcd::solve_from(
+            &ds,
+            &loss,
+            &opts,
+            Some((&vec![0.0; ds.n()], &vec![0.0; ds.d()])),
+            None,
+            None,
+        );
+        assert_eq!(cold.alpha, warm.alpha);
+        assert_eq!(cold.w_hat, warm.w_hat);
+    }
+
+    #[test]
+    fn warm_start_does_not_regress_objective() {
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let base = SerialDcd::solve(
+            &ds,
+            &loss,
+            &SolveOptions { epochs: 15, ..Default::default() },
+            None,
+        );
+        let p_base = eval::primal_objective(&ds, &loss, &base.w_hat);
+        let warm = SerialDcd::solve_from(
+            &ds,
+            &loss,
+            &SolveOptions { epochs: 1, ..Default::default() },
+            Some((&base.alpha, &base.w_hat)),
+            None,
+            None,
+        );
+        let p_warm = eval::primal_objective(&ds, &loss, &warm.w_hat);
+        assert!(p_warm <= p_base + 1e-9, "warm regressed: {p_warm} vs {p_base}");
     }
 
     #[test]

@@ -8,14 +8,24 @@
 //!   (the O(nnz/n)-per-update trick that makes DCD fast);
 //! * the returned [`SolveResult`] carries both the *maintained* `ŵ` and
 //!   the dual iterate `α` — for PASSCoDe-Wild these disagree (Eq. 6) and
-//!   the caller chooses which one to predict with (Table 2).
+//!   the caller chooses which one to predict with (Table 2);
+//! * every solver in the family (and the `baselines`) sits behind the
+//!   [`api::Solver`] trait — [`lookup`] a registry name, open a
+//!   [`TrainSession`], and drive it with epoch-granular control,
+//!   deadlines, and checkpoint/restore.  The inherent `solve` fns remain
+//!   as thin cold-start shims over the same cores.
 
+pub mod api;
 pub mod dcd;
 pub mod locks;
 pub mod multiclass;
 pub mod passcode;
 pub mod shrinking;
 
+pub use api::{
+    lookup, solver_names, Checkpoint, Liblinear, PasscodeSolver, RunReport,
+    ShrinkCheckpoint, Solver, SolverKind, StopReason, StopWhen, TrainSession,
+};
 pub use dcd::SerialDcd;
 pub use multiclass::{MulticlassDataset, OvrModel};
 pub use passcode::{MemoryModel, Passcode};

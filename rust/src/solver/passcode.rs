@@ -42,6 +42,8 @@ pub enum MemoryModel {
 }
 
 impl MemoryModel {
+    /// Bare model name (`lock` / `atomic` / `wild`), the suffix of the
+    /// registry's `passcode-*` solver names.
     pub fn name(&self) -> &'static str {
         match self {
             MemoryModel::Lock => "lock",
@@ -50,11 +52,12 @@ impl MemoryModel {
         }
     }
 
+    /// Parse a bare model name — a thin view over the solver registry's
+    /// `passcode-*` entries ([`crate::solver::SolverKind::parse`]), so
+    /// the two name tables can never drift.
     pub fn parse(s: &str) -> Option<MemoryModel> {
-        match s {
-            "lock" => Some(MemoryModel::Lock),
-            "atomic" => Some(MemoryModel::Atomic),
-            "wild" => Some(MemoryModel::Wild),
+        match super::api::SolverKind::parse(&format!("passcode-{s}")) {
+            Ok(super::api::SolverKind::Passcode(m)) => Some(m),
             _ => None,
         }
     }
@@ -70,6 +73,10 @@ impl Passcode {
     /// The progress callback (leader-only) fires at epoch barriers every
     /// `opts.eval_every` epochs; returning `false` stops all workers at
     /// the next boundary.
+    ///
+    /// Thin shim over the warm-start core; prefer the
+    /// [`crate::solver::Solver`] registry for epoch-granular control,
+    /// deadlines, or checkpoint/restore.
     pub fn solve<L: Loss>(
         ds: &Dataset,
         loss: &L,
@@ -116,9 +123,9 @@ impl Passcode {
         let p = opts.threads.max(1);
         let mut phases = Phases::new();
 
-        // ---- init (counted separately, as in §5.2) ----------------------
+        // ---- init (counted separately, as in §5.2; norms memoized) ------
         let init_t = Timer::start();
-        let qii = ds.x.all_row_sqnorms();
+        let qii = ds.x.row_sqnorms_cached();
         let (w, alpha) = match warm {
             Some((a0, w0)) => {
                 (SharedVec::from_slice(w0), SharedVec::from_slice(a0))

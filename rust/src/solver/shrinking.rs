@@ -86,6 +86,35 @@ impl ShrinkState {
         }
     }
 
+    /// Export the cross-epoch state for checkpointing: the active set
+    /// plus the previous epoch's PG extremes `(M̄, m̄)`.  Per-epoch
+    /// scratch (`pg_*_new`) is excluded — snapshots are taken at epoch
+    /// boundaries where it is dead.
+    pub fn export(&self) -> (Vec<bool>, f64, f64) {
+        (self.active.clone(), self.pg_max_old, self.pg_min_old)
+    }
+
+    /// Rebuild from an [`ShrinkState::export`]ed snapshot, so a resumed
+    /// `TrainSession` continues with exactly the active set and bounds
+    /// an uninterrupted run would have.
+    pub fn import(
+        upper: Option<f64>,
+        active: Vec<bool>,
+        pg_max_old: f64,
+        pg_min_old: f64,
+    ) -> Self {
+        let n_active = active.iter().filter(|&&a| a).count();
+        Self {
+            upper,
+            active,
+            n_active,
+            pg_max_old,
+            pg_min_old,
+            pg_max_new: f64::NEG_INFINITY,
+            pg_min_new: f64::INFINITY,
+        }
+    }
+
     /// Roll epoch statistics (LIBLINEAR: inflate when degenerate, and
     /// reactivate everything when the active problem looks solved).
     pub fn end_epoch(&mut self) {

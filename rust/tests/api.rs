@@ -1,0 +1,212 @@
+//! Property tests for the unified solver API (`solver::api`): for every
+//! registry entry, a session that is snapshotted after `k` epochs and
+//! resumed must match an uninterrupted run to `n` epochs — bit-for-bit
+//! for deterministic (single-worker) configurations, to objective
+//! tolerance for genuinely parallel ones — and resuming from a zeroed
+//! checkpoint must equal a cold start.
+
+use passcode::data::registry as data_registry;
+use passcode::data::Dataset;
+use passcode::eval;
+use passcode::loss::{DynLoss, LossKind};
+use passcode::solver::{
+    lookup, solver_names, Checkpoint, Solver, SolveOptions, StopWhen,
+};
+
+/// Small dataset every solver (including AsySCD's dense-Q guard) accepts.
+fn tiny() -> (Dataset, f64) {
+    let (tr, _, c) = data_registry::load("news20", 0.05).unwrap();
+    (tr, c)
+}
+
+fn opts(threads: usize, epochs: usize) -> SolveOptions {
+    SolveOptions { threads, epochs, seed: 7, ..Default::default() }
+}
+
+#[test]
+fn registry_covers_the_family_and_lists_names_on_error() {
+    let names = solver_names();
+    for expect in [
+        "dcd",
+        "liblinear",
+        "passcode-lock",
+        "passcode-atomic",
+        "passcode-wild",
+        "cocoa",
+        "asyscd",
+        "pegasos",
+    ] {
+        assert!(names.contains(&expect), "registry missing {expect}");
+        assert_eq!(lookup(expect).unwrap().name(), expect);
+    }
+    let err = format!("{:#}", lookup("sgd").unwrap_err());
+    for name in &names {
+        assert!(err.contains(name), "unknown-solver error must list {name}");
+    }
+}
+
+#[test]
+fn snapshot_resume_is_bit_exact_for_deterministic_sessions() {
+    // threads = 1 makes every backend deterministic (single worker), so
+    // chunked and uninterrupted session runs must agree exactly.
+    let (tr, c) = tiny();
+    let (k, n) = (2usize, 5usize);
+    for name in solver_names() {
+        let solver = lookup(name).unwrap();
+
+        let mut full =
+            solver.session(&tr, LossKind::Hinge, c, opts(1, n)).unwrap();
+        full.run_epochs(n).unwrap();
+
+        let mut first =
+            solver.session(&tr, LossKind::Hinge, c, opts(1, n)).unwrap();
+        first.run_epochs(k).unwrap();
+        let ckpt = first.snapshot();
+        assert_eq!(ckpt.solver, name);
+        assert_eq!(ckpt.epochs_done, k);
+
+        let mut second =
+            solver.session(&tr, LossKind::Hinge, c, opts(1, n)).unwrap();
+        second.resume(&ckpt).unwrap();
+        second.run_epochs(n - k).unwrap();
+
+        assert_eq!(second.epochs(), full.epochs(), "{name}: epoch count");
+        assert_eq!(
+            second.updates(),
+            full.updates(),
+            "{name}: update count diverged"
+        );
+        assert_eq!(second.alpha(), full.alpha(), "{name}: α diverged");
+        assert_eq!(second.w_hat(), full.w_hat(), "{name}: ŵ diverged");
+    }
+}
+
+#[test]
+fn snapshot_resume_matches_parallel_runs_to_objective_tolerance() {
+    let (tr, c) = tiny();
+    let loss = DynLoss::new(LossKind::Hinge, c);
+    let (k, n) = (3usize, 8usize);
+    for name in ["passcode-atomic", "passcode-wild", "cocoa"] {
+        let solver = lookup(name).unwrap();
+
+        let mut full =
+            solver.session(&tr, LossKind::Hinge, c, opts(3, n)).unwrap();
+        full.run_epochs(n).unwrap();
+
+        let mut first =
+            solver.session(&tr, LossKind::Hinge, c, opts(3, n)).unwrap();
+        first.run_epochs(k).unwrap();
+        let ckpt = first.snapshot();
+        let mut second =
+            solver.session(&tr, LossKind::Hinge, c, opts(3, n)).unwrap();
+        second.resume(&ckpt).unwrap();
+        second.run_epochs(n - k).unwrap();
+
+        let p_full = eval::primal_objective(&tr, &loss, full.w_hat());
+        let p_chunked = eval::primal_objective(&tr, &loss, second.w_hat());
+        assert!(
+            (p_full - p_chunked).abs() < 0.02 * p_full.abs().max(1.0),
+            "{name}: chunked P = {p_chunked} vs uninterrupted P = {p_full}"
+        );
+    }
+}
+
+#[test]
+fn resume_from_zeroed_checkpoint_equals_cold_solve() {
+    let (tr, c) = tiny();
+    for name in solver_names() {
+        let solver = lookup(name).unwrap();
+
+        let mut cold =
+            solver.session(&tr, LossKind::Hinge, c, opts(1, 4)).unwrap();
+        cold.run_epochs(4).unwrap();
+
+        let mut warm =
+            solver.session(&tr, LossKind::Hinge, c, opts(1, 4)).unwrap();
+        warm.resume(&Checkpoint::zeroed(
+            name,
+            "hinge",
+            c,
+            7,
+            tr.n(),
+            tr.d(),
+        ))
+        .unwrap();
+        warm.run_epochs(4).unwrap();
+
+        assert_eq!(warm.alpha(), cold.alpha(), "{name}: α diverged");
+        assert_eq!(warm.w_hat(), cold.w_hat(), "{name}: ŵ diverged");
+    }
+}
+
+#[test]
+fn sessions_make_progress_for_every_solver() {
+    // Not just self-consistent: each session must actually learn (beat
+    // the trivial w = 0 primal objective).
+    let (tr, c) = tiny();
+    let loss = DynLoss::new(LossKind::Hinge, c);
+    let p_zero = eval::primal_objective(&tr, &loss, &vec![0.0; tr.d()]);
+    for name in solver_names() {
+        let solver = lookup(name).unwrap();
+        let mut s =
+            solver.session(&tr, LossKind::Hinge, c, opts(2, 6)).unwrap();
+        s.run_epochs(6).unwrap();
+        let p = eval::primal_objective(&tr, &loss, s.w_hat());
+        assert!(
+            p < p_zero,
+            "{name}: no progress (P = {p} vs zero-model {p_zero})"
+        );
+        assert!(s.alpha().iter().all(|a| a.is_finite()), "{name}: α junk");
+        assert!(s.w_hat().iter().all(|w| w.is_finite()), "{name}: ŵ junk");
+    }
+}
+
+#[test]
+fn pegasos_session_rejects_non_hinge_and_asyscd_guards_memory() {
+    let (tr, c) = tiny();
+    let err = lookup("pegasos")
+        .unwrap()
+        .session(&tr, LossKind::Logistic, c, opts(1, 2))
+        .err()
+        .expect("pegasos must reject non-hinge losses");
+    assert!(format!("{err:#}").contains("hinge"), "{err:#}");
+
+    // A deliberately tiny Q budget trips the guard at session open.
+    let tight = passcode::baselines::Asyscd {
+        q_budget: 1024,
+        ..Default::default()
+    };
+    let err = tight
+        .session(&tr, LossKind::Hinge, c, opts(1, 2))
+        .err()
+        .expect("dense-Q guard must fire at session open");
+    assert!(format!("{err:#}").contains("Hessian"), "{err:#}");
+}
+
+#[test]
+fn deadline_bounded_run_preserves_state_and_stops() {
+    let (tr, c) = tiny();
+    let solver = lookup("passcode-wild").unwrap();
+    let mut s =
+        solver.session(&tr, LossKind::Hinge, c, opts(2, 1_000_000)).unwrap();
+    s.run_epochs(2).unwrap();
+    let alpha_before = s.alpha().to_vec();
+
+    // Deadline already passed: zero epochs, state untouched.
+    let r = s
+        .run_until(StopWhen::Deadline(std::time::Instant::now()))
+        .unwrap();
+    assert_eq!(r.epochs_run, 0);
+    assert_eq!(s.alpha(), &alpha_before[..]);
+
+    // A short real deadline: returns promptly despite the huge epoch cap.
+    let t0 = std::time::Instant::now();
+    let deadline = t0 + std::time::Duration::from_millis(50);
+    s.run_until(StopWhen::Deadline(deadline)).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "deadline-bounded run did not stop: {:?}",
+        t0.elapsed()
+    );
+    assert!(s.epochs() >= 2, "accumulated state lost");
+}

@@ -6,7 +6,7 @@ use passcode::data::{libsvm, registry};
 use passcode::eval;
 use passcode::loss::Hinge;
 use passcode::simcore::{self, Mechanism, SimConfig};
-use passcode::solver::{MemoryModel, SerialDcd, SolveOptions};
+use passcode::solver::{MemoryModel, SerialDcd, Solver, SolveOptions};
 use passcode::util::Json;
 
 #[test]
@@ -121,20 +121,29 @@ fn simulator_and_real_solver_agree_on_final_objective() {
 
 #[test]
 fn serial_solvers_agree_across_entry_points() {
-    // SerialDcd direct vs the driver's Dcd path, same seed → identical.
+    // A `lookup("dcd")` session driven directly vs the driver's registry
+    // path, same seed → identical objective (both run the same derived
+    // per-epoch streams); the legacy inherent solve lands in the same
+    // converged neighbourhood.
     let (tr, _, c) = registry::load("news20", 0.05).unwrap();
     let loss = Hinge::new(c);
-    let direct = SerialDcd::solve(
-        &tr,
-        &loss,
-        &SolveOptions { epochs: 5, seed: 42, ..Default::default() },
-        None,
-    );
+    let epochs = 15;
+    let solver = passcode::solver::lookup("dcd").unwrap();
+    let mut session = solver
+        .session(
+            &tr,
+            passcode::loss::LossKind::Hinge,
+            c,
+            SolveOptions { epochs, seed: 42, ..Default::default() },
+        )
+        .unwrap();
+    session.run_epochs(epochs).unwrap();
+    let direct = session.into_result();
     let cfg = RunConfig {
         dataset: "news20".into(),
         scale: 0.05,
         solver: SolverKind::Dcd,
-        epochs: 5,
+        epochs,
         seed: 42,
         eval_every: 0,
         ..Default::default()
@@ -142,6 +151,18 @@ fn serial_solvers_agree_across_entry_points() {
     let out = driver::run(&cfg).unwrap();
     let p_direct = eval::primal_objective(&tr, &loss, &direct.w_hat);
     assert!((out.primal_final - p_direct).abs() < 1e-9);
+
+    let legacy = SerialDcd::solve(
+        &tr,
+        &loss,
+        &SolveOptions { epochs, seed: 42, ..Default::default() },
+        None,
+    );
+    let p_legacy = eval::primal_objective(&tr, &loss, &legacy.w_hat);
+    assert!(
+        (p_direct - p_legacy).abs() < 0.03 * p_legacy.abs().max(1.0),
+        "session path {p_direct} vs legacy {p_legacy}"
+    );
 }
 
 #[test]

@@ -13,7 +13,7 @@ use std::time::Duration;
 use passcode::coordinator::model_io::Model;
 use passcode::data::registry as data_registry;
 use passcode::eval;
-use passcode::loss::Hinge;
+use passcode::loss::LossKind;
 use passcode::serve::{
     self, Batcher, ModelRegistry, OnlineConfig, OnlineTrainer, ReplayConfig,
     ScorerConfig, ServeConfig, ServeEngine, ServeStats, ShardPool,
@@ -145,7 +145,8 @@ fn online_trainer_publishes_while_engine_serves() {
     );
     let trainer = Arc::new(OnlineTrainer::new(
         Arc::clone(engine.registry()),
-        Hinge::new(c),
+        LossKind::Hinge,
+        c,
         OnlineConfig {
             epochs_per_round: 3,
             max_window: tr.n(),
@@ -179,6 +180,82 @@ fn online_trainer_publishes_while_engine_serves() {
     assert!(report.requests > 0);
     assert!(report.p50_secs <= report.p95_secs);
     assert!(report.p95_secs <= report.p99_secs);
+}
+
+#[test]
+fn online_round_stops_at_deadline_without_losing_dual_state() {
+    // The acceptance run for deadline-bounded retraining: round 1 (ample
+    // budget) accumulates real dual state; round 2 gets a deadline that
+    // has already passed and a huge epoch budget — it must return
+    // promptly, publish, and carry the accumulated (α, ŵ) through
+    // unchanged instead of resetting or losing it.
+    use std::time::Instant;
+
+    let (tr, _, c) = data_registry::load("rcv1", 0.02).unwrap();
+    let cold = Model {
+        w: vec![0.0; tr.d()],
+        loss: "hinge".into(),
+        c,
+        solver: "cold".into(),
+        dataset: "rcv1".into(),
+    };
+    let registry = Arc::new(ModelRegistry::new(cold, None));
+    let trainer = OnlineTrainer::new(
+        Arc::clone(&registry),
+        LossKind::Hinge,
+        c,
+        OnlineConfig {
+            epochs_per_round: 1_000_000, // deadline is the real bound
+            max_window: tr.n(),
+            ..Default::default()
+        },
+    );
+    for i in 0..tr.n() {
+        let (idx, raw) = tr.raw_row(i);
+        trainer.ingest(idx, raw, tr.y[i]);
+    }
+
+    // Round 1: a generous deadline; the million-epoch budget must not
+    // matter — the round returns when its wall-clock budget runs out.
+    let t0 = Instant::now();
+    let epoch = trainer
+        .train_round_with_deadline(Instant::now() + Duration::from_millis(200))
+        .expect("non-empty window must publish");
+    assert_eq!(epoch, 1);
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "round ignored its deadline: {:?}",
+        t0.elapsed()
+    );
+    let v1 = registry.current();
+    let alpha1 = v1.alpha.clone().expect("published dual state");
+    assert!(
+        alpha1.iter().any(|&a| a != 0.0),
+        "round 1 accumulated no dual state"
+    );
+
+    // Round 2: the deadline has already passed — zero epochs run, and
+    // the publish must carry the accumulated state through bit-for-bit.
+    let t1 = Instant::now();
+    let epoch = trainer
+        .train_round_with_deadline(Instant::now())
+        .expect("deadline-expired round still publishes");
+    assert_eq!(epoch, 2);
+    assert!(
+        t1.elapsed() < Duration::from_secs(10),
+        "expired deadline still trained: {:?}",
+        t1.elapsed()
+    );
+    let v2 = registry.current();
+    assert_eq!(
+        v2.alpha.as_ref().expect("dual state republished"),
+        &alpha1,
+        "deadline-bounded round lost accumulated dual state"
+    );
+    assert_eq!(
+        v2.model.w, v1.model.w,
+        "zero-epoch round must not perturb the model"
+    );
 }
 
 #[test]
