@@ -1,45 +1,138 @@
 //! §Perf bench: hot-path microbenchmarks for the L3 solver —
-//! updates/second and effective nnz-throughput of serial DCD and each
-//! PASSCoDe memory model (1 thread, the per-update cost that the
-//! paper's near-linear Wild scaling multiplies), plus the simulator's
-//! event throughput and the AOT margins-kernel throughput.
+//! updates/second and effective nnz-throughput of serial DCD and the
+//! PASSCoDe memory models across thread counts, a **kernel ablation**
+//! (pre-refactor baseline inner loop vs the fused kernels vs
+//! fused + feature-locality remap), the session-dispatch overhead, the
+//! simulator's event throughput, and the AOT margins-kernel throughput.
 //!
-//! This is the before/after instrument for EXPERIMENTS.md §Perf.
+//! This is the before/after instrument for EXPERIMENTS.md §Perf; results
+//! are also recorded to `BENCH_hotpath.json` so the repo carries a perf
+//! trajectory (CI's bench-smoke job refreshes it at reduced size).
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Run: `cargo bench --bench perf_hotpath [-- --smoke] [-- --out F.json]`
 
-use passcode::data::registry;
-use passcode::loss::{Hinge, LossKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use passcode::data::{registry, Dataset};
+use passcode::loss::{Hinge, Loss, LossKind, MIN_DELTA};
 use passcode::simcore::{self, Mechanism, SimConfig};
 use passcode::solver::{
     lookup, MemoryModel, Passcode, SerialDcd, Solver, SolveOptions,
 };
 use passcode::util::stats::bench_secs;
+use passcode::util::{Json, Pcg32, SharedVec};
+
+/// The pre-overhaul inner loop, kept verbatim as the ablation baseline:
+/// scalar bounds-checked gathers, a fresh visit-list allocation per
+/// epoch, two separate row walks per update (dot, then scatter) —
+/// everything the fused kernels removed.  Wild discipline only (the
+/// paper's fastest variant, and the one the 1.3× acceptance bar is on).
+fn baseline_wild(ds: &Dataset, loss: &Hinge, threads: usize, epochs: usize) {
+    let p = threads.max(1);
+    let qii = ds.x.row_sqnorms_cached();
+    let w = SharedVec::zeros(ds.d());
+    let alpha = SharedVec::zeros(ds.n());
+    let mut rng = Pcg32::new(42, 0xB10C);
+    let perm = rng.permutation(ds.n());
+    let base = ds.n() / p;
+    let rem = ds.n() % p;
+    let mut blocks: Vec<Vec<usize>> = Vec::with_capacity(p);
+    let mut start = 0;
+    for t in 0..p {
+        let len = base + usize::from(t < rem);
+        blocks.push(perm[start..start + len].to_vec());
+        start += len;
+    }
+    let updates = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for (t, block) in blocks.iter().enumerate() {
+            let (w, alpha, qii, updates) = (&w, &alpha, &qii, &updates);
+            s.spawn(move || {
+                let mut rng = Pcg32::new(42, 1 + t as u64);
+                let mut order: Vec<usize> = block.clone();
+                let mut local = 0u64;
+                for _epoch in 0..epochs {
+                    rng.shuffle(&mut order);
+                    let iter_order: Vec<(usize, usize)> =
+                        order.iter().map(|&i| (i, 0)).collect();
+                    for &(i, _) in &iter_order {
+                        let q = qii[i];
+                        if q <= 0.0 {
+                            continue;
+                        }
+                        let (idx, vals) = ds.x.row(i);
+                        let mut wx = 0.0;
+                        for (j, v) in idx.iter().zip(vals) {
+                            wx += w.get(*j as usize) * v;
+                        }
+                        let a_old = alpha.get(i);
+                        let a_new = loss.solve_subproblem(a_old, wx, q);
+                        let delta = a_new - a_old;
+                        local += 1;
+                        if delta.abs() > MIN_DELTA {
+                            alpha.set(i, a_new);
+                            for (j, v) in idx.iter().zip(vals) {
+                                w.add_wild(*j as usize, delta * v);
+                            }
+                        }
+                    }
+                }
+                updates.fetch_add(local, Ordering::Relaxed);
+            });
+        }
+    });
+    let _ = updates.load(Ordering::Relaxed);
+}
 
 fn main() {
-    let (tr, _, c) = registry::load("rcv1", 0.25).unwrap();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|k| args.get(k + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+
+    let (scale, epochs, warmup, reps) =
+        if smoke { (0.05, 3, 1, 3) } else { (0.25, 5, 1, 5) };
+    let (tr, _, c) = registry::load("rcv1", scale).unwrap();
+    let (tr_remap, _) = tr.remap_features();
     let loss = Hinge::new(c);
-    let epochs = 5;
     let nnz = tr.x.nnz() as f64;
     let updates = (tr.n() * epochs) as f64;
     println!(
-        "=== §Perf hot path (rcv1 analog: n = {}, nnz = {}) ===\n",
+        "=== §Perf hot path (rcv1 analog: n = {}, nnz = {}{}) ===\n",
         tr.n(),
-        tr.x.nnz()
+        tr.x.nnz(),
+        if smoke { ", smoke" } else { "" }
     );
 
-    println!("{:<22} {:>12} {:>14} {:>12}", "variant", "median (s)", "updates/s", "Mnnz/s");
-    let report = |name: &str, median: f64| {
+    println!(
+        "{:<26} {:>12} {:>14} {:>12}",
+        "variant", "median (s)", "updates/s", "Mnnz/s"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut report = |name: &str, threads: usize, kernel: &str, median: f64| {
+        let ups = updates / median;
         println!(
-            "{:<22} {:>12.4} {:>14.0} {:>12.1}",
+            "{:<26} {:>12.4} {:>14.0} {:>12.1}",
             name,
             median,
-            updates / median,
+            ups,
             nnz * epochs as f64 / median / 1e6
         );
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(name)),
+            ("threads", Json::num(threads as f64)),
+            ("kernel", Json::str(kernel)),
+            ("median_secs", Json::num(median)),
+            ("updates_per_sec", Json::num(ups)),
+        ]));
+        ups
     };
 
-    let s = bench_secs(1, 5, || {
+    let s = bench_secs(warmup, reps, || {
         let _ = SerialDcd::solve(
             &tr,
             &loss,
@@ -47,20 +140,58 @@ fn main() {
             None,
         );
     });
-    report("serial-dcd", s.median);
+    report("serial-dcd", 1, "fused", s.median);
 
+    // Fused kernels: every memory model × {1, 2, 4} threads.
+    let mut baseline_wild4 = f64::NAN;
+    let mut fused_wild4 = f64::NAN;
     for (model, name) in [
-        (MemoryModel::Wild, "passcode-wild@1"),
-        (MemoryModel::Atomic, "passcode-atomic@1"),
-        (MemoryModel::Lock, "passcode-lock@1"),
+        (MemoryModel::Wild, "passcode-wild"),
+        (MemoryModel::Atomic, "passcode-atomic"),
+        (MemoryModel::Lock, "passcode-lock"),
     ] {
-        let s = bench_secs(1, 5, || {
+        for threads in [1usize, 2, 4] {
+            let s = bench_secs(warmup, reps, || {
+                let _ = Passcode::solve(
+                    &tr,
+                    &loss,
+                    model,
+                    &SolveOptions {
+                        threads,
+                        epochs,
+                        eval_every: 0,
+                        ..Default::default()
+                    },
+                    None,
+                );
+            });
+            let ups =
+                report(&format!("{name}@{threads}"), threads, "fused", s.median);
+            if model == MemoryModel::Wild && threads == 4 {
+                fused_wild4 = ups;
+            }
+        }
+    }
+
+    // Kernel ablation on the paper's fastest variant: the pre-overhaul
+    // baseline loop and the fused kernels on the remapped dataset.
+    for threads in [1usize, 2, 4] {
+        let s = bench_secs(warmup, reps, || {
+            baseline_wild(&tr, &loss, threads, epochs);
+        });
+        let ups =
+            report(&format!("wild-baseline@{threads}"), threads, "baseline", s.median);
+        if threads == 4 {
+            baseline_wild4 = ups;
+        }
+
+        let s = bench_secs(warmup, reps, || {
             let _ = Passcode::solve(
-                &tr,
+                &tr_remap,
                 &loss,
-                model,
+                MemoryModel::Wild,
                 &SolveOptions {
-                    threads: 1,
+                    threads,
                     epochs,
                     eval_every: 0,
                     ..Default::default()
@@ -68,16 +199,25 @@ fn main() {
                 None,
             );
         });
-        report(name, s.median);
+        report(
+            &format!("wild-fused+remap@{threads}"),
+            threads,
+            "fused+remap",
+            s.median,
+        );
     }
+    let ablation_speedup = fused_wild4 / baseline_wild4;
+    println!(
+        "\nkernel ablation: passcode-wild@4 fused/baseline = {ablation_speedup:.2}x \
+         (acceptance bar: >= 1.30x)"
+    );
 
-    // Registry/session path for the same solvers: measures the cost of
-    // the `solver::api` dispatch (enum-loss calls + per-epoch warm-start
-    // rendezvous) against the raw monomorphized rows above — the number
-    // to watch if the TrainSession layer ever lands on a hot path.
+    // Registry/session path: measures the `solver::api` dispatch cost
+    // (enum-loss calls + per-epoch re-entry over the session's shared
+    // buffers) against the raw monomorphized rows above.
     for name in ["dcd", "passcode-wild"] {
         let solver = lookup(name).unwrap();
-        let s = bench_secs(1, 5, || {
+        let s = bench_secs(warmup, reps, || {
             let mut session = solver
                 .session(
                     &tr,
@@ -93,7 +233,7 @@ fn main() {
                 .unwrap();
             session.run_epochs(epochs).unwrap();
         });
-        report(&format!("session:{name}@1"), s.median);
+        report(&format!("session:{name}@1"), 1, "fused", s.median);
     }
 
     // Simulator event throughput (events ≈ updates).
@@ -106,11 +246,13 @@ fn main() {
                 epochs,
                 seed: 7,
                 cost: Default::default(),
-                mechanism: Mechanism::Wild, sockets: 1, },
+                mechanism: Mechanism::Wild,
+                sockets: 1,
+            },
         );
     });
     println!(
-        "{:<22} {:>12.4} {:>14.0} {:>12}",
+        "{:<26} {:>12.4} {:>14.0} {:>12}",
         "simulator@10cores",
         s.median,
         updates / s.median,
@@ -136,7 +278,7 @@ fn main() {
             let _ = engine.execute("margins_block", &[xl.reshape(&[rb as i64, fb as i64]).unwrap(), wl.reshape(&[fb as i64, 1]).unwrap()]).unwrap();
         });
         println!(
-            "{:<22} {:>12.6} {:>14} {:>12.2}",
+            "{:<26} {:>12.6} {:>14} {:>12.2}",
             "aot-margins-kernel",
             s.median,
             "-",
@@ -146,4 +288,19 @@ fn main() {
     } else {
         println!("aot-margins-kernel: skipped (no artifacts)");
     }
+
+    // ---- record the trajectory --------------------------------------
+    let doc = Json::obj(vec![
+        ("format", Json::str("passcode-bench-hotpath-v1")),
+        ("smoke", Json::Bool(smoke)),
+        ("dataset", Json::str("rcv1")),
+        ("scale", Json::num(scale)),
+        ("n", Json::num(tr.n() as f64)),
+        ("nnz", Json::num(tr.x.nnz() as f64)),
+        ("epochs", Json::num(epochs as f64)),
+        ("wild4_fused_over_baseline", Json::num(ablation_speedup)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out_path, doc.to_pretty()).unwrap();
+    println!("\nrecorded {out_path}");
 }

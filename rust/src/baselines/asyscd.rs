@@ -20,6 +20,7 @@ use anyhow::{bail, Result};
 
 use crate::data::Dataset;
 use crate::loss::Loss;
+use crate::solver::kernel;
 use crate::util::{Pcg32, Phases, SharedVec, Timer};
 
 use super::super::solver::{Progress, ProgressFn, SolveOptions, SolveResult};
@@ -171,15 +172,12 @@ impl Asyscd {
                                 continue;
                             }
                             // ∇_i D(α) = (Qα)_i − 1 : the O(n) scan that
-                            // makes AsySCD slow — no maintained w.
-                            let mut g = 0.0;
+                            // makes AsySCD slow — no maintained w.  Runs
+                            // through the unrolled dense·shared kernel
+                            // (branchless; Gram rows are mostly dense).
                             let row = &q_ref[i * n..(i + 1) * n];
-                            for (j, qij) in row.iter().enumerate() {
-                                if *qij != 0.0 {
-                                    g += qij * alpha_ref.get(j);
-                                }
-                            }
-                            g -= 1.0;
+                            let g =
+                                kernel::dot_dense_shared(row, alpha_ref) - 1.0;
                             let a_old = alpha_ref.get(i);
                             let a_new =
                                 loss.project(a_old - gamma * g / qii);

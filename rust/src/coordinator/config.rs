@@ -38,6 +38,10 @@ pub struct RunConfig {
     pub pin_threads: bool,
     /// Evaluate through the AOT/PJRT path as well (cross-check).
     pub aot_eval: bool,
+    /// Reorder features by descending document frequency before training
+    /// (cache-locality optimization for the shared `w`; the trained
+    /// model is translated back to the original feature space at export).
+    pub remap_features: bool,
 }
 
 impl Default for RunConfig {
@@ -57,6 +61,7 @@ impl Default for RunConfig {
             sampling: Sampling::Permutation,
             pin_threads: false,
             aot_eval: false,
+            remap_features: false,
         }
     }
 }
@@ -87,6 +92,7 @@ impl RunConfig {
             }
             "pin-threads" => self.pin_threads = value.parse()?,
             "aot-eval" => self.aot_eval = value.parse()?,
+            "remap-features" => self.remap_features = value.parse()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -148,6 +154,7 @@ impl RunConfig {
             ),
             ("pin_threads", Json::Bool(self.pin_threads)),
             ("aot_eval", Json::Bool(self.aot_eval)),
+            ("remap_features", Json::Bool(self.remap_features)),
         ])
     }
 }
@@ -175,11 +182,13 @@ mod tests {
         c.set("solver", "cocoa").unwrap();
         c.set("c", "0.5").unwrap();
         c.set("sampling", "replacement").unwrap();
+        c.set("remap-features", "true").unwrap();
         assert_eq!(c.dataset, "webspam");
         assert_eq!(c.threads, 10);
         assert_eq!(c.solver, SolverKind::Cocoa);
         assert_eq!(c.c, Some(0.5));
         assert_eq!(c.sampling, Sampling::WithReplacement);
+        assert!(c.remap_features);
         assert!(c.set("bogus", "1").is_err());
     }
 
@@ -188,11 +197,13 @@ mod tests {
         let mut c = RunConfig::default();
         c.set("solver", "passcode-atomic").unwrap();
         c.set("epochs", "7").unwrap();
+        c.set("remap-features", "true").unwrap();
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
         assert_eq!(c2.solver.name(), "passcode-atomic");
         assert_eq!(c2.epochs, 7);
         assert_eq!(c2.dataset, c.dataset);
+        assert!(c2.remap_features);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::data::{libsvm, registry, Dataset};
+use crate::data::{libsvm, registry, Dataset, FeatureRemap};
 use crate::eval;
 use crate::loss::DynLoss;
 use crate::solver::{Solver, SolveOptions, SolveResult};
@@ -33,6 +33,12 @@ pub struct RunOutput {
     pub primal_final: f64,
     /// Final duality gap (projected α).
     pub gap_final: f64,
+    /// The feature-locality remap applied during training, when
+    /// `RunConfig::remap_features` was set.  `result.w_hat` is already
+    /// translated back to the original feature space; the map is exposed
+    /// for callers that need to persist it next to a checkpoint
+    /// (`coordinator::model_io::save_remap`) or score in remapped space.
+    pub remap: Option<FeatureRemap>,
 }
 
 /// Load the dataset pair for a config.
@@ -67,6 +73,16 @@ pub fn train_model(cfg: &RunConfig) -> Result<(Model, SolveResult)> {
 /// Run a config end to end.
 pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     let (train, test, c) = load_data(cfg)?;
+    // Feature-locality remap (`--remap-features true`): train in the
+    // remapped column space — every reported quantity is permutation-
+    // invariant — and translate ŵ back at the export boundary below.
+    let (train, test, remap) = if cfg.remap_features {
+        let (tr, map) = train.remap_features();
+        let te = test.remap_features_with(&map);
+        (tr, te, Some(map))
+    } else {
+        (train, test, None)
+    };
     let loss = DynLoss::new(cfg.loss, c);
     let opts = SolveOptions {
         epochs: cfg.epochs,
@@ -100,13 +116,19 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
     } else {
         session.run_epochs(cfg.epochs)?;
     }
-    let result: SolveResult = session.into_result();
+    let mut result: SolveResult = session.into_result();
 
     let acc_what = eval::accuracy(&test, &result.w_hat);
     let wbar = eval::wbar_from_alpha(&train, &result.alpha);
     let acc_wbar = eval::accuracy(&test, &wbar);
     let primal_final = eval::primal_objective(&train, &loss, &result.w_hat);
     let gap_final = eval::duality_gap(&train, &loss, &result.alpha);
+
+    // Export boundary: everything downstream (model save, serving,
+    // original-space eval) sees ŵ in the original feature order.
+    if let Some(map) = &remap {
+        result.w_hat = map.unmap_w(&result.w_hat);
+    }
 
     Ok(RunOutput {
         config: cfg.clone(),
@@ -116,6 +138,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunOutput> {
         acc_wbar,
         primal_final,
         gap_final,
+        remap,
     })
 }
 
@@ -168,6 +191,31 @@ mod tests {
                 solver
             );
         }
+    }
+
+    #[test]
+    fn remap_features_run_exports_original_space_model() {
+        let mut cfg = base();
+        cfg.eval_every = 0;
+        cfg.solver = SolverKind::Dcd;
+        cfg.epochs = 10;
+        let plain = run(&cfg).unwrap();
+        assert!(plain.remap.is_none());
+        cfg.remap_features = true;
+        let remapped = run(&cfg).unwrap();
+        assert!(remapped.remap.is_some());
+        // Same data, same serial algorithm, permuted columns: the
+        // exported ŵ is back in the original feature order and must
+        // match the unremapped run up to float summation noise.
+        let err = plain
+            .result
+            .w_hat
+            .iter()
+            .zip(&remapped.result.w_hat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-6, "remap changed the exported model: {err}");
+        assert!((plain.acc_what - remapped.acc_what).abs() < 0.02);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::data::Dataset;
+use crate::data::{sparse, Dataset, FeatureRemap};
 use crate::solver::Checkpoint;
 use crate::util::Json;
 
@@ -97,16 +97,14 @@ impl Model {
     }
 
     /// Margin of a sparse row given as (indices, values) — raw,
-    /// *unfolded* features.
+    /// *unfolded* features.  Runs through the unrolled bounds-tolerant
+    /// dot (`data::sparse::dot_sparse_checked`): features the model
+    /// never saw contribute zero, and the scorer shards
+    /// ([`crate::serve::ShardPool`]) get the same fused gather the
+    /// training loop uses.
+    #[inline]
     pub fn margin(&self, idx: &[u32], vals: &[f64]) -> f64 {
-        let mut m = 0.0;
-        for (j, v) in idx.iter().zip(vals) {
-            let j = *j as usize;
-            if j < self.w.len() {
-                m += self.w[j] * v;
-            }
-        }
-        m
+        sparse::dot_sparse_checked(idx, vals, &self.w)
     }
 
     /// Batch prediction over a (folded) dataset: returns (accuracy,
@@ -164,6 +162,28 @@ pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Checkpoint> {
     })?;
     Checkpoint::from_json(&json)
         .with_context(|| format!("invalid checkpoint file {}", path.display()))
+}
+
+/// Persist a [`FeatureRemap`] next to a checkpoint or model: a training
+/// [`Checkpoint`] taken on a remapped dataset only resumes against the
+/// *same* remapped dataset, so the map is part of the training state and
+/// must survive the same round trips.
+pub fn save_remap(remap: &FeatureRemap, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path.as_ref(), remap.to_json().to_pretty()).with_context(
+        || format!("write remap {}", path.as_ref().display()),
+    )
+}
+
+/// Load a [`FeatureRemap`]; errors carry the offending path and what
+/// went wrong (unreadable file, malformed JSON, non-permutation map).
+pub fn load_remap(path: impl AsRef<Path>) -> Result<FeatureRemap> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let json = Json::parse(&text)
+        .with_context(|| format!("parse remap JSON from {}", path.display()))?;
+    FeatureRemap::from_json(&json)
+        .with_context(|| format!("invalid remap file {}", path.display()))
 }
 
 #[cfg(test)]
@@ -345,6 +365,26 @@ mod tests {
         assert!((acc - out.acc_what).abs() < 1e-9);
         assert_eq!(preds.len(), test.n());
         assert!(preds.iter().all(|&p| p == 1.0 || p == -1.0));
+    }
+
+    #[test]
+    fn remap_save_load_roundtrip_and_corruption_errors() {
+        let (tr, _, _) = registry::load("rcv1", 0.02).unwrap();
+        let (_, remap) = tr.remap_features();
+        let dir = std::env::temp_dir().join("passcode_remap_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("remap.json");
+        save_remap(&remap, &path).unwrap();
+        assert_eq!(load_remap(&path).unwrap(), remap);
+
+        // Valid JSON, wrong schema.
+        let bad = dir.join("foreign_remap.json");
+        std::fs::write(&bad, "{\"hello\": 1}").unwrap();
+        let msg = format!("{:#}", load_remap(&bad).unwrap_err());
+        assert!(msg.contains("invalid remap file"), "{msg}");
+
+        // Missing file: error, not panic.
+        assert!(load_remap(dir.join("nope.json")).is_err());
     }
 
     #[test]

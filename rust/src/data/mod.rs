@@ -5,10 +5,12 @@
 pub mod dataset;
 pub mod libsvm;
 pub mod registry;
+pub mod remap;
 pub mod sparse;
 pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use registry::{load as load_dataset, spec as dataset_spec, DatasetSpec, REGISTRY};
+pub use remap::FeatureRemap;
 pub use sparse::{CsrMatrix, Entry};
 pub use synthetic::SyntheticSpec;

@@ -1,0 +1,275 @@
+//! Feature-locality remap: reorder columns by descending document
+//! frequency so the hot features every row touches pack into a few
+//! resident cache lines of the shared `w`, and the cold tail stops
+//! false-sharing lines with them.
+//!
+//! The asynchronous solvers contend on `w` through the memory system
+//! (Liu & Wright 2015's analysis of async coordinate descent; the
+//! HOGWILD lineage) — which *physical lines* a feature lands on is a
+//! pure artifact of its column index.  [`FeatureRemap`] makes that
+//! artifact deliberate: `forward[old] = new` sorts columns by document
+//! frequency (descending, ties by original index — fully deterministic),
+//! [`FeatureRemap::unmap_w`] translates a trained weight vector back to
+//! the original feature space at the export boundary (`coordinator`),
+//! and [`FeatureRemap::map_row`] translates incoming raw rows for
+//! anything that wants to score *in* the remapped space.
+//!
+//! The remap is a permutation, so objectives, duality gaps, and
+//! predictions are mathematically unchanged — only the memory layout
+//! (and float summation order) moves.
+
+use anyhow::{ensure, Result};
+
+use crate::util::Json;
+
+use super::dataset::Dataset;
+use super::sparse::CsrMatrix;
+
+/// A bijective column relabeling (`forward[old] = new`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FeatureRemap {
+    /// `forward[old] = new`.
+    forward: Vec<u32>,
+    /// `inverse[new] = old`.
+    inverse: Vec<u32>,
+}
+
+impl FeatureRemap {
+    /// Order columns by descending document frequency (ties broken by
+    /// original index).  Deterministic for a given matrix.
+    pub fn by_doc_frequency(x: &CsrMatrix) -> FeatureRemap {
+        let df = x.col_doc_frequency();
+        let mut inverse: Vec<u32> = (0..x.cols() as u32).collect();
+        inverse.sort_by(|&a, &b| {
+            df[b as usize].cmp(&df[a as usize]).then(a.cmp(&b))
+        });
+        Self::from_inverse(inverse)
+    }
+
+    /// The identity remap on `d` features.
+    pub fn identity(d: usize) -> FeatureRemap {
+        Self::from_inverse((0..d as u32).collect())
+    }
+
+    fn from_inverse(inverse: Vec<u32>) -> FeatureRemap {
+        let mut forward = vec![0u32; inverse.len()];
+        for (new, &old) in inverse.iter().enumerate() {
+            forward[old as usize] = new as u32;
+        }
+        FeatureRemap { forward, inverse }
+    }
+
+    /// Number of features the map covers.
+    pub fn d(&self) -> usize {
+        self.forward.len()
+    }
+
+    /// `forward[old] = new`, a permutation of `0..d`.
+    pub fn forward(&self) -> &[u32] {
+        &self.forward
+    }
+
+    /// `inverse[new] = old`, a permutation of `0..d`.
+    pub fn inverse(&self) -> &[u32] {
+        &self.inverse
+    }
+
+    /// Translate a weight vector trained in the remapped space back to
+    /// the original feature space (`w_orig[old] = w[forward[old]]`) —
+    /// applied at every export boundary (model save, serving, eval in
+    /// original coordinates).
+    pub fn unmap_w(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.d(), "remap dimension");
+        self.forward.iter().map(|&new| w[new as usize]).collect()
+    }
+
+    /// Translate an original-space weight vector into the remapped space
+    /// (`w_new[new] = w[inverse[new]]`); inverse of
+    /// [`FeatureRemap::unmap_w`].
+    pub fn map_w(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.d(), "remap dimension");
+        self.inverse.iter().map(|&old| w[old as usize]).collect()
+    }
+
+    /// Translate a raw sparse row into the remapped space, returning the
+    /// entries sorted by new index.  Indices outside the map (features
+    /// unseen at training time) are dropped — the same semantics the
+    /// serving margin applies to unknown features.
+    pub fn map_row(&self, idx: &[u32], vals: &[f64]) -> (Vec<u32>, Vec<f64>) {
+        let mut pairs: Vec<(u32, f64)> = idx
+            .iter()
+            .zip(vals)
+            .filter(|(j, _)| (**j as usize) < self.d())
+            .map(|(j, v)| (self.forward[*j as usize], *v))
+            .collect();
+        pairs.sort_unstable_by_key(|e| e.0);
+        (pairs.iter().map(|e| e.0).collect(), pairs.iter().map(|e| e.1).collect())
+    }
+
+    /// Serialize (the `passcode-remap-v1` schema persisted by
+    /// `coordinator::model_io::save_remap`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("passcode-remap-v1")),
+            ("d", Json::num(self.d() as f64)),
+            (
+                "inverse",
+                Json::arr_f64(
+                    &self.inverse.iter().map(|&j| j as f64).collect::<Vec<f64>>(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize, validating that the stored map is a permutation.
+    pub fn from_json(json: &Json) -> Result<FeatureRemap> {
+        ensure!(
+            json.get("format")?.as_str()? == "passcode-remap-v1",
+            "not a passcode remap file"
+        );
+        let d = json.get("d")?.as_usize()?;
+        let inverse: Vec<u32> = json
+            .get("inverse")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_usize()? as u32))
+            .collect::<Result<_>>()?;
+        ensure!(inverse.len() == d, "remap dimension mismatch");
+        let mut seen = vec![false; d];
+        for &j in &inverse {
+            ensure!((j as usize) < d, "remap index {j} out of range");
+            ensure!(!seen[j as usize], "remap index {j} repeated");
+            seen[j as usize] = true;
+        }
+        Ok(Self::from_inverse(inverse))
+    }
+}
+
+impl Dataset {
+    /// Build the document-frequency remap for this dataset and return
+    /// the remapped copy plus the map (apply the same map to held-out
+    /// splits with [`Dataset::remap_features_with`]).
+    pub fn remap_features(&self) -> (Dataset, FeatureRemap) {
+        let remap = FeatureRemap::by_doc_frequency(&self.x);
+        (self.remap_features_with(&remap), remap)
+    }
+
+    /// Apply an existing [`FeatureRemap`] (e.g. the training split's) to
+    /// this dataset.
+    pub fn remap_features_with(&self, remap: &FeatureRemap) -> Dataset {
+        Dataset::new(
+            self.x.remap_columns(remap.forward()),
+            self.y.clone(),
+            format!("{}-remap", self.name),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::Entry;
+
+    fn toy() -> Dataset {
+        // df: col0 = 1, col1 = 3, col2 = 2 → order [1, 2, 0].
+        let x = CsrMatrix::from_rows(
+            &[
+                vec![
+                    Entry { index: 0, value: 1.0 },
+                    Entry { index: 1, value: 2.0 },
+                ],
+                vec![
+                    Entry { index: 1, value: 3.0 },
+                    Entry { index: 2, value: 4.0 },
+                ],
+                vec![
+                    Entry { index: 1, value: 5.0 },
+                    Entry { index: 2, value: 6.0 },
+                ],
+            ],
+            3,
+        );
+        Dataset::new(x, vec![1.0, -1.0, 1.0], "toy")
+    }
+
+    #[test]
+    fn doc_frequency_order_is_deterministic() {
+        let ds = toy();
+        let a = FeatureRemap::by_doc_frequency(&ds.x);
+        let b = FeatureRemap::by_doc_frequency(&ds.x);
+        assert_eq!(a, b);
+        // Most frequent column (1) maps to slot 0, then 2, then 0 → 2.
+        assert_eq!(a.inverse(), &[1, 2, 0]);
+        assert_eq!(a.forward(), &[2, 0, 1]);
+    }
+
+    #[test]
+    fn forward_inverse_are_mutual() {
+        let ds = toy();
+        let m = FeatureRemap::by_doc_frequency(&ds.x);
+        for old in 0..m.d() {
+            assert_eq!(m.inverse()[m.forward()[old] as usize] as usize, old);
+        }
+    }
+
+    #[test]
+    fn w_map_roundtrip_is_identity() {
+        let ds = toy();
+        let m = FeatureRemap::by_doc_frequency(&ds.x);
+        let w = vec![10.0, 20.0, 30.0];
+        assert_eq!(m.unmap_w(&m.map_w(&w)), w);
+        assert_eq!(m.map_w(&m.unmap_w(&w)), w);
+    }
+
+    #[test]
+    fn remapped_dataset_preserves_margins() {
+        let ds = toy();
+        let (ds_r, m) = ds.remap_features();
+        assert_eq!(ds_r.n(), ds.n());
+        assert_eq!(ds_r.d(), ds.d());
+        // A margin computed in remapped space with the mapped weights
+        // equals the original margin.
+        let w = vec![0.5, -1.5, 2.0];
+        let w_r = m.map_w(&w);
+        for i in 0..ds.n() {
+            let a = ds.x.row_dot_dense(i, &w);
+            let b = ds_r.x.row_dot_dense(i, &w_r);
+            assert!((a - b).abs() < 1e-12, "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn map_row_sorts_and_drops_unknown() {
+        let ds = toy();
+        let m = FeatureRemap::by_doc_frequency(&ds.x);
+        // Raw row touching cols 0 (→2), 1 (→0) and an unseen col 9.
+        let (idx, vals) = m.map_row(&[0, 1, 9], &[7.0, 8.0, 9.0]);
+        assert_eq!(idx, vec![0, 2]);
+        assert_eq!(vals, vec![8.0, 7.0]);
+    }
+
+    #[test]
+    fn identity_is_a_noop() {
+        let m = FeatureRemap::identity(4);
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.unmap_w(&w), w);
+        assert_eq!(m.forward(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let ds = toy();
+        let m = FeatureRemap::by_doc_frequency(&ds.x);
+        let back = FeatureRemap::from_json(
+            &Json::parse(&m.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, m);
+        // A non-permutation must be rejected.
+        let bad = r#"{"format":"passcode-remap-v1","d":2,"inverse":[0,0]}"#;
+        assert!(FeatureRemap::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"format":"passcode-remap-v1","d":2,"inverse":[0,5]}"#;
+        assert!(FeatureRemap::from_json(&Json::parse(bad).unwrap()).is_err());
+        assert!(FeatureRemap::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -9,6 +9,68 @@ pub struct Entry {
     pub value: f64,
 }
 
+/// Below this many nonzeros [`CsrMatrix::transpose_dot`] stays serial:
+/// thread spawns plus per-thread dense partials cost more than the scan.
+const PAR_TRANSPOSE_MIN_NNZ: usize = 1 << 17;
+
+/// Fixed chunk count for the parallel [`CsrMatrix::transpose_dot`] path.
+/// Deliberately *not* derived from `available_parallelism`: the chunk
+/// boundaries set the float reduction order, and a fixed count keeps
+/// `w̄ = X^T α` — and every evaluation number derived from it —
+/// identical across machines for a given seed + config.
+const PAR_TRANSPOSE_CHUNKS: usize = 8;
+
+/// 4-way unrolled sparse·dense dot with independent accumulators, so the
+/// gathers pipeline and the FMAs do not serialize on one add chain — the
+/// shared inner primitive behind [`CsrMatrix::row_dot_dense`] and the
+/// solver kernels (`solver::kernel`).
+///
+/// # Safety
+/// Every `idx[k] as usize` must be `< w.len()`.
+#[inline]
+pub unsafe fn dot_sparse_unchecked(idx: &[u32], vals: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len());
+    debug_assert!(idx.iter().all(|&j| (j as usize) < w.len()));
+    let mut i4 = idx.chunks_exact(4);
+    let mut v4 = vals.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (js, vs) in (&mut i4).zip(&mut v4) {
+        a0 += w.get_unchecked(js[0] as usize) * vs[0];
+        a1 += w.get_unchecked(js[1] as usize) * vs[1];
+        a2 += w.get_unchecked(js[2] as usize) * vs[2];
+        a3 += w.get_unchecked(js[3] as usize) * vs[3];
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
+        acc += w.get_unchecked(*j as usize) * v;
+    }
+    acc
+}
+
+/// Bounds-tolerant unrolled sparse·dense dot: indices outside `w` simply
+/// contribute zero.  The serving margin (`coordinator::model_io::Model`)
+/// uses this — incoming rows may reference features the model never saw.
+#[inline]
+pub fn dot_sparse_checked(idx: &[u32], vals: &[f64], w: &[f64]) -> f64 {
+    let n = idx.len().min(vals.len());
+    let (idx, vals) = (&idx[..n], &vals[..n]);
+    let mut i4 = idx.chunks_exact(4);
+    let mut v4 = vals.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let at = |j: u32| w.get(j as usize).copied().unwrap_or(0.0);
+    for (js, vs) in (&mut i4).zip(&mut v4) {
+        a0 += at(js[0]) * vs[0];
+        a1 += at(js[1]) * vs[1];
+        a2 += at(js[2]) * vs[2];
+        a3 += at(js[3]) * vs[3];
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
+        acc += at(*j) * v;
+    }
+    acc
+}
+
 /// CSR sparse matrix.
 #[derive(Debug, Clone, Default)]
 pub struct CsrMatrix {
@@ -128,25 +190,63 @@ impl CsrMatrix {
     ///
     /// Hot path of every solver (O(nnz/n) per coordinate update).  The
     /// gather is unchecked: indices are validated once at construction
-    /// (`from_rows`) against `cols`, and `w.len() == cols` is asserted
-    /// here — see EXPERIMENTS.md §Perf iteration 2.
+    /// (`from_rows`) against `cols`, and `w.len() >= cols` is asserted
+    /// here — see EXPERIMENTS.md §Perf.
     #[inline]
     pub fn row_dot_dense(&self, i: usize, w: &[f64]) -> f64 {
-        debug_assert!(w.len() >= self.cols);
+        assert!(w.len() >= self.cols);
         let (idx, vals) = self.row(i);
-        let mut acc = 0.0;
-        for (j, v) in idx.iter().zip(vals) {
-            // SAFETY: `*j < cols ≤ w.len()` enforced at construction.
-            acc += unsafe { w.get_unchecked(*j as usize) } * v;
-        }
-        acc
+        // SAFETY: `*j < cols ≤ w.len()` enforced at construction.
+        unsafe { dot_sparse_unchecked(idx, vals, w) }
     }
 
     /// `w_out = X^T a` (dense output), used to materialize `w̄ = Σ α_i x_i`.
+    ///
+    /// Parallelized over row chunks with per-thread partial accumulators
+    /// once the matrix is large enough to amortize the thread spawns —
+    /// this runs on every evaluation snapshot (`wbar_from_alpha`,
+    /// backward-error eval) and was O(nnz) serial.  The chunk count and
+    /// reduction order are fixed constants (not `available_parallelism`),
+    /// so results are bit-identical across machines and calls.
     pub fn transpose_dot(&self, a: &[f64]) -> Vec<f64> {
         assert_eq!(a.len(), self.rows());
+        let chunks = if self.nnz() >= PAR_TRANSPOSE_MIN_NNZ {
+            PAR_TRANSPOSE_CHUNKS.min(self.rows().max(1))
+        } else {
+            1
+        };
+        if chunks <= 1 {
+            return self.transpose_dot_range(a, 0, self.rows());
+        }
+        let rows = self.rows();
+        let per = rows / chunks;
+        let rem = rows % chunks;
+        std::thread::scope(|s| {
+            let mut start = 0;
+            let handles: Vec<_> = (0..chunks)
+                .map(|t| {
+                    let len = per + usize::from(t < rem);
+                    let (lo, hi) = (start, start + len);
+                    start = hi;
+                    s.spawn(move || self.transpose_dot_range(a, lo, hi))
+                })
+                .collect();
+            let mut w = vec![0.0; self.cols];
+            for h in handles {
+                let part = h.join().expect("transpose_dot worker panicked");
+                for (acc, x) in w.iter_mut().zip(&part) {
+                    *acc += x;
+                }
+            }
+            w
+        })
+    }
+
+    /// Serial scatter of rows `lo..hi` of `X^T a` into a full-width
+    /// output (the per-chunk body of [`CsrMatrix::transpose_dot`]).
+    fn transpose_dot_range(&self, a: &[f64], lo: usize, hi: usize) -> Vec<f64> {
         let mut w = vec![0.0; self.cols];
-        for i in 0..self.rows() {
+        for i in lo..hi {
             let ai = a[i];
             if ai == 0.0 {
                 continue;
@@ -206,6 +306,46 @@ impl CsrMatrix {
         }
         CsrMatrix {
             indptr,
+            indices,
+            values,
+            cols: self.cols,
+            sqnorms: Default::default(),
+        }
+    }
+
+    /// Documents-containing-feature count per column (document frequency)
+    /// — the statistic the feature-locality remap orders by.
+    pub fn col_doc_frequency(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.cols];
+        for j in &self.indices {
+            df[*j as usize] += 1;
+        }
+        df
+    }
+
+    /// Relabel columns through `forward` (`forward[old] = new`, a
+    /// permutation of `0..cols`) and re-sort each row by the new index.
+    /// Row membership, values, and norms are unchanged; only the column
+    /// order moves — see [`crate::data::FeatureRemap`].
+    pub fn remap_columns(&self, forward: &[u32]) -> CsrMatrix {
+        assert_eq!(forward.len(), self.cols, "remap dimension");
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..self.rows() {
+            let (idx, vals) = self.row(i);
+            scratch.clear();
+            scratch.extend(
+                idx.iter().zip(vals).map(|(j, v)| (forward[*j as usize], *v)),
+            );
+            scratch.sort_unstable_by_key(|e| e.0);
+            for (j, v) in &scratch {
+                indices.push(*j);
+                values.push(*v);
+            }
+        }
+        CsrMatrix {
+            indptr: self.indptr.clone(),
             indices,
             values,
             cols: self.cols,
@@ -313,6 +453,95 @@ mod tests {
         assert_eq!(s.row_nnz(0), 0);
         let (idx, _) = s.row(1);
         assert_eq!(idx, &[0, 2]);
+    }
+
+    #[test]
+    fn unrolled_dot_matches_scalar_reference() {
+        // Cross length-mod-4 boundaries: 0..=9 nonzeros per row.
+        for n in 0..10usize {
+            let idx: Vec<u32> = (0..n as u32).map(|k| k * 2).collect();
+            let vals: Vec<f64> = (0..n).map(|k| 0.5 + k as f64).collect();
+            let w: Vec<f64> = (0..20).map(|k| (k as f64) - 7.5).collect();
+            let want: f64 = idx
+                .iter()
+                .zip(&vals)
+                .map(|(j, v)| w[*j as usize] * v)
+                .sum();
+            let got = unsafe { dot_sparse_unchecked(&idx, &vals, &w) };
+            assert!((got - want).abs() < 1e-12, "n={n}: {got} vs {want}");
+            assert!(
+                (dot_sparse_checked(&idx, &vals, &w) - want).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn checked_dot_ignores_out_of_range() {
+        let w = [2.0, 3.0];
+        assert_eq!(dot_sparse_checked(&[0, 9], &[1.0, 100.0], &w), 2.0);
+    }
+
+    #[test]
+    fn doc_frequency_counts_columns() {
+        let m = sample();
+        assert_eq!(m.col_doc_frequency(), vec![1, 1, 1]);
+        let m2 = CsrMatrix::from_rows(
+            &[
+                vec![Entry { index: 0, value: 1.0 }, Entry { index: 1, value: 1.0 }],
+                vec![Entry { index: 1, value: 2.0 }],
+            ],
+            3,
+        );
+        assert_eq!(m2.col_doc_frequency(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn remap_columns_permutes_and_keeps_rows_sorted() {
+        let m = sample();
+        // forward: 0->2, 1->0, 2->1
+        let r = m.remap_columns(&[2, 0, 1]);
+        assert_eq!(r.rows(), 3);
+        assert_eq!(r.cols(), 3);
+        assert_eq!(r.nnz(), 3);
+        // row 0 was [(0,1.0),(2,2.0)] -> new cols [(2,1.0),(1,2.0)],
+        // re-sorted to [(1,2.0),(2,1.0)].
+        let (idx, vals) = r.row(0);
+        assert_eq!(idx, &[1, 2]);
+        assert_eq!(vals, &[2.0, 1.0]);
+        // row 1 was [(1,3.0)] -> [(0,3.0)].
+        assert_eq!(r.row(1), (&[0u32][..], &[3.0f64][..]));
+        // norms unchanged.
+        assert_eq!(r.all_row_sqnorms(), m.all_row_sqnorms());
+    }
+
+    #[test]
+    fn transpose_dot_parallel_path_matches_serial() {
+        // Build a matrix big enough to cross PAR_TRANSPOSE_MIN_NNZ.
+        let cols = 64usize;
+        let rows: Vec<Vec<Entry>> = (0..(PAR_TRANSPOSE_MIN_NNZ / 4))
+            .map(|i| {
+                // k*13 mod 64 is distinct for k in 0..4, so each row has
+                // four distinct indices; sort to satisfy CSR order.
+                let mut row: Vec<Entry> = (0..4usize)
+                    .map(|k| Entry {
+                        index: ((i * 7 + k * 13) % cols) as u32,
+                        value: ((i + k) % 5) as f64 - 2.0,
+                    })
+                    .collect();
+                row.sort_by_key(|e| e.index);
+                row
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, cols);
+        let a: Vec<f64> = (0..m.rows()).map(|i| (i % 3) as f64 - 1.0).collect();
+        let serial = m.transpose_dot_range(&a, 0, m.rows());
+        let parallel = m.transpose_dot(&a);
+        let err = serial
+            .iter()
+            .zip(&parallel)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-9, "parallel transpose_dot diverged: {err}");
     }
 
     #[test]

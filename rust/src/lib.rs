@@ -47,6 +47,42 @@
 //! for new code: the registry + session API is the supported surface
 //! for dispatch, warm starts, and resumable training.
 //!
+//! # Performance notes
+//!
+//! The asynchronous inner loop is the product (paper §5: updates/sec is
+//! the axis every speedup plot shares).  Three layers keep it fast:
+//!
+//! * **Fused update kernels** ([`solver::kernel`]) — one
+//!   `dot → solve → scatter` pass per coordinate, 4-way unrolled with
+//!   independent accumulators, in three flavours matching the memory
+//!   models (plain/wild, CAS, locked).  Workers are monomorphized over
+//!   the kernel, so the memory-model dispatch happens once per thread,
+//!   not once per update.  Serial solvers and the serving margin use the
+//!   same unrolled gather (`data::sparse::dot_sparse_checked` /
+//!   `dot_sparse_unchecked`).
+//! * **Cache-conscious shared `w`** — [`util::SharedVec`] allocates in
+//!   64-byte-aligned cache-line blocks, and the optional
+//!   **feature-locality remap** ([`data::FeatureRemap`], CLI
+//!   `--remap-features true`) reorders columns by descending document
+//!   frequency so hot features pack into a few resident lines.  The
+//!   remap is a pure permutation: objectives and predictions are
+//!   unchanged, and the driver translates `ŵ` back to the original
+//!   feature space at every export boundary.
+//! * **Allocation-free epochs** — per-thread visit orders and shrink
+//!   active sets live in reusable buffers, so steady-state epochs of a
+//!   multi-epoch solve perform zero heap allocation; `TrainSession`
+//!   additionally keeps shared `(α, ŵ)` buffers for its lifetime and
+//!   drives [`solver::Passcode::run_epochs_shared`] in place, removing
+//!   the per-epoch state copies of the old warm-start path (per-epoch
+//!   partition setup remains — it is what keeps the derived RNG streams
+//!   chunking-independent).
+//!
+//! `cargo bench --bench perf_hotpath` measures all of it (kernel
+//! ablation: baseline vs fused vs fused+remap; updates/sec per memory
+//! model × thread count) and records the numbers to `BENCH_hotpath.json`
+//! — CI's bench-smoke job keeps the trajectory honest.  EXPERIMENTS.md
+//! §Perf documents the methodology and current numbers.
+//!
 //! Serving quick start ([`serve`] — the inference side): a trained model
 //! becomes a traffic-serving engine with wait-free hot-swap, request
 //! microbatching, sharded scoring, and continuous training:

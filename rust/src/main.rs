@@ -4,6 +4,7 @@
 //! passcode train [--dataset rcv1] [--solver passcode-wild] [--threads 4]
 //!                [--epochs 20] [--scale 0.1] [--loss hinge] [--c 1.0]
 //!                [--config file.json] [--csv out.csv] [--aot-eval]
+//!                [--remap-features true]   # feature-locality remap
 //! passcode datasets [--scale 1.0]         # Table 3 analog statistics
 //! passcode calibrate                      # simulator cost-model probes
 //! passcode experiment <table1|table2|table3|fig-a|fig-d|backward-error>

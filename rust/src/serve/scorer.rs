@@ -8,7 +8,10 @@
 //! a hot-swap landing mid-batch affects only subsequent batches (and a
 //! swap can never block a shard: registry reads are wait-free).  Shards
 //! reuse [`crate::util::affinity`] pinning, same as the solver's worker
-//! threads (paper §3.3 "Thread Affinity").
+//! threads (paper §3.3 "Thread Affinity"), and each scored row runs the
+//! same fused, 4-way-unrolled sparse dot as the training loop
+//! ([`Model::margin`](crate::coordinator::Model::margin) →
+//! `data::sparse::dot_sparse_checked`).
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;

@@ -35,7 +35,7 @@ use crate::baselines::{Asyscd, Cocoa, Pegasos};
 use crate::data::Dataset;
 use crate::eval;
 use crate::loss::{DynLoss, Loss, LossKind};
-use crate::util::{Json, Phases, SplitMix64, Timer};
+use crate::util::{Json, Phases, SharedVec, SplitMix64, Timer};
 
 use super::dcd::SerialDcd;
 use super::passcode::{MemoryModel, Passcode};
@@ -235,7 +235,7 @@ impl Solver for PasscodeSolver {
         TrainSession::new(
             ds,
             self.kind(),
-            Backend::Passcode(self.0),
+            Backend::Passcode { model: self.0, shared: None },
             loss,
             c,
             opts,
@@ -323,7 +323,21 @@ enum Backend {
         /// per-epoch state (bounds at ±∞) could never skip anything.
         shrink: Option<ShrinkState>,
     },
-    Passcode(MemoryModel),
+    Passcode {
+        model: MemoryModel,
+        /// Session-lifetime shared `(α, ŵ)` buffers.  Created from the
+        /// session state on the first epoch and reused afterwards, which
+        /// removes the four O(n+d) buffer allocations/copies the old
+        /// `solve_warm`-per-epoch path paid (each epoch still re-derives
+        /// its partition and re-spawns workers — that is what makes the
+        /// per-epoch RNG streams chunking-independent).  Invalidated by
+        /// `resume` (the checkpoint's state is re-imported on the next
+        /// epoch).  Note: the per-thread shrinking heuristic is only
+        /// effective on multi-epoch free-running calls — 1-epoch session
+        /// calls re-warm its PG bounds each time, so `shrinking` on a
+        /// Passcode session adds gradient checks without ever skipping.
+        shared: Option<(SharedVec, SharedVec)>,
+    },
     Cocoa,
     Asyscd {
         cfg: Asyscd,
@@ -667,15 +681,36 @@ impl<'a> TrainSession<'a> {
                     None,
                 )
             }
-            Backend::Passcode(m) => Passcode::solve_warm(
-                self.ds,
-                &loss,
-                *m,
-                &o,
-                &self.alpha,
-                &self.w_hat,
-                None,
-            ),
+            Backend::Passcode { model, shared } => {
+                // Zero-copy epoch: the session owns shared (α, ŵ)
+                // buffers for its lifetime and drives the in-place core;
+                // session state is synced out (no allocation) so
+                // `alpha()`/`w_hat()`/`snapshot()` stay authoritative.
+                if shared.is_none() {
+                    *shared = Some((
+                        SharedVec::from_slice(&self.alpha),
+                        SharedVec::from_slice(&self.w_hat),
+                    ));
+                }
+                let (a_sh, w_sh) =
+                    shared.as_ref().expect("shared buffers initialized");
+                let (_, updates, phases) = Passcode::run_epochs_shared(
+                    self.ds,
+                    &loss,
+                    *model,
+                    &o,
+                    a_sh,
+                    w_sh,
+                    None,
+                );
+                a_sh.copy_into(&mut self.alpha);
+                w_sh.copy_into(&mut self.w_hat);
+                self.updates += updates;
+                self.epochs_done += 1;
+                self.phases.add("init", phases.get("init"));
+                self.phases.add("train", phases.get("train"));
+                return Ok(());
+            }
             Backend::Cocoa => Cocoa::solve_from(
                 self.ds,
                 &loss,
@@ -849,6 +884,11 @@ impl<'a> TrainSession<'a> {
                     s.pg_min_old,
                 )
             });
+        }
+        if let Backend::Passcode { shared, .. } = &mut self.backend {
+            // Drop the session's shared buffers: the next epoch rebuilds
+            // them from the checkpoint state adopted below.
+            *shared = None;
         }
         self.opts.seed = ckpt.seed;
         self.alpha = ckpt.alpha.clone();

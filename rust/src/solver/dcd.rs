@@ -9,6 +9,7 @@ use crate::data::Dataset;
 use crate::loss::{Loss, MIN_DELTA};
 use crate::util::{Pcg32, Phases, Timer};
 
+use super::kernel;
 use super::shrinking::ShrinkState;
 use super::{Progress, ProgressFn, Sampling, SolveOptions, SolveResult};
 
@@ -66,7 +67,11 @@ impl SerialDcd {
             None => (vec![0.0f64; n], vec![0.0f64; d]),
         };
         let mut rng = Pcg32::new(opts.seed, 0);
+        // Reusable per-epoch visit-order buffers: `order` for the plain
+        // samplers, `active_buf` for the shrinking active set — steady-
+        // state epochs do zero heap allocation.
         let mut order: Vec<usize> = (0..n).collect();
+        let mut active_buf: Vec<usize> = Vec::new();
         let mut local_shrink;
         let shrink: &mut ShrinkState = match shrink {
             Some(s) => s,
@@ -82,34 +87,32 @@ impl SerialDcd {
         let mut updates: u64 = 0;
         let mut epochs_run = 0;
         'outer: for epoch in 0..opts.epochs {
-            let active = if opts.shrinking {
-                shrink.active_indices()
+            let visit: &[usize] = if opts.shrinking {
+                // permute the active set each epoch too
+                shrink.active_indices_into(&mut active_buf);
+                rng.shuffle(&mut active_buf);
+                &active_buf
             } else {
                 match opts.sampling {
-                    Sampling::Permutation => {
-                        rng.shuffle(&mut order);
-                        order.clone()
-                    }
+                    Sampling::Permutation => rng.shuffle(&mut order),
                     Sampling::WithReplacement => {
-                        (0..n).map(|_| rng.gen_range(n)).collect()
+                        for slot in order.iter_mut() {
+                            *slot = rng.gen_range(n);
+                        }
                     }
                 }
-            };
-            let active = if opts.shrinking {
-                // permute the active set each epoch too
-                let mut a = active;
-                rng.shuffle(&mut a);
-                a
-            } else {
-                active
+                &order
             };
 
             shrink.begin_epoch();
-            for &i in &active {
+            for &i in visit {
                 let q = qii[i];
                 if q <= 0.0 {
                     continue; // empty row
                 }
+                // Fused per-coordinate pass: one unrolled gather for the
+                // dot, one unrolled scatter for the publish, row slices
+                // hot in L1 in between.
                 let wx = ds.x.row_dot_dense(i, &w);
                 if opts.shrinking {
                     let g = loss.dual_gradient(alpha[i], wx);
@@ -123,12 +126,7 @@ impl SerialDcd {
                 if delta.abs() > MIN_DELTA {
                     alpha[i] = a_new;
                     let (idx, vals) = ds.x.row(i);
-                    for (j, v) in idx.iter().zip(vals) {
-                        // SAFETY: indices < d validated at construction.
-                        unsafe {
-                            *w.get_unchecked_mut(*j as usize) += delta * v;
-                        }
-                    }
+                    kernel::scatter_dense(idx, vals, delta, &mut w);
                 }
             }
             shrink.end_epoch();

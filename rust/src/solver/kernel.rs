@@ -1,0 +1,372 @@
+//! Fused per-coordinate update kernels — the hot-path layer every solver
+//! threads its inner loop through.
+//!
+//! One PASSCoDe coordinate update is (Algorithm 2): read `wx = x_i·ŵ`
+//! from shared memory, solve the one-variable subproblem for `Δα_i`, and
+//! publish `Δα_i x_i` back.  The naive shape walks the row twice with a
+//! scalar gather and re-dispatches on the memory model per update.  An
+//! [`UpdateKernel`] instead packages the whole pass:
+//!
+//! * [`UpdateKernel::update`] is the **fused** entry — acquire (Lock
+//!   only), dot, solve, conditional scatter, release, one call per
+//!   coordinate, with the row slices hot in L1 for the scatter that
+//!   follows the dot;
+//! * the dot and scatter are **4-way unrolled with independent
+//!   accumulators** so the gathers pipeline instead of serializing on
+//!   one FP add chain ([`crate::data::sparse::dot_sparse_unchecked`] is
+//!   the same primitive the serial solvers use);
+//! * the memory-model dispatch happens **once per worker thread** — the
+//!   epoch loop is monomorphized over the kernel type ([`WildKernel`],
+//!   [`CasKernel`], [`LockedKernel`]), not branched per update.
+//!
+//! Bounds checks are hoisted: kernels gather/scatter unchecked against
+//! the CSR construction invariant (column indices validated `< cols` at
+//! matrix build; `w.len() == cols` asserted at solve entry), re-verified
+//! by `debug_assert` in test builds.
+
+use crate::data::sparse;
+use crate::util::SharedVec;
+
+use super::locks::LockTable;
+
+/// A memory-model-specific fused update kernel over the shared `w`.
+///
+/// Implementations are `Copy` handles (a reference or two) so worker
+/// loops can be monomorphized over them for free.
+pub trait UpdateKernel: Copy + Send + Sync {
+    /// `x_i · ŵ` (4-way unrolled gather; relaxed atomic loads).
+    fn dot(&self, idx: &[u32], vals: &[f64]) -> f64;
+
+    /// Publish `delta · x_i` into the shared `w` under this kernel's
+    /// write discipline.
+    fn scatter(&self, idx: &[u32], vals: &[f64], delta: f64);
+
+    /// Pre-update hook (Lock acquires the row's feature locks here).
+    #[inline]
+    fn begin(&self, _idx: &[u32]) {}
+
+    /// Post-update hook (Lock releases here).
+    #[inline]
+    fn end(&self, _idx: &[u32]) {}
+
+    /// The fused per-coordinate pass: `begin → dot → solve(wx) → scatter
+    /// (iff `solve` returns a delta) → end`.  Returns whether a scatter
+    /// happened.  `solve` owns all solver-side bookkeeping (α read/write,
+    /// shrinking skips, update counting) and returns `None` to suppress
+    /// the write — either a shrink skip or a below-threshold delta.
+    #[inline]
+    fn update<F: FnOnce(f64) -> Option<f64>>(
+        &self,
+        idx: &[u32],
+        vals: &[f64],
+        solve: F,
+    ) -> bool {
+        self.begin(idx);
+        let wx = self.dot(idx, vals);
+        let r = solve(wx);
+        if let Some(delta) = r {
+            self.scatter(idx, vals, delta);
+        }
+        self.end(idx);
+        r.is_some()
+    }
+}
+
+/// 4-way unrolled sparse dot against the shared vector (relaxed loads).
+///
+/// Callers guarantee every index is `< w.len()` (CSR construction
+/// invariant); verified by `debug_assert` in test builds.
+#[inline]
+fn dot_shared(idx: &[u32], vals: &[f64], w: &SharedVec) -> f64 {
+    debug_assert!(idx.iter().all(|&j| (j as usize) < w.len()));
+    let mut i4 = idx.chunks_exact(4);
+    let mut v4 = vals.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (js, vs) in (&mut i4).zip(&mut v4) {
+        // SAFETY: indices validated `< cols == w.len()` at CSR build.
+        unsafe {
+            a0 += w.get_unchecked(js[0] as usize) * vs[0];
+            a1 += w.get_unchecked(js[1] as usize) * vs[1];
+            a2 += w.get_unchecked(js[2] as usize) * vs[2];
+            a3 += w.get_unchecked(js[3] as usize) * vs[3];
+        }
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
+        // SAFETY: as above.
+        acc += unsafe { w.get_unchecked(*j as usize) } * v;
+    }
+    acc
+}
+
+/// PASSCoDe-Wild: racy read-add-store scatter (Theorem 3's regime).
+#[derive(Clone, Copy)]
+pub struct WildKernel<'w> {
+    w: &'w SharedVec,
+}
+
+impl<'w> WildKernel<'w> {
+    /// Kernel over `w`; callers must only pass CSR rows of a matrix with
+    /// `cols == w.len()`.
+    pub fn new(w: &'w SharedVec) -> Self {
+        Self { w }
+    }
+}
+
+impl UpdateKernel for WildKernel<'_> {
+    #[inline]
+    fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        dot_shared(idx, vals, self.w)
+    }
+
+    #[inline]
+    fn scatter(&self, idx: &[u32], vals: &[f64], delta: f64) {
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.w.len()));
+        let mut i4 = idx.chunks_exact(4);
+        let mut v4 = vals.chunks_exact(4);
+        for (js, vs) in (&mut i4).zip(&mut v4) {
+            // SAFETY: indices validated `< cols == w.len()` at CSR build.
+            unsafe {
+                self.w.add_wild_unchecked(js[0] as usize, delta * vs[0]);
+                self.w.add_wild_unchecked(js[1] as usize, delta * vs[1]);
+                self.w.add_wild_unchecked(js[2] as usize, delta * vs[2]);
+                self.w.add_wild_unchecked(js[3] as usize, delta * vs[3]);
+            }
+        }
+        for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
+            // SAFETY: as above.
+            unsafe { self.w.add_wild_unchecked(*j as usize, delta * v) };
+        }
+    }
+}
+
+/// PASSCoDe-Atomic: lossless CAS-loop scatter.
+#[derive(Clone, Copy)]
+pub struct CasKernel<'w> {
+    w: &'w SharedVec,
+}
+
+impl<'w> CasKernel<'w> {
+    /// Kernel over `w`; callers must only pass CSR rows of a matrix with
+    /// `cols == w.len()`.
+    pub fn new(w: &'w SharedVec) -> Self {
+        Self { w }
+    }
+}
+
+impl UpdateKernel for CasKernel<'_> {
+    #[inline]
+    fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        dot_shared(idx, vals, self.w)
+    }
+
+    #[inline]
+    fn scatter(&self, idx: &[u32], vals: &[f64], delta: f64) {
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.w.len()));
+        for (j, v) in idx.iter().zip(vals) {
+            // SAFETY: indices validated `< cols == w.len()` at CSR build.
+            unsafe { self.w.add_atomic_unchecked(*j as usize, delta * v) };
+        }
+    }
+}
+
+/// PASSCoDe-Lock: ordered per-feature spinlocks held across the fused
+/// pass; writes are plain under the lock.
+#[derive(Clone, Copy)]
+pub struct LockedKernel<'w> {
+    w: &'w SharedVec,
+    locks: &'w LockTable,
+}
+
+impl<'w> LockedKernel<'w> {
+    /// Kernel over `w` guarded by `locks` (one lock per feature;
+    /// `locks.len() == w.len()`).
+    pub fn new(w: &'w SharedVec, locks: &'w LockTable) -> Self {
+        assert_eq!(locks.len(), w.len(), "lock table dimension");
+        Self { w, locks }
+    }
+}
+
+impl UpdateKernel for LockedKernel<'_> {
+    #[inline]
+    fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        dot_shared(idx, vals, self.w)
+    }
+
+    #[inline]
+    fn scatter(&self, idx: &[u32], vals: &[f64], delta: f64) {
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.w.len()));
+        // The row's locks are held (begin/end): plain adds are race-free.
+        for (j, v) in idx.iter().zip(vals) {
+            // SAFETY: indices validated `< cols == w.len()` at CSR build.
+            unsafe { self.w.add_wild_unchecked(*j as usize, delta * v) };
+        }
+    }
+
+    #[inline]
+    fn begin(&self, idx: &[u32]) {
+        self.locks.acquire_sorted(idx);
+    }
+
+    #[inline]
+    fn end(&self, idx: &[u32]) {
+        self.locks.release(idx);
+    }
+}
+
+/// 4-way unrolled scatter `w += delta * x_i` into a dense mutable vector
+/// — the serial solvers' step 3 (no atomics needed).
+///
+/// Callers guarantee every index is `< w.len()` (CSR construction
+/// invariant); verified by `debug_assert` in test builds.
+#[inline]
+pub fn scatter_dense(idx: &[u32], vals: &[f64], delta: f64, w: &mut [f64]) {
+    debug_assert!(idx.iter().all(|&j| (j as usize) < w.len()));
+    let mut i4 = idx.chunks_exact(4);
+    let mut v4 = vals.chunks_exact(4);
+    for (js, vs) in (&mut i4).zip(&mut v4) {
+        // SAFETY: indices validated `< cols == w.len()` at CSR build;
+        // indices within a row are distinct (strictly increasing), so
+        // the four writes never alias.
+        unsafe {
+            *w.get_unchecked_mut(js[0] as usize) += delta * vs[0];
+            *w.get_unchecked_mut(js[1] as usize) += delta * vs[1];
+            *w.get_unchecked_mut(js[2] as usize) += delta * vs[2];
+            *w.get_unchecked_mut(js[3] as usize) += delta * vs[3];
+        }
+    }
+    for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
+        // SAFETY: as above.
+        unsafe { *w.get_unchecked_mut(*j as usize) += delta * v };
+    }
+}
+
+/// 4-way unrolled dense·shared dot — AsySCD's O(n) gradient scan
+/// `(Qα)_i` over the shared dual iterate.
+pub fn dot_dense_shared(q_row: &[f64], a: &SharedVec) -> f64 {
+    assert_eq!(q_row.len(), a.len());
+    let mut c4 = q_row.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut k = 0usize;
+    for qs in &mut c4 {
+        // SAFETY: `k + 3 < q_row.len() == a.len()` within exact chunks.
+        unsafe {
+            a0 += qs[0] * a.get_unchecked(k);
+            a1 += qs[1] * a.get_unchecked(k + 1);
+            a2 += qs[2] * a.get_unchecked(k + 2);
+            a3 += qs[3] * a.get_unchecked(k + 3);
+        }
+        k += 4;
+    }
+    let mut acc = (a0 + a2) + (a1 + a3);
+    for q in c4.remainder() {
+        // SAFETY: `k < a.len()` — the remainder finishes the row.
+        acc += q * unsafe { a.get_unchecked(k) };
+        k += 1;
+    }
+    acc
+}
+
+/// Re-export of the checked serving-side dot (unknown features score 0),
+/// so kernel users need a single import path.
+pub use crate::data::sparse::dot_sparse_checked;
+
+/// Re-export of the unchecked unrolled sparse·dense dot (the serial
+/// solvers' gather primitive).
+pub use sparse::dot_sparse_unchecked;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_dot(idx: &[u32], vals: &[f64], w: &[f64]) -> f64 {
+        idx.iter().zip(vals).map(|(j, v)| w[*j as usize] * v).sum()
+    }
+
+    fn row(n: usize) -> (Vec<u32>, Vec<f64>) {
+        (
+            (0..n as u32).map(|k| k * 3).collect(),
+            (0..n).map(|k| 0.25 * (k as f64 + 1.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn shared_dot_matches_scalar_across_lengths() {
+        let w_plain: Vec<f64> = (0..40).map(|k| (k as f64) - 11.0).collect();
+        let w = SharedVec::from_slice(&w_plain);
+        for n in 0..12 {
+            let (idx, vals) = row(n);
+            let want = scalar_dot(&idx, &vals, &w_plain);
+            let got = dot_shared(&idx, &vals, &w);
+            assert!((got - want).abs() < 1e-12, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn every_kernel_scatters_the_same_delta() {
+        let locks = LockTable::new(40);
+        for n in [0usize, 1, 3, 4, 5, 8, 11] {
+            let (idx, vals) = row(n);
+            let base: Vec<f64> = (0..40).map(|k| 0.5 * k as f64).collect();
+            let mut want = base.clone();
+            scatter_dense(&idx, &vals, 2.0, &mut want);
+
+            let wild = SharedVec::from_slice(&base);
+            WildKernel::new(&wild).scatter(&idx, &vals, 2.0);
+            assert_eq!(wild.to_vec(), want, "wild n={n}");
+
+            let cas = SharedVec::from_slice(&base);
+            CasKernel::new(&cas).scatter(&idx, &vals, 2.0);
+            assert_eq!(cas.to_vec(), want, "cas n={n}");
+
+            let locked = SharedVec::from_slice(&base);
+            let k = LockedKernel::new(&locked, &locks);
+            k.begin(&idx);
+            k.scatter(&idx, &vals, 2.0);
+            k.end(&idx);
+            assert_eq!(locked.to_vec(), want, "locked n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_update_skips_scatter_when_solve_declines() {
+        let w = SharedVec::from_slice(&[1.0, 2.0, 3.0]);
+        let k = WildKernel::new(&w);
+        let mut seen_wx = f64::NAN;
+        let wrote = k.update(&[0, 2], &[1.0, 1.0], |wx| {
+            seen_wx = wx;
+            None
+        });
+        assert!(!wrote);
+        assert_eq!(seen_wx, 4.0);
+        assert_eq!(w.to_vec(), vec![1.0, 2.0, 3.0]);
+
+        let wrote = k.update(&[0, 2], &[1.0, 1.0], |wx| Some(wx));
+        assert!(wrote);
+        assert_eq!(w.to_vec(), vec![5.0, 2.0, 7.0]);
+    }
+
+    #[test]
+    fn locked_kernel_releases_after_update() {
+        let w = SharedVec::zeros(8);
+        let locks = LockTable::new(8);
+        let k = LockedKernel::new(&w, &locks);
+        k.update(&[1, 5], &[1.0, 1.0], |_| Some(1.0));
+        assert!(!locks.is_held(1) && !locks.is_held(5));
+        k.update(&[1, 5], &[1.0, 1.0], |_| None);
+        assert!(!locks.is_held(1) && !locks.is_held(5));
+        assert_eq!(w.get(1), 1.0);
+    }
+
+    #[test]
+    fn dense_shared_dot_matches_scalar() {
+        for n in [0usize, 1, 4, 7, 9] {
+            let q: Vec<f64> = (0..n).map(|k| (k as f64) - 2.0).collect();
+            let a_plain: Vec<f64> = (0..n).map(|k| 0.5 * k as f64).collect();
+            let a = SharedVec::from_slice(&a_plain);
+            let want: f64 = q.iter().zip(&a_plain).map(|(x, y)| x * y).sum();
+            let got = dot_dense_shared(&q, &a);
+            assert!((got - want).abs() < 1e-12, "n={n}");
+        }
+    }
+}

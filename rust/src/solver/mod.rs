@@ -13,10 +13,14 @@
 //!   [`api::Solver`] trait — [`lookup`] a registry name, open a
 //!   [`TrainSession`], and drive it with epoch-granular control,
 //!   deadlines, and checkpoint/restore.  The inherent `solve` fns remain
-//!   as thin cold-start shims over the same cores.
+//!   as thin cold-start shims over the same cores;
+//! * inner loops run through the fused, unrolled update kernels of
+//!   [`kernel`] (one `dot → solve → scatter` pass per coordinate,
+//!   memory-model dispatch hoisted to one decision per worker thread).
 
 pub mod api;
 pub mod dcd;
+pub mod kernel;
 pub mod locks;
 pub mod multiclass;
 pub mod passcode;
@@ -27,6 +31,7 @@ pub use api::{
     ShrinkCheckpoint, Solver, SolverKind, StopReason, StopWhen, TrainSession,
 };
 pub use dcd::SerialDcd;
+pub use kernel::UpdateKernel;
 pub use multiclass::{MulticlassDataset, OvrModel};
 pub use passcode::{MemoryModel, Passcode};
 

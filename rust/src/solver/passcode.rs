@@ -16,6 +16,13 @@
 //!   (Eq. 6), and Theorem 3's backward-error analysis says `ŵ` is the
 //!   exact solution of a perturbed primal — so predict with `ŵ`.
 //!
+//! The inner loop runs through the fused kernels of
+//! [`crate::solver::kernel`]: each worker is monomorphized over its
+//! memory model's [`UpdateKernel`] (no per-update dispatch), each
+//! coordinate is one fused `dot → solve → scatter` pass with unrolled
+//! gathers, and the per-epoch visit orders live in reusable per-thread
+//! buffers — steady-state epochs allocate nothing.
+//!
 //! Threads free-run with **no barriers** when `opts.eval_every == 0`;
 //! with eval enabled they rendezvous every `eval_every` epochs so the
 //! leader can snapshot (α, ŵ) for the convergence curves.
@@ -27,6 +34,7 @@ use crate::data::Dataset;
 use crate::loss::{Loss, MIN_DELTA};
 use crate::util::{affinity, Pcg32, Phases, SharedVec, Timer};
 
+use super::kernel::{CasKernel, LockedKernel, UpdateKernel, WildKernel};
 use super::locks::LockTable;
 use super::{Progress, ProgressFn, Sampling, SolveOptions, SolveResult};
 
@@ -53,13 +61,14 @@ impl MemoryModel {
     }
 
     /// Parse a bare model name — a thin view over the solver registry's
-    /// `passcode-*` entries ([`crate::solver::SolverKind::parse`]), so
-    /// the two name tables can never drift.
+    /// `passcode-*` entries ([`crate::solver::SolverKind`]), so the two
+    /// name tables can never drift.  Matches against the registry table
+    /// directly; no per-call allocation.
     pub fn parse(s: &str) -> Option<MemoryModel> {
-        match super::api::SolverKind::parse(&format!("passcode-{s}")) {
-            Ok(super::api::SolverKind::Passcode(m)) => Some(m),
+        super::api::SolverKind::all().find_map(|k| match k {
+            super::api::SolverKind::Passcode(m) if m.name() == s => Some(m),
             _ => None,
-        }
+        })
     }
 }
 
@@ -116,22 +125,61 @@ impl Passcode {
         model: MemoryModel,
         opts: &SolveOptions,
         warm: Option<(&[f64], &[f64])>,
-        mut on_progress: Option<&mut ProgressFn<'_>>,
+        on_progress: Option<&mut ProgressFn<'_>>,
     ) -> SolveResult {
-        let n = ds.n();
-        let d = ds.d();
-        let p = opts.threads.max(1);
-        let mut phases = Phases::new();
-
-        // ---- init (counted separately, as in §5.2; norms memoized) ------
-        let init_t = Timer::start();
-        let qii = ds.x.row_sqnorms_cached();
         let (w, alpha) = match warm {
             Some((a0, w0)) => {
                 (SharedVec::from_slice(w0), SharedVec::from_slice(a0))
             }
-            None => (SharedVec::zeros(d), SharedVec::zeros(n)),
+            None => (SharedVec::zeros(ds.d()), SharedVec::zeros(ds.n())),
         };
+        let (epochs_run, updates, phases) = Self::run_epochs_shared(
+            ds,
+            loss,
+            model,
+            opts,
+            &alpha,
+            &w,
+            on_progress,
+        );
+        SolveResult {
+            alpha: alpha.to_vec(),
+            w_hat: w.to_vec(),
+            epochs_run,
+            updates,
+            phases,
+        }
+    }
+
+    /// Run `opts.epochs` epochs of Algorithm 2 *in place* over shared
+    /// `(α, ŵ)` buffers — the zero-copy core behind every entry point.
+    /// [`crate::solver::TrainSession`] owns a pair of [`SharedVec`]s for
+    /// the session's lifetime and drives this once per epoch, which
+    /// avoids re-allocating and copying the `(α, ŵ)` state every epoch.
+    /// (Each *call* still pays its own init: partition, worker spawns,
+    /// per-thread order buffers — the "steady-state epochs allocate
+    /// nothing" property holds within one multi-epoch call.)
+    ///
+    /// Returns `(epochs_run, updates, phases)`.
+    pub fn run_epochs_shared<L: Loss>(
+        ds: &Dataset,
+        loss: &L,
+        model: MemoryModel,
+        opts: &SolveOptions,
+        alpha: &SharedVec,
+        w: &SharedVec,
+        mut on_progress: Option<&mut ProgressFn<'_>>,
+    ) -> (usize, u64, Phases) {
+        let n = ds.n();
+        let d = ds.d();
+        assert_eq!(alpha.len(), n, "shared α dimension");
+        assert_eq!(w.len(), d, "shared ŵ dimension");
+        let p = opts.threads.max(1);
+        let mut phases = Phases::new();
+
+        // ---- init (counted separately, as in §5.2; norms memoized) ----
+        let init_t = Timer::start();
+        let qii = ds.x.row_sqnorms_cached();
         let locks = match model {
             MemoryModel::Lock => Some(LockTable::new(d)),
             _ => None,
@@ -142,173 +190,215 @@ impl Passcode {
         let blocks: Vec<&[usize]> = chunk_evenly(&perm, p);
         phases.add("init", init_t.secs());
 
-        // ---- shared control ---------------------------------------------
+        // ---- shared control -------------------------------------------
         let stop = AtomicBool::new(false);
         let updates = AtomicU64::new(0);
         let epochs_done = AtomicU64::new(0);
-        let sync_every = opts.eval_every; // 0 = free-run
         let barrier = Barrier::new(p);
-
         let train_t = Timer::start();
+
+        let ctx = WorkerCtx {
+            ds,
+            loss,
+            opts,
+            qii,
+            alpha,
+            w,
+            stop: &stop,
+            updates: &updates,
+            epochs_done: &epochs_done,
+            barrier: &barrier,
+            train_t: &train_t,
+        };
+
         std::thread::scope(|scope| {
             let mut leader_cb = on_progress.take();
-            let alpha_ref = &alpha;
-            let w_ref = &w;
-            let qii_ref = &qii;
-            let stop_ref = &stop;
-            let updates_ref = &updates;
-            let epochs_done_ref = &epochs_done;
-            let barrier_ref = &barrier;
+            let ctx_ref = &ctx;
             let locks_ref = &locks;
-            let blocks_ref = &blocks;
-
-            for t in 0..p {
-                let my_block: &[usize] = blocks_ref[t];
-                let mut cb = if t == 0 { leader_cb.take() } else { None };
+            for (t, &my_block) in blocks.iter().enumerate() {
+                let cb = if t == 0 { leader_cb.take() } else { None };
                 scope.spawn(move || {
-                    if opts.pin_threads {
+                    if ctx_ref.opts.pin_threads {
                         affinity::pin_current_thread(t);
                     }
-                    let mut rng = Pcg32::new(opts.seed, 1 + t as u64);
-                    let mut order: Vec<usize> = my_block.to_vec();
-                    let mut local_updates: u64 = 0;
-                    // §3.3 "Shrinking Heuristic": each thread maintains
-                    // an active set over *its own block* (local indices).
-                    let mut shrink = if opts.shrinking {
-                        Some((
-                            super::shrinking::ShrinkState::new(
-                                my_block.len(),
-                                loss.upper_bound(),
+                    // One memory-model dispatch per worker: the epoch
+                    // loop below is monomorphized over the kernel.
+                    match model {
+                        MemoryModel::Wild => worker(
+                            ctx_ref,
+                            t,
+                            my_block,
+                            WildKernel::new(ctx_ref.w),
+                            cb,
+                        ),
+                        MemoryModel::Atomic => worker(
+                            ctx_ref,
+                            t,
+                            my_block,
+                            CasKernel::new(ctx_ref.w),
+                            cb,
+                        ),
+                        MemoryModel::Lock => worker(
+                            ctx_ref,
+                            t,
+                            my_block,
+                            LockedKernel::new(
+                                ctx_ref.w,
+                                locks_ref
+                                    .as_ref()
+                                    .expect("lock table built for Lock"),
                             ),
-                            // local index of each order entry
-                            (0..my_block.len()).collect::<Vec<usize>>(),
-                        ))
-                    } else {
-                        None
-                    };
-
-                    for epoch in 0..opts.epochs {
-                        if stop_ref.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        let iter_order: Vec<(usize, usize)> =
-                            if let Some((st, _)) = shrink.as_mut() {
-                                st.begin_epoch();
-                                let mut act = st.active_indices();
-                                rng.shuffle(&mut act);
-                                act.iter().map(|&l| (my_block[l], l)).collect()
-                            } else {
-                                match opts.sampling {
-                                    Sampling::Permutation => {
-                                        rng.shuffle(&mut order)
-                                    }
-                                    Sampling::WithReplacement => {
-                                        let m = my_block.len();
-                                        for slot in order.iter_mut() {
-                                            *slot =
-                                                my_block[rng.gen_range(m)];
-                                        }
-                                    }
-                                }
-                                order.iter().map(|&i| (i, 0)).collect()
-                            };
-                        for &(i, local) in &iter_order {
-                            let q = qii_ref[i];
-                            if q <= 0.0 {
-                                continue;
-                            }
-                            let (idx, vals) = ds.x.row(i);
-                            if let Some(lt) = locks_ref {
-                                lt.acquire_sorted(idx);
-                            }
-                            // step 2: read shared ŵ, solve the subproblem
-                            let mut wx = 0.0;
-                            for (j, v) in idx.iter().zip(vals) {
-                                wx += w_ref.get(*j as usize) * v;
-                            }
-                            let a_old = alpha_ref.get(i);
-                            if let Some((st, _)) = shrink.as_mut() {
-                                let g = loss.dual_gradient(a_old, wx);
-                                if st.should_skip(local, a_old, g) {
-                                    if let Some(lt) = locks_ref {
-                                        lt.release(idx);
-                                    }
-                                    continue;
-                                }
-                            }
-                            let a_new = loss.solve_subproblem(a_old, wx, q);
-                            let delta = a_new - a_old;
-                            local_updates += 1;
-                            if delta.abs() > MIN_DELTA {
-                                alpha_ref.set(i, a_new);
-                                // step 3: publish Δα_i x_i
-                                match model {
-                                    MemoryModel::Lock => {
-                                        for (j, v) in idx.iter().zip(vals) {
-                                            let j = *j as usize;
-                                            w_ref.set(j, w_ref.get(j) + delta * v);
-                                        }
-                                    }
-                                    MemoryModel::Atomic => {
-                                        for (j, v) in idx.iter().zip(vals) {
-                                            w_ref.add_atomic(*j as usize, delta * v);
-                                        }
-                                    }
-                                    MemoryModel::Wild => {
-                                        for (j, v) in idx.iter().zip(vals) {
-                                            w_ref.add_wild(*j as usize, delta * v);
-                                        }
-                                    }
-                                }
-                            }
-                            if let Some(lt) = locks_ref {
-                                lt.release(idx);
-                            }
-                        }
-                        if let Some((st, _)) = shrink.as_mut() {
-                            st.end_epoch();
-                        }
-
-                        if t == 0 {
-                            epochs_done_ref
-                                .store(epoch as u64 + 1, Ordering::SeqCst);
-                        }
-
-                        // Rendezvous for evaluation snapshots.
-                        if sync_every > 0 && (epoch + 1) % sync_every == 0 {
-                            barrier_ref.wait();
-                            if t == 0 {
-                                if let Some(cb) = cb.as_deref_mut() {
-                                    let a_snap = alpha_ref.to_vec();
-                                    let w_snap = w_ref.to_vec();
-                                    let pr = Progress {
-                                        epoch: epoch + 1,
-                                        alpha: &a_snap,
-                                        w: &w_snap,
-                                        train_secs: train_t.secs(),
-                                    };
-                                    if !cb(&pr) {
-                                        stop_ref.store(true, Ordering::SeqCst);
-                                    }
-                                }
-                            }
-                            barrier_ref.wait();
-                        }
+                            cb,
+                        ),
                     }
-                    updates_ref.fetch_add(local_updates, Ordering::Relaxed);
                 });
             }
         });
         phases.add("train", train_t.secs());
 
-        SolveResult {
-            alpha: alpha.to_vec(),
-            w_hat: w.to_vec(),
-            epochs_run: epochs_done.load(Ordering::SeqCst) as usize,
-            updates: updates.load(Ordering::Relaxed),
+        (
+            epochs_done.load(Ordering::SeqCst) as usize,
+            updates.load(Ordering::Relaxed),
             phases,
+        )
+    }
+}
+
+/// Everything a worker thread shares by reference.
+struct WorkerCtx<'a, L: Loss> {
+    ds: &'a Dataset,
+    loss: &'a L,
+    opts: &'a SolveOptions,
+    qii: &'a [f64],
+    alpha: &'a SharedVec,
+    w: &'a SharedVec,
+    stop: &'a AtomicBool,
+    updates: &'a AtomicU64,
+    epochs_done: &'a AtomicU64,
+    barrier: &'a Barrier,
+    train_t: &'a Timer,
+}
+
+/// One worker's whole run: `opts.epochs` epochs over its block through
+/// the fused kernel `K`.  Per-epoch visit orders are built in the two
+/// reusable buffers (`order` for the plain samplers, `locals` for the
+/// shrinking active set), so after the first epoch the loop performs no
+/// heap allocation.
+fn worker<L: Loss, K: UpdateKernel>(
+    ctx: &WorkerCtx<'_, L>,
+    t: usize,
+    my_block: &[usize],
+    kernel: K,
+    mut cb: Option<&mut ProgressFn<'_>>,
+) {
+    let mut rng = Pcg32::new(ctx.opts.seed, 1 + t as u64);
+    let mut order: Vec<usize> = my_block.to_vec();
+    // §3.3 "Shrinking Heuristic": each thread maintains an active set
+    // over *its own block* (local indices).
+    let mut locals: Vec<usize> = Vec::new();
+    let mut shrink = if ctx.opts.shrinking {
+        locals.reserve(my_block.len());
+        Some(super::shrinking::ShrinkState::new(
+            my_block.len(),
+            ctx.loss.upper_bound(),
+        ))
+    } else {
+        None
+    };
+    let sync_every = ctx.opts.eval_every; // 0 = free-run
+    let mut local_updates: u64 = 0;
+
+    for epoch in 0..ctx.opts.epochs {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+
+        if let Some(st) = shrink.as_mut() {
+            st.active_indices_into(&mut locals);
+            rng.shuffle(&mut locals);
+            st.begin_epoch();
+            for &local in &locals {
+                let i = my_block[local];
+                let q = ctx.qii[i];
+                if q <= 0.0 {
+                    continue;
+                }
+                let (idx, vals) = ctx.ds.x.row(i);
+                kernel.update(idx, vals, |wx| {
+                    let a_old = ctx.alpha.get(i);
+                    let g = ctx.loss.dual_gradient(a_old, wx);
+                    if st.should_skip(local, a_old, g) {
+                        return None;
+                    }
+                    let a_new = ctx.loss.solve_subproblem(a_old, wx, q);
+                    let delta = a_new - a_old;
+                    local_updates += 1;
+                    if delta.abs() > MIN_DELTA {
+                        ctx.alpha.set(i, a_new);
+                        Some(delta)
+                    } else {
+                        None
+                    }
+                });
+            }
+            st.end_epoch();
+        } else {
+            match ctx.opts.sampling {
+                Sampling::Permutation => rng.shuffle(&mut order),
+                Sampling::WithReplacement => {
+                    let m = my_block.len();
+                    for slot in order.iter_mut() {
+                        *slot = my_block[rng.gen_range(m)];
+                    }
+                }
+            }
+            for &i in &order {
+                let q = ctx.qii[i];
+                if q <= 0.0 {
+                    continue;
+                }
+                let (idx, vals) = ctx.ds.x.row(i);
+                kernel.update(idx, vals, |wx| {
+                    let a_old = ctx.alpha.get(i);
+                    let a_new = ctx.loss.solve_subproblem(a_old, wx, q);
+                    let delta = a_new - a_old;
+                    local_updates += 1;
+                    if delta.abs() > MIN_DELTA {
+                        ctx.alpha.set(i, a_new);
+                        Some(delta)
+                    } else {
+                        None
+                    }
+                });
+            }
+        }
+
+        if t == 0 {
+            ctx.epochs_done.store(epoch as u64 + 1, Ordering::SeqCst);
+        }
+
+        // Rendezvous for evaluation snapshots.
+        if sync_every > 0 && (epoch + 1) % sync_every == 0 {
+            ctx.barrier.wait();
+            if t == 0 {
+                if let Some(cb) = cb.as_deref_mut() {
+                    let a_snap = ctx.alpha.to_vec();
+                    let w_snap = ctx.w.to_vec();
+                    let pr = Progress {
+                        epoch: epoch + 1,
+                        alpha: &a_snap,
+                        w: &w_snap,
+                        train_secs: ctx.train_t.secs(),
+                    };
+                    if !cb(&pr) {
+                        ctx.stop.store(true, Ordering::SeqCst);
+                    }
+                }
+            }
+            ctx.barrier.wait();
         }
     }
+    ctx.updates.fetch_add(local_updates, Ordering::Relaxed);
 }
 
 /// Split a slice into `p` nearly-equal chunks (first `rem` get one extra).
@@ -358,6 +448,18 @@ mod tests {
         assert_eq!(chunks[0].len(), 4); // 13 = 4+3+3+3
         let flat: Vec<usize> = chunks.concat();
         assert_eq!(flat, xs);
+    }
+
+    #[test]
+    fn memory_model_parse_tracks_registry() {
+        assert_eq!(MemoryModel::parse("lock"), Some(MemoryModel::Lock));
+        assert_eq!(MemoryModel::parse("atomic"), Some(MemoryModel::Atomic));
+        assert_eq!(MemoryModel::parse("wild"), Some(MemoryModel::Wild));
+        assert_eq!(MemoryModel::parse("passcode-wild"), None);
+        assert_eq!(MemoryModel::parse("hogwild"), None);
+        for m in [MemoryModel::Lock, MemoryModel::Atomic, MemoryModel::Wild] {
+            assert_eq!(MemoryModel::parse(m.name()), Some(m));
+        }
     }
 
     #[test]
@@ -543,6 +645,28 @@ mod tests {
         );
         assert_eq!(cold.alpha, warm.alpha);
         assert_eq!(cold.w_hat, warm.w_hat);
+    }
+
+    #[test]
+    fn shared_core_matches_solve_on_one_thread() {
+        // The zero-copy session core and the cold-start shim are the
+        // same algorithm: driving run_epochs_shared over owned buffers
+        // must reproduce Passcode::solve bit-for-bit (serial path).
+        let (ds, c) = small();
+        let loss = Hinge::new(c);
+        let o = opts(1, 5);
+        let via_solve = Passcode::solve(
+            &ds, &loss, MemoryModel::Wild, &o, None,
+        );
+        let alpha = SharedVec::zeros(ds.n());
+        let w = SharedVec::zeros(ds.d());
+        let (epochs_run, updates, _) = Passcode::run_epochs_shared(
+            &ds, &loss, MemoryModel::Wild, &o, &alpha, &w, None,
+        );
+        assert_eq!(epochs_run, 5);
+        assert_eq!(updates, via_solve.updates);
+        assert_eq!(alpha.to_vec(), via_solve.alpha);
+        assert_eq!(w.to_vec(), via_solve.w_hat);
     }
 
     #[test]

@@ -39,6 +39,14 @@ impl ShrinkState {
         (0..self.active.len()).filter(|&i| self.active[i]).collect()
     }
 
+    /// Fill `out` with the active indices, reusing its capacity — the
+    /// allocation-free sibling of [`ShrinkState::active_indices`] for
+    /// steady-state epoch loops.
+    pub fn active_indices_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.active.len()).filter(|&i| self.active[i]));
+    }
+
     pub fn n_active(&self) -> usize {
         self.n_active
     }

@@ -1,4 +1,5 @@
-//! Shared-memory primal vector with the paper's three write disciplines.
+//! Shared-memory primal vector with the paper's three write disciplines,
+//! laid out false-sharing-consciously.
 //!
 //! The heart of PASSCoDe is *how* `w ← w + Δα_i x_i` is written to shared
 //! memory (Algorithm 2, step 3).  [`SharedVec`] stores `w` as
@@ -15,52 +16,134 @@
 //! * reads are always plain relaxed loads ([`SharedVec::get`]) — all three
 //!   variants read `w` without locks; only Lock additionally guards the
 //!   *feature set* via [`crate::solver::locks::LockTable`].
+//!
+//! **Layout.** Cells are grouped into 64-byte cache-line-aligned blocks
+//! ([`LINE_CELLS`] `AtomicU64`s per line), so the allocation starts on a
+//! line boundary and no logical line ever straddles two hardware lines.
+//! Whether two *features* share a line is then purely a function of their
+//! index distance — which the feature-locality remap
+//! ([`crate::data::FeatureRemap`]) exploits by packing high-document-
+//! frequency features into the same few resident lines and pushing the
+//! rarely-touched tail out of them (the memory-system effect Liu & Wright
+//! 2015 identify as the async-CD scaling limiter).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// A fixed-size shared `f64` vector supporting lock-free concurrent access.
+/// `f64` cells per cache line (64 bytes / 8-byte cell).
+pub const LINE_CELLS: usize = 8;
+const LINE_SHIFT: u32 = 3;
+const LINE_MASK: usize = LINE_CELLS - 1;
+
+/// One cache line of atomically-accessed f64 bit patterns.  The `align`
+/// guarantee is what makes [`SharedVec`] line-boundary-exact.
+#[repr(align(64))]
+struct Line {
+    cells: [AtomicU64; LINE_CELLS],
+}
+
+impl Line {
+    fn zeroed() -> Line {
+        // f64 0.0 has an all-zero bit pattern.
+        Line { cells: [0u64; LINE_CELLS].map(AtomicU64::new) }
+    }
+}
+
+/// A fixed-size shared `f64` vector supporting lock-free concurrent
+/// access, allocated in cache-line-aligned blocks.
 pub struct SharedVec {
-    bits: Vec<AtomicU64>,
+    lines: Vec<Line>,
+    len: usize,
 }
 
 impl SharedVec {
     /// Zero-initialized vector of length `n`.
     pub fn zeros(n: usize) -> Self {
-        Self { bits: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect() }
+        let n_lines = (n + LINE_CELLS - 1) / LINE_CELLS;
+        Self { lines: (0..n_lines).map(|_| Line::zeroed()).collect(), len: n }
     }
 
     /// Build from an existing slice.
     pub fn from_slice(v: &[f64]) -> Self {
-        Self { bits: v.iter().map(|&x| AtomicU64::new(x.to_bits())).collect() }
+        let out = Self::zeros(v.len());
+        for (j, &x) in v.iter().enumerate() {
+            out.set(j, x);
+        }
+        out
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.bits.len()
+        self.len
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.bits.is_empty()
+        self.len == 0
+    }
+
+    /// The cell backing element `j`, bounds-checked against the logical
+    /// length (the padding tail is not addressable).
+    #[inline]
+    fn cell(&self, j: usize) -> &AtomicU64 {
+        assert!(j < self.len, "index {j} out of bounds (len {})", self.len);
+        // SAFETY: `j < len ≤ lines.len() * LINE_CELLS` and `j & LINE_MASK
+        // < LINE_CELLS` by construction.
+        unsafe { self.cell_unchecked(j) }
+    }
+
+    /// The cell backing element `j`, no bounds check.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    unsafe fn cell_unchecked(&self, j: usize) -> &AtomicU64 {
+        self.lines
+            .get_unchecked(j >> LINE_SHIFT)
+            .cells
+            .get_unchecked(j & LINE_MASK)
     }
 
     /// Relaxed read of element `j`.
     #[inline]
     pub fn get(&self, j: usize) -> f64 {
-        f64::from_bits(self.bits[j].load(Ordering::Relaxed))
+        f64::from_bits(self.cell(j).load(Ordering::Relaxed))
+    }
+
+    /// Relaxed read of element `j` without the bounds check — the fused
+    /// kernels' gather, justified by the CSR construction invariant
+    /// (column indices validated `< cols` once, at matrix build time).
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    pub unsafe fn get_unchecked(&self, j: usize) -> f64 {
+        f64::from_bits(self.cell_unchecked(j).load(Ordering::Relaxed))
     }
 
     /// Plain (relaxed) overwrite of element `j`.
     #[inline]
     pub fn set(&self, j: usize, v: f64) {
-        self.bits[j].store(v.to_bits(), Ordering::Relaxed);
+        self.cell(j).store(v.to_bits(), Ordering::Relaxed);
     }
 
     /// Lossless concurrent add via a compare-exchange loop
     /// (PASSCoDe-Atomic's step 3).
     #[inline]
     pub fn add_atomic(&self, j: usize, delta: f64) {
-        let cell = &self.bits[j];
+        Self::cas_add(self.cell(j), delta);
+    }
+
+    /// [`SharedVec::add_atomic`] without the bounds check.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    pub unsafe fn add_atomic_unchecked(&self, j: usize, delta: f64) {
+        Self::cas_add(self.cell_unchecked(j), delta);
+    }
+
+    #[inline]
+    fn cas_add(cell: &AtomicU64, delta: f64) {
         let mut cur = cell.load(Ordering::Relaxed);
         loop {
             let new = (f64::from_bits(cur) + delta).to_bits();
@@ -81,7 +164,18 @@ impl SharedVec {
     /// memory-conflict behaviour analyzed by the paper's Theorem 3.
     #[inline]
     pub fn add_wild(&self, j: usize, delta: f64) {
-        let cell = &self.bits[j];
+        let cell = self.cell(j);
+        let cur = f64::from_bits(cell.load(Ordering::Relaxed));
+        cell.store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    /// [`SharedVec::add_wild`] without the bounds check.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    pub unsafe fn add_wild_unchecked(&self, j: usize, delta: f64) {
+        let cell = self.cell_unchecked(j);
         let cur = f64::from_bits(cell.load(Ordering::Relaxed));
         cell.store((cur + delta).to_bits(), Ordering::Relaxed);
     }
@@ -89,6 +183,16 @@ impl SharedVec {
     /// Snapshot into a plain `Vec<f64>` (evaluation path; not hot).
     pub fn to_vec(&self) -> Vec<f64> {
         (0..self.len()).map(|j| self.get(j)).collect()
+    }
+
+    /// Copy values out into an existing buffer (lengths must match) —
+    /// the allocation-free sibling of [`SharedVec::to_vec`] used by
+    /// `TrainSession`'s per-epoch sync.
+    pub fn copy_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len());
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = self.get(j);
+        }
     }
 
     /// Copy values in from a slice (lengths must match).
@@ -123,6 +227,27 @@ mod tests {
     fn from_slice_and_to_vec() {
         let v = SharedVec::from_slice(&[1.0, 2.5, -7.0]);
         assert_eq!(v.to_vec(), vec![1.0, 2.5, -7.0]);
+    }
+
+    #[test]
+    fn lines_are_cache_aligned_and_padding_is_not_addressable() {
+        // Lengths that do not divide the line width still work, the
+        // backing allocation is 64-byte aligned, and indexing past the
+        // logical length panics even though padded cells exist.
+        for n in [1usize, 7, 8, 9, 63, 64, 65] {
+            let v = SharedVec::zeros(n);
+            assert_eq!(v.len(), n);
+            assert_eq!(v.lines.as_ptr() as usize % 64, 0, "len {n}");
+            assert!(std::panic::catch_unwind(|| v.get(n)).is_err());
+        }
+    }
+
+    #[test]
+    fn copy_into_matches_to_vec() {
+        let v = SharedVec::from_slice(&[3.0, -1.0, 0.5, 9.0]);
+        let mut buf = vec![0.0; 4];
+        v.copy_into(&mut buf);
+        assert_eq!(buf, v.to_vec());
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! The feature-locality remap's correctness contracts: a remap is a pure
+//! column permutation, so `remap → solve → inverse-remap` must reproduce
+//! the unremapped solve's predictions exactly, and training checkpoints
+//! taken on remapped datasets must round-trip through `model_io`
+//! (checkpoint + persisted remap) into bit-exact resumption.
+
+use passcode::coordinator::model_io::{
+    load_checkpoint, load_remap, save_checkpoint, save_remap,
+};
+use passcode::data::{registry, Dataset, FeatureRemap};
+use passcode::eval;
+use passcode::loss::{Hinge, LossKind};
+use passcode::solver::{lookup, SerialDcd, Solver, SolveOptions};
+
+fn small() -> (Dataset, Dataset, f64) {
+    let (tr, te, c) = registry::load("rcv1", 0.05).unwrap();
+    (tr, te, c)
+}
+
+/// ±1 predictions of `w` on (folded) dataset rows.
+fn predictions(ds: &Dataset, w: &[f64]) -> Vec<f64> {
+    (0..ds.n())
+        .map(|i| {
+            let folded = ds.x.row_dot_dense(i, w);
+            // folded margin > 0 ⇔ prediction matches the label
+            if folded > 0.0 { ds.y[i] } else { -ds.y[i] }
+        })
+        .collect()
+}
+
+#[test]
+fn remap_solve_inverse_remap_matches_unremapped_serial_dcd() {
+    let (tr, te, c) = small();
+    let loss = Hinge::new(c);
+    let opts = SolveOptions { epochs: 15, ..Default::default() };
+
+    let plain = SerialDcd::solve(&tr, &loss, &opts, None);
+
+    let (tr_r, map) = tr.remap_features();
+    let remapped = SerialDcd::solve(&tr_r, &loss, &opts, None);
+    let w_back = map.unmap_w(&remapped.w_hat);
+
+    // Predictions on the held-out split are bit-identical (±1 vectors).
+    assert_eq!(
+        predictions(&te, &w_back),
+        predictions(&te, &plain.w_hat),
+        "remap round trip changed predictions"
+    );
+    // And the weight vectors agree to float-summation noise: the remap
+    // only reorders the per-row accumulation.
+    let err = w_back
+        .iter()
+        .zip(&plain.w_hat)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(err < 1e-6, "‖w_back − w_plain‖∞ = {err}");
+    // α lives in row space — untouched by a column permutation.
+    let aerr = remapped
+        .alpha
+        .iter()
+        .zip(&plain.alpha)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(aerr < 1e-6, "α diverged: {aerr}");
+}
+
+#[test]
+fn remap_preserves_objective_and_gap() {
+    let (tr, _, c) = small();
+    let loss = Hinge::new(c);
+    let opts = SolveOptions { epochs: 10, ..Default::default() };
+    let (tr_r, map) = tr.remap_features();
+    let r = SerialDcd::solve(&tr_r, &loss, &opts, None);
+    // Objectives are permutation-invariant: evaluate the remapped run in
+    // its own space and the unmapped weights in the original space.
+    let p_in = eval::primal_objective(&tr_r, &loss, &r.w_hat);
+    let p_out = eval::primal_objective(&tr, &loss, &map.unmap_w(&r.w_hat));
+    assert!(
+        (p_in - p_out).abs() < 1e-9 * p_in.abs().max(1.0),
+        "{p_in} vs {p_out}"
+    );
+    let gap = eval::duality_gap(&tr_r, &loss, &r.alpha);
+    assert!(gap >= -1e-9);
+}
+
+#[test]
+fn checkpoint_roundtrips_through_model_io_on_remapped_dataset() {
+    let (tr, _, c) = small();
+    let (tr_r, map) = tr.remap_features();
+    let solver = lookup("passcode-wild").unwrap();
+    let opts = SolveOptions { epochs: 6, seed: 11, ..Default::default() };
+    let (k, n) = (3usize, 6usize);
+
+    let mut uninterrupted = solver
+        .session(&tr_r, LossKind::Hinge, c, opts.clone())
+        .unwrap();
+    uninterrupted.run_epochs(n).unwrap();
+
+    let mut first = solver
+        .session(&tr_r, LossKind::Hinge, c, opts.clone())
+        .unwrap();
+    first.run_epochs(k).unwrap();
+
+    // Persist checkpoint + remap, as a deployment would.
+    let dir = std::env::temp_dir().join("passcode_remap_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("ckpt.json");
+    let remap_path = dir.join("remap.json");
+    save_checkpoint(&first.snapshot(), &ckpt_path).unwrap();
+    save_remap(&map, &remap_path).unwrap();
+
+    // A fresh process reconstructs the remapped dataset from the
+    // persisted map and resumes from the persisted checkpoint.
+    let loaded_map = load_remap(&remap_path).unwrap();
+    assert_eq!(loaded_map, map);
+    let tr_r2 = tr.remap_features_with(&loaded_map);
+    let ckpt = load_checkpoint(&ckpt_path).unwrap();
+    let mut resumed = solver
+        .session(&tr_r2, LossKind::Hinge, c, opts)
+        .unwrap();
+    resumed.resume(&ckpt).unwrap();
+    resumed.run_epochs(n - k).unwrap();
+
+    // Single-worker session: the continuation replays exactly.
+    assert_eq!(resumed.alpha(), uninterrupted.alpha(), "α diverged");
+    assert_eq!(resumed.w_hat(), uninterrupted.w_hat(), "ŵ diverged");
+    assert_eq!(resumed.updates(), uninterrupted.updates());
+}
+
+#[test]
+fn remap_is_deterministic_and_bijective() {
+    let (tr, _, _) = small();
+    let a = FeatureRemap::by_doc_frequency(&tr.x);
+    let b = FeatureRemap::by_doc_frequency(&tr.x);
+    assert_eq!(a, b, "doc-frequency remap must be deterministic");
+    assert_eq!(a.d(), tr.d());
+    // forward ∘ inverse = id and the map orders by descending df.
+    let df = tr.x.col_doc_frequency();
+    for new in 1..a.d() {
+        let (prev, cur) =
+            (a.inverse()[new - 1] as usize, a.inverse()[new] as usize);
+        assert!(
+            df[prev] > df[cur] || (df[prev] == df[cur] && prev < cur),
+            "slot {new} out of order"
+        );
+    }
+    for old in 0..a.d() {
+        assert_eq!(a.inverse()[a.forward()[old] as usize] as usize, old);
+    }
+}
