@@ -1,0 +1,567 @@
+//! In-crate dynamic concurrency checker for the memory-model kernels.
+//!
+//! `passcode check` runs the *production* update kernels
+//! ([`crate::solver::kernel`]) over instrumented twins of the shared
+//! state — [`trace::CheckedVec`] behind the `MemAccess` seam and
+//! [`trace::CheckedLocks`] behind `LockDiscipline` — under a seeded
+//! schedule-exploring executor ([`sched`], CHESS/PCT-style bounded
+//! preemption), then analyzes each recorded trace with a vector-clock
+//! happens-before race detector ([`vclock`], FastTrack-lite).
+//!
+//! The point is to *pin the paper's memory-model claims as executable
+//! invariants* (PASSCoDe, Hsieh–Yu–Dhillon, ICML 2015):
+//!
+//! * **Lock** — ordered per-feature locks serialize conflicting writes:
+//!   zero races across every explored schedule, and the §3.3
+//!   sorted-acquisition (deadlock-freedom) protocol holds on every
+//!   `acquire_sorted` call.
+//! * **Atomic** — relaxed CAS adds on `w`: zero races (concurrent
+//!   atomics are synchronization-free but not data races), matching the
+//!   regime of Theorem 2's linear-convergence guarantee.
+//! * **Wild** — plain read-add-store: races on `w` *by design* (and the
+//!   checker demands they actually show up), but never on α (unique
+//!   coordinate ownership under the §3.3 partition) and never out of
+//!   bounds — the preconditions Theorem 3's backward-error analysis
+//!   needs for `ŵ` to solve a nearby perturbed primal.
+//!
+//! Alongside race detection, each schedule measures the staleness τ
+//! (foreign `w` writes landing inside an update's read→write window —
+//! the delay parameter of Liu & Wright's AsySCD, arXiv:1403.3862, also
+//! central to Cheung–Cole–Tao, arXiv:1811.03254) and the empirical
+//! backward error `‖ŵ − w̄(α)‖₂ / ‖ŵ‖₂` of Eq. 6 / Theorem 3, and the
+//! whole thing round-trips through JSON ([`report`]).
+//!
+//! Schedules are deterministic functions of their seed: a violation
+//! report always carries the seed that reproduces it, and
+//! `passcode check --model <m> --schedules 1 --seed <s>` replays the
+//! exact interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::loss::{Hinge, Loss, MIN_DELTA};
+use crate::solver::kernel::{
+    CasKernel, LockedKernel, UpdateKernel, WildKernel,
+};
+use crate::solver::MemoryModel;
+use crate::util::{Pcg32, SplitMix64};
+
+pub mod report;
+pub mod sched;
+pub mod trace;
+pub mod vclock;
+
+pub use report::{CheckReport, ModelReport, RaceSample, ViolationSample};
+pub use trace::{Violation, ViolationKind};
+pub use vclock::Analysis;
+
+use trace::{ArrayId, CheckedLocks, CheckedVec, Recorder, TraceEvent};
+
+/// Configuration for one `passcode check` run.
+#[derive(Clone, Debug)]
+pub struct CheckConfig {
+    /// Worker threads per schedule (≥ 1).
+    pub threads: usize,
+    /// Synthetic dataset rows (coordinates).
+    pub rows: usize,
+    /// Synthetic dataset features (≥ 2; feature 0 is shared by every
+    /// row, so `w[0]` is contended in every schedule).
+    pub features: usize,
+    /// Epochs per schedule.
+    pub epochs: usize,
+    /// Schedules (seeded interleavings) explored per model.
+    pub schedules: usize,
+    /// Master seed; per-schedule replay seeds derive from it.
+    pub seed: u64,
+    /// Max random preemptions per schedule (the PCT-style bound).
+    pub preemption_bound: u32,
+    /// Yield-point budget per schedule (livelock/deadlock backstop).
+    pub max_steps: u64,
+    /// Hinge-loss penalty parameter `C`.
+    pub c: f64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        CheckConfig {
+            threads: 3,
+            rows: 9,
+            features: 6,
+            epochs: 2,
+            schedules: 100,
+            seed: 42,
+            preemption_bound: 16,
+            max_steps: 1 << 20,
+            c: 1.0,
+        }
+    }
+}
+
+/// One synthetic training row with the label folded into the values
+/// (the kernels compute `w·x` directly, so rows carry `y_i x_i`).
+struct Row {
+    idx: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+/// Tiny deterministic L1-SVM instance.  Every row touches feature 0
+/// (guaranteed `w` contention) plus two rotating features, with values
+/// varied enough that subproblem deltas stay above [`MIN_DELTA`] for
+/// the first epochs.
+fn synth_problem(n: usize, d: usize) -> (Vec<Row>, Vec<f64>) {
+    debug_assert!(d >= 2);
+    let mut rows = Vec::with_capacity(n);
+    let mut qii = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut feats = vec![0u32];
+        for f in [1 + (i % (d - 1)), 1 + ((i / 2 + 1) % (d - 1))] {
+            let f = f as u32;
+            if !feats.contains(&f) {
+                feats.push(f);
+            }
+        }
+        feats.sort_unstable();
+        let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+        let vals: Vec<f64> = feats
+            .iter()
+            .enumerate()
+            .map(|(k, _)| y * (0.5 + 0.25 * ((i + k) % 4) as f64))
+            .collect();
+        let q: f64 = vals.iter().map(|v| v * v).sum();
+        rows.push(Row { idx: feats, vals });
+        qii.push(q);
+    }
+    (rows, qii)
+}
+
+/// Round-robin coordinate partition: block `t` owns `{i : i ≡ t mod p}`,
+/// mirroring the §3.3 unique-owner property the α-race invariant needs.
+fn chunk_evenly(n: usize, parts: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); parts.max(1)];
+    for i in 0..n {
+        out[i % parts.max(1)].push(i);
+    }
+    out
+}
+
+/// Everything a checker worker needs besides its kernel.
+struct WorkerArgs<'a> {
+    rows: &'a [Row],
+    qii: &'a [f64],
+    alpha: &'a CheckedVec,
+    rec: &'a Recorder,
+    loss: Hinge,
+    block: &'a [usize],
+    epochs: usize,
+    seed: u64,
+    tid: usize,
+}
+
+/// The worker loop, monomorphized per kernel exactly like the real
+/// solver ([`crate::solver::passcode`]): per-epoch block permutation,
+/// then `begin_update → fused dot/solve/scatter → end_update` per
+/// coordinate.  Returns the number of updates that scattered.
+fn drive<K: UpdateKernel>(kernel: K, a: &WorkerArgs<'_>) -> u64 {
+    let mut rng = Pcg32::new(a.seed, 1000 + a.tid as u64);
+    let mut order: Vec<usize> = a.block.to_vec();
+    let mut updates = 0u64;
+    for _ in 0..a.epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            a.rec.begin_update(i as u32);
+            let row = &a.rows[i];
+            let (alpha, loss, q) = (a.alpha, a.loss, a.qii[i]);
+            let wrote = kernel.update(&row.idx, &row.vals, |wx| {
+                let a_old = crate::solver::MemAccess::get(alpha, i);
+                let a_new = loss.solve_subproblem(a_old, wx, q);
+                let delta = a_new - a_old;
+                if delta.abs() > MIN_DELTA {
+                    crate::solver::MemAccess::set(alpha, i, a_new);
+                    Some(delta)
+                } else {
+                    None
+                }
+            });
+            if wrote {
+                updates += 1;
+            }
+            a.rec.end_update();
+        }
+    }
+    updates
+}
+
+/// Everything one explored schedule produced.  Two runs with the same
+/// `(model, cfg, schedule_seed)` compare equal — the determinism the
+/// replay workflow depends on (pinned in `tests/chk.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleRun {
+    /// The replay seed that produced this run.
+    pub seed: u64,
+    /// The full recorded trace, in serialized execution order.
+    pub events: Vec<TraceEvent>,
+    /// Protocol violations (including a `Stuck` entry when the
+    /// scheduler tripped its step bound or deadlocked).
+    pub violations: Vec<Violation>,
+    /// Offline race + τ analysis of the trace.
+    pub analysis: Analysis,
+    /// Coordinate updates that scattered.
+    pub updates: u64,
+    /// Empirical backward error `‖ŵ − w̄(α)‖₂ / ‖ŵ‖₂` with
+    /// `w̄(α) = Σ_i α_i x_i` recomputed from the final α (Eq. 6).
+    pub eps_ratio: f64,
+}
+
+/// Run one seeded schedule of `model` and analyze it.
+pub fn run_schedule(
+    model: MemoryModel,
+    cfg: &CheckConfig,
+    schedule_seed: u64,
+) -> ScheduleRun {
+    let threads = cfg.threads.max(1);
+    let d = cfg.features.max(2);
+    let (rows, qii) = synth_problem(cfg.rows.max(1), d);
+    let n = rows.len();
+
+    let rec = Recorder::new(threads);
+    let sched = sched::Scheduler::new(
+        threads,
+        schedule_seed,
+        cfg.preemption_bound,
+        cfg.max_steps,
+    );
+    let w = CheckedVec::zeros(ArrayId::W, d, Arc::clone(&rec));
+    let alpha = CheckedVec::zeros(ArrayId::Alpha, n, Arc::clone(&rec));
+    let locks = CheckedLocks::new(d, Arc::clone(&rec));
+    let loss = Hinge::new(cfg.c);
+    let blocks = chunk_evenly(n, threads);
+    let total_updates = AtomicU64::new(0);
+
+    let (rows_ref, qii_ref): (&[Row], &[f64]) = (&rows, &qii);
+    let (w_ref, alpha_ref, locks_ref) = (&w, &alpha, &locks);
+    let (rec_ref, updates_ref): (&Recorder, _) = (&rec, &total_updates);
+    let epochs = cfg.epochs;
+    std::thread::scope(|s| {
+        for (tid, block) in blocks.iter().enumerate() {
+            let sched = Arc::clone(&sched);
+            s.spawn(move || {
+                // First thing, so every later record holds the token;
+                // declared first, so it drops (and hands off) last.
+                let _guard = sched::WorkerGuard::install(sched, tid);
+                let args = WorkerArgs {
+                    rows: rows_ref,
+                    qii: qii_ref,
+                    alpha: alpha_ref,
+                    rec: rec_ref,
+                    loss,
+                    block: block.as_slice(),
+                    epochs,
+                    seed: schedule_seed,
+                    tid,
+                };
+                let u = match model {
+                    MemoryModel::Wild => {
+                        drive(WildKernel::new(w_ref), &args)
+                    }
+                    MemoryModel::Atomic => {
+                        drive(CasKernel::new(w_ref), &args)
+                    }
+                    MemoryModel::Lock => {
+                        drive(LockedKernel::new(w_ref, locks_ref), &args)
+                    }
+                };
+                updates_ref.fetch_add(u, Ordering::Relaxed);
+            });
+        }
+    });
+
+    if sched.bailed() {
+        let why = if sched.deadlocked() {
+            "a blocked thread had no runnable sibling (deadlock)"
+        } else {
+            "the yield-point budget was exhausted (livelock?)"
+        };
+        rec.violation(
+            ViolationKind::Stuck,
+            format!("schedule stuck after {} steps: {}", sched.steps(), why),
+        );
+    }
+
+    let (events, violations) = rec.drain();
+    let analysis = vclock::analyze(&events, threads);
+
+    // Backward error (Eq. 6): recompute w̄ = Σ_i α_i x_i from the final
+    // α and compare with the ŵ the kernels actually produced.  Lock and
+    // Atomic keep the two equal to rounding; Wild's lost updates open a
+    // gap — the ε Theorem 3 charges to a perturbed primal.
+    let w_hat = w.to_vec();
+    let alpha_v = alpha.to_vec();
+    let mut w_bar = vec![0.0f64; w_hat.len()];
+    for (row, &a) in rows.iter().zip(&alpha_v) {
+        for (&j, &v) in row.idx.iter().zip(&row.vals) {
+            w_bar[j as usize] += a * v;
+        }
+    }
+    let eps: f64 = w_hat
+        .iter()
+        .zip(&w_bar)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = w_hat.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let eps_ratio = eps / norm.max(1e-12);
+
+    ScheduleRun {
+        seed: schedule_seed,
+        events,
+        violations,
+        analysis,
+        updates: total_updates.load(Ordering::Relaxed),
+        eps_ratio,
+    }
+}
+
+/// Per-model pass/fail for one schedule: no protocol violations, and
+/// races only where the model permits them (Wild: `w` only).
+fn schedule_ok(model: MemoryModel, run: &ScheduleRun) -> bool {
+    if !run.violations.is_empty() {
+        return false;
+    }
+    match model {
+        MemoryModel::Wild => run.analysis.races_alpha == 0,
+        MemoryModel::Lock | MemoryModel::Atomic => {
+            run.analysis.races_w == 0 && run.analysis.races_alpha == 0
+        }
+    }
+}
+
+/// Domain-separation tag so each model explores its own seed stream.
+fn model_tag(model: MemoryModel) -> u64 {
+    match model {
+        MemoryModel::Lock => 0x4C4F_434B,   // "LOCK"
+        MemoryModel::Atomic => 0x4154_4F4D, // "ATOM"
+        MemoryModel::Wild => 0x5749_4C44,   // "WILD"
+    }
+}
+
+/// Explore `cfg.schedules` seeded interleavings of `model` and
+/// aggregate them into a [`ModelReport`].
+pub fn check_model(model: MemoryModel, cfg: &CheckConfig) -> ModelReport {
+    let mut seeds = SplitMix64::new(cfg.seed ^ model_tag(model));
+    let mut racy_schedules = 0u64;
+    let mut updates = 0u64;
+    let mut events = 0u64;
+    let (mut races_w, mut races_alpha) = (0u64, 0u64);
+    let (mut oob, mut unsorted_locks, mut other_violations) =
+        (0u64, 0u64, 0u64);
+    let mut tau_max = 0u64;
+    let (mut tau_sum, mut tau_n) = (0.0f64, 0u64);
+    let (mut eps_max, mut eps_sum) = (0.0f64, 0.0f64);
+    let mut first_violation_seed = None;
+    let mut race_samples: Vec<RaceSample> = Vec::new();
+    let mut violation_samples: Vec<ViolationSample> = Vec::new();
+    let mut ok = true;
+
+    for _ in 0..cfg.schedules {
+        let seed = seeds.next_u64();
+        let run = run_schedule(model, cfg, seed);
+        if !schedule_ok(model, &run) {
+            ok = false;
+            if first_violation_seed.is_none() {
+                first_violation_seed = Some(seed);
+            }
+        }
+        let a = &run.analysis;
+        if a.races_w + a.races_alpha > 0 {
+            racy_schedules += 1;
+        }
+        races_w += a.races_w;
+        races_alpha += a.races_alpha;
+        updates += run.updates;
+        events += run.events.len() as u64;
+        for r in &a.samples {
+            if race_samples.len() < vclock::MAX_RACE_SAMPLES {
+                race_samples.push(race_sample(seed, r));
+            }
+        }
+        for v in &run.violations {
+            match v.kind {
+                ViolationKind::OutOfBounds => oob += 1,
+                ViolationKind::UnsortedLocks => unsorted_locks += 1,
+                ViolationKind::ForeignRelease | ViolationKind::Stuck => {
+                    other_violations += 1;
+                }
+            }
+            if violation_samples.len() < vclock::MAX_RACE_SAMPLES {
+                violation_samples.push(ViolationSample {
+                    schedule_seed: seed,
+                    tid: v.tid,
+                    kind: v.kind.name().to_string(),
+                    detail: v.detail.clone(),
+                });
+            }
+        }
+        tau_max = tau_max.max(a.tau_max() as u64);
+        tau_sum += a.tau.iter().map(|&t| t as f64).sum::<f64>();
+        tau_n += a.tau.len() as u64;
+        eps_max = eps_max.max(run.eps_ratio);
+        eps_sum += run.eps_ratio;
+    }
+
+    // Wild's expectation is positive, not just permissive: with real
+    // concurrency its plain read-add-store *must* race on w — a silent
+    // absence of races would mean the checker lost its teeth.
+    let expect_races = model == MemoryModel::Wild
+        && cfg.threads >= 2
+        && cfg.schedules > 0
+        && cfg.epochs > 0;
+    if expect_races && races_w == 0 {
+        ok = false;
+    }
+
+    ModelReport {
+        model: model.name().to_string(),
+        schedules: cfg.schedules as u64,
+        racy_schedules,
+        updates,
+        events,
+        races_w,
+        races_alpha,
+        oob,
+        unsorted_locks,
+        other_violations,
+        tau_max,
+        tau_mean: if tau_n > 0 { tau_sum / tau_n as f64 } else { 0.0 },
+        eps_ratio_max: eps_max,
+        eps_ratio_mean: if cfg.schedules > 0 {
+            eps_sum / cfg.schedules as f64
+        } else {
+            0.0
+        },
+        ok,
+        first_violation_seed,
+        race_samples,
+        violation_samples,
+    }
+}
+
+fn race_sample(seed: u64, r: &vclock::Race) -> RaceSample {
+    RaceSample {
+        schedule_seed: seed,
+        array: r.array.name().to_string(),
+        index: r.index,
+        prior_tid: r.prior.tid,
+        prior_coord: r.prior.coord.map_or(-1, |c| c as i64),
+        prior_kind: r.prior.kind.name().to_string(),
+        current_tid: r.current.tid,
+        current_coord: r.current.coord.map_or(-1, |c| c as i64),
+        current_kind: r.current.kind.name().to_string(),
+    }
+}
+
+/// Check an explicit subset of memory models (the CLI's `--model`).
+pub fn run_check_models(
+    cfg: &CheckConfig,
+    models: &[MemoryModel],
+) -> CheckReport {
+    let reports: Vec<ModelReport> =
+        models.iter().map(|&m| check_model(m, cfg)).collect();
+    let ok = reports.iter().all(|r| r.ok);
+    CheckReport {
+        version: report::REPORT_VERSION.to_string(),
+        threads: cfg.threads.max(1) as u64,
+        rows: cfg.rows.max(1) as u64,
+        features: cfg.features.max(2) as u64,
+        epochs: cfg.epochs as u64,
+        schedules: cfg.schedules as u64,
+        seed: cfg.seed,
+        preemption_bound: cfg.preemption_bound as u64,
+        models: reports,
+        ok,
+    }
+}
+
+/// Check all three memory models — the default `passcode check`.
+pub fn run_check(cfg: &CheckConfig) -> CheckReport {
+    run_check_models(
+        cfg,
+        &[MemoryModel::Lock, MemoryModel::Atomic, MemoryModel::Wild],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(schedules: usize) -> CheckConfig {
+        CheckConfig {
+            threads: 2,
+            rows: 6,
+            features: 4,
+            epochs: 1,
+            schedules,
+            seed: 11,
+            ..CheckConfig::default()
+        }
+    }
+
+    #[test]
+    fn synth_problem_is_sorted_in_bounds_and_hot_on_feature_0() {
+        let (rows, qii) = synth_problem(9, 6);
+        assert_eq!(rows.len(), 9);
+        for (row, &q) in rows.iter().zip(&qii) {
+            assert_eq!(row.idx[0], 0);
+            assert!(row.idx.windows(2).all(|p| p[0] < p[1]));
+            assert!(row.idx.iter().all(|&j| j < 6));
+            assert!(q > 0.0);
+            assert_eq!(row.idx.len(), row.vals.len());
+        }
+    }
+
+    #[test]
+    fn chunk_evenly_partitions_every_coordinate_once() {
+        let blocks = chunk_evenly(10, 3);
+        let mut seen: Vec<usize> = blocks.concat();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lock_schedule_is_race_and_violation_free() {
+        let run = run_schedule(MemoryModel::Lock, &small(1), 99);
+        assert!(run.violations.is_empty());
+        assert_eq!(run.analysis.races_w, 0);
+        assert_eq!(run.analysis.races_alpha, 0);
+        assert!(run.updates > 0);
+        assert!(run.eps_ratio < 1e-9);
+    }
+
+    #[test]
+    fn atomic_schedule_is_race_free() {
+        let run = run_schedule(MemoryModel::Atomic, &small(1), 99);
+        assert!(run.violations.is_empty());
+        assert_eq!(run.analysis.races_w, 0);
+        assert_eq!(run.analysis.races_alpha, 0);
+        assert!(run.eps_ratio < 1e-9);
+    }
+
+    #[test]
+    fn wild_races_on_w_and_only_w() {
+        // HB-unordered needs no preemption: with no lock edges, two
+        // threads' plain accesses to w[0] race in *every* schedule.
+        let rep = check_model(MemoryModel::Wild, &small(3));
+        assert!(rep.races_w > 0);
+        assert_eq!(rep.races_alpha, 0);
+        assert_eq!(rep.oob, 0);
+        assert!(rep.ok);
+    }
+
+    #[test]
+    fn run_check_covers_all_three_models() {
+        let rep = run_check(&small(2));
+        let names: Vec<&str> =
+            rep.models.iter().map(|m| m.model.as_str()).collect();
+        assert_eq!(names, vec!["lock", "atomic", "wild"]);
+        assert!(rep.ok);
+    }
+}

@@ -1,0 +1,384 @@
+//! Machine-readable check reports.
+//!
+//! Everything `passcode check` measures — race counts, protocol
+//! violations, the measured staleness τ, and the empirical backward
+//! error ‖ŵ − w̄‖/‖ŵ‖ of Theorem 3 — round-trips losslessly through the
+//! repo's own JSON.  Seeds are serialized as decimal *strings* (the
+//! `Checkpoint` precedent): they are full-width `u64`s and would lose
+//! bits in an f64 JSON number.
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Report format tag, bumped on breaking layout changes.
+pub const REPORT_VERSION: &str = "passcode-chk-v1";
+
+fn u64_str(v: u64) -> Json {
+    Json::str(&v.to_string())
+}
+
+fn parse_u64(v: &Json, what: &str) -> Result<u64> {
+    let s = v.as_str().with_context(|| format!("{what}: expected string"))?;
+    s.parse::<u64>().with_context(|| format!("{what}: bad u64 {s:?}"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64> {
+    parse_u64(v.get(key)?, key)
+}
+
+fn get_count(v: &Json, key: &str) -> Result<u64> {
+    Ok(v.get(key)?.as_usize().context(key)? as u64)
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)?.as_f64().context(key)
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)?.as_str().context(key)?.to_string())
+}
+
+/// One concrete racing pair, annotated with its replay seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RaceSample {
+    /// Seed of the schedule that produced the race (replays it).
+    pub schedule_seed: u64,
+    /// Array name (`"w"` / `"alpha"`).
+    pub array: String,
+    /// Racing cell index.
+    pub index: u32,
+    /// Earlier access: thread id.
+    pub prior_tid: u32,
+    /// Earlier access: coordinate id, or `-1` outside an update.
+    pub prior_coord: i64,
+    /// Earlier access: kind name.
+    pub prior_kind: String,
+    /// Later access: thread id.
+    pub current_tid: u32,
+    /// Later access: coordinate id, or `-1` outside an update.
+    pub current_coord: i64,
+    /// Later access: kind name.
+    pub current_kind: String,
+}
+
+impl RaceSample {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schedule_seed", u64_str(self.schedule_seed)),
+            ("array", Json::str(&self.array)),
+            ("index", Json::num(self.index as f64)),
+            ("prior_tid", Json::num(self.prior_tid as f64)),
+            ("prior_coord", Json::num(self.prior_coord as f64)),
+            ("prior_kind", Json::str(&self.prior_kind)),
+            ("current_tid", Json::num(self.current_tid as f64)),
+            ("current_coord", Json::num(self.current_coord as f64)),
+            ("current_kind", Json::str(&self.current_kind)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<RaceSample> {
+        Ok(RaceSample {
+            schedule_seed: get_u64(v, "schedule_seed")?,
+            array: get_str(v, "array")?,
+            index: get_count(v, "index")? as u32,
+            prior_tid: get_count(v, "prior_tid")? as u32,
+            prior_coord: get_f64(v, "prior_coord")? as i64,
+            prior_kind: get_str(v, "prior_kind")?,
+            current_tid: get_count(v, "current_tid")? as u32,
+            current_coord: get_f64(v, "current_coord")? as i64,
+            current_kind: get_str(v, "current_kind")?,
+        })
+    }
+}
+
+/// One concrete protocol violation, annotated with its replay seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ViolationSample {
+    /// Seed of the schedule that produced the violation (replays it).
+    pub schedule_seed: u64,
+    /// Thread that tripped it.
+    pub tid: u32,
+    /// Violation kind name (see `trace::ViolationKind`).
+    pub kind: String,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl ViolationSample {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schedule_seed", u64_str(self.schedule_seed)),
+            ("tid", Json::num(self.tid as f64)),
+            ("kind", Json::str(&self.kind)),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ViolationSample> {
+        Ok(ViolationSample {
+            schedule_seed: get_u64(v, "schedule_seed")?,
+            tid: get_count(v, "tid")? as u32,
+            kind: get_str(v, "kind")?,
+            detail: get_str(v, "detail")?,
+        })
+    }
+}
+
+/// Aggregated check results for one memory model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelReport {
+    /// Memory model name (`lock` / `atomic` / `wild`).
+    pub model: String,
+    /// Schedules explored.
+    pub schedules: u64,
+    /// Schedules with at least one detected race.
+    pub racy_schedules: u64,
+    /// Coordinate updates that scattered, summed over schedules.
+    pub updates: u64,
+    /// Trace events recorded, summed over schedules.
+    pub events: u64,
+    /// Racing pairs detected on `w`.
+    pub races_w: u64,
+    /// Racing pairs detected on α.
+    pub races_alpha: u64,
+    /// Out-of-bounds accesses.
+    pub oob: u64,
+    /// Unsorted lock-acquisition violations.
+    pub unsorted_locks: u64,
+    /// Remaining violations (foreign releases, stuck schedules).
+    pub other_violations: u64,
+    /// Largest τ observed in any schedule.
+    pub tau_max: u64,
+    /// Mean τ over all scattering updates (all schedules pooled).
+    pub tau_mean: f64,
+    /// Largest ‖ŵ − w̄‖₂/‖ŵ‖₂ over schedules.
+    pub eps_ratio_max: f64,
+    /// Mean ‖ŵ − w̄‖₂/‖ŵ‖₂ over schedules.
+    pub eps_ratio_mean: f64,
+    /// Whether this model met its expectation: Lock/Atomic must be
+    /// race- and violation-free; Wild must race on `w` only (and must
+    /// actually race when run with ≥ 2 threads).
+    pub ok: bool,
+    /// Replay seed of the first schedule that broke the expectation.
+    pub first_violation_seed: Option<u64>,
+    /// Up to a handful of concrete races.
+    pub race_samples: Vec<RaceSample>,
+    /// Up to a handful of concrete violations.
+    pub violation_samples: Vec<ViolationSample>,
+}
+
+impl ModelReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("schedules", Json::num(self.schedules as f64)),
+            ("racy_schedules", Json::num(self.racy_schedules as f64)),
+            ("updates", Json::num(self.updates as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("races_w", Json::num(self.races_w as f64)),
+            ("races_alpha", Json::num(self.races_alpha as f64)),
+            ("oob", Json::num(self.oob as f64)),
+            ("unsorted_locks", Json::num(self.unsorted_locks as f64)),
+            ("other_violations", Json::num(self.other_violations as f64)),
+            ("tau_max", Json::num(self.tau_max as f64)),
+            ("tau_mean", Json::num(self.tau_mean)),
+            ("eps_ratio_max", Json::num(self.eps_ratio_max)),
+            ("eps_ratio_mean", Json::num(self.eps_ratio_mean)),
+            ("ok", Json::Bool(self.ok)),
+            (
+                "first_violation_seed",
+                match self.first_violation_seed {
+                    Some(s) => u64_str(s),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "race_samples",
+                Json::Arr(
+                    self.race_samples.iter().map(|r| r.to_json()).collect(),
+                ),
+            ),
+            (
+                "violation_samples",
+                Json::Arr(
+                    self.violation_samples
+                        .iter()
+                        .map(|v| v.to_json())
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ModelReport> {
+        let first_violation_seed = match v.get("first_violation_seed")? {
+            Json::Null => None,
+            other => Some(parse_u64(other, "first_violation_seed")?),
+        };
+        let race_samples = v
+            .get("race_samples")?
+            .as_arr()?
+            .iter()
+            .map(RaceSample::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let violation_samples = v
+            .get("violation_samples")?
+            .as_arr()?
+            .iter()
+            .map(ViolationSample::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelReport {
+            model: get_str(v, "model")?,
+            schedules: get_count(v, "schedules")?,
+            racy_schedules: get_count(v, "racy_schedules")?,
+            updates: get_count(v, "updates")?,
+            events: get_count(v, "events")?,
+            races_w: get_count(v, "races_w")?,
+            races_alpha: get_count(v, "races_alpha")?,
+            oob: get_count(v, "oob")?,
+            unsorted_locks: get_count(v, "unsorted_locks")?,
+            other_violations: get_count(v, "other_violations")?,
+            tau_max: get_count(v, "tau_max")?,
+            tau_mean: get_f64(v, "tau_mean")?,
+            eps_ratio_max: get_f64(v, "eps_ratio_max")?,
+            eps_ratio_mean: get_f64(v, "eps_ratio_mean")?,
+            ok: v.get("ok")?.as_bool()?,
+            first_violation_seed,
+            race_samples,
+            violation_samples,
+        })
+    }
+}
+
+/// The full `passcode check` report: config echo + per-model results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckReport {
+    /// Report format tag ([`REPORT_VERSION`]).
+    pub version: String,
+    /// Worker threads per schedule.
+    pub threads: u64,
+    /// Synthetic dataset rows.
+    pub rows: u64,
+    /// Synthetic dataset features.
+    pub features: u64,
+    /// Epochs per schedule.
+    pub epochs: u64,
+    /// Schedules explored per model.
+    pub schedules: u64,
+    /// Master seed the per-schedule seeds derive from.
+    pub seed: u64,
+    /// Preemption budget per schedule.
+    pub preemption_bound: u64,
+    /// Per-model results.
+    pub models: Vec<ModelReport>,
+    /// Conjunction of the per-model `ok` flags.
+    pub ok: bool,
+}
+
+impl CheckReport {
+    /// Serialize for `--out` / round-tripping.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::str(&self.version)),
+            ("threads", Json::num(self.threads as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("features", Json::num(self.features as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("schedules", Json::num(self.schedules as f64)),
+            ("seed", u64_str(self.seed)),
+            ("preemption_bound", Json::num(self.preemption_bound as f64)),
+            (
+                "models",
+                Json::Arr(self.models.iter().map(|m| m.to_json()).collect()),
+            ),
+            ("ok", Json::Bool(self.ok)),
+        ])
+    }
+
+    /// Deserialize a report previously produced by
+    /// [`CheckReport::to_json`].
+    pub fn from_json(v: &Json) -> Result<CheckReport> {
+        let version = get_str(v, "version")?;
+        if version != REPORT_VERSION {
+            anyhow::bail!("unsupported report version {version:?}");
+        }
+        let models = v
+            .get("models")?
+            .as_arr()?
+            .iter()
+            .map(ModelReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CheckReport {
+            version,
+            threads: get_count(v, "threads")?,
+            rows: get_count(v, "rows")?,
+            features: get_count(v, "features")?,
+            epochs: get_count(v, "epochs")?,
+            schedules: get_count(v, "schedules")?,
+            seed: get_u64(v, "seed")?,
+            preemption_bound: get_count(v, "preemption_bound")?,
+            models,
+            ok: v.get("ok")?.as_bool()?,
+        })
+    }
+
+    /// Human-readable summary (the CLI's stdout).  Violating models
+    /// print their replay seed — `passcode check --seed <that seed>
+    /// --schedules 1` reproduces the exact interleaving.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "memory-model check: {} schedules/model, {} threads, \
+             {}x{} synthetic problem, {} epochs, seed {}",
+            self.schedules,
+            self.threads,
+            self.rows,
+            self.features,
+            self.epochs,
+            self.seed,
+        );
+        for m in &self.models {
+            let _ = writeln!(
+                s,
+                "  {:<6} races(w)={:<5} races(α)={:<3} oob={} \
+                 unsorted_locks={} other={} τ_max={} τ_mean={:.3} \
+                 ‖ε‖/‖ŵ‖ max={:.3e} mean={:.3e}  [{}]",
+                m.model,
+                m.races_w,
+                m.races_alpha,
+                m.oob,
+                m.unsorted_locks,
+                m.other_violations,
+                m.tau_max,
+                m.tau_mean,
+                m.eps_ratio_max,
+                m.eps_ratio_mean,
+                if m.ok { "ok" } else { "VIOLATION" },
+            );
+            if let Some(seed) = m.first_violation_seed {
+                let _ = writeln!(
+                    s,
+                    "         replay: passcode check --model {} \
+                     --schedules 1 --seed {}",
+                    m.model, seed,
+                );
+            }
+            for v in &m.violation_samples {
+                let _ = writeln!(
+                    s,
+                    "         violation[seed {}] tid {} {}: {}",
+                    v.schedule_seed, v.tid, v.kind, v.detail,
+                );
+            }
+        }
+        let _ = writeln!(
+            s,
+            "result: {}",
+            if self.ok { "OK" } else { "VIOLATIONS DETECTED" },
+        );
+        s
+    }
+}

@@ -1,0 +1,263 @@
+//! Seeded schedule-exploring executor (CHESS/PCT-style).
+//!
+//! Worker threads run under a token-passing scheduler that keeps exactly
+//! one thread runnable at a time; every instrumented shared-memory
+//! access is a *yield point* where a seeded RNG may — while a bounded
+//! preemption budget lasts — hand the token to another thread.  Because
+//! every scheduling decision is drawn from a `Pcg32(seed)` stream over
+//! logical thread sets (never from OS timing), an interleaving is
+//! replayable bit-for-bit from its seed: the seed printed on a violation
+//! *is* the repro.
+//!
+//! Blocking composes via *forced* yields: a thread that cannot make
+//! progress (a checked lock held by a sibling) hands the token away
+//! unconditionally and retries when rescheduled.  A step bound backstops
+//! livelocks and true deadlocks — when it trips, the scheduler *bails*:
+//! every yield point degrades to a no-op so all threads drain and join,
+//! and the run is reported as stuck rather than wedging the process.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::util::Pcg32;
+
+/// A preemption fires at a yield point with probability
+/// `1 / PREEMPT_ONE_IN` while the budget lasts.
+const PREEMPT_ONE_IN: usize = 4;
+
+struct SchedState {
+    active: usize,
+    finished: Vec<bool>,
+    rng: Pcg32,
+    preemptions_left: u32,
+    steps: u64,
+    max_steps: u64,
+    bail: bool,
+    deadlock: bool,
+}
+
+/// Token-passing scheduler for one explored schedule.
+pub struct Scheduler {
+    m: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+impl Scheduler {
+    /// A scheduler for `threads` workers replaying the interleaving
+    /// drawn from `seed`, with at most `preemption_bound` random
+    /// preemptions and `max_steps` total yield points (the livelock /
+    /// deadlock backstop).
+    pub fn new(
+        threads: usize,
+        seed: u64,
+        preemption_bound: u32,
+        max_steps: u64,
+    ) -> Arc<Scheduler> {
+        Arc::new(Scheduler {
+            m: Mutex::new(SchedState {
+                active: 0,
+                finished: vec![false; threads.max(1)],
+                rng: Pcg32::new(seed, 0x5CED),
+                preemptions_left: preemption_bound,
+                steps: 0,
+                max_steps,
+                bail: false,
+                deadlock: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn state(&self) -> MutexGuard<'_, SchedState> {
+        self.m.lock().expect("scheduler state poisoned")
+    }
+
+    /// Whether the run tripped the step bound or detected a deadlock
+    /// (yield points are no-ops from then on).
+    pub fn bailed(&self) -> bool {
+        self.state().bail
+    }
+
+    /// Whether a blocked thread found no runnable sibling to hand the
+    /// token to — a deadlock under this schedule.
+    pub fn deadlocked(&self) -> bool {
+        self.state().deadlock
+    }
+
+    /// Yield points consumed so far (diagnostics).
+    pub fn steps(&self) -> u64 {
+        self.state().steps
+    }
+
+    fn pick_other(st: &mut SchedState, tid: usize) -> Option<usize> {
+        let runnable: Vec<usize> = (0..st.finished.len())
+            .filter(|&t| t != tid && !st.finished[t])
+            .collect();
+        if runnable.is_empty() {
+            None
+        } else {
+            Some(runnable[st.rng.gen_range(runnable.len())])
+        }
+    }
+
+    /// One yield point for `tid`.  Waits for the token, consumes a step,
+    /// optionally hands the token away (always, when `forced`), then
+    /// waits until rescheduled.  Returns `false` once the scheduler has
+    /// bailed — callers in retry loops then fall back to OS yielding.
+    fn yield_point(&self, tid: usize, forced: bool) -> bool {
+        let mut st = self.state();
+        while !st.bail && st.active != tid {
+            st = self.cv.wait(st).expect("scheduler state poisoned");
+        }
+        if st.bail {
+            return false;
+        }
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            st.bail = true;
+            self.cv.notify_all();
+            return false;
+        }
+        if forced {
+            match Self::pick_other(&mut st, tid) {
+                Some(next) => st.active = next,
+                None => {
+                    // Blocked with nobody left to unblock us.
+                    st.deadlock = true;
+                    st.bail = true;
+                    self.cv.notify_all();
+                    return false;
+                }
+            }
+            self.cv.notify_all();
+        } else if st.preemptions_left > 0
+            && st.rng.gen_range(PREEMPT_ONE_IN) == 0
+        {
+            if let Some(next) = Self::pick_other(&mut st, tid) {
+                st.active = next;
+                st.preemptions_left -= 1;
+                self.cv.notify_all();
+            }
+        }
+        while !st.bail && st.active != tid {
+            st = self.cv.wait(st).expect("scheduler state poisoned");
+        }
+        !st.bail
+    }
+
+    /// Mark `tid` done and hand the token to a live sibling.
+    fn finish(&self, tid: usize) {
+        let mut st = self.state();
+        st.finished[tid] = true;
+        if st.active == tid {
+            if let Some(next) = Self::pick_other(&mut st, tid) {
+                st.active = next;
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+struct WorkerCtx {
+    sched: Arc<Scheduler>,
+    tid: usize,
+}
+
+thread_local! {
+    static WORKER: RefCell<Option<WorkerCtx>> = RefCell::new(None);
+}
+
+/// Registers the calling thread as checker worker `tid` for the guard's
+/// lifetime.  Dropping (including on unwind) uninstalls the context and
+/// hands the token away, so a panicking worker cannot wedge siblings.
+pub struct WorkerGuard {
+    sched: Arc<Scheduler>,
+    tid: usize,
+}
+
+impl WorkerGuard {
+    /// Install the calling thread as thread `tid` of `sched`.
+    pub fn install(sched: Arc<Scheduler>, tid: usize) -> WorkerGuard {
+        WORKER.with(|w| {
+            *w.borrow_mut() =
+                Some(WorkerCtx { sched: Arc::clone(&sched), tid });
+        });
+        WorkerGuard { sched, tid }
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        WORKER.with(|w| {
+            *w.borrow_mut() = None;
+        });
+        self.sched.finish(self.tid);
+    }
+}
+
+/// The checker thread id of the calling thread, if one is installed.
+/// Instrumented structures record nothing outside a worker context, so
+/// setup and teardown on the main thread stay out of the trace.
+pub fn current_tid() -> Option<usize> {
+    WORKER.with(|w| w.borrow().as_ref().map(|c| c.tid))
+}
+
+/// Scheduler yield point for the calling thread.  `forced` means the
+/// thread cannot progress (blocked on a checked lock) and must hand the
+/// token away.  Returns `false` when uninstrumented or after a bail —
+/// retry loops then fall back to [`std::thread::yield_now`].
+pub fn yield_here(forced: bool) -> bool {
+    WORKER.with(|w| {
+        let b = w.borrow();
+        match b.as_ref() {
+            Some(c) => c.sched.yield_point(c.tid, forced),
+            None => false,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yield_without_context_is_a_noop() {
+        assert!(!yield_here(false));
+        assert_eq!(current_tid(), None);
+    }
+
+    #[test]
+    fn single_thread_guard_schedules_and_uninstalls() {
+        let sched = Scheduler::new(1, 7, 4, 1000);
+        {
+            let _g = WorkerGuard::install(Arc::clone(&sched), 0);
+            assert_eq!(current_tid(), Some(0));
+            for _ in 0..10 {
+                assert!(yield_here(false));
+            }
+        }
+        assert_eq!(current_tid(), None);
+        assert!(!sched.bailed());
+        assert_eq!(sched.steps(), 10);
+    }
+
+    #[test]
+    fn step_bound_trips_to_bail() {
+        let sched = Scheduler::new(1, 3, 0, 5);
+        let _g = WorkerGuard::install(Arc::clone(&sched), 0);
+        for _ in 0..5 {
+            assert!(yield_here(false));
+        }
+        assert!(!yield_here(false));
+        assert!(sched.bailed());
+        assert!(!sched.deadlocked());
+    }
+
+    #[test]
+    fn forced_yield_with_no_sibling_is_deadlock() {
+        let sched = Scheduler::new(1, 3, 0, 100);
+        let _g = WorkerGuard::install(Arc::clone(&sched), 0);
+        assert!(!yield_here(true));
+        assert!(sched.deadlocked());
+    }
+}

@@ -1,0 +1,604 @@
+//! Access tracing: instrumented twins of the production shared state.
+//!
+//! [`CheckedVec`] implements the [`MemAccess`] seam the kernels are
+//! generic over, recording every load/store/CAS with thread id,
+//! per-thread logical clock, and the coordinate being updated — so
+//! `passcode check` exercises the *real* kernels, not a model of them.
+//! Every access is bounds-asserted, including the `*_unchecked` entry
+//! points (which deliberately keep the trait's checked defaults): an
+//! out-of-bounds index is recorded as a [`Violation`] instead of
+//! faulting, so one bug does not hide the rest of the schedule.
+//!
+//! [`CheckedLocks`] implements [`LockDiscipline`] with *logical* lock
+//! state.  A blocked acquire hands the schedule token away (a forced
+//! yield in [`super::sched`]) instead of spinning, so lock blocking
+//! composes with the serialized scheduler, and the sorted-acquisition
+//! protocol of the paper's §3.3 is verified on every call.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::solver::kernel::MemAccess;
+use crate::solver::locks::LockDiscipline;
+
+use super::sched;
+
+/// Which shared array an access touched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrayId {
+    /// The shared primal vector `w`.
+    W,
+    /// The dual variables α (single-owner under coordinate partition).
+    Alpha,
+}
+
+impl ArrayId {
+    /// Stable lowercase name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrayId::W => "w",
+            ArrayId::Alpha => "alpha",
+        }
+    }
+}
+
+/// How a cell was touched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Relaxed atomic load (every kernel's read path).
+    AtomicLoad,
+    /// Atomic read-modify-write (the CAS add).
+    AtomicRmw,
+    /// The plain load half of a wild read-add-store.
+    PlainLoad,
+    /// A plain store (wild/locked publish, α writes).
+    PlainStore,
+}
+
+impl AccessKind {
+    /// Whether the access writes the cell.
+    pub fn is_write(self) -> bool {
+        matches!(self, AccessKind::AtomicRmw | AccessKind::PlainStore)
+    }
+
+    /// Whether the access is non-atomic.  Two *atomic* accesses never
+    /// race (PASSCoDe-Atomic's discipline); a plain one racing with any
+    /// conflicting access is the Wild regime.
+    pub fn is_plain(self) -> bool {
+        matches!(self, AccessKind::PlainLoad | AccessKind::PlainStore)
+    }
+
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            AccessKind::AtomicLoad => "atomic_load",
+            AccessKind::AtomicRmw => "atomic_rmw",
+            AccessKind::PlainLoad => "plain_load",
+            AccessKind::PlainStore => "plain_store",
+        }
+    }
+}
+
+/// One entry of a recorded interleaving.  Events are appended while the
+/// recording thread holds the schedule token, so vector order *is* the
+/// serialized execution order — which makes traces replay-comparable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A shared-memory cell access.
+    Access {
+        /// Checker thread id.
+        tid: u32,
+        /// That thread's logical clock (increments per access).
+        clock: u32,
+        /// Which array.
+        array: ArrayId,
+        /// Cell index.
+        index: u32,
+        /// Load/store/RMW classification.
+        kind: AccessKind,
+        /// Coordinate whose update performed the access, if any.
+        coord: Option<u32>,
+    },
+    /// A checked feature lock was acquired.
+    LockAcquire {
+        /// Checker thread id.
+        tid: u32,
+        /// Feature lock index.
+        lock: u32,
+    },
+    /// A checked feature lock was released.
+    LockRelease {
+        /// Checker thread id.
+        tid: u32,
+        /// Feature lock index.
+        lock: u32,
+    },
+    /// A coordinate update began.
+    UpdateBegin {
+        /// Checker thread id.
+        tid: u32,
+        /// Coordinate being updated.
+        coord: u32,
+    },
+    /// The active coordinate update finished.
+    UpdateEnd {
+        /// Checker thread id.
+        tid: u32,
+    },
+}
+
+/// Protocol violations the instrumented twins detect directly (races,
+/// by contrast, are derived offline by the vector-clock pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// An access indexed past the array / lock-table length.
+    OutOfBounds,
+    /// `acquire_sorted` got a non-strictly-increasing lock list —
+    /// the paper's §3.3 deadlock-freedom protocol was broken.
+    UnsortedLocks,
+    /// A lock release by a thread that does not hold the lock.
+    ForeignRelease,
+    /// The schedule tripped the step bound or a blocked thread had no
+    /// runnable sibling (livelock / deadlock under this interleaving).
+    Stuck,
+}
+
+impl ViolationKind {
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ViolationKind::OutOfBounds => "out_of_bounds",
+            ViolationKind::UnsortedLocks => "unsorted_locks",
+            ViolationKind::ForeignRelease => "foreign_release",
+            ViolationKind::Stuck => "stuck",
+        }
+    }
+}
+
+/// One detected protocol violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Thread that tripped it (0 when outside a checked schedule).
+    pub tid: u32,
+    /// What went wrong.
+    pub kind: ViolationKind,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+struct RecInner {
+    events: Vec<TraceEvent>,
+    clocks: Vec<u32>,
+    coords: Vec<Option<u32>>,
+    violations: Vec<Violation>,
+}
+
+/// Shared trace sink for one schedule.  Records only from threads with
+/// an installed worker context ([`sched::current_tid`]), so main-thread
+/// setup/teardown accesses stay out of the trace; violations are
+/// recorded unconditionally.
+pub struct Recorder {
+    inner: Mutex<RecInner>,
+}
+
+impl Recorder {
+    /// A recorder for up to `threads` checker threads.
+    pub fn new(threads: usize) -> Arc<Recorder> {
+        let n = threads.max(1);
+        Arc::new(Recorder {
+            inner: Mutex::new(RecInner {
+                events: Vec::new(),
+                clocks: vec![0; n],
+                coords: vec![None; n],
+                violations: Vec::new(),
+            }),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RecInner> {
+        self.inner.lock().expect("recorder poisoned")
+    }
+
+    /// Record a cell access by the calling instrumented thread.
+    fn access(&self, array: ArrayId, index: u32, kind: AccessKind) {
+        let Some(tid) = sched::current_tid() else {
+            return;
+        };
+        let mut g = self.lock();
+        g.clocks[tid] += 1;
+        let ev = TraceEvent::Access {
+            tid: tid as u32,
+            clock: g.clocks[tid],
+            array,
+            index,
+            kind,
+            coord: g.coords[tid],
+        };
+        g.events.push(ev);
+    }
+
+    /// Mark the start of the update of coordinate `coord` (a yield
+    /// point — the first thing a worker does, so the very first record
+    /// of every thread already holds the schedule token).
+    pub fn begin_update(&self, coord: u32) {
+        let Some(tid) = sched::current_tid() else {
+            return;
+        };
+        sched::yield_here(false);
+        let mut g = self.lock();
+        g.coords[tid] = Some(coord);
+        g.events.push(TraceEvent::UpdateBegin { tid: tid as u32, coord });
+    }
+
+    /// Mark the end of the active update (a yield point).
+    pub fn end_update(&self) {
+        let Some(tid) = sched::current_tid() else {
+            return;
+        };
+        sched::yield_here(false);
+        let mut g = self.lock();
+        g.coords[tid] = None;
+        g.events.push(TraceEvent::UpdateEnd { tid: tid as u32 });
+    }
+
+    fn lock_acquired(&self, lock: u32) {
+        let Some(tid) = sched::current_tid() else {
+            return;
+        };
+        let mut g = self.lock();
+        g.events.push(TraceEvent::LockAcquire { tid: tid as u32, lock });
+    }
+
+    fn lock_released(&self, lock: u32) {
+        let Some(tid) = sched::current_tid() else {
+            return;
+        };
+        let mut g = self.lock();
+        g.events.push(TraceEvent::LockRelease { tid: tid as u32, lock });
+    }
+
+    /// Record a protocol violation (with or without a worker context).
+    pub fn violation(&self, kind: ViolationKind, detail: String) {
+        let tid = sched::current_tid().unwrap_or(0) as u32;
+        self.lock().violations.push(Violation { tid, kind, detail });
+    }
+
+    /// Take the recorded trace and violations (post-join).
+    pub fn drain(&self) -> (Vec<TraceEvent>, Vec<Violation>) {
+        let mut g = self.lock();
+        (std::mem::take(&mut g.events), std::mem::take(&mut g.violations))
+    }
+}
+
+/// Instrumented twin of [`crate::util::SharedVec`]: the checker side of
+/// the [`MemAccess`] seam.  Same API surface (the `*_unchecked` methods
+/// keep the trait's checked defaults), every access bounds-asserted and
+/// recorded; out-of-bounds indices become [`ViolationKind::OutOfBounds`]
+/// records and the access is clamped so the schedule can continue.
+pub struct CheckedVec {
+    id: ArrayId,
+    cells: Vec<AtomicU64>,
+    rec: Arc<Recorder>,
+}
+
+impl CheckedVec {
+    /// Zero-initialized checked vector of length `n`, tagged `id`.
+    pub fn zeros(id: ArrayId, n: usize, rec: Arc<Recorder>) -> CheckedVec {
+        CheckedVec {
+            id,
+            cells: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            rec,
+        }
+    }
+
+    /// Snapshot to a plain vector.  Outside a worker context (the only
+    /// place the harness calls it) the reads are not traced.
+    pub fn to_vec(&self) -> Vec<f64> {
+        (0..self.cells.len()).map(|j| MemAccess::get(self, j)).collect()
+    }
+
+    /// Bounds-check, yield, record: the common prefix of every access.
+    /// Returns the (possibly clamped) index, or `None` for a vector
+    /// with no cells at all.
+    fn instr(&self, j: usize, kind: AccessKind) -> Option<usize> {
+        let n = self.cells.len();
+        if n == 0 {
+            self.rec.violation(
+                ViolationKind::OutOfBounds,
+                format!("{} access at {} (len 0)", self.id.name(), j),
+            );
+            return None;
+        }
+        let j = if j < n {
+            j
+        } else {
+            self.rec.violation(
+                ViolationKind::OutOfBounds,
+                format!("{} access at {} (len {})", self.id.name(), j, n),
+            );
+            j % n
+        };
+        sched::yield_here(false);
+        self.rec.access(self.id, j as u32, kind);
+        Some(j)
+    }
+}
+
+impl MemAccess for CheckedVec {
+    fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    fn get(&self, j: usize) -> f64 {
+        match self.instr(j, AccessKind::AtomicLoad) {
+            Some(j) => f64::from_bits(self.cells[j].load(Ordering::Relaxed)),
+            None => 0.0,
+        }
+    }
+
+    fn set(&self, j: usize, v: f64) {
+        if let Some(j) = self.instr(j, AccessKind::PlainStore) {
+            self.cells[j].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    fn add_atomic(&self, j: usize, delta: f64) {
+        if let Some(j) = self.instr(j, AccessKind::AtomicRmw) {
+            let cell = &self.cells[j];
+            let mut cur = cell.load(Ordering::Relaxed);
+            loop {
+                let new = (f64::from_bits(cur) + delta).to_bits();
+                match cell.compare_exchange_weak(
+                    cur,
+                    new,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        }
+    }
+
+    fn add_wild(&self, j: usize, delta: f64) {
+        // The two halves are *separate* yield points, so the scheduler
+        // can interleave a concurrent writer between the read and the
+        // write-back — exactly the lost-update window Theorem 3's
+        // backward-error analysis charges PASSCoDe-Wild for.
+        if let Some(j) = self.instr(j, AccessKind::PlainLoad) {
+            let cur = f64::from_bits(self.cells[j].load(Ordering::Relaxed));
+            if let Some(j) = self.instr(j, AccessKind::PlainStore) {
+                self.cells[j].store((cur + delta).to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Instrumented twin of [`crate::solver::locks::LockTable`]: logical
+/// lock state plus protocol verification.  Blocked acquires hand the
+/// schedule token away instead of spinning; unsorted acquisition lists
+/// are recorded as violations and then acquired in sorted order so the
+/// schedule itself cannot deadlock on the broken protocol.
+pub struct CheckedLocks {
+    len: usize,
+    held: Mutex<Vec<Option<u32>>>,
+    rec: Arc<Recorder>,
+}
+
+impl CheckedLocks {
+    /// A checked table of `d` feature locks reporting into `rec`.
+    pub fn new(d: usize, rec: Arc<Recorder>) -> CheckedLocks {
+        CheckedLocks { len: d, held: Mutex::new(vec![None; d]), rec }
+    }
+
+    fn state(&self) -> MutexGuard<'_, Vec<Option<u32>>> {
+        self.held.lock().expect("lock state poisoned")
+    }
+
+    /// Whether feature lock `f` is currently held (diagnostics).
+    pub fn is_held(&self, f: usize) -> bool {
+        self.state().get(f).is_some_and(|s| s.is_some())
+    }
+
+    fn checked_lock_index(&self, f: u32) -> Option<usize> {
+        if (f as usize) < self.len {
+            return Some(f as usize);
+        }
+        self.rec.violation(
+            ViolationKind::OutOfBounds,
+            format!("lock index {} (table len {})", f, self.len),
+        );
+        if self.len == 0 {
+            None
+        } else {
+            Some(f as usize % self.len)
+        }
+    }
+}
+
+impl LockDiscipline for CheckedLocks {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn acquire_sorted(&self, features: &[u32]) {
+        let tid = sched::current_tid().unwrap_or(0) as u32;
+        if !features.windows(2).all(|p| p[0] < p[1]) {
+            self.rec.violation(
+                ViolationKind::UnsortedLocks,
+                format!("acquire_sorted got {features:?}"),
+            );
+        }
+        // Acquire in locally sorted, deduplicated order regardless, so
+        // the violation is reported without wedging the schedule.
+        let mut order: Vec<u32> = features.to_vec();
+        order.sort_unstable();
+        order.dedup();
+        for f in order {
+            let Some(fi) = self.checked_lock_index(f) else {
+                continue;
+            };
+            loop {
+                sched::yield_here(false);
+                let acquired = {
+                    let mut h = self.state();
+                    if h[fi].is_none() {
+                        h[fi] = Some(tid);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if acquired {
+                    self.rec.lock_acquired(f);
+                    break;
+                }
+                // Blocked: hand the token to a thread that can make
+                // progress.  Outside a schedule (or after a bail) fall
+                // back to an OS yield so the retry cannot starve the
+                // holder.
+                if !sched::yield_here(true) {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    fn release(&self, features: &[u32]) {
+        let tid = sched::current_tid().unwrap_or(0) as u32;
+        for &f in features {
+            let Some(fi) = self.checked_lock_index(f) else {
+                continue;
+            };
+            sched::yield_here(false);
+            let owned = {
+                let mut h = self.state();
+                if h[fi] == Some(tid) {
+                    h[fi] = None;
+                    true
+                } else {
+                    false
+                }
+            };
+            if owned {
+                self.rec.lock_released(f);
+            } else {
+                self.rec.violation(
+                    ViolationKind::ForeignRelease,
+                    format!("release of lock {f} not held by thread {tid}"),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chk::sched::{Scheduler, WorkerGuard};
+
+    #[test]
+    fn untraced_outside_worker_context() {
+        let rec = Recorder::new(1);
+        let v = CheckedVec::zeros(ArrayId::W, 4, Arc::clone(&rec));
+        v.set(1, 2.5);
+        assert_eq!(v.get(1), 2.5);
+        let (events, violations) = rec.drain();
+        assert!(events.is_empty());
+        assert!(violations.is_empty());
+    }
+
+    #[test]
+    fn accesses_recorded_under_context_with_clocks_and_coords() {
+        let rec = Recorder::new(1);
+        let v = CheckedVec::zeros(ArrayId::W, 4, Arc::clone(&rec));
+        let sched = Scheduler::new(1, 1, 0, 10_000);
+        let _g = WorkerGuard::install(sched, 0);
+        rec.begin_update(7);
+        v.add_wild(2, 1.0);
+        rec.end_update();
+        drop(_g);
+        let (events, violations) = rec.drain();
+        assert!(violations.is_empty());
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0], TraceEvent::UpdateBegin { tid: 0, coord: 7 });
+        assert_eq!(
+            events[1],
+            TraceEvent::Access {
+                tid: 0,
+                clock: 1,
+                array: ArrayId::W,
+                index: 2,
+                kind: AccessKind::PlainLoad,
+                coord: Some(7),
+            }
+        );
+        assert_eq!(
+            events[2],
+            TraceEvent::Access {
+                tid: 0,
+                clock: 2,
+                array: ArrayId::W,
+                index: 2,
+                kind: AccessKind::PlainStore,
+                coord: Some(7),
+            }
+        );
+        assert_eq!(events[3], TraceEvent::UpdateEnd { tid: 0 });
+    }
+
+    #[test]
+    fn out_of_bounds_is_clamped_and_reported() {
+        let rec = Recorder::new(1);
+        let v = CheckedVec::zeros(ArrayId::Alpha, 3, Arc::clone(&rec));
+        v.set(5, 9.0); // clamps to 5 % 3 == 2
+        assert_eq!(v.get(2), 9.0);
+        let (_, violations) = rec.drain();
+        assert_eq!(violations.len(), 1);
+        assert_eq!(violations[0].kind, ViolationKind::OutOfBounds);
+    }
+
+    #[test]
+    fn unchecked_accessors_still_bounds_check() {
+        let rec = Recorder::new(1);
+        let v = CheckedVec::zeros(ArrayId::W, 2, Arc::clone(&rec));
+        // SAFETY: trivially in bounds; and the checker twin would clamp
+        // + report rather than fault even if it were not.
+        unsafe {
+            v.add_wild_unchecked(1, 2.0);
+            assert_eq!(v.get_unchecked(1), 2.0);
+        }
+        let (_, violations) = rec.drain();
+        assert!(violations.is_empty());
+    }
+
+    #[test]
+    fn unsorted_acquire_is_flagged_but_still_acquires() {
+        let rec = Recorder::new(1);
+        let locks = CheckedLocks::new(8, Arc::clone(&rec));
+        let sched = Scheduler::new(1, 5, 0, 10_000);
+        let _g = WorkerGuard::install(sched, 0);
+        locks.acquire_sorted(&[3, 1]);
+        assert!(locks.is_held(1) && locks.is_held(3));
+        locks.release(&[1, 3]);
+        assert!(!locks.is_held(1) && !locks.is_held(3));
+        drop(_g);
+        let (_, violations) = rec.drain();
+        assert_eq!(violations.len(), 1);
+        assert_eq!(violations[0].kind, ViolationKind::UnsortedLocks);
+    }
+
+    #[test]
+    fn foreign_release_is_flagged() {
+        let rec = Recorder::new(1);
+        let locks = CheckedLocks::new(4, Arc::clone(&rec));
+        let sched = Scheduler::new(1, 5, 0, 10_000);
+        let _g = WorkerGuard::install(sched, 0);
+        locks.release(&[2]);
+        drop(_g);
+        let (_, violations) = rec.drain();
+        assert_eq!(violations.len(), 1);
+        assert_eq!(violations[0].kind, ViolationKind::ForeignRelease);
+    }
+}

@@ -1,0 +1,371 @@
+//! FastTrack-lite happens-before race analysis over recorded traces.
+//!
+//! Per-thread vector clocks advance on every access event; checked-lock
+//! acquire/release edges are the *only* synchronization — matching the
+//! kernels, whose relaxed atomics impose no ordering the algorithm
+//! relies on.  Two accesses to the same cell race iff they come from
+//! different threads, are unordered by happens-before, at least one
+//! writes, and at least one is plain (non-atomic): concurrent relaxed
+//! atomics are not races (PASSCoDe-Atomic's discipline), while Wild's
+//! plain read-add-store is.
+//!
+//! Keeping only the last read/write per `(cell, thread)` is sound for
+//! race *existence*: within one thread accesses to a cell are totally
+//! ordered, so if the latest is ordered before the current event, every
+//! earlier one is too.
+//!
+//! The τ-staleness probe rides the same scan: for every coordinate
+//! update it counts `w` writes by *other* threads landing between the
+//! update's first `w` read (the dot) and its last `w` write (the
+//! scatter) — the staleness parameter charged by the paper's analysis
+//! and by Liu & Wright's AsySCD bounds (arXiv:1403.3862).
+
+use std::collections::HashMap;
+
+use super::trace::{AccessKind, ArrayId, TraceEvent};
+
+/// Cap on stored concrete race samples per analyzed schedule.
+pub const MAX_RACE_SAMPLES: usize = 8;
+
+/// A fixed-width vector clock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VClock {
+    c: Vec<u32>,
+}
+
+impl VClock {
+    /// The zero clock over `n` threads.
+    pub fn new(n: usize) -> VClock {
+        VClock { c: vec![0; n] }
+    }
+
+    /// Component `t`.
+    pub fn get(&self, t: usize) -> u32 {
+        self.c[t]
+    }
+
+    /// Increment component `t`.
+    pub fn tick(&mut self, t: usize) {
+        self.c[t] += 1;
+    }
+
+    /// Pointwise maximum with `other`.
+    pub fn join(&mut self, other: &VClock) {
+        for (a, b) in self.c.iter_mut().zip(&other.c) {
+            *a = (*a).max(*b);
+        }
+    }
+}
+
+/// One side of a detected race.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RaceAccess {
+    /// Thread id.
+    pub tid: u32,
+    /// That thread's logical clock at the access.
+    pub clock: u32,
+    /// Access classification.
+    pub kind: AccessKind,
+    /// Coordinate whose update performed the access, if any.
+    pub coord: Option<u32>,
+}
+
+/// A happens-before race between two accesses to one cell.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Race {
+    /// Which array.
+    pub array: ArrayId,
+    /// Racing cell index.
+    pub index: u32,
+    /// The earlier access.
+    pub prior: RaceAccess,
+    /// The later access.
+    pub current: RaceAccess,
+}
+
+/// Everything the offline pass derives from one schedule's trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Analysis {
+    /// Racing pairs detected on `w`.
+    pub races_w: u64,
+    /// Racing pairs detected on α.
+    pub races_alpha: u64,
+    /// Up to [`MAX_RACE_SAMPLES`] concrete racing pairs.
+    pub samples: Vec<Race>,
+    /// Per-update staleness τ (one entry per update that both read and
+    /// wrote `w`), in update-completion order.
+    pub tau: Vec<u32>,
+}
+
+impl Analysis {
+    /// Largest observed τ (0 when no update scattered).
+    pub fn tau_max(&self) -> u32 {
+        self.tau.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean observed τ (0 when no update scattered).
+    pub fn tau_mean(&self) -> f64 {
+        if self.tau.is_empty() {
+            0.0
+        } else {
+            self.tau.iter().map(|&t| t as f64).sum::<f64>()
+                / self.tau.len() as f64
+        }
+    }
+}
+
+struct CellState {
+    last_read: Vec<Option<RaceAccess>>,
+    last_write: Vec<Option<RaceAccess>>,
+}
+
+impl CellState {
+    fn new(n: usize) -> CellState {
+        CellState {
+            last_read: vec![None; n],
+            last_write: vec![None; n],
+        }
+    }
+}
+
+struct UpdateSpan {
+    first_read: Option<usize>,
+    last_write: Option<usize>,
+}
+
+/// Run the happens-before + τ analysis over one schedule's trace.
+pub fn analyze(events: &[TraceEvent], threads: usize) -> Analysis {
+    let n = threads.max(1);
+    let mut tvc: Vec<VClock> = (0..n).map(|_| VClock::new(n)).collect();
+    let mut lock_vc: HashMap<u32, VClock> = HashMap::new();
+    let mut cells: HashMap<(ArrayId, u32), CellState> = HashMap::new();
+    let mut races_w = 0u64;
+    let mut races_alpha = 0u64;
+    let mut samples: Vec<Race> = Vec::new();
+    // τ bookkeeping: all w-writes (trace position, thread) plus the
+    // [first w-read, last w-write] span of each in-flight update.
+    let mut w_writes: Vec<(usize, u32)> = Vec::new();
+    let mut active: Vec<Option<UpdateSpan>> = (0..n).map(|_| None).collect();
+    let mut spans: Vec<(u32, usize, usize)> = Vec::new();
+
+    for (seq, ev) in events.iter().enumerate() {
+        match ev {
+            TraceEvent::Access { tid, clock, array, index, kind, coord } => {
+                let t = *tid as usize;
+                if t >= n {
+                    continue;
+                }
+                tvc[t].tick(t);
+                debug_assert_eq!(tvc[t].get(t), *clock);
+                let cell = cells
+                    .entry((*array, *index))
+                    .or_insert_with(|| CellState::new(n));
+                let current = RaceAccess {
+                    tid: *tid,
+                    clock: *clock,
+                    kind: *kind,
+                    coord: *coord,
+                };
+                for u in 0..n {
+                    if u == t {
+                        continue;
+                    }
+                    let hb = tvc[t].get(u);
+                    for prior in [&cell.last_write[u], &cell.last_read[u]] {
+                        let Some(p) = prior else {
+                            continue;
+                        };
+                        let ordered = p.clock <= hb;
+                        let conflicting = (p.kind.is_write()
+                            || kind.is_write())
+                            && (p.kind.is_plain() || kind.is_plain());
+                        if !ordered && conflicting {
+                            match array {
+                                ArrayId::W => races_w += 1,
+                                ArrayId::Alpha => races_alpha += 1,
+                            }
+                            if samples.len() < MAX_RACE_SAMPLES {
+                                samples.push(Race {
+                                    array: *array,
+                                    index: *index,
+                                    prior: p.clone(),
+                                    current: current.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+                if kind.is_write() {
+                    cell.last_write[t] = Some(current);
+                } else {
+                    cell.last_read[t] = Some(current);
+                }
+                if *array == ArrayId::W {
+                    if kind.is_write() {
+                        w_writes.push((seq, *tid));
+                        if let Some(span) = active[t].as_mut() {
+                            span.last_write = Some(seq);
+                        }
+                    } else if let Some(span) = active[t].as_mut() {
+                        if span.first_read.is_none() {
+                            span.first_read = Some(seq);
+                        }
+                    }
+                }
+            }
+            TraceEvent::LockAcquire { tid, lock } => {
+                let t = *tid as usize;
+                if t >= n {
+                    continue;
+                }
+                if let Some(lvc) = lock_vc.get(lock) {
+                    tvc[t].join(lvc);
+                }
+            }
+            TraceEvent::LockRelease { tid, lock } => {
+                let t = *tid as usize;
+                if t >= n {
+                    continue;
+                }
+                lock_vc.insert(*lock, tvc[t].clone());
+            }
+            TraceEvent::UpdateBegin { tid, .. } => {
+                let t = *tid as usize;
+                if t >= n {
+                    continue;
+                }
+                active[t] =
+                    Some(UpdateSpan { first_read: None, last_write: None });
+            }
+            TraceEvent::UpdateEnd { tid } => {
+                let t = *tid as usize;
+                if t >= n {
+                    continue;
+                }
+                if let Some(span) = active[t].take() {
+                    if let (Some(r0), Some(w1)) =
+                        (span.first_read, span.last_write)
+                    {
+                        spans.push((*tid, r0, w1));
+                    }
+                }
+            }
+        }
+    }
+
+    // τ per update: foreign w-writes strictly inside (first read, last
+    // write).  `w_writes` is already sorted by trace position.
+    let tau = spans
+        .iter()
+        .map(|&(tid, r0, w1)| {
+            let lo = w_writes.partition_point(|&(s, _)| s <= r0);
+            let hi = w_writes.partition_point(|&(s, _)| s < w1);
+            w_writes[lo..hi].iter().filter(|&&(_, t)| t != tid).count()
+                as u32
+        })
+        .collect();
+
+    Analysis { races_w, races_alpha, samples, tau }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(
+        tid: u32,
+        clock: u32,
+        array: ArrayId,
+        index: u32,
+        kind: AccessKind,
+    ) -> TraceEvent {
+        TraceEvent::Access { tid, clock, array, index, kind, coord: None }
+    }
+
+    #[test]
+    fn unsynchronized_plain_writes_race() {
+        let events = vec![
+            acc(0, 1, ArrayId::W, 3, AccessKind::PlainStore),
+            acc(1, 1, ArrayId::W, 3, AccessKind::PlainStore),
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.races_w, 1);
+        assert_eq!(a.races_alpha, 0);
+        assert_eq!(a.samples.len(), 1);
+        assert_eq!(a.samples[0].index, 3);
+    }
+
+    #[test]
+    fn lock_edges_order_the_writes() {
+        let events = vec![
+            TraceEvent::LockAcquire { tid: 0, lock: 3 },
+            acc(0, 1, ArrayId::W, 3, AccessKind::PlainStore),
+            TraceEvent::LockRelease { tid: 0, lock: 3 },
+            TraceEvent::LockAcquire { tid: 1, lock: 3 },
+            acc(1, 1, ArrayId::W, 3, AccessKind::PlainStore),
+            TraceEvent::LockRelease { tid: 1, lock: 3 },
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.races_w, 0);
+    }
+
+    #[test]
+    fn concurrent_atomics_do_not_race() {
+        let events = vec![
+            acc(0, 1, ArrayId::W, 0, AccessKind::AtomicRmw),
+            acc(1, 1, ArrayId::W, 0, AccessKind::AtomicRmw),
+            acc(0, 2, ArrayId::W, 0, AccessKind::AtomicLoad),
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.races_w, 0);
+    }
+
+    #[test]
+    fn atomic_load_races_with_foreign_plain_store() {
+        let events = vec![
+            acc(0, 1, ArrayId::W, 5, AccessKind::AtomicLoad),
+            acc(1, 1, ArrayId::W, 5, AccessKind::PlainStore),
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.races_w, 1);
+    }
+
+    #[test]
+    fn different_cells_never_race() {
+        let events = vec![
+            acc(0, 1, ArrayId::W, 0, AccessKind::PlainStore),
+            acc(1, 1, ArrayId::W, 1, AccessKind::PlainStore),
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.races_w, 0);
+    }
+
+    #[test]
+    fn tau_counts_foreign_writes_inside_the_span() {
+        let events = vec![
+            TraceEvent::UpdateBegin { tid: 0, coord: 4 },
+            acc(0, 1, ArrayId::W, 0, AccessKind::AtomicLoad),
+            acc(1, 1, ArrayId::W, 0, AccessKind::PlainStore),
+            acc(1, 2, ArrayId::W, 1, AccessKind::PlainStore),
+            acc(0, 2, ArrayId::W, 0, AccessKind::PlainStore),
+            TraceEvent::UpdateEnd { tid: 0 },
+        ];
+        let a = analyze(&events, 2);
+        assert_eq!(a.tau, vec![2]);
+        assert_eq!(a.tau_max(), 2);
+        assert!((a.tau_mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn updates_without_a_scatter_contribute_no_tau() {
+        let events = vec![
+            TraceEvent::UpdateBegin { tid: 0, coord: 0 },
+            acc(0, 1, ArrayId::W, 0, AccessKind::AtomicLoad),
+            TraceEvent::UpdateEnd { tid: 0 },
+        ];
+        let a = analyze(&events, 1);
+        assert!(a.tau.is_empty());
+        assert_eq!(a.tau_max(), 0);
+        assert_eq!(a.tau_mean(), 0.0);
+    }
+}

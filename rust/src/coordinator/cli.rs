@@ -27,6 +27,10 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
         "listen",
         "serve scoring traffic over HTTP (--routes cfg.json | --model|--dataset; --addr, --workers)",
     ),
+    (
+        "check",
+        "race-check the memory-model kernels over seeded schedules (--model, --schedules, --seed, --smoke)",
+    ),
 ];
 
 /// Parsed command line.

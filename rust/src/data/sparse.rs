@@ -35,14 +35,18 @@ pub unsafe fn dot_sparse_unchecked(idx: &[u32], vals: &[f64], w: &[f64]) -> f64 
     let mut v4 = vals.chunks_exact(4);
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     for (js, vs) in (&mut i4).zip(&mut v4) {
-        a0 += w.get_unchecked(js[0] as usize) * vs[0];
-        a1 += w.get_unchecked(js[1] as usize) * vs[1];
-        a2 += w.get_unchecked(js[2] as usize) * vs[2];
-        a3 += w.get_unchecked(js[3] as usize) * vs[3];
+        // SAFETY: the caller guarantees every index is `< w.len()`.
+        unsafe {
+            a0 += w.get_unchecked(js[0] as usize) * vs[0];
+            a1 += w.get_unchecked(js[1] as usize) * vs[1];
+            a2 += w.get_unchecked(js[2] as usize) * vs[2];
+            a3 += w.get_unchecked(js[3] as usize) * vs[3];
+        }
     }
     let mut acc = (a0 + a2) + (a1 + a3);
     for (j, v) in i4.remainder().iter().zip(v4.remainder()) {
-        acc += w.get_unchecked(*j as usize) * v;
+        // SAFETY: as above.
+        acc += unsafe { w.get_unchecked(*j as usize) } * v;
     }
     acc
 }
@@ -467,6 +471,7 @@ mod tests {
                 .zip(&vals)
                 .map(|(j, v)| w[*j as usize] * v)
                 .sum();
+            // SAFETY: all indices are `< 20 == w.len()` by construction.
             let got = unsafe { dot_sparse_unchecked(&idx, &vals, &w) };
             assert!((got - want).abs() < 1e-12, "n={n}: {got} vs {want}");
             assert!(

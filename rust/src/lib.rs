@@ -133,10 +133,39 @@
 //! and per-dataset models serve side by side in one process
 //! ([`net::router`]).  `benches/net_throughput.rs` measures the wire
 //! path end to end over loopback.
+//!
+//! # Memory-model checking quick start
+//!
+//! The paper's correctness story is a *memory-model* story: Lock is
+//! serializable, Atomic is race-free by CAS discipline (Theorem 2's
+//! regime), and Wild races on `w` on purpose — Theorem 3 then shows the
+//! racy `ŵ` is the exact solution of a nearby perturbed primal.  The
+//! in-crate checker ([`chk`]) pins all of that as executable invariants
+//! by running the *production* kernels over instrumented state under a
+//! seeded schedule-exploring scheduler with a vector-clock race
+//! detector, and measures the staleness τ plus the empirical backward
+//! error `‖ε‖/‖ŵ‖` while it is at it:
+//!
+//! ```no_run
+//! use passcode::chk::{self, CheckConfig};
+//!
+//! let report = chk::run_check(&CheckConfig {
+//!     schedules: 25,
+//!     ..CheckConfig::default()
+//! });
+//! print!("{}", report.render());
+//! assert!(report.ok);
+//! ```
+//!
+//! From the CLI: `passcode check` (or `passcode check --smoke` in CI);
+//! any violation prints the schedule seed that deterministically
+//! replays it.
 
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
+pub mod chk;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

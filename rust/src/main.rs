@@ -17,12 +17,16 @@
 //!                [--rounds 3] [--batch 64] [--batch-wait-us 200]
 //! passcode listen [--routes routes.json | --model m.json | --dataset rcv1]
 //!                [--addr 127.0.0.1:8080] [--workers 4] [--for-secs 0]
+//! passcode check [--model lock|atomic|wild] [--schedules 100] [--seed 42]
+//!                [--threads 3] [--rows 9] [--features 6] [--epochs 2]
+//!                [--preemptions 16] [--out report.json] [--smoke]
 //! ```
 
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use passcode::chk;
 use passcode::coordinator::{
     cli::Cli, config::RunConfig, driver, experiments, model_io::Model,
 };
@@ -32,7 +36,7 @@ use passcode::net::{Router, RouteSpec, RoutesConfig, Server, ServerConfig};
 use passcode::runtime::{Engine, Evaluator};
 use passcode::serve::{self, ReplayConfig, ServeConfig, ServeEngine};
 use passcode::simcore;
-use passcode::solver::{lookup, Solver, SolveOptions};
+use passcode::solver::{lookup, MemoryModel, Solver, SolveOptions};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -54,6 +58,7 @@ fn real_main(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&cli),
         "replay" => cmd_replay(&cli),
         "listen" => cmd_listen(&cli),
+        "check" => cmd_check(&cli),
         other => bail!("unknown command {other:?}\n\n{}", Cli::usage()),
     }
 }
@@ -258,6 +263,59 @@ const LISTEN_FLAGS: &[&str] = &[
     "epochs", "threads", "seed", "shards", "batch", "batch-wait-us",
     "pin-threads",
 ];
+
+/// Flags `passcode check` accepts.
+const CHECK_FLAGS: &[&str] = &[
+    "model", "schedules", "threads", "rows", "features", "epochs", "seed",
+    "preemptions", "out", "smoke",
+];
+
+/// `passcode check` — the in-crate memory-model checker
+/// ([`passcode::chk`]): run the production update kernels over
+/// instrumented shared state under seeded bounded-preemption schedules,
+/// race-check each trace with vector clocks, and measure the staleness
+/// τ plus the Theorem-3 backward-error ratio.  Any violation prints its
+/// replaying schedule seed and exits nonzero.
+fn cmd_check(cli: &Cli) -> Result<()> {
+    cli.check_flags(CHECK_FLAGS)?;
+    let base = chk::CheckConfig::default();
+    // --smoke is CI-sized: a dozen schedules per model still covers the
+    // three invariants (Wild races on every multi-threaded schedule).
+    let schedules = if cli.opt("smoke").is_some() {
+        12
+    } else {
+        base.schedules
+    };
+    let cfg = chk::CheckConfig {
+        threads: flag(cli, "threads", base.threads)?,
+        rows: flag(cli, "rows", base.rows)?,
+        features: flag(cli, "features", base.features)?,
+        epochs: flag(cli, "epochs", base.epochs)?,
+        schedules: flag(cli, "schedules", schedules)?,
+        seed: flag(cli, "seed", base.seed)?,
+        preemption_bound: flag(cli, "preemptions", base.preemption_bound)?,
+        ..base
+    };
+    let report = match cli.opt("model") {
+        Some(name) => {
+            let m = MemoryModel::parse(name).with_context(|| {
+                format!("unknown memory model {name:?} (lock|atomic|wild)")
+            })?;
+            chk::run_check_models(&cfg, &[m])
+        }
+        None => chk::run_check(&cfg),
+    };
+    print!("{}", report.render());
+    if let Some(path) = cli.opt("out") {
+        std::fs::write(path, report.to_json().to_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("report written to {path}");
+    }
+    if !report.ok {
+        bail!("memory-model check detected violations (replay seeds above)");
+    }
+    Ok(())
+}
 
 /// `passcode serve` — stand up the online scoring stack around a model
 /// (loaded from `--model`, or trained fresh from `--dataset`) and stream

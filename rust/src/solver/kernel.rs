@@ -23,11 +23,119 @@
 //! the CSR construction invariant (column indices validated `< cols` at
 //! matrix build; `w.len() == cols` asserted at solve entry), re-verified
 //! by `debug_assert` in test builds.
+//!
+//! The kernels are generic over a [`MemAccess`] backing store (and the
+//! Lock kernel over a [`LockDiscipline`]), defaulting to the production
+//! [`SharedVec`]/[`LockTable`].  The only other implementation is the
+//! dynamic checker's instrumented twin ([`crate::chk::CheckedVec`]),
+//! which records every access for happens-before race detection — so
+//! `passcode check` exercises *these* kernels, not a model of them.
 
 use crate::data::sparse;
 use crate::util::SharedVec;
 
-use super::locks::LockTable;
+use super::locks::{LockDiscipline, LockTable};
+
+/// The backing-store seam the update kernels are generic over.
+///
+/// [`SharedVec`] is the production implementation.  The checker's
+/// [`crate::chk::CheckedVec`] twin bounds-asserts every access
+/// (including the `*_unchecked` entry points, which default to the
+/// checked methods and are only overridden by [`SharedVec`]) and records
+/// a trace with per-thread logical clocks.
+pub trait MemAccess: Sync {
+    /// Number of addressable cells.
+    fn len(&self) -> usize;
+
+    /// Whether the vector has zero cells.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Relaxed read of element `j`.
+    fn get(&self, j: usize) -> f64;
+
+    /// Plain (relaxed) overwrite of element `j`.
+    fn set(&self, j: usize, v: f64);
+
+    /// Lossless concurrent add (CAS loop) — PASSCoDe-Atomic's step 3.
+    fn add_atomic(&self, j: usize, delta: f64);
+
+    /// Racy read-add-store — PASSCoDe-Wild's step 3.
+    fn add_wild(&self, j: usize, delta: f64);
+
+    /// [`MemAccess::get`] with the bounds check waived.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    unsafe fn get_unchecked(&self, j: usize) -> f64 {
+        self.get(j)
+    }
+
+    /// [`MemAccess::add_atomic`] with the bounds check waived.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    unsafe fn add_atomic_unchecked(&self, j: usize, delta: f64) {
+        self.add_atomic(j, delta);
+    }
+
+    /// [`MemAccess::add_wild`] with the bounds check waived.
+    ///
+    /// # Safety
+    /// `j` must be `< self.len()`.
+    #[inline]
+    unsafe fn add_wild_unchecked(&self, j: usize, delta: f64) {
+        self.add_wild(j, delta);
+    }
+}
+
+impl MemAccess for SharedVec {
+    #[inline]
+    fn len(&self) -> usize {
+        SharedVec::len(self)
+    }
+
+    #[inline]
+    fn get(&self, j: usize) -> f64 {
+        SharedVec::get(self, j)
+    }
+
+    #[inline]
+    fn set(&self, j: usize, v: f64) {
+        SharedVec::set(self, j, v);
+    }
+
+    #[inline]
+    fn add_atomic(&self, j: usize, delta: f64) {
+        SharedVec::add_atomic(self, j, delta);
+    }
+
+    #[inline]
+    fn add_wild(&self, j: usize, delta: f64) {
+        SharedVec::add_wild(self, j, delta);
+    }
+
+    #[inline]
+    unsafe fn get_unchecked(&self, j: usize) -> f64 {
+        // SAFETY: forwarded contract — the caller guarantees `j < len`.
+        unsafe { SharedVec::get_unchecked(self, j) }
+    }
+
+    #[inline]
+    unsafe fn add_atomic_unchecked(&self, j: usize, delta: f64) {
+        // SAFETY: forwarded contract — the caller guarantees `j < len`.
+        unsafe { SharedVec::add_atomic_unchecked(self, j, delta) }
+    }
+
+    #[inline]
+    unsafe fn add_wild_unchecked(&self, j: usize, delta: f64) {
+        // SAFETY: forwarded contract — the caller guarantees `j < len`.
+        unsafe { SharedVec::add_wild_unchecked(self, j, delta) }
+    }
+}
 
 /// A memory-model-specific fused update kernel over the shared `w`.
 ///
@@ -77,7 +185,7 @@ pub trait UpdateKernel: Copy + Send + Sync {
 /// Callers guarantee every index is `< w.len()` (CSR construction
 /// invariant); verified by `debug_assert` in test builds.
 #[inline]
-fn dot_shared(idx: &[u32], vals: &[f64], w: &SharedVec) -> f64 {
+fn dot_shared<M: MemAccess>(idx: &[u32], vals: &[f64], w: &M) -> f64 {
     debug_assert!(idx.iter().all(|&j| (j as usize) < w.len()));
     let mut i4 = idx.chunks_exact(4);
     let mut v4 = vals.chunks_exact(4);
@@ -100,20 +208,27 @@ fn dot_shared(idx: &[u32], vals: &[f64], w: &SharedVec) -> f64 {
 }
 
 /// PASSCoDe-Wild: racy read-add-store scatter (Theorem 3's regime).
-#[derive(Clone, Copy)]
-pub struct WildKernel<'w> {
-    w: &'w SharedVec,
+pub struct WildKernel<'w, M: MemAccess = SharedVec> {
+    w: &'w M,
 }
 
-impl<'w> WildKernel<'w> {
+impl<M: MemAccess> Clone for WildKernel<'_, M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: MemAccess> Copy for WildKernel<'_, M> {}
+
+impl<'w, M: MemAccess> WildKernel<'w, M> {
     /// Kernel over `w`; callers must only pass CSR rows of a matrix with
     /// `cols == w.len()`.
-    pub fn new(w: &'w SharedVec) -> Self {
+    pub fn new(w: &'w M) -> Self {
         Self { w }
     }
 }
 
-impl UpdateKernel for WildKernel<'_> {
+impl<M: MemAccess> UpdateKernel for WildKernel<'_, M> {
     #[inline]
     fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
         dot_shared(idx, vals, self.w)
@@ -141,20 +256,27 @@ impl UpdateKernel for WildKernel<'_> {
 }
 
 /// PASSCoDe-Atomic: lossless CAS-loop scatter.
-#[derive(Clone, Copy)]
-pub struct CasKernel<'w> {
-    w: &'w SharedVec,
+pub struct CasKernel<'w, M: MemAccess = SharedVec> {
+    w: &'w M,
 }
 
-impl<'w> CasKernel<'w> {
+impl<M: MemAccess> Clone for CasKernel<'_, M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: MemAccess> Copy for CasKernel<'_, M> {}
+
+impl<'w, M: MemAccess> CasKernel<'w, M> {
     /// Kernel over `w`; callers must only pass CSR rows of a matrix with
     /// `cols == w.len()`.
-    pub fn new(w: &'w SharedVec) -> Self {
+    pub fn new(w: &'w M) -> Self {
         Self { w }
     }
 }
 
-impl UpdateKernel for CasKernel<'_> {
+impl<M: MemAccess> UpdateKernel for CasKernel<'_, M> {
     #[inline]
     fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
         dot_shared(idx, vals, self.w)
@@ -172,22 +294,29 @@ impl UpdateKernel for CasKernel<'_> {
 
 /// PASSCoDe-Lock: ordered per-feature spinlocks held across the fused
 /// pass; writes are plain under the lock.
-#[derive(Clone, Copy)]
-pub struct LockedKernel<'w> {
-    w: &'w SharedVec,
-    locks: &'w LockTable,
+pub struct LockedKernel<'w, M: MemAccess = SharedVec, L: LockDiscipline = LockTable> {
+    w: &'w M,
+    locks: &'w L,
 }
 
-impl<'w> LockedKernel<'w> {
+impl<M: MemAccess, L: LockDiscipline> Clone for LockedKernel<'_, M, L> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: MemAccess, L: LockDiscipline> Copy for LockedKernel<'_, M, L> {}
+
+impl<'w, M: MemAccess, L: LockDiscipline> LockedKernel<'w, M, L> {
     /// Kernel over `w` guarded by `locks` (one lock per feature;
     /// `locks.len() == w.len()`).
-    pub fn new(w: &'w SharedVec, locks: &'w LockTable) -> Self {
+    pub fn new(w: &'w M, locks: &'w L) -> Self {
         assert_eq!(locks.len(), w.len(), "lock table dimension");
         Self { w, locks }
     }
 }
 
-impl UpdateKernel for LockedKernel<'_> {
+impl<M: MemAccess, L: LockDiscipline> UpdateKernel for LockedKernel<'_, M, L> {
     #[inline]
     fn dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
         dot_shared(idx, vals, self.w)
@@ -243,7 +372,7 @@ pub fn scatter_dense(idx: &[u32], vals: &[f64], delta: f64, w: &mut [f64]) {
 
 /// 4-way unrolled dense·shared dot — AsySCD's O(n) gradient scan
 /// `(Qα)_i` over the shared dual iterate.
-pub fn dot_dense_shared(q_row: &[f64], a: &SharedVec) -> f64 {
+pub fn dot_dense_shared<M: MemAccess>(q_row: &[f64], a: &M) -> f64 {
     assert_eq!(q_row.len(), a.len());
     let mut c4 = q_row.chunks_exact(4);
     let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
@@ -341,7 +470,7 @@ mod tests {
         assert_eq!(seen_wx, 4.0);
         assert_eq!(w.to_vec(), vec![1.0, 2.0, 3.0]);
 
-        let wrote = k.update(&[0, 2], &[1.0, 1.0], |wx| Some(wx));
+        let wrote = k.update(&[0, 2], &[1.0, 1.0], Some);
         assert!(wrote);
         assert_eq!(w.to_vec(), vec![5.0, 2.0, 7.0]);
     }

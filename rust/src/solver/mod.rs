@@ -31,7 +31,8 @@ pub use api::{
     ShrinkCheckpoint, Solver, SolverKind, StopReason, StopWhen, TrainSession,
 };
 pub use dcd::SerialDcd;
-pub use kernel::UpdateKernel;
+pub use kernel::{MemAccess, UpdateKernel};
+pub use locks::{LockDiscipline, LockTable};
 pub use multiclass::{MulticlassDataset, OvrModel};
 pub use passcode::{MemoryModel, Passcode};
 

@@ -1,0 +1,124 @@
+//! Acceptance invariants for the memory-model checker (`passcode::chk`):
+//! the paper's claims as executable assertions, each over ≥ 100 seeded
+//! schedules.
+//!
+//! * PASSCoDe-Lock and PASSCoDe-Atomic are race- and violation-free on
+//!   every explored schedule;
+//! * PASSCoDe-Wild races on `w` (and *must* — its plain read-add-store
+//!   is the racy regime Theorem 3 analyzes) but never on α and never
+//!   out of bounds;
+//! * schedules are deterministic functions of their seed (the replay
+//!   story), and the measured-τ / backward-error report round-trips
+//!   through the repo's JSON.
+
+use passcode::chk::{self, CheckConfig, CheckReport};
+use passcode::solver::MemoryModel;
+use passcode::util::Json;
+
+fn cfg_100() -> CheckConfig {
+    CheckConfig {
+        threads: 3,
+        rows: 9,
+        features: 6,
+        epochs: 1,
+        schedules: 100,
+        seed: 7,
+        ..CheckConfig::default()
+    }
+}
+
+#[test]
+fn lock_kernel_is_race_free_across_100_schedules() {
+    let rep = chk::check_model(MemoryModel::Lock, &cfg_100());
+    assert!(rep.ok, "violating seed: {:?}", rep.first_violation_seed);
+    assert_eq!(rep.races_w, 0);
+    assert_eq!(rep.races_alpha, 0);
+    assert_eq!(rep.oob + rep.unsorted_locks + rep.other_violations, 0);
+    assert!(rep.updates > 0);
+    // Serialized writes: ŵ equals Σ α_i x_i to rounding (Eq. 6 gap 0).
+    assert!(rep.eps_ratio_max < 1e-9, "eps {}", rep.eps_ratio_max);
+}
+
+#[test]
+fn cas_kernel_is_race_free_across_100_schedules() {
+    let rep = chk::check_model(MemoryModel::Atomic, &cfg_100());
+    assert!(rep.ok, "violating seed: {:?}", rep.first_violation_seed);
+    assert_eq!(rep.races_w, 0);
+    assert_eq!(rep.races_alpha, 0);
+    assert_eq!(rep.oob + rep.unsorted_locks + rep.other_violations, 0);
+    assert!(rep.eps_ratio_max < 1e-9, "eps {}", rep.eps_ratio_max);
+}
+
+#[test]
+fn wild_kernel_races_on_w_only_across_100_schedules() {
+    let rep = chk::check_model(MemoryModel::Wild, &cfg_100());
+    assert!(rep.ok, "violating seed: {:?}", rep.first_violation_seed);
+    assert!(rep.races_w > 0, "wild must race on w");
+    assert_eq!(rep.races_alpha, 0, "α has a unique owner (§3.3)");
+    assert_eq!(rep.oob, 0, "wild races must stay in bounds");
+    assert_eq!(rep.unsorted_locks + rep.other_violations, 0);
+    // Every multi-threaded schedule is racy: no lock edges order the
+    // threads' plain accesses to the hot feature-0 cell.
+    assert_eq!(rep.racy_schedules, rep.schedules);
+}
+
+#[test]
+fn schedules_replay_deterministically_from_their_seed() {
+    let cfg = CheckConfig { schedules: 1, ..cfg_100() };
+    for model in
+        [MemoryModel::Lock, MemoryModel::Atomic, MemoryModel::Wild]
+    {
+        let a = chk::run_schedule(model, &cfg, 0xDEAD_BEEF);
+        let b = chk::run_schedule(model, &cfg, 0xDEAD_BEEF);
+        assert_eq!(a, b, "{} schedule not replay-identical", model.name());
+        assert!(!a.events.is_empty());
+    }
+}
+
+#[test]
+fn preempted_wild_schedules_measure_positive_tau() {
+    // τ counts foreign w-writes inside an update's read→write window,
+    // so it needs real interleaving: more threads and a bigger
+    // preemption budget than the defaults.
+    let cfg = CheckConfig {
+        threads: 4,
+        rows: 12,
+        epochs: 2,
+        schedules: 100,
+        preemption_bound: 32,
+        ..cfg_100()
+    };
+    let rep = chk::check_model(MemoryModel::Wild, &cfg);
+    assert!(rep.ok, "violating seed: {:?}", rep.first_violation_seed);
+    assert!(rep.tau_max > 0, "no staleness observed in 100 schedules");
+    assert!(rep.tau_mean > 0.0);
+    // Lost updates open the Theorem-3 gap between ŵ and Σ α_i x_i.
+    assert!(rep.eps_ratio_max > 0.0);
+}
+
+#[test]
+fn check_report_round_trips_through_json() {
+    let cfg = CheckConfig { schedules: 5, ..cfg_100() };
+    let rep = chk::run_check(&cfg);
+    assert!(rep.ok);
+    assert_eq!(rep.models.len(), 3);
+    let text = rep.to_json().to_pretty();
+    let parsed = Json::parse(&text).expect("report JSON re-parses");
+    let back = CheckReport::from_json(&parsed).expect("report deserializes");
+    assert_eq!(rep, back, "lossy JSON round-trip");
+    // Human rendering mentions every model and the final verdict.
+    let rendered = rep.render();
+    for m in ["lock", "atomic", "wild"] {
+        assert!(rendered.contains(m), "render missing {m}:\n{rendered}");
+    }
+    assert!(rendered.contains("result: OK"));
+}
+
+#[test]
+fn single_model_subset_respects_the_selection() {
+    let cfg = CheckConfig { schedules: 2, ..cfg_100() };
+    let rep = chk::run_check_models(&cfg, &[MemoryModel::Atomic]);
+    assert_eq!(rep.models.len(), 1);
+    assert_eq!(rep.models[0].model, "atomic");
+    assert!(rep.ok);
+}
