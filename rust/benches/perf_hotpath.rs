@@ -2,7 +2,9 @@
 //! updates/second and effective nnz-throughput of serial DCD and the
 //! PASSCoDe memory models across thread counts, a **kernel ablation**
 //! (pre-refactor baseline inner loop vs the fused kernels vs
-//! fused + feature-locality remap), the session-dispatch overhead, the
+//! fused + feature-locality remap), a **probe ablation** (the
+//! `passcode::obs` telemetry probes off vs on, bar < 2% overhead
+//! enabled), the session-dispatch overhead, the
 //! simulator's event throughput, and the AOT margins-kernel throughput.
 //!
 //! This is the before/after instrument for EXPERIMENTS.md §Perf; results
@@ -212,6 +214,44 @@ fn main() {
          (acceptance bar: >= 1.30x)"
     );
 
+    // Probe ablation: the same fused wild@4 run with the `obs` telemetry
+    // probes off (the default everywhere above) vs on — τ sampler,
+    // CAS-retry/lock-wait ticks, epoch timers and all.  The probes are
+    // branch-predictable no-ops when disabled, so the bar is on the
+    // enabled side: < 2% overhead.
+    let mut probes_median = [f64::NAN; 2];
+    for enabled in [false, true] {
+        passcode::obs::set_probes_enabled(enabled);
+        let s = bench_secs(warmup, reps, || {
+            let _ = Passcode::solve(
+                &tr,
+                &loss,
+                MemoryModel::Wild,
+                &SolveOptions {
+                    threads: 4,
+                    epochs,
+                    eval_every: 0,
+                    ..Default::default()
+                },
+                None,
+            );
+        });
+        let (tag, kernel) = if enabled {
+            ("wild-probes-on@4", "fused+probes")
+        } else {
+            ("wild-probes-off@4", "fused")
+        };
+        report(tag, 4, kernel, s.median);
+        probes_median[usize::from(enabled)] = s.median;
+    }
+    passcode::obs::set_probes_enabled(false);
+    let probes_overhead = probes_median[1] / probes_median[0] - 1.0;
+    println!(
+        "\nprobe ablation: passcode-wild@4 probes-on/probes-off = {:+.2}% \
+         (acceptance bar: < 2%)",
+        probes_overhead * 100.0
+    );
+
     // Registry/session path: measures the `solver::api` dispatch cost
     // (enum-loss calls + per-epoch re-entry over the session's shared
     // buffers) against the raw monomorphized rows above.
@@ -299,6 +339,7 @@ fn main() {
         ("nnz", Json::num(tr.x.nnz() as f64)),
         ("epochs", Json::num(epochs as f64)),
         ("wild4_fused_over_baseline", Json::num(ablation_speedup)),
+        ("wild4_probes_overhead", Json::num(probes_overhead)),
         ("rows", Json::Arr(rows)),
     ]);
     std::fs::write(&out_path, doc.to_pretty()).unwrap();

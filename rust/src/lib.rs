@@ -134,6 +134,40 @@
 //! ([`net::router`]).  `benches/net_throughput.rs` measures the wire
 //! path end to end over loopback.
 //!
+//! # Observability quick start
+//!
+//! The telemetry layer ([`obs`]) exports the paper's analysis
+//! quantities — sampled staleness τ, CAS-retry/lock-wait contention,
+//! per-worker epoch timings, the Theorem-3 backward-error ratio — next
+//! to the serving metrics (per-route QPS, latency quantiles, registry
+//! depth), all out of one lock-free [`obs::MetricsRegistry`]:
+//!
+//! ```text
+//! passcode listen --routes routes.json --addr 127.0.0.1:8080
+//!
+//! # Prometheus text exposition: passcode_train_* (updates/sec, tau,
+//! # cas retries, backward error, epoch timings) + passcode_http_* /
+//! # passcode_route_* (QPS, p50/p95/p99, versions_alive, epoch)
+//! curl -s http://127.0.0.1:8080/metrics
+//! # flight recorder: recent spans (HTTP requests, training epochs)
+//! # with tid + monotonic timestamps, as JSON
+//! curl -s http://127.0.0.1:8080/v1/trace
+//! ```
+//!
+//! `listen` enables the solver probes by default (`--probes false`
+//! opts out); offline runs opt in and can dump the same span JSON:
+//!
+//! ```text
+//! passcode train --dataset rcv1 --solver passcode-atomic --threads 4 \
+//!     --probes true --trace-out spans.json
+//! ```
+//!
+//! The probes are branch-predictable no-ops when disabled —
+//! `perf_hotpath` carries a probes-on/off ablation row and the
+//! acceptance bar is <2% overhead enabled, none disabled (see
+//! EXPERIMENTS.md §Observability for how the live τ and backward-error
+//! gauges relate to Theorem 3 and `passcode check`).
+//!
 //! # Memory-model checking quick start
 //!
 //! The paper's correctness story is a *memory-model* story: Lock is
@@ -171,6 +205,7 @@ pub mod data;
 pub mod eval;
 pub mod loss;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod simcore;

@@ -5,6 +5,7 @@
 //!                [--epochs 20] [--scale 0.1] [--loss hinge] [--c 1.0]
 //!                [--config file.json] [--csv out.csv] [--aot-eval]
 //!                [--remap-features true]   # feature-locality remap
+//!                [--probes true] [--trace-out spans.json]  # telemetry
 //! passcode datasets [--scale 1.0]         # Table 3 analog statistics
 //! passcode calibrate                      # simulator cost-model probes
 //! passcode experiment <table1|table2|table3|fig-a|fig-d|backward-error>
@@ -17,6 +18,7 @@
 //!                [--rounds 3] [--batch 64] [--batch-wait-us 200]
 //! passcode listen [--routes routes.json | --model m.json | --dataset rcv1]
 //!                [--addr 127.0.0.1:8080] [--workers 4] [--for-secs 0]
+//!                [--probes false]          # solver telemetry (default on)
 //! passcode check [--model lock|atomic|wild] [--schedules 100] [--seed 42]
 //!                [--threads 3] [--rows 9] [--features 6] [--epochs 2]
 //!                [--preemptions 16] [--out report.json] [--smoke]
@@ -83,7 +85,9 @@ fn config_from_cli(cli: &Cli) -> Result<RunConfig> {
         cfg.dataset = ds.clone();
     }
     for (k, v) in &cli.options {
-        if matches!(k.as_str(), "config" | "csv" | "save-model") {
+        let launcher_only =
+            matches!(k.as_str(), "config" | "csv" | "save-model" | "probes" | "trace-out");
+        if launcher_only {
             continue;
         }
         cfg.set(k, v).with_context(|| format!("--{k} {v}"))?;
@@ -93,6 +97,10 @@ fn config_from_cli(cli: &Cli) -> Result<RunConfig> {
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     let cfg = config_from_cli(cli)?;
+    // --trace-out implies probes: dumping an empty recorder would be
+    // a silently useless file.
+    let probes = flag(cli, "probes", false)? || cli.opt("trace-out").is_some();
+    passcode::obs::set_probes_enabled(probes);
     println!("config: {}", cfg.to_json());
     let out = driver::run(&cfg)?;
     println!(
@@ -132,6 +140,16 @@ fn cmd_train(cli: &Cli) -> Result<()> {
             aot.primal(c),
             aot.accuracy(),
             engine.platform()
+        );
+    }
+    if let Some(path) = cli.opt("trace-out") {
+        let recorder = passcode::obs::recorder();
+        std::fs::write(path, recorder.to_json().to_pretty())
+            .with_context(|| format!("write trace {path}"))?;
+        println!(
+            "wrote {path} ({} spans, {} evicted)",
+            recorder.len(),
+            recorder.dropped()
         );
     }
     Ok(())
@@ -261,7 +279,7 @@ const REPLAY_FLAGS: &[&str] = &[
 const LISTEN_FLAGS: &[&str] = &[
     "routes", "addr", "workers", "for-secs", "model", "dataset", "scale",
     "epochs", "threads", "seed", "shards", "batch", "batch-wait-us",
-    "pin-threads",
+    "pin-threads", "probes",
 ];
 
 /// Flags `passcode check` accepts.
@@ -425,11 +443,16 @@ fn cmd_listen(cli: &Cli) -> Result<()> {
     // Every flag parses before any training/binding work starts, so a
     // malformed value fails in milliseconds, not after model bring-up.
     let for_secs = flag(cli, "for-secs", 0u64)?;
+    // Telemetry is on by default for the long-running server (the
+    // probes are cheap and /metrics is useless without them); opt out
+    // with --probes false.  Enabled before Router::start so startup
+    // dataset training and online rounds report too.
+    passcode::obs::set_probes_enabled(flag(cli, "probes", true)?);
     let routes_cfg = match cli.opt("routes") {
         Some(path) => {
             // With a config file the single-route flags have no effect;
             // reject them instead of silently ignoring them.
-            cli.check_flags(&["routes", "addr", "workers", "for-secs"])
+            cli.check_flags(&["routes", "addr", "workers", "for-secs", "probes"])
                 .map_err(|_| {
                     anyhow::anyhow!(
                         "--routes provides the per-route settings; drop the \
@@ -486,6 +509,7 @@ fn cmd_listen(cli: &Cli) -> Result<()> {
         "  POST /v1/score   POST /v1/models/{{route}}/publish   \
          GET /v1/stats   GET /healthz"
     );
+    println!("  GET /metrics (Prometheus text)   GET /v1/trace (flight recorder)");
     if for_secs == 0 {
         // Serve until the process is killed.
         loop {

@@ -19,7 +19,8 @@
 //!   JSON config.
 //! * [`server`] — the accept loop + bounded worker pool, request
 //!   dispatch, and the admin plane (`/v1/models/{route}/publish`,
-//!   `/v1/stats`, `/healthz`).
+//!   `/v1/stats`, `/healthz`, plus the telemetry plane `/metrics` and
+//!   `/v1/trace` backed by [`crate::obs`]).
 //! * [`client`] — keep-alive HTTP client + load generator
 //!   (`benches/net_throughput.rs`).
 //!

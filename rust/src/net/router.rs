@@ -437,6 +437,48 @@ impl Router {
         self.routes.is_empty()
     }
 
+    /// Sync every route's serving metrics into `reg` (called by
+    /// `GET /metrics` at scrape time).  Monotonic totals go through
+    /// `Counter::set_floor` (race-safe under concurrent scrapes);
+    /// rates, latency quantiles, and registry depth are gauges keyed
+    /// by a `route` label.
+    pub fn publish_metrics(&self, reg: &crate::obs::MetricsRegistry) {
+        for (name, r) in &self.routes {
+            let rep = r.report();
+            reg.counter(
+                &format!("passcode_route_requests_total{{route=\"{name}\"}}"),
+                "Requests scored by the route",
+            )
+            .set_floor(rep.requests);
+            reg.gauge(
+                &format!("passcode_route_qps{{route=\"{name}\"}}"),
+                "Requests per second over the route's lifetime",
+            )
+            .set(rep.qps);
+            let quantiles =
+                [("0.5", rep.p50_secs), ("0.95", rep.p95_secs), ("0.99", rep.p99_secs)];
+            for (q, v) in quantiles {
+                reg.gauge(
+                    &format!(
+                        "passcode_route_latency_seconds{{route=\"{name}\",quantile=\"{q}\"}}"
+                    ),
+                    "End-to-end scoring latency quantile",
+                )
+                .set(v);
+            }
+            reg.gauge(
+                &format!("passcode_route_versions_alive{{route=\"{name}\"}}"),
+                "Model versions retained by the route's registry",
+            )
+            .set(rep.versions_alive as f64);
+            reg.gauge(
+                &format!("passcode_route_model_epoch{{route=\"{name}\"}}"),
+                "Registry epoch of the currently served model",
+            )
+            .set(rep.epoch as f64);
+        }
+    }
+
     /// Per-route stats as JSON: `{"routes": {name: report...}}`.
     pub fn stats_json(&self) -> Json {
         let routes = self

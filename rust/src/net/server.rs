@@ -13,6 +13,12 @@
 //!   the route's registry (body: `{"path": "model.json"}`).
 //! * `GET /v1/stats` — per-route [`ThroughputReport`] JSON, including
 //!   `versions_alive` and `epoch`.
+//! * `GET /metrics` — Prometheus text exposition of the process-wide
+//!   [`crate::obs::MetricsRegistry`]: the `passcode_train_*` solver
+//!   family next to `passcode_http_*` / per-route `passcode_route_*`
+//!   serving metrics, all in one scrape.
+//! * `GET /v1/trace` — the [`crate::obs::FlightRecorder`] ring (recent
+//!   HTTP/training spans with tid + monotonic timestamps) as JSON.
 //! * `GET /healthz` — liveness plus the route list.
 //!
 //! Back-pressure: at most `queue_cap` accepted connections may be
@@ -369,11 +375,57 @@ fn handle_connection(conn: Conn, shared: &Shared) -> Option<Conn> {
     None
 }
 
-/// Route one request to its handler.
+/// Route one request to its handler, recording the request into the
+/// telemetry layer (HTTP counter + latency histogram + a flight
+/// recorder span) on the way out.
 pub fn dispatch(router: &Router, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let resp = route_request(router, req);
+    let dur = t0.elapsed();
+    let m = http_metrics();
+    m.requests.inc();
+    m.latency.record(dur.as_nanos().min(u64::MAX as u128) as u64);
+    crate::obs::recorder().record(
+        "http.request",
+        format!("{} {} -> {}", req.method, req.path, resp.status),
+        dur,
+    );
+    resp
+}
+
+/// Registry handles for the HTTP-wide metrics family.
+struct HttpMetrics {
+    requests: Arc<crate::obs::Counter>,
+    latency: Arc<crate::obs::Histogram>,
+}
+
+fn http_metrics() -> &'static HttpMetrics {
+    static METRICS: std::sync::OnceLock<HttpMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = crate::obs::registry();
+        HttpMetrics {
+            requests: reg.counter(
+                "passcode_http_requests_total",
+                "HTTP requests dispatched (all endpoints)",
+            ),
+            latency: reg.histogram(
+                "passcode_http_request_seconds",
+                "End-to-end request dispatch latency",
+                1e-9,
+            ),
+        }
+    })
+}
+
+/// The method/path match behind [`dispatch`].
+fn route_request(router: &Router, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => handle_healthz(router),
         ("GET", "/v1/stats") => Response::json(200, &router.stats_json()),
+        ("GET", "/metrics") => handle_metrics(router),
+        ("GET", "/v1/trace") => {
+            Response::json(200, &crate::obs::recorder().to_json())
+        }
         ("POST", "/v1/score") => handle_score(router, req),
         (method, path) => {
             if let Some(route) = path
@@ -385,7 +437,7 @@ pub fn dispatch(router: &Router, req: &Request) -> Response {
                 }
                 return handle_publish(router, route, req);
             }
-            if matches!(path, "/healthz" | "/v1/stats") {
+            if matches!(path, "/healthz" | "/v1/stats" | "/metrics" | "/v1/trace") {
                 return Response::error(405, "method not allowed");
             }
             if path == "/v1/score" {
@@ -394,6 +446,16 @@ pub fn dispatch(router: &Router, req: &Request) -> Response {
             Response::error(404, &format!("no handler for {method} {path}"))
         }
     }
+}
+
+/// `GET /metrics`: sync the scrape-time families (per-route serving
+/// metrics, hot probe counters) into the registry, then render the
+/// whole thing as Prometheus text.
+fn handle_metrics(router: &Router) -> Response {
+    let reg = crate::obs::registry();
+    router.publish_metrics(reg);
+    crate::obs::probes::sync_hot_counters();
+    Response::text(200, reg.render())
 }
 
 fn handle_healthz(router: &Router) -> Response {
@@ -584,6 +646,8 @@ mod tests {
         assert_eq!(dispatch(&router, &req("GET", "/nope", "")).status, 404);
         assert_eq!(dispatch(&router, &req("POST", "/healthz", "")).status, 405);
         assert_eq!(dispatch(&router, &req("GET", "/v1/score", "")).status, 405);
+        assert_eq!(dispatch(&router, &req("POST", "/metrics", "")).status, 405);
+        assert_eq!(dispatch(&router, &req("POST", "/v1/trace", "")).status, 405);
         assert_eq!(
             dispatch(&router, &req("GET", "/v1/models/only/publish", "")).status,
             405
@@ -690,6 +754,57 @@ mod tests {
             )
             .status,
             400
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn metrics_scrape_covers_http_and_route_families() {
+        let router = single_router(2.0, 4);
+        let before = dispatch(&router, &req("GET", "/metrics", ""));
+        assert_eq!(before.status, 200);
+        assert!(before.content_type.starts_with("text/plain"));
+        for _ in 0..3 {
+            let r = dispatch(
+                &router,
+                &req("POST", "/v1/score", r#"{"idx": [0], "vals": [1.0]}"#),
+            );
+            assert_eq!(r.status, 200);
+        }
+        let after = dispatch(&router, &req("GET", "/metrics", ""));
+        let text = String::from_utf8(after.body).unwrap();
+        assert!(text.contains("# TYPE passcode_http_requests_total counter"), "{text}");
+        assert!(text.contains("# TYPE passcode_http_request_seconds summary"), "{text}");
+        assert!(text.contains("passcode_route_requests_total{route=\"only\"} 3"), "{text}");
+        assert!(text.contains("passcode_route_qps{route=\"only\"}"), "{text}");
+        assert!(
+            text.contains("passcode_route_latency_seconds{route=\"only\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(text.contains("passcode_route_versions_alive{route=\"only\"}"), "{text}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn trace_endpoint_returns_recent_spans() {
+        let router = single_router(1.0, 4);
+        dispatch(&router, &req("GET", "/healthz", ""));
+        let r = dispatch(&router, &req("GET", "/v1/trace", ""));
+        assert_eq!(r.status, 200);
+        let j = body_json(&r);
+        assert_eq!(j.get("format").unwrap().as_str().unwrap(), "passcode-trace-v1");
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        // The healthz dispatch above is in the ring (possibly among
+        // events from concurrently running tests — the recorder is
+        // process-global).
+        let labels: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("label").unwrap().as_str().unwrap())
+            .collect();
+        assert!(
+            labels.iter().any(|l| l.contains("GET /healthz -> 200")),
+            "{labels:?}"
         );
         router.shutdown();
     }

@@ -1,0 +1,64 @@
+//! Crate-wide observability: a lock-free [`MetricsRegistry`], solver
+//! hot-loop probes, and a ring-buffer [`FlightRecorder`].
+//!
+//! PASSCoDe's interesting behavior happens *inside* the asynchronous
+//! hot loop — staleness τ, CAS/lock contention, the Theorem-3 backward
+//! error — and this module turns those analysis quantities into live
+//! production signals next to the serving metrics:
+//!
+//! * [`registry()`] — the process-wide [`MetricsRegistry`].  The solver
+//!   family (`passcode_train_*`: updates, epochs, CAS retries, lock
+//!   waits, per-worker epoch timings, sampled τ, backward-error ratio)
+//!   registers via [`probes::solver`]; the HTTP/serving family
+//!   (`passcode_http_*`, `passcode_route_*`) registers from
+//!   `net/server.rs` and `Router::publish_metrics`.  `GET /metrics`
+//!   renders everything in one Prometheus text scrape.
+//! * [`probes`] — the hot-path half: a global enable switch plus
+//!   static striped tick counters, shaped so the solver inner loop
+//!   pays one predictable branch when probes are off (`perf_hotpath`
+//!   carries the probes-on/off ablation; the bar is <2% enabled).
+//! * [`recorder()`] — the process-wide [`FlightRecorder`]: recent spans
+//!   (HTTP requests, training epochs) with thread ids and monotonic
+//!   timestamps, served as JSON by `GET /v1/trace` and written by
+//!   `passcode train --trace-out <file>`.
+//!
+//! Everything is std-only and allocation-free on the record path
+//! (metric handles are `Arc`s resolved at registration time; the
+//! recorder allocates only its bounded ring and per-event labels at
+//! request/epoch granularity).
+
+pub mod probes;
+pub mod registry;
+pub mod trace;
+
+use std::sync::OnceLock;
+
+pub use probes::{probes_enabled, set_probes_enabled};
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{FlightRecorder, TraceEvent};
+
+/// Capacity of the process-wide flight recorder ring.
+const RECORDER_CAPACITY: usize = 4096;
+
+/// The process-wide metrics registry.
+pub fn registry() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(MetricsRegistry::new)
+}
+
+/// The process-wide flight recorder (most recent 4096 events).
+pub fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(|| FlightRecorder::new(RECORDER_CAPACITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn globals_are_singletons() {
+        assert!(std::ptr::eq(registry(), registry()));
+        assert!(std::ptr::eq(recorder(), recorder()));
+    }
+}

@@ -1,0 +1,193 @@
+//! Solver hot-loop probes: branch-predictable no-ops when disabled,
+//! striped relaxed counters when enabled.
+//!
+//! The contract `perf_hotpath` enforces (<2% overhead enabled, none
+//! measurable disabled) shapes everything here:
+//!
+//! * the global switch is a single relaxed [`AtomicBool`] load — the
+//!   cache line it lives on is read-shared and never written during a
+//!   run, so the disabled path is a perfectly predicted branch;
+//! * the tick counters are `static` [`Counter`]s (cache-line-striped
+//!   cells), so a tick is one relaxed `fetch_add` on a mostly
+//!   thread-local line — no `Arc`, no registry lookup, no allocation;
+//! * everything per-update is counting; anything that costs more (the
+//!   τ sample, epoch timing, the backward-error gauge) runs at epoch
+//!   boundaries or behind a 1-in-[`TAU_SAMPLE_EVERY`] countdown.
+//!
+//! The registry only learns about these totals at synchronization
+//! points ([`sync_hot_counters`]: end of a training round, `/metrics`
+//! scrape) via `Counter::set_floor`, which keeps the exported values
+//! monotonic under racing scrapes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::registry::{Counter, Gauge, Histogram};
+
+/// Sample one coordinate update in every this-many for the τ-staleness
+/// probe (per worker, when probes are enabled).
+pub const TAU_SAMPLE_EVERY: u32 = 1024;
+
+static PROBES_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether solver probes are enabled (relaxed load; hoist out of inner
+/// loops where convenient, but calling per update is cheap).
+#[inline]
+pub fn probes_enabled() -> bool {
+    PROBES_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn solver probes on or off (`passcode listen` enables them by
+/// default, `passcode train --probes true` opts in, benches toggle
+/// them around the ablation rows).
+pub fn set_probes_enabled(on: bool) {
+    PROBES_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// CAS retries in `SharedVec::cas_add` (PASSCoDe-Atomic contention).
+static CAS_RETRIES: Counter = Counter::new();
+/// Contended `LockTable::acquire_sorted` acquisitions (PASSCoDe-Lock).
+static LOCK_WAITS: Counter = Counter::new();
+/// Completed kernel scatters — the clock the τ probe reads.
+static SCATTERS: Counter = Counter::new();
+
+/// Count one CAS retry (no-op unless probes are enabled).
+#[inline]
+pub fn cas_retry_tick() {
+    if probes_enabled() {
+        CAS_RETRIES.inc();
+    }
+}
+
+/// Count one contended lock acquisition (no-op unless probes are
+/// enabled).
+#[inline]
+pub fn lock_wait_tick() {
+    if probes_enabled() {
+        LOCK_WAITS.inc();
+    }
+}
+
+/// Count one completed scatter (no-op unless probes are enabled).
+#[inline]
+pub fn scatter_tick() {
+    if probes_enabled() {
+        SCATTERS.inc();
+    }
+}
+
+/// Total scatters ticked so far.  The τ probe reads this before and
+/// after one sampled update: the difference minus the update's own
+/// write is the number of foreign `w`-writes that landed inside the
+/// update's read→write span — the staleness parameter of Liu & Wright
+/// (arXiv:1403.3862), measured on a free-running schedule (the `chk/`
+/// checker measures the same span under its serialized scheduler).
+pub fn scatter_ticks() -> u64 {
+    SCATTERS.value()
+}
+
+/// Registry handles for the solver telemetry family, registered once
+/// into the global [`crate::obs::registry()`].
+pub struct SolverProbes {
+    /// Coordinate updates performed (all training rounds).
+    pub updates: Arc<Counter>,
+    /// Epochs completed.
+    pub epochs: Arc<Counter>,
+    /// CAS retries (mirrors the hot static at sync points).
+    pub cas_retries: Arc<Counter>,
+    /// Contended lock acquisitions (mirrors the hot static).
+    pub lock_waits: Arc<Counter>,
+    /// Per-worker epoch wall time (recorded in ns, rendered seconds).
+    pub epoch_seconds: Arc<Histogram>,
+    /// Sampled τ staleness (foreign scatters inside an update span).
+    pub tau: Arc<Histogram>,
+    /// Empirical backward error ‖ŵ − Σᵢ αᵢ xᵢ‖ / ‖ŵ‖ (Eq. 6) at the
+    /// last epoch boundary.
+    pub backward_error: Arc<Gauge>,
+    /// Updates/sec of the most recent training round.
+    pub updates_per_sec: Arc<Gauge>,
+}
+
+/// The solver telemetry family (lazily registered on first use).
+pub fn solver() -> &'static SolverProbes {
+    static PROBES: OnceLock<SolverProbes> = OnceLock::new();
+    PROBES.get_or_init(|| {
+        let reg = crate::obs::registry();
+        SolverProbes {
+            updates: reg.counter(
+                "passcode_train_updates_total",
+                "Dual coordinate updates performed",
+            ),
+            epochs: reg.counter("passcode_train_epochs_total", "Training epochs completed"),
+            cas_retries: reg.counter(
+                "passcode_train_cas_retries_total",
+                "CAS retries in SharedVec::cas_add (PASSCoDe-Atomic)",
+            ),
+            lock_waits: reg.counter(
+                "passcode_train_lock_waits_total",
+                "Contended acquisitions in LockTable::acquire_sorted (PASSCoDe-Lock)",
+            ),
+            epoch_seconds: reg.histogram(
+                "passcode_train_epoch_seconds",
+                "Per-worker epoch wall time",
+                1e-9,
+            ),
+            tau: reg.histogram(
+                "passcode_train_tau",
+                "Sampled staleness: foreign w-writes inside one update's read->write span",
+                1.0,
+            ),
+            backward_error: reg.gauge(
+                "passcode_train_backward_error_ratio",
+                "Empirical |w_hat - sum_i alpha_i x_i| / |w_hat| (Eq. 6, Theorem 3)",
+            ),
+            updates_per_sec: reg.gauge(
+                "passcode_train_updates_per_sec",
+                "Updates/sec of the most recent training round",
+            ),
+        }
+    })
+}
+
+/// Mirror the hot tick statics into their registry counters.  Called
+/// at training-round boundaries and on every `/metrics` scrape; cheap
+/// and race-safe (`set_floor` is a `fetch_max`).
+pub fn sync_hot_counters() {
+    let p = solver();
+    p.cas_retries.set_floor(CAS_RETRIES.value());
+    p.lock_waits.set_floor(LOCK_WAITS.value());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_are_gated_and_sync_mirrors_them() {
+        // Serialize against other tests that toggle the global switch.
+        let was = probes_enabled();
+        set_probes_enabled(false);
+        let cas0 = CAS_RETRIES.value();
+        cas_retry_tick();
+        lock_wait_tick();
+        scatter_tick();
+        assert_eq!(CAS_RETRIES.value(), cas0, "tick must be a no-op when disabled");
+        set_probes_enabled(true);
+        cas_retry_tick();
+        lock_wait_tick();
+        scatter_tick();
+        assert!(CAS_RETRIES.value() > cas0);
+        sync_hot_counters();
+        assert!(solver().cas_retries.value() >= CAS_RETRIES.value());
+        assert!(solver().lock_waits.value() >= 1);
+        set_probes_enabled(was);
+    }
+
+    #[test]
+    fn solver_family_registers_once() {
+        let a = solver().updates.as_ref() as *const Counter;
+        let b = solver().updates.as_ref() as *const Counter;
+        assert_eq!(a, b);
+        assert!(!crate::obs::registry().is_empty());
+    }
+}

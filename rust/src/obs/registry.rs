@@ -1,0 +1,510 @@
+//! The metrics registry: named lock-free counters, gauges, and
+//! histograms with a Prometheus text renderer.
+//!
+//! The primitives generalize the serving layer's
+//! [`crate::serve::LatencyHistogram`] (64 power-of-two buckets) and
+//! borrow [`crate::util::SharedVec`]'s cache-line discipline: counter
+//! cells are striped across 64-byte-aligned lines indexed by a
+//! per-thread stripe, so concurrent `add` calls from solver workers do
+//! not bounce a shared line.  Everything on the record path is a relaxed
+//! atomic op — no locks, no allocation.  The registry map itself is
+//! behind a `Mutex`, but it is touched only at registration and render
+//! time (both off the hot path); hot-path users hold `Arc` handles.
+//!
+//! Metric names follow Prometheus conventions: `snake_case`, counters
+//! end in `_total`, and a name may carry a fixed label set inline
+//! (`passcode_route_qps{route="a"}`) — the full string is the registry
+//! key, and the renderer groups samples by the base name (the part
+//! before `{`) when emitting `# TYPE` headers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Stripe count for counter cells.  Eight 8-byte cells fill exactly one
+/// cache line per stripe; eight stripes cover typical worker counts
+/// without a dependence on runtime thread counts.
+const STRIPES: usize = 8;
+
+/// One 64-byte line holding a single counter cell (the padding is the
+/// point: two stripes never share a line).
+#[repr(align(64))]
+struct Cell(AtomicU64);
+
+impl Cell {
+    const fn new() -> Self {
+        Cell(AtomicU64::new(0))
+    }
+}
+
+/// A small per-thread stripe index: threads get consecutive stripes in
+/// spawn order, wrapped to [`STRIPES`].  Reused by the probe statics in
+/// [`crate::obs::probes`].
+pub(crate) fn stripe() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    STRIPE.with(|s| *s) % STRIPES
+}
+
+/// A monotonic counter: striped relaxed adds, plus a `floor` register
+/// for scrape-time synchronization with an engine that keeps its own
+/// monotonic total (e.g. per-route request counts).  `value()` is the
+/// max of the striped sum and the floor, so mixing both write paths can
+/// never make the reported value go backwards.
+pub struct Counter {
+    cells: [Cell; STRIPES],
+    floor: AtomicU64,
+}
+
+impl Counter {
+    /// A zeroed counter (`const`, so probe counters can be statics).
+    pub const fn new() -> Self {
+        Counter {
+            cells: [
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+                Cell::new(),
+            ],
+            floor: AtomicU64::new(0),
+        }
+    }
+
+    /// Add `n` to this thread's stripe (relaxed; lock- and
+    /// allocation-free).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cells[stripe()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Raise the floor to `total` (monotonic: `fetch_max`).  Use this
+    /// to mirror an externally maintained monotonic total into the
+    /// registry at scrape time; racing scrapes are safe.
+    pub fn set_floor(&self, total: u64) {
+        self.floor.fetch_max(total, Ordering::Relaxed);
+    }
+
+    /// Current value: max(sum of stripes, floor).
+    pub fn value(&self) -> u64 {
+        let mut sum = 0u64;
+        for c in &self.cells {
+            sum += c.0.load(Ordering::Relaxed);
+        }
+        sum.max(self.floor.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// An `f64` gauge stored as bits in an `AtomicU64` (last write wins).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// A gauge initialized to 0.0.
+    pub const fn new() -> Self {
+        Gauge { bits: AtomicU64::new(0) }
+    }
+
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Read the gauge.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Bucket count: power-of-two buckets indexed by bit length, same
+/// layout as [`crate::serve::LatencyHistogram`].
+const BUCKETS: usize = 64;
+
+/// A lock-free histogram over raw `u64` samples (power-of-two buckets).
+///
+/// Samples are recorded in raw units (e.g. nanoseconds, or a unitless
+/// staleness count); `scale` is applied only at render time so the
+/// exposition can report seconds while `record` stays integer-cheap.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    scale: f64,
+}
+
+impl Histogram {
+    /// An empty histogram whose rendered values are `raw * scale`
+    /// (pass `1e-9` for nanosecond samples rendered as seconds, `1.0`
+    /// for unitless samples).
+    pub fn new(scale: f64) -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            scale,
+        }
+    }
+
+    /// Record one raw sample (three relaxed atomic adds; no locks, no
+    /// allocation).
+    #[inline]
+    pub fn record(&self, raw: u64) {
+        let b = if raw == 0 {
+            0
+        } else {
+            ((u64::BITS - raw.leading_zeros()) as usize).min(BUCKETS - 1)
+        };
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(raw, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of raw samples, scaled to rendered units.
+    pub fn sum_scaled(&self) -> f64 {
+        self.sum.load(Ordering::Relaxed) as f64 * self.scale
+    }
+
+    /// Approximate `q`-quantile in rendered units (bucket midpoint,
+    /// like `LatencyHistogram::quantile_secs`).  Returns 0.0 when
+    /// empty.  Tolerates racing writers: if the cumulative walk falls
+    /// short of the target it falls back to the highest populated
+    /// bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        let mut highest = 0usize;
+        for (b, cell) in self.buckets.iter().enumerate() {
+            let n = cell.load(Ordering::Relaxed);
+            if n > 0 {
+                highest = b;
+            }
+            seen += n;
+            if seen >= target {
+                return self.midpoint(b);
+            }
+        }
+        self.midpoint(highest)
+    }
+
+    /// Midpoint of bucket `b` in rendered units.
+    fn midpoint(&self, b: usize) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        1.5 * (1u64 << (b - 1)) as f64 * self.scale
+    }
+}
+
+/// One registered metric: the kind tag doubles as the `# TYPE` line.
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "summary",
+        }
+    }
+}
+
+struct Entry {
+    help: String,
+    metric: Metric,
+}
+
+/// A registry of named metrics with a Prometheus text renderer.
+///
+/// Registration is idempotent: asking for an existing name returns a
+/// handle to the same metric (and panics if the name was registered as
+/// a different kind — that is a programming error, not a runtime
+/// condition).  The process-wide instance lives behind
+/// [`crate::obs::registry()`].
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.metrics.lock().expect("obs registry poisoned").len()
+    }
+
+    /// True when nothing is registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Get or create the counter `name` (full name including any
+    /// inline labels).
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut map = self.metrics.lock().expect("obs registry poisoned");
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Counter(Arc::new(Counter::new())),
+        });
+        match &e.metric {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut map = self.metrics.lock().expect("obs registry poisoned");
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Gauge(Arc::new(Gauge::new())),
+        });
+        match &e.metric {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get or create the histogram `name` with render scale `scale`
+    /// (see [`Histogram::new`]; the scale of the first registration
+    /// wins).
+    pub fn histogram(&self, name: &str, help: &str, scale: f64) -> Arc<Histogram> {
+        let mut map = self.metrics.lock().expect("obs registry poisoned");
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            metric: Metric::Histogram(Arc::new(Histogram::new(scale))),
+        });
+        match &e.metric {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name} already registered as {}", other.kind()),
+        }
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format (version 0.0.4): `# HELP` / `# TYPE` per base name, then
+    /// one `name value` sample line per metric; histograms render as
+    /// summaries (`{quantile="..."}` samples plus `_sum` / `_count`).
+    pub fn render(&self) -> String {
+        let map = self.metrics.lock().expect("obs registry poisoned");
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, e) in map.iter() {
+            let (base, labels) = split_name(name);
+            if base != last_base {
+                out.push_str(&format!("# HELP {base} {}\n", e.help));
+                out.push_str(&format!("# TYPE {base} {}\n", e.metric.kind()));
+                last_base = base.to_string();
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{name} {}\n", c.value()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{name} {}\n", fmt_f64(g.get())));
+                }
+                Metric::Histogram(h) => {
+                    for q in ["0.5", "0.95", "0.99"] {
+                        let qv: f64 = q.parse().unwrap();
+                        let sample = with_label(base, labels, &format!("quantile=\"{q}\""));
+                        out.push_str(&format!("{sample} {}\n", fmt_f64(h.quantile(qv))));
+                    }
+                    let sum = with_suffix(base, labels, "_sum");
+                    let count = with_suffix(base, labels, "_count");
+                    out.push_str(&format!("{sum} {}\n", fmt_f64(h.sum_scaled())));
+                    out.push_str(&format!("{count} {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+/// Split a full metric name into (base, inline label body without
+/// braces): `a{route="x"}` → `("a", Some("route=\"x\""))`.
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Rebuild a sample name with one extra label merged into the inline
+/// label set.
+fn with_label(base: &str, labels: Option<&str>, extra: &str) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{base}{{{l},{extra}}}"),
+        _ => format!("{base}{{{extra}}}"),
+    }
+}
+
+/// Rebuild a sample name with a suffix appended to the base (for
+/// `_sum` / `_count`), keeping the inline labels.
+fn with_suffix(base: &str, labels: Option<&str>, suffix: &str) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{base}{suffix}{{{l}}}"),
+        _ => format!("{base}{suffix}"),
+    }
+}
+
+/// Prometheus float formatting: finite values via Rust's shortest
+/// round-trip display, specials as `NaN` / `+Inf` / `-Inf`.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_stripes_and_floor_are_monotonic() {
+        let c = Counter::new();
+        c.add(3);
+        c.inc();
+        assert_eq!(c.value(), 4);
+        // Floor below the striped sum changes nothing.
+        c.set_floor(2);
+        assert_eq!(c.value(), 4);
+        // Floor above it wins; a lower later floor cannot regress it.
+        c.set_floor(10);
+        assert_eq!(c.value(), 10);
+        c.set_floor(7);
+        assert_eq!(c.value(), 10);
+    }
+
+    #[test]
+    fn counter_concurrent_adds_sum_exactly() {
+        let c = Arc::new(Counter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 80_000);
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(-2.5e-9);
+        assert_eq!(g.get(), -2.5e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_and_scale() {
+        let h = Histogram::new(1e-9);
+        for _ in 0..100 {
+            h.record(1_000); // bucket midpoint 1.5 * 512 ns
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 1.5 * 512.0 * 1e-9).abs() < 1e-12, "{p50}");
+        assert!((h.sum_scaled() - 100.0 * 1_000.0 * 1e-9).abs() < 1e-12);
+        // q = 1.0 lands in the same (only) bucket.
+        assert_eq!(h.quantile(1.0), p50);
+        // Empty histogram reports 0.
+        assert_eq!(Histogram::new(1.0).quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn registry_is_idempotent_and_renders_groups() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter("t_total", "a counter");
+        let c2 = reg.counter("t_total", "a counter");
+        c1.add(2);
+        c2.add(3);
+        assert_eq!(c1.value(), 5);
+        reg.gauge("t_qps{route=\"a\"}", "per-route qps").set(1.5);
+        reg.gauge("t_qps{route=\"b\"}", "per-route qps").set(2.5);
+        reg.histogram("t_seconds", "latency", 1e-9).record(2_000);
+        let text = reg.render();
+        assert!(text.contains("# TYPE t_total counter"), "{text}");
+        assert!(text.contains("t_total 5"), "{text}");
+        // One TYPE header for the two labeled gauges.
+        assert_eq!(text.matches("# TYPE t_qps gauge").count(), 1, "{text}");
+        assert!(text.contains("t_qps{route=\"a\"} 1.5"), "{text}");
+        assert!(text.contains("t_qps{route=\"b\"} 2.5"), "{text}");
+        assert!(text.contains("# TYPE t_seconds summary"), "{text}");
+        assert!(text.contains("t_seconds{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("t_seconds_count 1"), "{text}");
+        assert_eq!(reg.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn registry_rejects_kind_mismatch() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x_total", "c");
+        reg.gauge("x_total", "g");
+    }
+
+    #[test]
+    fn labeled_histogram_merges_quantile_label() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("t_lat{route=\"a\"}", "lat", 1.0).record(8);
+        let text = reg.render();
+        assert!(text.contains("t_lat{route=\"a\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("t_lat_sum{route=\"a\"} 8"), "{text}");
+        assert!(text.contains("t_lat_count{route=\"a\"} 1"), "{text}");
+    }
+}

@@ -1,0 +1,166 @@
+//! The flight recorder: a bounded ring buffer of recent spans/events
+//! (HTTP requests, training epochs, publishes) with thread ids and
+//! monotonic timestamps, dumpable as JSON via `GET /v1/trace` or
+//! `passcode train --trace-out`.
+//!
+//! Events are request/epoch granularity — never per-coordinate — so a
+//! short critical section around the ring is acceptable; the solver hot
+//! loop goes through [`crate::obs::probes`] instead, which touches only
+//! relaxed atomics.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::Json;
+
+/// One recorded span/event.
+pub struct TraceEvent {
+    /// Monotonic sequence number (total events recorded, including
+    /// ones since evicted from the ring).
+    pub seq: u64,
+    /// Recorder-local thread id (dense small integers in first-record
+    /// order, not OS tids).
+    pub tid: u64,
+    /// Microseconds since the recorder was created (monotonic clock).
+    pub t_us: f64,
+    /// Event kind, e.g. `"http.request"` or `"train.epoch"`.
+    pub kind: &'static str,
+    /// Free-form label (endpoint + status, epoch number, ...).
+    pub label: String,
+    /// Span duration in microseconds (0 for point events).
+    pub dur_us: f64,
+}
+
+struct Ring {
+    buf: VecDeque<TraceEvent>,
+    seq: u64,
+    dropped: u64,
+}
+
+/// A fixed-capacity ring of recent [`TraceEvent`]s.  The process-wide
+/// instance lives behind [`crate::obs::recorder`].
+pub struct FlightRecorder {
+    start: Instant,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+/// Recorder-local dense thread id (first thread to record gets 0).
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+impl FlightRecorder {
+    /// A recorder keeping the most recent `cap` events.
+    pub fn new(cap: usize) -> Self {
+        let ring = Ring { buf: VecDeque::with_capacity(cap), seq: 0, dropped: 0 };
+        FlightRecorder { start: Instant::now(), cap, ring: Mutex::new(ring) }
+    }
+
+    /// Record a span of duration `dur` ending now (pass
+    /// `Duration::ZERO` for point events).
+    pub fn record(&self, kind: &'static str, label: impl Into<String>, dur: Duration) {
+        let mut ev = TraceEvent {
+            seq: 0,
+            tid: tid(),
+            t_us: self.start.elapsed().as_secs_f64() * 1e6,
+            kind,
+            label: label.into(),
+            dur_us: dur.as_secs_f64() * 1e6,
+        };
+        let mut ring = self.ring.lock().expect("flight recorder poisoned");
+        ev.seq = ring.seq;
+        ring.seq += 1;
+        if ring.buf.len() == self.cap {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+        ring.buf.push_back(ev);
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("flight recorder poisoned").buf.len()
+    }
+
+    /// True when nothing has been recorded (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted so far to make room.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().expect("flight recorder poisoned").dropped
+    }
+
+    /// Dump the ring (oldest first) as JSON:
+    /// `{format, capacity, dropped, events: [{seq, tid, t_us, kind,
+    /// label, dur_us}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let ring = self.ring.lock().expect("flight recorder poisoned");
+        let events: Vec<Json> = ring
+            .buf
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("seq", Json::num(e.seq as f64)),
+                    ("tid", Json::num(e.tid as f64)),
+                    ("t_us", Json::num(e.t_us)),
+                    ("kind", Json::str(e.kind)),
+                    ("label", Json::str(&e.label)),
+                    ("dur_us", Json::num(e.dur_us)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str("passcode-trace-v1")),
+            ("capacity", Json::num(self.cap as f64)),
+            ("dropped", Json::num(ring.dropped as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_most_recent_and_counts_drops() {
+        let rec = FlightRecorder::new(4);
+        assert!(rec.is_empty());
+        for i in 0..10 {
+            rec.record("test.ev", format!("ev{i}"), Duration::ZERO);
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        let j = rec.to_json();
+        let arr = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        // Oldest surviving event is seq 6, newest is seq 9.
+        assert_eq!(arr[0].get("seq").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(arr[3].get("seq").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(arr[3].get("label").unwrap().as_str().unwrap(), "ev9");
+    }
+
+    #[test]
+    fn timestamps_are_monotone_and_json_round_trips() {
+        let rec = FlightRecorder::new(8);
+        rec.record("a", "first", Duration::from_micros(5));
+        rec.record("b", "second", Duration::ZERO);
+        let text = rec.to_json().to_pretty();
+        let back = Json::parse(&text).unwrap();
+        let arr = back.get("events").unwrap().as_arr().unwrap();
+        let t0 = arr[0].get("t_us").unwrap().as_f64().unwrap();
+        let t1 = arr[1].get("t_us").unwrap().as_f64().unwrap();
+        assert!(t1 >= t0, "{t0} {t1}");
+        assert_eq!(arr[0].get("dur_us").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(back.get("format").unwrap().as_str().unwrap(), "passcode-trace-v1");
+    }
+}

@@ -115,6 +115,45 @@ impl LatencyHistogram {
             1.5 * 2f64.powi(b as i32 - 1) / 1e9
         }
     }
+
+    /// Fold another histogram into this one (bucketwise add).  With
+    /// [`LatencyHistogram::snapshot_and_reset`] this supports windowed
+    /// quantiles: keep a lifetime accumulator, periodically drain a
+    /// live histogram into it, and report quantiles of either the
+    /// drained window or the merged whole.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Atomically-per-cell drain this histogram into a fresh snapshot
+    /// and zero it (each cell is `swap(0)`), returning the drained
+    /// interval.  Concurrent `record_ns` calls are never lost: an
+    /// increment lands either in the returned snapshot or in the
+    /// reset histogram, so `snapshot.merge(live)` conserves totals.
+    /// A racing record *can* straddle the swap (bucket in the
+    /// snapshot, count in the residual), which the quantile walk
+    /// already tolerates.
+    pub fn snapshot_and_reset(&self) -> LatencyHistogram {
+        let snap = LatencyHistogram::new();
+        for (live, cell) in self.buckets.iter().zip(&snap.buckets) {
+            let n = live.swap(0, Ordering::Relaxed);
+            if n > 0 {
+                cell.store(n, Ordering::Relaxed);
+            }
+        }
+        let n = self.count.swap(0, Ordering::Relaxed);
+        snap.count.store(n, Ordering::Relaxed);
+        let s = self.sum_ns.swap(0, Ordering::Relaxed);
+        snap.sum_ns.store(s, Ordering::Relaxed);
+        snap
+    }
 }
 
 /// Per-shard throughput counters (relaxed atomics, exact).
@@ -337,6 +376,85 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.quantile_secs(0.5), 0.0);
         assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn merge_of_disjoint_buckets_preserves_both_populations() {
+        let fast = LatencyHistogram::new();
+        let slow = LatencyHistogram::new();
+        for _ in 0..90 {
+            fast.record_ns(1_000); // ~1 µs
+        }
+        for _ in 0..10 {
+            slow.record_ns(1_000_000); // ~1 ms
+        }
+        fast.merge(&slow);
+        assert_eq!(fast.count(), 100);
+        // Quantiles of the merged histogram see both populations: the
+        // median stays in the microsecond bucket, the tail moves to
+        // the millisecond one.
+        assert!(fast.quantile_secs(0.50) < 1e-5);
+        assert!(fast.quantile_secs(0.95) > 1e-4);
+        let want_mean = (90.0 * 1e-6 + 10.0 * 1e-3) / 100.0;
+        assert!((fast.mean_secs() - want_mean).abs() < 1e-5);
+        // The merge source is untouched.
+        assert_eq!(slow.count(), 10);
+    }
+
+    #[test]
+    fn snapshot_and_reset_drains_the_window() {
+        let h = LatencyHistogram::new();
+        for _ in 0..50 {
+            h.record_ns(1_000);
+        }
+        let window = h.snapshot_and_reset();
+        assert_eq!(window.count(), 50);
+        assert!(window.quantile_secs(0.5) > 0.0);
+        // The live histogram restarts empty: the next window sees only
+        // what arrived after the reset (per-interval quantiles).
+        assert_eq!(h.count(), 0);
+        for _ in 0..5 {
+            h.record_ns(1_000_000);
+        }
+        let next = h.snapshot_and_reset();
+        assert_eq!(next.count(), 5);
+        assert!(next.quantile_secs(0.5) > window.quantile_secs(0.5));
+    }
+
+    #[test]
+    fn racing_reset_and_record_conserve_totals() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let total = std::sync::Arc::new(LatencyHistogram::new());
+        const WRITERS: u64 = 4;
+        const PER_WRITER: u64 = 20_000;
+        std::thread::scope(|s| {
+            for _ in 0..WRITERS {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..PER_WRITER {
+                        h.record_ns(1 + (i % 1_000));
+                    }
+                });
+            }
+            let h = std::sync::Arc::clone(&h);
+            let total = std::sync::Arc::clone(&total);
+            s.spawn(move || {
+                // Reap windows while the writers are running.
+                for _ in 0..100 {
+                    total.merge(&h.snapshot_and_reset());
+                    std::hint::spin_loop();
+                }
+            });
+        });
+        // Whatever the interleaving, every record lands exactly once:
+        // reaped windows plus the residual account for all writes.
+        total.merge(&h.snapshot_and_reset());
+        assert_eq!(total.count(), WRITERS * PER_WRITER);
+        let mut bucket_sum = 0u64;
+        for b in &total.buckets {
+            bucket_sum += b.load(Ordering::Relaxed);
+        }
+        assert_eq!(bucket_sum, WRITERS * PER_WRITER);
     }
 
     #[test]

@@ -709,6 +709,27 @@ impl<'a> TrainSession<'a> {
                 self.epochs_done += 1;
                 self.phases.add("init", phases.get("init"));
                 self.phases.add("train", phases.get("train"));
+                // Epoch-boundary telemetry: the empirical backward
+                // error ‖ŵ − Σᵢ αᵢ xᵢ‖ / ‖ŵ‖ (Eq. 6) — Theorem 3's ε,
+                // measured on the live state.  One O(nnz) pass per
+                // epoch, only when probes are on, and off the
+                // free-running bench path entirely.
+                if crate::obs::probes_enabled() {
+                    let wbar = eval::wbar_from_alpha(self.ds, &self.alpha);
+                    let mut err = 0.0f64;
+                    let mut norm = 0.0f64;
+                    for (wh, wb) in self.w_hat.iter().zip(&wbar) {
+                        err += (wh - wb) * (wh - wb);
+                        norm += wh * wh;
+                    }
+                    let ratio = if norm > 0.0 {
+                        (err / norm).sqrt()
+                    } else {
+                        0.0
+                    };
+                    let probes = crate::obs::probes::solver();
+                    probes.backward_error.set(ratio);
+                }
                 return Ok(());
             }
             Backend::Cocoa => Cocoa::solve_from(

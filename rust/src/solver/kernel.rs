@@ -174,6 +174,9 @@ pub trait UpdateKernel: Copy + Send + Sync {
         let r = solve(wx);
         if let Some(delta) = r {
             self.scatter(idx, vals, delta);
+            // Telemetry clock for the τ-staleness probe: one tick per
+            // completed scatter (gated no-op unless probes are on).
+            crate::obs::probes::scatter_tick();
         }
         self.end(idx);
         r.is_some()

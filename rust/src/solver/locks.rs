@@ -58,6 +58,10 @@ impl LockTable {
         debug_assert!(features.windows(2).all(|w| w[0] < w[1]));
         for &f in features {
             let lock = &self.locks[f as usize];
+            // Contention telemetry: one tick per *contended*
+            // acquisition (not per spin), recorded after the acquire
+            // so the uncontended fast path stays a single CAS.
+            let mut contended = false;
             while lock
                 .compare_exchange_weak(
                     false,
@@ -67,7 +71,11 @@ impl LockTable {
                 )
                 .is_err()
             {
+                contended = true;
                 std::hint::spin_loop();
+            }
+            if contended {
+                crate::obs::probes::lock_wait_tick();
             }
         }
     }

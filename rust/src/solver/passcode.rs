@@ -256,11 +256,24 @@ impl Passcode {
         });
         phases.add("train", train_t.secs());
 
-        (
-            epochs_done.load(Ordering::SeqCst) as usize,
-            updates.load(Ordering::Relaxed),
-            phases,
-        )
+        let epochs_run = epochs_done.load(Ordering::SeqCst) as usize;
+        let total_updates = updates.load(Ordering::Relaxed);
+        // Publish round totals into the metrics registry here (not in
+        // the session layer) so every entry point that reaches the
+        // shared core — sessions, cold solves, the online trainer's
+        // free-running rounds — reports identically.
+        if crate::obs::probes_enabled() {
+            let probes = crate::obs::probes::solver();
+            probes.updates.add(total_updates);
+            probes.epochs.add(epochs_run as u64);
+            crate::obs::probes::sync_hot_counters();
+            let train_secs = phases.get("train");
+            if train_secs > 0.0 {
+                probes.updates_per_sec.set(total_updates as f64 / train_secs);
+            }
+        }
+
+        (epochs_run, total_updates, phases)
     }
 }
 
@@ -307,11 +320,18 @@ fn worker<L: Loss, K: UpdateKernel>(
     };
     let sync_every = ctx.opts.eval_every; // 0 = free-run
     let mut local_updates: u64 = 0;
+    // Telemetry rail: the flag is hoisted once per worker run, so the
+    // probes-off hot loop pays one predictable branch per update in
+    // `probed_update` and nothing else.  The countdown is only
+    // decremented while probes are on.
+    let probes_on = crate::obs::probes_enabled();
+    let mut tau_countdown = crate::obs::probes::TAU_SAMPLE_EVERY;
 
     for epoch in 0..ctx.opts.epochs {
         if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
+        let epoch_t = probes_on.then(Timer::start);
 
         if let Some(st) = shrink.as_mut() {
             st.active_indices_into(&mut locals);
@@ -324,7 +344,7 @@ fn worker<L: Loss, K: UpdateKernel>(
                     continue;
                 }
                 let (idx, vals) = ctx.ds.x.row(i);
-                kernel.update(idx, vals, |wx| {
+                probed_update(&kernel, idx, vals, probes_on, &mut tau_countdown, |wx| {
                     let a_old = ctx.alpha.get(i);
                     let g = ctx.loss.dual_gradient(a_old, wx);
                     if st.should_skip(local, a_old, g) {
@@ -358,7 +378,7 @@ fn worker<L: Loss, K: UpdateKernel>(
                     continue;
                 }
                 let (idx, vals) = ctx.ds.x.row(i);
-                kernel.update(idx, vals, |wx| {
+                probed_update(&kernel, idx, vals, probes_on, &mut tau_countdown, |wx| {
                     let a_old = ctx.alpha.get(i);
                     let a_new = ctx.loss.solve_subproblem(a_old, wx, q);
                     let delta = a_new - a_old;
@@ -370,6 +390,16 @@ fn worker<L: Loss, K: UpdateKernel>(
                         None
                     }
                 });
+            }
+        }
+
+        if let Some(timer) = epoch_t {
+            let dur = timer.elapsed();
+            let ns = dur.as_nanos().min(u64::MAX as u128) as u64;
+            crate::obs::probes::solver().epoch_seconds.record(ns);
+            if t == 0 {
+                let label = format!("epoch {}", epoch + 1);
+                crate::obs::recorder().record("train.epoch", label, dur);
             }
         }
 
@@ -399,6 +429,38 @@ fn worker<L: Loss, K: UpdateKernel>(
         }
     }
     ctx.updates.fetch_add(local_updates, Ordering::Relaxed);
+}
+
+/// One fused kernel update, with the sampled τ-staleness probe wrapped
+/// around roughly 1-in-[`crate::obs::probes::TAU_SAMPLE_EVERY`] calls
+/// when probes are on.  A sample reads the global scatter clock before
+/// and after the update: foreign scatters landing inside that
+/// read→write span, minus the update's own write, are the staleness τ
+/// the convergence analysis charges for (Liu & Wright,
+/// arXiv:1403.3862) — here measured on the free-running schedule,
+/// complementing the serialized-schedule τ from `passcode check`.
+#[inline]
+fn probed_update<K: UpdateKernel, F: FnOnce(f64) -> Option<f64>>(
+    kernel: &K,
+    idx: &[u32],
+    vals: &[f64],
+    probes_on: bool,
+    countdown: &mut u32,
+    solve: F,
+) {
+    if probes_on {
+        *countdown -= 1;
+        if *countdown == 0 {
+            *countdown = crate::obs::probes::TAU_SAMPLE_EVERY;
+            let before = crate::obs::probes::scatter_ticks();
+            let wrote = kernel.update(idx, vals, solve);
+            let after = crate::obs::probes::scatter_ticks();
+            let tau = after.saturating_sub(before).saturating_sub(wrote as u64);
+            crate::obs::probes::solver().tau.record(tau);
+            return;
+        }
+    }
+    kernel.update(idx, vals, solve);
 }
 
 /// Split a slice into `p` nearly-equal chunks (first `rem` get one extra).

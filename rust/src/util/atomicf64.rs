@@ -175,7 +175,12 @@ impl SharedVec {
             ) {
                 Ok(_) => return,
                 // The failure value *is* the fresh load for the retry.
-                Err(actual) => cur = actual,
+                // Contention telemetry rides the failure arm only, so
+                // the uncontended success path is untouched.
+                Err(actual) => {
+                    crate::obs::probes::cas_retry_tick();
+                    cur = actual;
+                }
             }
         }
     }

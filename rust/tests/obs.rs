@@ -1,0 +1,318 @@
+//! Integration tests for the observability layer: one `GET /metrics`
+//! scrape must serve the *training* telemetry family (updates, epoch
+//! timings, τ, backward error) and the *serving* family (per-route
+//! QPS/latency/registry depth, HTTP totals) out of the same registry,
+//! with a warm-start training round running mid-traffic — the PR's
+//! acceptance property.  Plus: the exposition format parses back,
+//! counters are monotonic under concurrent traffic, and per-route
+//! labels stay isolated across a mid-traffic publish.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use passcode::coordinator::model_io::Model;
+use passcode::data::registry;
+use passcode::loss::LossKind;
+use passcode::net::{HttpClient, Router, RoutesConfig, Server, ServerConfig};
+use passcode::solver::{lookup, SolveOptions};
+
+const D: usize = 8;
+
+fn toy_model(tag: f64) -> Model {
+    Model {
+        w: vec![tag; D],
+        loss: "hinge".into(),
+        c: 1.0,
+        solver: "test".into(),
+        dataset: "toy".into(),
+    }
+}
+
+/// Two-route loopback server with per-test route names (the metrics
+/// registry is process-global, so label isolation across tests needs
+/// distinct names).
+fn server_with_routes(tag: &str, ra: &str, rb: &str) -> (Server, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join("passcode_obs_it").join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path_a = dir.join("a.json");
+    let path_b = dir.join("b.json");
+    toy_model(1.0).save(&path_a).unwrap();
+    toy_model(2.0).save(&path_b).unwrap();
+    let cfg = RoutesConfig::from_json_text(&format!(
+        r#"{{"routes": [
+            {{"name": {ra:?}, "model": {:?}, "shards": 1}},
+            {{"name": {rb:?}, "model": {:?}, "shards": 1}}
+        ]}}"#,
+        path_a.to_str().unwrap(),
+        path_b.to_str().unwrap(),
+    ))
+    .unwrap();
+    let server = Server::start(
+        Router::start(&cfg).unwrap(),
+        &ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    (server, dir)
+}
+
+/// Parse a Prometheus text exposition, asserting every line is
+/// well-formed.  Returns (samples keyed by full name-with-labels,
+/// types keyed by base name).
+fn parse_exposition(text: &str) -> (BTreeMap<String, f64>, BTreeMap<String, String>) {
+    let mut samples = BTreeMap::new();
+    let mut types = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let base = it.next().expect("TYPE line has a name");
+            let kind = it.next().expect("TYPE line has a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "summary"),
+                "unknown metric kind in {line:?}"
+            );
+            types.insert(base.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("malformed sample line {line:?}");
+        });
+        let v: f64 = match value {
+            "NaN" => f64::NAN,
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            other => other.parse().unwrap_or_else(|e| {
+                panic!("bad value in {line:?}: {e}");
+            }),
+        };
+        // Metric-name grammar: base is [a-zA-Z_:][a-zA-Z0-9_:]*, with
+        // an optional {label="value",...} suffix.
+        let base = name.split('{').next().unwrap();
+        assert!(
+            !base.is_empty()
+                && base.chars().next().unwrap().is_ascii_alphabetic()
+                && base.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in {line:?}"
+        );
+        if name.contains('{') {
+            assert!(name.ends_with('}'), "unbalanced labels in {line:?}");
+        }
+        // Every sample's base (or its _sum/_count parent) carries a
+        // TYPE header by the time the scrape ends.
+        samples.insert(name.to_string(), v);
+    }
+    // Cross-check: each TYPE header has at least one sample.
+    for base in types.keys() {
+        assert!(
+            samples.keys().any(|n| {
+                let b = n.split('{').next().unwrap();
+                b == base || b == format!("{base}_sum") || b == format!("{base}_count")
+            }),
+            "TYPE {base} has no samples"
+        );
+    }
+    (samples, types)
+}
+
+fn scrape(client: &mut HttpClient) -> (BTreeMap<String, f64>, BTreeMap<String, String>) {
+    let resp = client
+        .request("GET", "/metrics", "text/plain", b"")
+        .unwrap()
+        .ok()
+        .unwrap();
+    parse_exposition(std::str::from_utf8(&resp.body).unwrap())
+}
+
+#[test]
+fn one_scrape_serves_training_and_serving_families() {
+    passcode::obs::set_probes_enabled(true);
+    let (server, _dir) = server_with_routes("families", "fam_a", "fam_b");
+    let addr = server.addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|s| {
+        // Concurrent scoring traffic on route fam_a.
+        let traffic_stop = Arc::clone(&stop);
+        s.spawn(move || {
+            let mut client = HttpClient::new(addr);
+            while !traffic_stop.load(Ordering::Acquire) {
+                let resp = client
+                    .request(
+                        "POST",
+                        "/v1/score?route=fam_a",
+                        "application/json",
+                        br#"{"idx": [0, 3], "vals": [1.0, -1.0]}"#,
+                    )
+                    .unwrap()
+                    .ok()
+                    .unwrap();
+                assert_eq!(resp.status, 200);
+            }
+        });
+
+        // Mid-traffic: a training session runs one cold epoch and one
+        // warm-start round (PASSCoDe-Atomic, 2 threads) in-process.
+        let (train, _test, c) = registry::load("rcv1", 0.02).unwrap();
+        let solver = lookup("passcode-atomic").unwrap();
+        let opts = SolveOptions { threads: 2, epochs: 2, ..Default::default() };
+        let mut session = solver.session(&train, LossKind::Hinge, c, opts).unwrap();
+        session.run_epochs(1).unwrap();
+        session.run_epochs(1).unwrap(); // the warm-start round
+        stop.store(true, Ordering::Release);
+    });
+
+    let mut client = HttpClient::new(addr);
+    let (samples, types) = scrape(&mut client);
+
+    // Training family — populated by the in-process session.
+    assert!(samples["passcode_train_updates_total"] > 0.0);
+    assert!(samples["passcode_train_epochs_total"] >= 2.0);
+    assert!(samples["passcode_train_epoch_seconds_count"] > 0.0);
+    assert!(samples.contains_key("passcode_train_tau_count"));
+    assert!(samples.contains_key("passcode_train_backward_error_ratio"));
+    assert!(samples["passcode_train_updates_per_sec"] > 0.0);
+    assert_eq!(types["passcode_train_updates_total"], "counter");
+    assert_eq!(types["passcode_train_epoch_seconds"], "summary");
+    assert_eq!(types["passcode_train_backward_error_ratio"], "gauge");
+    // The backward-error ratio of a converging run is small but real;
+    // at the very least it must be finite and non-negative.
+    let ratio = samples["passcode_train_backward_error_ratio"];
+    assert!(ratio.is_finite() && ratio >= 0.0, "{ratio}");
+
+    // Serving family — populated by the concurrent traffic, in the
+    // same scrape.
+    assert!(samples["passcode_route_requests_total{route=\"fam_a\"}"] > 0.0);
+    assert!(samples.contains_key("passcode_route_qps{route=\"fam_a\"}"));
+    let p99 = "passcode_route_latency_seconds{route=\"fam_a\",quantile=\"0.99\"}";
+    assert!(samples.contains_key(p99));
+    assert!(samples["passcode_route_versions_alive{route=\"fam_a\"}"] >= 1.0);
+    assert!(samples["passcode_http_requests_total"] > 0.0);
+    assert!(samples["passcode_http_request_seconds_count"] > 0.0);
+
+    server.shutdown();
+}
+
+#[test]
+fn counters_are_monotonic_and_labels_survive_mid_traffic_publish() {
+    passcode::obs::set_probes_enabled(true);
+    let (server, dir) = server_with_routes("monotonic", "mono_a", "mono_b");
+    let addr = server.addr();
+
+    // A model to hot-swap into mono_b mid-traffic.
+    let path_b9 = dir.join("b9.json");
+    toy_model(9.0).save(&path_b9).unwrap();
+    let publish_body = format!("{{\"path\": {:?}}}", path_b9.to_str().unwrap());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|s| {
+        let traffic_stop = Arc::clone(&stop);
+        s.spawn(move || {
+            let mut client = HttpClient::new(addr);
+            while !traffic_stop.load(Ordering::Acquire) {
+                client
+                    .request(
+                        "POST",
+                        "/v1/score?route=mono_a",
+                        "application/json",
+                        br#"{"idx": [1], "vals": [2.0]}"#,
+                    )
+                    .unwrap()
+                    .ok()
+                    .unwrap();
+            }
+        });
+
+        let mut client = HttpClient::new(addr);
+        let (first, _) = scrape(&mut client);
+
+        // Mid-traffic publish on mono_b.
+        let resp = client
+            .request(
+                "POST",
+                "/v1/models/mono_b/publish",
+                "application/json",
+                publish_body.as_bytes(),
+            )
+            .unwrap()
+            .ok()
+            .unwrap();
+        assert_eq!(resp.status, 200);
+
+        let (second, _) = scrape(&mut client);
+        stop.store(true, Ordering::Release);
+
+        // Monotonic under concurrent traffic: totals never regress
+        // between scrapes.
+        let a_total = "passcode_route_requests_total{route=\"mono_a\"}";
+        for key in ["passcode_http_requests_total", a_total] {
+            assert!(
+                second[key] >= first[key],
+                "{key} regressed: {} -> {}",
+                first[key],
+                second[key]
+            );
+        }
+        assert!(second[a_total] > 0.0);
+
+        // Label isolation: the publish bumped mono_b's epoch gauge and
+        // only mono_b's; mono_a still serves registry epoch 0.
+        assert_eq!(second["passcode_route_model_epoch{route=\"mono_b\"}"], 1.0);
+        assert_eq!(second["passcode_route_model_epoch{route=\"mono_a\"}"], 0.0);
+        assert_eq!(second["passcode_route_requests_total{route=\"mono_b\"}"], 0.0);
+    });
+
+    server.shutdown();
+}
+
+#[test]
+fn trace_endpoint_dumps_http_and_training_spans() {
+    passcode::obs::set_probes_enabled(true);
+    let (server, _dir) = server_with_routes("trace", "tr_a", "tr_b");
+    let addr = server.addr();
+    let mut client = HttpClient::new(addr);
+    client
+        .request("GET", "/healthz", "text/plain", b"")
+        .unwrap()
+        .ok()
+        .unwrap();
+
+    // A tiny training round so train.epoch spans are in the ring (the
+    // recorder is process-global, so runs from other tests may be
+    // present too — that is fine, we only assert ours exist).
+    let (train, _test, c) = registry::load("rcv1", 0.02).unwrap();
+    let solver = lookup("passcode-wild").unwrap();
+    let opts = SolveOptions { threads: 2, epochs: 1, ..Default::default() };
+    let mut session = solver.session(&train, LossKind::Hinge, c, opts).unwrap();
+    session.run_epochs(1).unwrap();
+
+    let resp = client
+        .request("GET", "/v1/trace", "application/json", b"")
+        .unwrap()
+        .ok()
+        .unwrap();
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("format").unwrap().as_str().unwrap(), "passcode-trace-v1");
+    let events = j.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut kinds = Vec::new();
+    let mut last_t = f64::NEG_INFINITY;
+    for e in events {
+        kinds.push(e.get("kind").unwrap().as_str().unwrap().to_string());
+        // tid + monotonic timestamps on every event.
+        assert!(e.get("tid").unwrap().as_f64().unwrap() >= 0.0);
+        let t = e.get("t_us").unwrap().as_f64().unwrap();
+        assert!(t >= last_t, "ring out of order: {last_t} then {t}");
+        last_t = t;
+        assert!(e.get("dur_us").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    assert!(kinds.iter().any(|k| k == "http.request"), "{kinds:?}");
+    assert!(kinds.iter().any(|k| k == "train.epoch"), "{kinds:?}");
+
+    server.shutdown();
+}
