@@ -1,0 +1,72 @@
+//! Bench: distributed Hybrid-DCA scaling — the loopback `dist-sim` at
+//! K ∈ {1, 2, 4} workers on the rcv1 analog, same total epoch budget
+//! per cell.
+//!
+//! Reports final primal objective, duality gap, merge/reject counts,
+//! and the cluster-level backward-error gauge, so a PR that perturbs
+//! the merge math shows up as an objective/gap drift in the K > 1
+//! columns relative to K = 1 (which degenerates to plain warm-started
+//! PASSCoDe with an HTTP round-trip per round).
+//!
+//! Run: `cargo bench --bench dist_scaling [-- --smoke]`
+
+use passcode::coordinator::metrics::TextTable;
+use passcode::dist::{run_sim, SimConfig};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale = if smoke { 0.02 } else { 0.1 };
+    // Fixed total budget: rounds × epochs_per_round is constant across
+    // K, so the columns compare merge overhead, not extra epochs.
+    let (rounds, epochs_per_round) = if smoke { (4, 1) } else { (12, 2) };
+
+    println!(
+        "=== dist-sim scaling (rcv1 analog @ scale {scale}, \
+         {rounds}x{epochs_per_round} epochs/worker, max_lag 8) ===\n"
+    );
+
+    let mut table = TextTable::new(&[
+        "workers", "merges", "rejects", "merge_epoch", "primal", "gap",
+        "test_acc", "bwd_err",
+    ]);
+    let mut gaps = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let report = run_sim(&SimConfig {
+            dataset: "rcv1".into(),
+            scale,
+            workers,
+            rounds,
+            epochs_per_round,
+            max_lag: 8,
+            ..Default::default()
+        })
+        .expect("dist-sim");
+        table.row(&[
+            workers.to_string(),
+            report.merges.to_string(),
+            report.rejects.to_string(),
+            report.merge_epoch.to_string(),
+            format!("{:.6}", report.primal),
+            format!("{:.3e}", report.gap),
+            format!("{:.4}", report.test_accuracy),
+            format!("{:.3e}", report.backward_error_ratio),
+        ]);
+        gaps.push((workers, report.gap, report.primal));
+    }
+    println!("{}", table.render());
+
+    // Soft shape checks (report, don't panic the bench): every K must
+    // end converged, and damped multi-worker merges may trail K = 1
+    // but not blow up the objective.
+    let p1 = gaps[0].2;
+    println!("shape checks:");
+    for (k, gap, primal) in &gaps {
+        let ok = gap.is_finite()
+            && *gap >= -1e-9
+            && (primal - p1).abs() <= 0.05 * p1.abs().max(1.0);
+        println!(
+            "  [{}] K={k}: gap {gap:.3e}, primal within 5% of K=1",
+            if ok { "PASS" } else { "FAIL" }
+        );
+    }
+}

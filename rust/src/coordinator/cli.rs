@@ -31,6 +31,18 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
         "check",
         "race-check the memory-model kernels over seeded schedules (--model, --schedules, --seed, --smoke)",
     ),
+    (
+        "dist-coord",
+        "run the distributed merge coordinator (--addr, --dataset|--dim, --workers, --max-lag, --checkpoint)",
+    ),
+    (
+        "dist-work",
+        "run one distributed worker over its shard (--coord, --shard, --dataset|--manifest, --rounds, --ckpt)",
+    ),
+    (
+        "dist-sim",
+        "N in-process dist workers over a loopback coordinator (--workers, --rounds, --max-lag, --smoke)",
+    ),
 ];
 
 /// Parsed command line.

@@ -1,16 +1,19 @@
 //! Data substrate: CSR sparse matrices, the LIBSVM format, labeled
-//! datasets (label-folded, paper convention), synthetic generators, and
-//! the Table-3 analog registry.
+//! datasets (label-folded, paper convention), synthetic generators,
+//! the Table-3 analog registry, and row-range sharding for the
+//! distributed tier ([`shard`]).
 
 pub mod dataset;
 pub mod libsvm;
 pub mod registry;
 pub mod remap;
+pub mod shard;
 pub mod sparse;
 pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use registry::{load as load_dataset, spec as dataset_spec, DatasetSpec, REGISTRY};
 pub use remap::FeatureRemap;
+pub use shard::{extract as extract_shard, plan_ranges, ShardManifest, ShardRange};
 pub use sparse::{CsrMatrix, Entry};
 pub use synthetic::SyntheticSpec;

@@ -1,0 +1,309 @@
+//! Row-range sharding for the distributed tier (`dist/`).
+//!
+//! Hybrid-DCA (Pal et al., arXiv:1610.07184) partitions rows across
+//! nodes; each node runs PASSCoDe-style local epochs on its block of
+//! the dual and ships `w` deltas to a coordinator.  This module is the
+//! data half of that story: contiguous row-range shards of a
+//! [`Dataset`] (so the global dual vector is the concatenation of the
+//! per-shard duals, in order), plus a small JSON **shard manifest**
+//! (`passcode-shards-v1`) so independent worker processes can agree on
+//! the partition without talking to each other.
+//!
+//! Contiguity is load-bearing: with shard `p` owning rows
+//! `[start_p, end_p)` and the shards covering `0..n` in order, the
+//! coordinator's merged `w = Σ_p X_pᵀ α_p` and the concatenated α are
+//! exactly a single-process PASSCoDe state — which is what lets
+//! `dist-sim` compare against the sequential solver in tests.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::dataset::Dataset;
+use super::registry;
+use crate::util::Json;
+
+/// One shard's row range: rows `[start, end)` of the global dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// Shard id, `0..k`, also its position in the manifest.
+    pub id: usize,
+    /// First global row (inclusive).
+    pub start: usize,
+    /// One past the last global row (exclusive).
+    pub end: usize,
+}
+
+impl ShardRange {
+    /// Number of rows in this shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the shard holds no rows (possible when `k > n`).
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Plan `k` contiguous near-equal row ranges covering `0..n` in order.
+/// The first `n % k` shards get one extra row, matching the usual
+/// balanced block decomposition.
+pub fn plan_ranges(n: usize, k: usize) -> Vec<ShardRange> {
+    assert!(k > 0, "shard count must be positive");
+    let base = n / k;
+    let extra = n % k;
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0;
+    for id in 0..k {
+        let len = base + usize::from(id < extra);
+        ranges.push(ShardRange { id, start, end: start + len });
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    ranges
+}
+
+/// Slice a shard out of `ds`: rows `[r.start, r.end)` with their
+/// labels, same column dimension, name tagged with the range.
+pub fn extract(ds: &Dataset, r: &ShardRange) -> Dataset {
+    assert!(r.end <= ds.n(), "shard range {}..{} out of bounds (n={})", r.start, r.end, ds.n());
+    let rows: Vec<usize> = (r.start..r.end).collect();
+    Dataset::new(
+        ds.x.select_rows(&rows),
+        rows.iter().map(|&i| ds.y[i]).collect(),
+        format!("{}[{}..{}]", ds.name, r.start, r.end),
+    )
+}
+
+/// The shard manifest: the partition plan plus enough dataset metadata
+/// (registry name, scale, dims, C) for a worker process to rebuild its
+/// shard and training config from the manifest alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    /// Registry dataset name (e.g. `"rcv1"`).
+    pub dataset: String,
+    /// Registry scale factor in `(0, 1]`.
+    pub scale: f64,
+    /// Global training-row count the plan covers.
+    pub n: usize,
+    /// Feature dimension (columns of the folded design matrix).
+    pub d: usize,
+    /// Regularization constant C from the registry.
+    pub c: f64,
+    /// The contiguous ranges, in shard-id order, covering `0..n`.
+    pub shards: Vec<ShardRange>,
+}
+
+/// Manifest format tag written to / required from the JSON.
+pub const MANIFEST_FORMAT: &str = "passcode-shards-v1";
+
+impl ShardManifest {
+    /// Build a manifest for a registry dataset split into `k` shards
+    /// (loads the dataset once to learn `n`, `d`, and C).
+    pub fn for_registry(dataset: &str, scale: f64, k: usize) -> Result<ShardManifest> {
+        ensure!(k > 0, "shard count must be positive");
+        let (train, _test, c) = registry::load(dataset, scale)?;
+        Ok(ShardManifest {
+            dataset: dataset.to_string(),
+            scale,
+            n: train.n(),
+            d: train.d(),
+            c,
+            shards: plan_ranges(train.n(), k),
+        })
+    }
+
+    /// Load shard `id`'s rows from the registry (a worker process calls
+    /// this with its own id; only the slice is kept).
+    pub fn load_shard(&self, id: usize) -> Result<Dataset> {
+        let r = self
+            .shards
+            .get(id)
+            .with_context(|| format!("shard id {id} out of range (have {})", self.shards.len()))?;
+        let (train, _test, _c) = registry::load(&self.dataset, self.scale)?;
+        ensure!(
+            train.n() == self.n && train.d() == self.d,
+            "registry dataset {}@{} is {}x{}, manifest says {}x{}",
+            self.dataset,
+            self.scale,
+            train.n(),
+            train.d(),
+            self.n,
+            self.d
+        );
+        Ok(extract(&train, r))
+    }
+
+    /// Serialize to the `passcode-shards-v1` JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(MANIFEST_FORMAT)),
+            ("dataset", Json::str(&self.dataset)),
+            ("scale", Json::num(self.scale)),
+            ("n", Json::num(self.n as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("c", Json::num(self.c)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::num(r.id as f64)),
+                                ("start", Json::num(r.start as f64)),
+                                ("end", Json::num(r.end as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse and validate a manifest: format tag, sequential shard ids,
+    /// and contiguous ranges exactly covering `0..n`.
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        let format = j.get("format")?.as_str()?;
+        ensure!(format == MANIFEST_FORMAT, "unsupported manifest format {format:?}");
+        let n = j.get("n")?.as_usize()?;
+        let mut shards = Vec::new();
+        for (i, s) in j.get("shards")?.as_arr()?.iter().enumerate() {
+            let r = ShardRange {
+                id: s.get("id")?.as_usize()?,
+                start: s.get("start")?.as_usize()?,
+                end: s.get("end")?.as_usize()?,
+            };
+            ensure!(r.id == i, "shard ids must be sequential: slot {i} has id {}", r.id);
+            ensure!(r.start <= r.end, "shard {i} has start {} > end {}", r.start, r.end);
+            shards.push(r);
+        }
+        if shards.is_empty() {
+            bail!("manifest has no shards");
+        }
+        let mut cursor = 0;
+        for r in &shards {
+            ensure!(
+                r.start == cursor,
+                "shards must be contiguous: shard {} starts at {}, expected {cursor}",
+                r.id,
+                r.start
+            );
+            cursor = r.end;
+        }
+        ensure!(cursor == n, "shards cover 0..{cursor} but manifest n = {n}");
+        Ok(ShardManifest {
+            dataset: j.get("dataset")?.as_str()?.to_string(),
+            scale: j.get("scale")?.as_f64()?,
+            n,
+            d: j.get("d")?.as_usize()?,
+            c: j.get("c")?.as_f64()?,
+            shards,
+        })
+    }
+
+    /// Write the manifest JSON (pretty) to `path`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing shard manifest {}", path.display()))
+    }
+
+    /// Read and validate a manifest from `path`.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ShardManifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard manifest {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::{CsrMatrix, Entry};
+
+    fn toy(n: usize) -> Dataset {
+        let rows: Vec<Vec<Entry>> = (0..n)
+            .map(|i| vec![Entry { index: (i % 3) as u32, value: 1.0 + i as f64 }])
+            .collect();
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new(CsrMatrix::from_rows(&rows, 3), y, "toy")
+    }
+
+    #[test]
+    fn plan_covers_and_balances() {
+        let r = plan_ranges(10, 3);
+        assert_eq!(r.len(), 3);
+        assert_eq!((r[0].start, r[0].end), (0, 4));
+        assert_eq!((r[1].start, r[1].end), (4, 7));
+        assert_eq!((r[2].start, r[2].end), (7, 10));
+        // More shards than rows: trailing shards are empty but valid.
+        let r = plan_ranges(2, 4);
+        assert_eq!(r.iter().map(ShardRange::len).sum::<usize>(), 2);
+        assert!(r[3].is_empty());
+    }
+
+    #[test]
+    fn extract_slices_rows_and_labels() {
+        let ds = toy(7);
+        let r = plan_ranges(7, 2);
+        let a = extract(&ds, &r[0]);
+        let b = extract(&ds, &r[1]);
+        assert_eq!(a.n() + b.n(), 7);
+        assert_eq!(a.d(), 3);
+        assert_eq!(b.y, ds.y[r[1].start..].to_vec());
+        // Row content survives the slice.
+        let (idx, vals) = b.x.row(0);
+        let (gidx, gvals) = ds.x.row(r[1].start);
+        assert_eq!(idx, gidx);
+        assert_eq!(vals, gvals);
+    }
+
+    #[test]
+    fn manifest_json_round_trip() {
+        let m = ShardManifest {
+            dataset: "rcv1".into(),
+            scale: 0.05,
+            n: 10,
+            d: 4,
+            c: 1.0,
+            shards: plan_ranges(10, 3),
+        };
+        let j = Json::parse(&m.to_json().to_pretty()).unwrap();
+        assert_eq!(ShardManifest::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn manifest_rejects_gaps_and_bad_ids() {
+        let mut m = ShardManifest {
+            dataset: "rcv1".into(),
+            scale: 0.05,
+            n: 10,
+            d: 4,
+            c: 1.0,
+            shards: plan_ranges(10, 2),
+        };
+        m.shards[1].start = 6; // gap after shard 0 (ends at 5)
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert!(ShardManifest::from_json(&j).is_err());
+        m.shards = plan_ranges(10, 2);
+        m.shards[1].id = 7;
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert!(ShardManifest::from_json(&j).is_err());
+        m.shards = plan_ranges(10, 2);
+        m.n = 11; // shards cover 0..10 only
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert!(ShardManifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn for_registry_plans_over_train_rows() {
+        let m = ShardManifest::for_registry("rcv1", 0.02, 2).unwrap();
+        assert_eq!(m.shards.len(), 2);
+        assert_eq!(m.shards.iter().map(ShardRange::len).sum::<usize>(), m.n);
+        let shard0 = m.load_shard(0).unwrap();
+        assert_eq!(shard0.n(), m.shards[0].len());
+        assert_eq!(shard0.d(), m.d);
+        assert!(m.load_shard(2).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Worker-side HTTP client for the coordinator's `/v1/dist/*` plane.
+//!
+//! A thin typed wrapper over [`net::HttpClient`](crate::net::HttpClient):
+//! pulls decode into `(epoch, w)`, pushes encode a [`PushDelta`] and
+//! decode the coordinator's [`PushOutcome`].  Pulls ride the bounded
+//! retry-with-backoff GET path (idempotent — a dead coordinator
+//! surfaces as an error after the retry budget instead of hanging the
+//! worker); pushes are deliberately *not* retried, because a push that
+//! dies mid-flight may already have been merged, and re-sending it
+//! would double-count the delta.
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::net::{ClientConfig, HttpClient};
+use crate::util::Json;
+
+use super::protocol::{self, PushDelta, PushOutcome};
+
+/// A worker's connection to the coordinator.
+#[derive(Debug)]
+pub struct DistClient {
+    http: HttpClient,
+}
+
+impl DistClient {
+    /// Connect to the coordinator at `addr` with the dist-tier policy
+    /// (5 s connect, 30 s read, 4 retries with doubling backoff from
+    /// 100 ms on the pull path).
+    pub fn new(addr: SocketAddr) -> DistClient {
+        Self::with_config(
+            addr,
+            ClientConfig {
+                connect_timeout: Duration::from_secs(5),
+                read_timeout: Duration::from_secs(30),
+                retries: 4,
+                backoff: Duration::from_millis(100),
+            },
+        )
+    }
+
+    /// Connect with an explicit socket/retry policy (tests tighten it).
+    pub fn with_config(addr: SocketAddr, cfg: ClientConfig) -> DistClient {
+        DistClient { http: HttpClient::with_config(addr, cfg) }
+    }
+
+    /// Pull the current merged model: `(merge_epoch, w)`.
+    pub fn pull_w(&mut self) -> Result<(u64, Vec<f64>)> {
+        let resp = self
+            .http
+            .get_with_retry("/v1/dist/pull_w")
+            .context("pull_w from coordinator")?
+            .ok()?;
+        protocol::decode_w(&resp.body)
+    }
+
+    /// Push one round's delta; the coordinator answers with the merge
+    /// verdict.  Not retried (see module docs).
+    pub fn push_delta(&mut self, p: &PushDelta) -> Result<PushOutcome> {
+        let resp = self
+            .http
+            .request(
+                "POST",
+                "/v1/dist/push_delta",
+                "application/octet-stream",
+                &protocol::encode_push(p),
+            )
+            .context("push_delta to coordinator")?
+            .ok()?;
+        PushOutcome::from_json(&resp.json()?)
+    }
+
+    /// Fetch the coordinator's merge statistics (`GET /v1/dist/stats`).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.http.get_with_retry("/v1/dist/stats")?.ok()?.json()
+    }
+
+    /// Scrape the coordinator's `/metrics` exposition text.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let resp = self.http.get_with_retry("/metrics")?.ok()?;
+        let text = String::from_utf8(resp.body).context("non-UTF-8 /metrics body")?;
+        ensure!(!text.is_empty(), "empty /metrics scrape");
+        Ok(text)
+    }
+}

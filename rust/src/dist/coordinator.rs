@@ -1,0 +1,344 @@
+//! The merge side of the distributed tier: one global `w`, a merge
+//! epoch, and Hybrid-DCA's asynchronous bounded-staleness accept rule.
+//!
+//! Workers push `Δŵ` deltas computed against some past merge epoch.
+//! With `lag = current_epoch − base_epoch`:
+//!
+//! * `lag == 0` — the delta is fresh (nothing merged since the worker
+//!   synced); it is added at full weight 1.  With disjoint row shards
+//!   the workers' dual blocks are independent, so a fresh delta is an
+//!   exact block update of the global problem.
+//! * `1 ≤ lag ≤ max_lag` — the delta raced with other merges; it is
+//!   damped by `1/K` (K = configured worker count), the CoCoA-style
+//!   conservative averaging weight that keeps the K-way race
+//!   convergent (cf. `baselines/cocoa.rs`, β = 1/K).
+//! * `lag > max_lag` — too stale to trust: rejected, the counters
+//!   record it, and the worker is told to resync (pull the current
+//!   `w`, rebase, and retry).  This is the bounded-staleness knob —
+//!   `--max-lag 0` degenerates to fully synchronous merging.
+//!
+//! Every accepted merge returns the applied weight to the worker,
+//! which scales its local dual by the same factor; that keeps the
+//! invariant `w = Σ_p X_pᵀ α_p` exact across the cluster, so the
+//! merged model remains a genuine PASSCoDe iterate rather than an
+//! averaged approximation (see `dist/worker.rs`).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::model_io::Model;
+use crate::loss::LossKind;
+use crate::obs::probes;
+use crate::util::Json;
+
+use super::protocol::{PushDelta, PushOutcome};
+
+/// Coordinator policy: the merge rule's constants plus checkpointing
+/// and the metadata stamped into saved models.
+#[derive(Debug, Clone)]
+pub struct MergeConfig {
+    /// Configured worker count K — the damping denominator for stale
+    /// deltas (weight `1/K`).
+    pub workers: usize,
+    /// Maximum tolerated merge-epoch lag; staler deltas are rejected
+    /// with a resync order.
+    pub max_lag: u64,
+    /// Where to checkpoint the merged model (None = no checkpoints).
+    pub checkpoint: Option<PathBuf>,
+    /// Checkpoint every this many accepted merges (0 = only on
+    /// explicit [`DistCoordinator::checkpoint_now`] calls).
+    pub checkpoint_every: u64,
+    /// Loss the workers optimize (stamped into checkpointed models).
+    pub loss: LossKind,
+    /// Penalty C (stamped into checkpointed models).
+    pub c: f64,
+    /// Dataset name (stamped into checkpointed models).
+    pub dataset: String,
+}
+
+impl Default for MergeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_lag: 8,
+            checkpoint: None,
+            checkpoint_every: 0,
+            loss: LossKind::Hinge,
+            c: 1.0,
+            dataset: "dist".into(),
+        }
+    }
+}
+
+/// Everything the merge rule mutates, under one mutex.  A merge is a
+/// single dense axpy — microseconds even at d = 10^6 — so a mutex (not
+/// the solver's atomic scatter machinery) is the right tool: the
+/// contended path is cross-process HTTP, not this lock.
+#[derive(Debug)]
+struct State {
+    w: Vec<f64>,
+    epoch: u64,
+    merges: u64,
+    rejects: u64,
+    /// Σ weight·delta_err over accepted merges: the worker-reported
+    /// backward error carried into `w` (numerator of the gauge).
+    err_accum: f64,
+    workers_seen: BTreeSet<u64>,
+}
+
+/// The coordinator: shared global `w` + the bounded-staleness merge.
+///
+/// `Arc<DistCoordinator>` is shared between the HTTP dispatch path
+/// (`net/server.rs` routes `/v1/dist/*` here via `Router::with_dist`)
+/// and whatever owns the process lifetime (`passcode dist-coord`,
+/// `dist-sim`).
+pub struct DistCoordinator {
+    cfg: MergeConfig,
+    state: Mutex<State>,
+}
+
+impl std::fmt::Debug for DistCoordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.state.lock().expect("coordinator state poisoned");
+        f.debug_struct("DistCoordinator")
+            .field("epoch", &s.epoch)
+            .field("merges", &s.merges)
+            .field("rejects", &s.rejects)
+            .field("dim", &s.w.len())
+            .field("cfg", &self.cfg)
+            .finish()
+    }
+}
+
+impl DistCoordinator {
+    /// Start coordinating from an initial `w` (zeros for a fresh run,
+    /// a loaded model's `w` to continue one).
+    pub fn new(w: Vec<f64>, cfg: MergeConfig) -> DistCoordinator {
+        probes::dist().merge_epoch.set(0.0);
+        DistCoordinator {
+            cfg,
+            state: Mutex::new(State {
+                w,
+                epoch: 0,
+                merges: 0,
+                rejects: 0,
+                err_accum: 0.0,
+                workers_seen: BTreeSet::new(),
+            }),
+        }
+    }
+
+    /// The configured merge policy.
+    pub fn config(&self) -> &MergeConfig {
+        &self.cfg
+    }
+
+    /// Apply the bounded-staleness merge rule to one pushed delta.
+    ///
+    /// Errors mean a malformed push (dimension mismatch, non-finite
+    /// values, or a base epoch from the future) — the HTTP layer maps
+    /// them to 400.  A *stale* push is not an error: it returns
+    /// [`PushOutcome::Resync`] and the delta is discarded.
+    pub fn push(&self, p: &PushDelta) -> Result<PushOutcome> {
+        let mut s = self.state.lock().expect("coordinator state poisoned");
+        ensure!(
+            p.delta.len() == s.w.len(),
+            "delta dimension {} != model dimension {}",
+            p.delta.len(),
+            s.w.len()
+        );
+        ensure!(
+            p.delta.iter().all(|v| v.is_finite()) && p.delta_err.is_finite(),
+            "worker {} pushed non-finite delta",
+            p.worker
+        );
+        ensure!(
+            p.base_epoch <= s.epoch,
+            "worker {} claims base epoch {} but coordinator is at {}",
+            p.worker,
+            p.base_epoch,
+            s.epoch
+        );
+        s.workers_seen.insert(p.worker);
+        let lag = s.epoch - p.base_epoch;
+        if lag > self.cfg.max_lag {
+            s.rejects += 1;
+            probes::dist().rejects.inc();
+            return Ok(PushOutcome::Resync { epoch: s.epoch });
+        }
+        let weight =
+            if lag == 0 { 1.0 } else { 1.0 / self.cfg.workers.max(1) as f64 };
+        for (wi, di) in s.w.iter_mut().zip(&p.delta) {
+            *wi += weight * di;
+        }
+        s.epoch += 1;
+        s.merges += 1;
+        s.err_accum += weight * p.delta_err;
+        let probes = probes::dist();
+        probes.merges.inc();
+        probes.merge_epoch.set(s.epoch as f64);
+        probes.merge_lag.record(lag);
+        let norm = s.w.iter().map(|v| v * v).sum::<f64>().sqrt();
+        probes
+            .backward_error_ratio
+            .set(if norm > 0.0 { s.err_accum / norm } else { 0.0 });
+        let outcome = PushOutcome::Accepted { epoch: s.epoch, weight };
+        let due = self.cfg.checkpoint_every > 0 && s.merges % self.cfg.checkpoint_every == 0;
+        if due {
+            // Best-effort: a full disk must not fail the merge the
+            // worker already committed to.
+            if let Err(e) = self.write_checkpoint(&s.w) {
+                eprintln!("dist-coord: checkpoint failed: {e:#}");
+            }
+        }
+        Ok(outcome)
+    }
+
+    /// Snapshot `(merge_epoch, w)` for a puller.
+    pub fn pull(&self) -> (u64, Vec<f64>) {
+        let s = self.state.lock().expect("coordinator state poisoned");
+        (s.epoch, s.w.clone())
+    }
+
+    /// Merge statistics as JSON (served at `GET /v1/dist/stats`).
+    pub fn stats_json(&self) -> Json {
+        let s = self.state.lock().expect("coordinator state poisoned");
+        let norm = s.w.iter().map(|v| v * v).sum::<f64>().sqrt();
+        Json::obj(vec![
+            ("merge_epoch", Json::num(s.epoch as f64)),
+            ("merges", Json::num(s.merges as f64)),
+            ("rejects", Json::num(s.rejects as f64)),
+            ("dim", Json::num(s.w.len() as f64)),
+            ("workers_seen", Json::num(s.workers_seen.len() as f64)),
+            ("max_lag", Json::num(self.cfg.max_lag as f64)),
+            ("w_norm", Json::num(norm)),
+            (
+                "backward_error_ratio",
+                Json::num(if norm > 0.0 { s.err_accum / norm } else { 0.0 }),
+            ),
+        ])
+    }
+
+    /// Checkpoint the merged model now (no-op without a configured
+    /// checkpoint path).
+    pub fn checkpoint_now(&self) -> Result<()> {
+        let w = {
+            let s = self.state.lock().expect("coordinator state poisoned");
+            s.w.clone()
+        };
+        self.write_checkpoint(&w)
+    }
+
+    fn write_checkpoint(&self, w: &[f64]) -> Result<()> {
+        let Some(path) = &self.cfg.checkpoint else { return Ok(()) };
+        Model {
+            w: w.to_vec(),
+            loss: self.cfg.loss.name().to_string(),
+            c: self.cfg.c,
+            solver: "dist-hybrid-dca".to_string(),
+            dataset: self.cfg.dataset.clone(),
+        }
+        .save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push(worker: u64, base_epoch: u64, delta: Vec<f64>) -> PushDelta {
+        PushDelta { worker, base_epoch, delta_err: 0.0, delta }
+    }
+
+    fn coord(max_lag: u64) -> DistCoordinator {
+        DistCoordinator::new(
+            vec![0.0; 3],
+            MergeConfig { workers: 2, max_lag, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn fresh_delta_merges_at_full_weight() {
+        let c = coord(4);
+        match c.push(&push(0, 0, vec![1.0, 2.0, 3.0])).unwrap() {
+            PushOutcome::Accepted { epoch, weight } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(weight, 1.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(c.pull(), (1, vec![1.0, 2.0, 3.0]));
+    }
+
+    #[test]
+    fn stale_delta_is_damped_by_one_over_k() {
+        let c = coord(4);
+        c.push(&push(0, 0, vec![1.0, 0.0, 0.0])).unwrap();
+        // Worker 1 still based on epoch 0: lag 1, weight 1/2.
+        match c.push(&push(1, 0, vec![0.0, 4.0, 0.0])).unwrap() {
+            PushOutcome::Accepted { epoch, weight } => {
+                assert_eq!(epoch, 2);
+                assert_eq!(weight, 0.5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(c.pull().1, vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn beyond_lag_is_rejected_and_epoch_monotonic() {
+        let c = coord(1);
+        for _ in 0..3 {
+            c.push(&push(0, c.pull().0, vec![1.0, 0.0, 0.0])).unwrap();
+        }
+        let before = c.pull();
+        // Base epoch 0 against coordinator epoch 3, max_lag 1: resync.
+        match c.push(&push(1, 0, vec![9.0, 9.0, 9.0])).unwrap() {
+            PushOutcome::Resync { epoch } => assert_eq!(epoch, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Rejected delta must not touch w or the epoch.
+        assert_eq!(c.pull(), before);
+        let stats = c.stats_json();
+        assert_eq!(stats.get("rejects").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(stats.get("merges").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn malformed_pushes_error() {
+        let c = coord(4);
+        assert!(c.push(&push(0, 0, vec![1.0])).is_err(), "dim mismatch accepted");
+        assert!(
+            c.push(&push(0, 0, vec![f64::NAN, 0.0, 0.0])).is_err(),
+            "NaN accepted"
+        );
+        assert!(c.push(&push(0, 5, vec![0.0; 3])).is_err(), "future epoch accepted");
+        // Errors never advance the epoch.
+        assert_eq!(c.pull().0, 0);
+    }
+
+    #[test]
+    fn checkpoints_land_through_model_io() {
+        let dir = std::env::temp_dir().join("passcode-dist-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        let c = DistCoordinator::new(
+            vec![0.0; 2],
+            MergeConfig {
+                workers: 2,
+                max_lag: 4,
+                checkpoint: Some(path.clone()),
+                checkpoint_every: 1,
+                ..Default::default()
+            },
+        );
+        c.push(&push(0, 0, vec![0.5, -0.5])).unwrap();
+        let m = Model::load(&path).unwrap();
+        assert_eq!(m.w, vec![0.5, -0.5]);
+        assert_eq!(m.solver, "dist-hybrid-dca");
+        std::fs::remove_file(&path).ok();
+    }
+}

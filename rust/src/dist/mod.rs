@@ -1,0 +1,44 @@
+//! Distributed training tier: coordinator/worker Hybrid-DCA over the
+//! `net/` HTTP plane.
+//!
+//! PASSCoDe (the rest of this crate) is a shared-memory algorithm —
+//! its scale ceiling is one machine.  This module adds the next tier,
+//! following Hybrid-DCA (Pal et al., arXiv:1610.07184): rows are
+//! sharded across worker processes ([`crate::data::shard`]), each
+//! worker runs ordinary warm-started PASSCoDe epochs on its shard
+//! through the existing [`TrainSession`](crate::solver::api::TrainSession)
+//! machinery, and workers exchange `ŵ` deltas with a coordinator over
+//! plain HTTP — asynchronously, with bounded staleness:
+//!
+//! * [`protocol`] — the binary little-endian push/pull bodies and the
+//!   JSON merge verdict.
+//! * [`coordinator`] — the global `w`, the merge epoch, and the
+//!   accept rule: fresh deltas merge at weight 1, stale-but-bounded
+//!   ones are damped by `1/K`, beyond `--max-lag` the worker is told
+//!   to resync.  Checkpoints through `model_io`.
+//! * [`worker`] — the local solve loop; scales its committed dual by
+//!   the coordinator's merge weight so `w = Σ_p X_pᵀ α_p` stays exact
+//!   across the cluster, and ships the measured Theorem-3 write loss
+//!   of each delta.
+//! * [`client`] — typed worker-side HTTP client (bounded retry on the
+//!   idempotent pull path, never on pushes).
+//! * [`sim`] — N in-process workers over a loopback coordinator: the
+//!   whole tier in one process for tests, CI, and quick experiments.
+//!
+//! The HTTP surface lives on the ordinary [`crate::net::Server`]
+//! (`POST /v1/dist/push_delta`, `GET /v1/dist/pull_w`,
+//! `GET /v1/dist/stats`, plus `/metrics` with the `passcode_dist_*`
+//! family); the CLI surface is `passcode dist-coord`, `dist-work`,
+//! and `dist-sim`.
+
+pub mod client;
+pub mod coordinator;
+pub mod protocol;
+pub mod sim;
+pub mod worker;
+
+pub use client::DistClient;
+pub use coordinator::{DistCoordinator, MergeConfig};
+pub use protocol::{PushDelta, PushOutcome};
+pub use sim::{run_sim, SimConfig, SimReport};
+pub use worker::{DistWorker, WorkerConfig, WorkerReport};

@@ -1,0 +1,243 @@
+//! Wire format for the coordinator/worker delta exchange.
+//!
+//! Both directions carry dense `f64` vectors, so the bodies are binary
+//! little-endian rather than JSON — a `d = 10^6` model is 8 MB raw but
+//! would be ~20 MB of decimal text, reparsed on every round.  Each
+//! body starts with a 4-byte magic + version tag so a stray request
+//! (or a future format bump) fails loudly instead of decoding into
+//! garbage coefficients:
+//!
+//! * push (`POST /v1/dist/push_delta`): [`PUSH_MAGIC`] `b"PDL1"`,
+//!   worker id, the worker's base merge epoch, the worker-measured
+//!   backward error of its delta, then the `Δŵ` vector.
+//! * pull (`GET /v1/dist/pull_w` response): [`W_MAGIC`] `b"PWV1"`,
+//!   the merge epoch the vector corresponds to, then `w` itself.
+//!
+//! The coordinator's answer to a push is small and goes back as JSON
+//! ([`PushOutcome`]): accepted-with-weight, or a resync order when the
+//! delta is staler than the lag bound.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::Json;
+
+/// Magic + version prefix of a push body (`PASSCoDe Delta, v1`).
+pub const PUSH_MAGIC: &[u8; 4] = b"PDL1";
+/// Magic + version prefix of a pull response (`PASSCoDe W Vector, v1`).
+pub const W_MAGIC: &[u8; 4] = b"PWV1";
+
+/// One worker round's contribution: the `ŵ` delta accumulated over the
+/// worker's local epochs since it last synced at `base_epoch`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PushDelta {
+    /// Worker id (labels the per-worker metrics; not trusted for auth).
+    pub worker: u64,
+    /// Merge epoch of the global `w` this delta was computed against.
+    pub base_epoch: u64,
+    /// Worker-measured ‖Δŵ − X_pᵀΔα_p‖ on its own shard — the async
+    /// write-loss this delta carries into the merged model.
+    pub delta_err: f64,
+    /// Dense `Δŵ`, length = feature dimension `d`.
+    pub delta: Vec<f64>,
+}
+
+/// Encode a push body (see module docs for the layout).
+pub fn encode_push(p: &PushDelta) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 8 * 4 + 8 * p.delta.len());
+    out.extend_from_slice(PUSH_MAGIC);
+    out.extend_from_slice(&p.worker.to_le_bytes());
+    out.extend_from_slice(&p.base_epoch.to_le_bytes());
+    out.extend_from_slice(&p.delta_err.to_le_bytes());
+    out.extend_from_slice(&(p.delta.len() as u64).to_le_bytes());
+    for v in &p.delta {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode and validate a push body.
+pub fn decode_push(body: &[u8]) -> Result<PushDelta> {
+    let mut r = Reader::new(body, PUSH_MAGIC)?;
+    let worker = r.u64()?;
+    let base_epoch = r.u64()?;
+    let delta_err = r.f64()?;
+    let delta = r.vec_f64()?;
+    r.finish()?;
+    Ok(PushDelta { worker, base_epoch, delta_err, delta })
+}
+
+/// Encode a pull response: the merge `epoch` and the global `w`.
+pub fn encode_w(epoch: u64, w: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 16 + 8 * w.len());
+    out.extend_from_slice(W_MAGIC);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&(w.len() as u64).to_le_bytes());
+    for v in w {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a pull response into `(epoch, w)`.
+pub fn decode_w(body: &[u8]) -> Result<(u64, Vec<f64>)> {
+    let mut r = Reader::new(body, W_MAGIC)?;
+    let epoch = r.u64()?;
+    let w = r.vec_f64()?;
+    r.finish()?;
+    Ok((epoch, w))
+}
+
+/// The coordinator's verdict on a pushed delta.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PushOutcome {
+    /// Merged.  `epoch` is the new merge epoch; `weight` is the factor
+    /// the delta was scaled by (1 for a fresh delta, 1/K for a stale
+    /// one within the lag bound) — the worker must scale its local
+    /// dual by the same factor to keep `w = Σ_p X_pᵀ α_p` exact.
+    Accepted {
+        /// Merge epoch after this merge.
+        epoch: u64,
+        /// Damping factor applied to the delta (and owed to `α`).
+        weight: f64,
+    },
+    /// Rejected: the delta was staler than the coordinator's lag bound.
+    /// The worker must discard the round, pull `w` at `epoch`, and
+    /// rebase before pushing again.
+    Resync {
+        /// Current merge epoch to rebase onto.
+        epoch: u64,
+    },
+}
+
+impl PushOutcome {
+    /// Serialize for the HTTP response body.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            PushOutcome::Accepted { epoch, weight } => Json::obj(vec![
+                ("status", Json::str("accepted")),
+                ("epoch", Json::num(epoch as f64)),
+                ("weight", Json::num(weight)),
+            ]),
+            PushOutcome::Resync { epoch } => Json::obj(vec![
+                ("status", Json::str("resync")),
+                ("epoch", Json::num(epoch as f64)),
+            ]),
+        }
+    }
+
+    /// Parse a coordinator response body.
+    pub fn from_json(j: &Json) -> Result<PushOutcome> {
+        let epoch = j.get("epoch")?.as_f64()? as u64;
+        match j.get("status")?.as_str()? {
+            "accepted" => Ok(PushOutcome::Accepted { epoch, weight: j.get("weight")?.as_f64()? }),
+            "resync" => Ok(PushOutcome::Resync { epoch }),
+            other => bail!("unknown push outcome status {other:?}"),
+        }
+    }
+}
+
+/// Little-endian body reader: magic check, then sized scalar/vector
+/// reads, then a trailing-bytes check.
+struct Reader<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn new(body: &'a [u8], magic: &[u8; 4]) -> Result<Reader<'a>> {
+        ensure!(
+            body.len() >= 4 && &body[..4] == magic,
+            "bad body magic: want {:?}, got {:?}",
+            String::from_utf8_lossy(magic),
+            String::from_utf8_lossy(body.get(..4).unwrap_or(body)),
+        );
+        Ok(Reader { b: &body[4..] })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() >= n, "body truncated: need {n} more bytes, have {}", self.b.len());
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let len = self.u64()?;
+        let len = usize::try_from(len)?;
+        ensure!(
+            len.checked_mul(8).is_some_and(|bytes| bytes <= self.b.len()),
+            "vector length {len} exceeds remaining body ({} bytes)",
+            self.b.len()
+        );
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(self.b.is_empty(), "{} trailing bytes after body", self.b.len());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_round_trips() {
+        let p = PushDelta {
+            worker: 3,
+            base_epoch: 17,
+            delta_err: 0.125,
+            delta: vec![1.0, -2.5, 0.0, 1e-9],
+        };
+        assert_eq!(decode_push(&encode_push(&p)).unwrap(), p);
+    }
+
+    #[test]
+    fn w_round_trips() {
+        let w = vec![0.5, -0.25, 3.0];
+        assert_eq!(decode_w(&encode_w(9, &w)).unwrap(), (9, w));
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_truncation_and_trailing() {
+        let p = PushDelta { worker: 0, base_epoch: 0, delta_err: 0.0, delta: vec![1.0] };
+        let mut good = encode_push(&p);
+        assert!(decode_push(b"XXXX").is_err());
+        assert!(decode_push(&good[..good.len() - 1]).is_err());
+        good.push(0);
+        assert!(decode_push(&good).is_err());
+        // A length prefix larger than the body must not allocate.
+        let mut huge = encode_w(0, &[]);
+        let n = huge.len();
+        huge[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_w(&huge).is_err());
+    }
+
+    #[test]
+    fn outcome_json_round_trips() {
+        for o in [
+            PushOutcome::Accepted { epoch: 5, weight: 0.5 },
+            PushOutcome::Resync { epoch: 7 },
+        ] {
+            let j = Json::parse(&o.to_json().to_string()).unwrap();
+            assert_eq!(PushOutcome::from_json(&j).unwrap(), o);
+        }
+        assert!(PushOutcome::from_json(&Json::obj(vec![
+            ("status", Json::str("nope")),
+            ("epoch", Json::num(1.0)),
+        ]))
+        .is_err());
+    }
+}

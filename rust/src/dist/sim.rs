@@ -1,0 +1,208 @@
+//! Single-process distributed simulation: N in-process workers over a
+//! real loopback HTTP coordinator.
+//!
+//! `passcode dist-sim` (and the integration tests / CI smoke step)
+//! exercise the full distributed path — sharding, worker sessions,
+//! binary push/pull bodies, the bounded-staleness merge, metrics —
+//! without any orchestration: one process, one `Server` on
+//! `127.0.0.1:0`, one OS thread per worker.  Because the workers race
+//! through the real coordinator, the run is a genuine asynchronous
+//! Hybrid-DCA execution, just with loopback latency.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::data::shard::{extract, plan_ranges, ShardManifest};
+use crate::data::registry;
+use crate::eval;
+use crate::loss::{DynLoss, LossKind};
+use crate::net::{Router, Server, ServerConfig};
+
+use super::client::DistClient;
+use super::coordinator::{DistCoordinator, MergeConfig};
+use super::worker::{DistWorker, WorkerConfig, WorkerReport};
+
+/// Simulation shape.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Registry dataset to shard.
+    pub dataset: String,
+    /// Registry scale factor.
+    pub scale: f64,
+    /// Worker (= shard) count.
+    pub workers: usize,
+    /// Push rounds per worker.
+    pub rounds: usize,
+    /// Local epochs per round.
+    pub epochs_per_round: usize,
+    /// Local solver registry name.
+    pub solver: String,
+    /// Loss the workers optimize.
+    pub loss: LossKind,
+    /// Threads per worker's local solve.
+    pub threads_per_worker: usize,
+    /// Coordinator staleness bound.
+    pub max_lag: u64,
+    /// Base seed (each worker mixes in its id).
+    pub seed: u64,
+    /// Coordinator model checkpoint path (None = none).
+    pub checkpoint: Option<PathBuf>,
+    /// Write the shard manifest JSON here (None = don't).
+    pub manifest_out: Option<PathBuf>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "rcv1".into(),
+            scale: 0.05,
+            workers: 2,
+            rounds: 6,
+            epochs_per_round: 2,
+            solver: "passcode-atomic".into(),
+            loss: LossKind::Hinge,
+            threads_per_worker: 1,
+            max_lag: 8,
+            seed: 42,
+            checkpoint: None,
+            manifest_out: None,
+        }
+    }
+}
+
+/// What a simulation run produced.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Final merged `w` pulled from the coordinator.
+    pub w: Vec<f64>,
+    /// Global dual: the workers' committed blocks concatenated in
+    /// shard order.
+    pub alpha: Vec<f64>,
+    /// Final merge epoch (= accepted merges).
+    pub merge_epoch: u64,
+    /// Accepted merges.
+    pub merges: u64,
+    /// Rejected (resync'd) pushes.
+    pub rejects: u64,
+    /// Primal objective of the merged `w` on the training shard union.
+    pub primal: f64,
+    /// Duality gap of the concatenated dual.
+    pub gap: f64,
+    /// Test-set accuracy of the merged `w`.
+    pub test_accuracy: f64,
+    /// Coordinator's accumulated backward-error ratio.
+    pub backward_error_ratio: f64,
+    /// Per-worker round/epoch/update counts.
+    pub workers: Vec<WorkerReport>,
+    /// The `passcode_dist_*` lines of a final `/metrics` scrape.
+    pub dist_metrics: Vec<String>,
+}
+
+/// Run the simulation: shard, boot a loopback coordinator, race the
+/// workers through it, and score the merged model.
+pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
+    ensure!(cfg.workers > 0, "need at least one worker");
+    ensure!(cfg.rounds > 0, "need at least one round");
+    let (train, test, c) = registry::load(&cfg.dataset, cfg.scale)?;
+    let ranges = plan_ranges(train.n(), cfg.workers);
+    let shards: Vec<_> = ranges.iter().map(|r| extract(&train, r)).collect();
+    if let Some(path) = &cfg.manifest_out {
+        ShardManifest {
+            dataset: cfg.dataset.clone(),
+            scale: cfg.scale,
+            n: train.n(),
+            d: train.d(),
+            c,
+            shards: ranges.clone(),
+        }
+        .save(path)?;
+    }
+
+    let coord = Arc::new(DistCoordinator::new(
+        vec![0.0; train.d()],
+        MergeConfig {
+            workers: cfg.workers,
+            max_lag: cfg.max_lag,
+            checkpoint: cfg.checkpoint.clone(),
+            checkpoint_every: if cfg.checkpoint.is_some() { cfg.workers as u64 } else { 0 },
+            loss: cfg.loss,
+            c,
+            dataset: cfg.dataset.clone(),
+        },
+    ));
+    let server = Server::start(
+        Router::empty().with_dist(Arc::clone(&coord)),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )?;
+    let addr = server.addr();
+
+    let worker_results: Vec<Result<(WorkerReport, Vec<f64>)>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    let wcfg = WorkerConfig {
+                        id: id as u64,
+                        solver: cfg.solver.clone(),
+                        loss: cfg.loss,
+                        c,
+                        threads: cfg.threads_per_worker,
+                        epochs_per_round: cfg.epochs_per_round,
+                        rounds: cfg.rounds,
+                        seed: cfg.seed,
+                        checkpoint: None,
+                    };
+                    s.spawn(move || -> Result<(WorkerReport, Vec<f64>)> {
+                        let mut client = DistClient::new(addr);
+                        let mut worker = DistWorker::new(shard, wcfg)?;
+                        let report = worker.run(&mut client, None)?;
+                        Ok((report, worker.alpha().to_vec()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked"))))
+                .collect()
+        });
+
+    let mut reports = Vec::with_capacity(cfg.workers);
+    let mut alpha = Vec::with_capacity(train.n());
+    for (id, r) in worker_results.into_iter().enumerate() {
+        let (report, block) = r.with_context(|| format!("worker {id} failed"))?;
+        reports.push(report);
+        alpha.extend_from_slice(&block);
+    }
+    ensure!(alpha.len() == train.n(), "dual blocks do not cover the dataset");
+
+    let (merge_epoch, w) = coord.pull();
+    let stats = coord.stats_json();
+    let dist_metrics: Vec<String> = {
+        crate::obs::probes::sync_hot_counters();
+        crate::obs::registry()
+            .render()
+            .lines()
+            .filter(|l| l.contains("passcode_dist_"))
+            .map(str::to_string)
+            .collect()
+    };
+    server.shutdown();
+
+    let loss = DynLoss::new(cfg.loss, c);
+    Ok(SimReport {
+        primal: eval::primal_objective(&train, &loss, &w),
+        gap: eval::duality_gap(&train, &loss, &alpha),
+        test_accuracy: eval::accuracy(&test, &w),
+        merge_epoch,
+        merges: stats.get("merges")?.as_f64()? as u64,
+        rejects: stats.get("rejects")?.as_f64()? as u64,
+        backward_error_ratio: stats.get("backward_error_ratio")?.as_f64()?,
+        w,
+        alpha,
+        workers: reports,
+        dist_metrics,
+    })
+}

@@ -1,0 +1,292 @@
+//! The worker half of the distributed tier: warm-started PASSCoDe
+//! epochs on one row shard, bracketed by pull/push exchanges with the
+//! coordinator.
+//!
+//! A round is: sync (pull merged `w`, adopt it together with the
+//! worker's committed dual), run `epochs_per_round` local PASSCoDe
+//! epochs through the ordinary [`TrainSession`] machinery, then push
+//! `Δŵ` to the coordinator.  The coordinator answers with the weight
+//! it merged the delta at (1 fresh, 1/K stale), and the worker scales
+//! its *committed* dual `α_base` by the same weight:
+//!
+//! ```text
+//! coordinator:  w      += weight · Δŵ
+//! worker:       α_base += weight · Δα
+//! ```
+//!
+//! Because shards are disjoint row ranges, `w = Σ_p X_pᵀ α_p` stays
+//! exact under this pairing (and `weight ∈ (0,1]` keeps each scaled
+//! `α_i` inside its box constraint, since the update is a convex
+//! combination of two feasible points).  On a resync order the round's
+//! `Δα` is discarded along with `Δŵ` — the invariant survives
+//! rejection too.  The only slack is the *within-shard* asynchronous
+//! write loss ‖Δŵ − X_pᵀΔα_p‖ that PASSCoDe's Theorem 3 bounds; the
+//! worker measures exactly that scalar each round and ships it with
+//! the delta so the coordinator can expose the accumulated backward
+//! error of the merged model.
+//!
+//! Dropout/rejoin: each accepted round the worker checkpoints
+//! `(α_base, merged w)` through `model_io`'s checkpoint schema; a
+//! restarted worker resumes the dual from its checkpoint, pulls the
+//! *current* `w`, and keeps going — the coordinator never waits for
+//! it.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::model_io;
+use crate::data::Dataset;
+use crate::loss::LossKind;
+use crate::obs::Counter;
+use crate::solver::api::{lookup, TrainSession};
+use crate::solver::SolveOptions;
+
+use super::client::DistClient;
+use super::protocol::{PushDelta, PushOutcome};
+
+/// Per-worker training policy.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Worker id (shard id; also the metrics label).
+    pub id: u64,
+    /// Registry name of the local solver (`passcode-atomic` is the
+    /// intended one; any registered solver works).
+    pub solver: String,
+    /// Loss to optimize.
+    pub loss: LossKind,
+    /// Penalty C.
+    pub c: f64,
+    /// Threads for the local PASSCoDe solve.
+    pub threads: usize,
+    /// Local epochs per push round.
+    pub epochs_per_round: usize,
+    /// Rounds to run before returning.
+    pub rounds: usize,
+    /// Base RNG seed (mixed with `id` so workers draw distinct
+    /// permutation streams).
+    pub seed: u64,
+    /// Where to checkpoint `(α_base, merged w)` after each accepted
+    /// round (None = no checkpoints, no rejoin).
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            solver: "passcode-atomic".into(),
+            loss: LossKind::Hinge,
+            c: 1.0,
+            threads: 1,
+            epochs_per_round: 2,
+            rounds: 8,
+            seed: 42,
+            checkpoint: None,
+        }
+    }
+}
+
+/// What one worker did over its rounds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerReport {
+    /// Rounds completed (accepted + resynced).
+    pub rounds: usize,
+    /// Rounds whose delta the coordinator merged.
+    pub accepted: usize,
+    /// Rounds discarded on a resync order.
+    pub resyncs: usize,
+    /// Local epochs run.
+    pub epochs: usize,
+    /// Coordinate updates performed locally.
+    pub updates: u64,
+}
+
+/// One distributed worker bound to its shard.
+pub struct DistWorker<'a> {
+    shard: &'a Dataset,
+    cfg: WorkerConfig,
+    session: TrainSession<'a>,
+    /// Committed dual: what the coordinator's `w` already accounts for
+    /// from this shard (merge-weight scaled).
+    alpha_base: Vec<f64>,
+    /// Merged `w` adopted at the last sync.
+    w_base: Vec<f64>,
+    /// Merge epoch of `w_base`.
+    base_epoch: u64,
+    /// Whether `(w_base, base_epoch)` reflect the coordinator's
+    /// current state (false forces a pull before the next local solve).
+    synced: bool,
+    push_total: Arc<Counter>,
+    pull_total: Arc<Counter>,
+    report: WorkerReport,
+}
+
+impl<'a> DistWorker<'a> {
+    /// Open a worker over `shard`.  If `cfg.checkpoint` names an
+    /// existing file this is a *rejoin*: the committed dual is resumed
+    /// from it (the merged `w` is re-pulled fresh on the first round).
+    pub fn new(shard: &'a Dataset, cfg: WorkerConfig) -> Result<DistWorker<'a>> {
+        let opts = SolveOptions {
+            epochs: cfg.epochs_per_round * cfg.rounds.max(1),
+            // Mix the id into the seed so workers don't draw identical
+            // permutation streams (golden-ratio odd constant).
+            seed: cfg.seed ^ cfg.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            threads: cfg.threads,
+            ..Default::default()
+        };
+        let mut session = lookup(&cfg.solver)?
+            .session(shard, cfg.loss, cfg.c, opts)
+            .with_context(|| format!("opening session for worker {}", cfg.id))?;
+        if let Some(path) = cfg.checkpoint.as_ref().filter(|p| p.exists()) {
+            let ckpt = model_io::load_checkpoint(path)
+                .with_context(|| format!("worker {} rejoin checkpoint", cfg.id))?;
+            session.resume(&ckpt).with_context(|| format!("worker {} rejoin", cfg.id))?;
+        }
+        let reg = crate::obs::registry();
+        let alpha_base = session.alpha().to_vec();
+        Ok(DistWorker {
+            shard,
+            push_total: reg.counter(
+                &format!("passcode_dist_push_total{{worker=\"{}\"}}", cfg.id),
+                "Delta pushes sent to the dist coordinator",
+            ),
+            pull_total: reg.counter(
+                &format!("passcode_dist_pull_total{{worker=\"{}\"}}", cfg.id),
+                "Merged-w pulls from the dist coordinator",
+            ),
+            cfg,
+            alpha_base,
+            w_base: vec![0.0; shard.d()],
+            base_epoch: 0,
+            synced: false,
+            session,
+            report: WorkerReport::default(),
+        })
+    }
+
+    /// The committed dual block (test hook: concatenating the shards'
+    /// `alpha()` in shard order yields the global dual).
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha_base
+    }
+
+    /// What this worker has done so far.
+    pub fn report(&self) -> WorkerReport {
+        self.report
+    }
+
+    /// Pull the coordinator's current `(epoch, w)` and adopt it
+    /// together with the committed dual as the session state.
+    fn resync(&mut self, client: &mut DistClient) -> Result<()> {
+        let (epoch, w) = client.pull_w()?;
+        self.pull_total.inc();
+        self.session.adopt_state(&self.alpha_base, &w)?;
+        self.w_base = w;
+        self.base_epoch = epoch;
+        self.synced = true;
+        Ok(())
+    }
+
+    /// Run one round: sync if needed, solve locally, push the delta,
+    /// settle `α_base` by the merge weight, re-sync, checkpoint.
+    pub fn run_round(&mut self, client: &mut DistClient) -> Result<()> {
+        if !self.synced {
+            self.resync(client)?;
+        }
+        let before_updates = self.session.updates();
+        self.session
+            .run_epochs(self.cfg.epochs_per_round)
+            .with_context(|| format!("worker {} local epochs", self.cfg.id))?;
+        self.report.epochs += self.cfg.epochs_per_round;
+        self.report.updates += self.session.updates() - before_updates;
+
+        let delta: Vec<f64> = self
+            .session
+            .w_hat()
+            .iter()
+            .zip(&self.w_base)
+            .map(|(w, b)| w - b)
+            .collect();
+        let dalpha: Vec<f64> = self
+            .session
+            .alpha()
+            .iter()
+            .zip(&self.alpha_base)
+            .map(|(a, b)| a - b)
+            .collect();
+        // ‖Δŵ − X_pᵀΔα‖: the asynchronous write loss this round's
+        // delta carries (zero for serial/lock solvers, small for
+        // atomic/wild — Theorem 3's quantity, measured not assumed).
+        let exact = self.shard.x.transpose_dot(&dalpha);
+        let delta_err = delta
+            .iter()
+            .zip(&exact)
+            .map(|(d, e)| (d - e) * (d - e))
+            .sum::<f64>()
+            .sqrt();
+
+        let outcome = client.push_delta(&PushDelta {
+            worker: self.cfg.id,
+            base_epoch: self.base_epoch,
+            delta_err,
+            delta,
+        })?;
+        self.push_total.inc();
+        match outcome {
+            PushOutcome::Accepted { weight, .. } => {
+                for (b, d) in self.alpha_base.iter_mut().zip(&dalpha) {
+                    *b += weight * d;
+                }
+                self.report.accepted += 1;
+            }
+            PushOutcome::Resync { .. } => {
+                // Round discarded on both sides; α_base already matches
+                // what the coordinator credited us with.
+                self.report.resyncs += 1;
+            }
+        }
+        self.report.rounds += 1;
+        // Rebase onto the post-merge w before checkpointing, so the
+        // checkpoint pairs α_base with a w that includes (or excludes)
+        // this round consistently.
+        self.resync(client)?;
+        if let Some(path) = &self.cfg.checkpoint {
+            let ckpt = self.session.snapshot();
+            if let Err(e) = model_io::save_checkpoint(&ckpt, path) {
+                eprintln!("dist-work {}: checkpoint failed: {e:#}", self.cfg.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `cfg.rounds` rounds (or until `stop` flips true between
+    /// rounds — the dropout hook the kill/rejoin test uses).
+    pub fn run(
+        &mut self,
+        client: &mut DistClient,
+        stop: Option<&AtomicBool>,
+    ) -> Result<WorkerReport> {
+        for _ in 0..self.cfg.rounds {
+            if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+                break;
+            }
+            self.run_round(client)?;
+        }
+        Ok(self.report)
+    }
+}
+
+impl std::fmt::Debug for DistWorker<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DistWorker")
+            .field("id", &self.cfg.id)
+            .field("shard_rows", &self.shard.n())
+            .field("base_epoch", &self.base_epoch)
+            .field("synced", &self.synced)
+            .field("report", &self.report)
+            .finish()
+    }
+}

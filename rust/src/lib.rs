@@ -168,6 +168,37 @@
 //! EXPERIMENTS.md §Observability for how the live τ and backward-error
 //! gauges relate to Theorem 3 and `passcode check`).
 //!
+//! # Distributed training quick start
+//!
+//! The distributed tier ([`dist`]) scales past one machine the
+//! Hybrid-DCA way: rows shard across worker processes
+//! ([`data::shard`]), each worker runs ordinary PASSCoDe epochs on its
+//! shard, and a coordinator merges `ŵ` deltas asynchronously with
+//! bounded staleness (fresh deltas at weight 1, stale ones damped by
+//! 1/K, beyond `--max-lag` the worker is told to resync):
+//!
+//! ```text
+//! # one coordinator...
+//! passcode dist-coord --addr 127.0.0.1:8920 --dataset rcv1 --scale 0.1 \
+//!     --workers 2 --max-lag 8 --checkpoint w.json --for-secs 600
+//! # ...and one process per shard (ids 0 and 1)
+//! passcode dist-work --coord 127.0.0.1:8920 --dataset rcv1 --scale 0.1 \
+//!     --workers 2 --shard 0 --rounds 20 --ckpt shard0.ckpt
+//! passcode dist-work --coord 127.0.0.1:8920 --dataset rcv1 --scale 0.1 \
+//!     --workers 2 --shard 1 --rounds 20 --ckpt shard1.ckpt
+//! # the merge plane is ordinary HTTP on the coordinator:
+//! curl -s http://127.0.0.1:8920/v1/dist/stats     # merge epoch, rejects, ...
+//! curl -s http://127.0.0.1:8920/metrics | grep passcode_dist_
+//! ```
+//!
+//! A killed worker just stops contributing; restarting it with the
+//! same `--ckpt` rejoins — it resumes its dual block from the
+//! checkpoint and pulls the current merged `w`.  For tests and CI,
+//! `passcode dist-sim --workers 2 --smoke` runs the whole tier
+//! (sharding, HTTP, merge, metrics) in one process over loopback.
+//! EXPERIMENTS.md §Distributed relates the merge rule to Hybrid-DCA
+//! and to the τ/backward-error gauges.
+//!
 //! # Memory-model checking quick start
 //!
 //! The paper's correctness story is a *memory-model* story: Lock is
@@ -202,6 +233,7 @@ pub mod baselines;
 pub mod chk;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod loss;
 pub mod net;

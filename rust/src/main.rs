@@ -22,17 +22,35 @@
 //! passcode check [--model lock|atomic|wild] [--schedules 100] [--seed 42]
 //!                [--threads 3] [--rows 9] [--features 6] [--epochs 2]
 //!                [--preemptions 16] [--out report.json] [--smoke]
+//! passcode dist-coord [--addr 127.0.0.1:8920] [--dataset rcv1 --scale 0.1 |
+//!                --model m.json | --dim 47236] [--workers 2] [--max-lag 8]
+//!                [--checkpoint w.json] [--checkpoint-every 4] [--for-secs 0]
+//! passcode dist-work --coord 127.0.0.1:8920 [--manifest shards.json |
+//!                --dataset rcv1 --scale 0.1 --workers 2] --shard 0
+//!                [--solver passcode-atomic] [--threads 1] [--rounds 8]
+//!                [--epochs-per-round 2] [--ckpt shard0.ckpt] [--seed 42]
+//! passcode dist-sim [--workers 2] [--rounds 6] [--epochs-per-round 2]
+//!                [--dataset rcv1] [--scale 0.05] [--solver passcode-atomic]
+//!                [--threads 1] [--max-lag 8] [--seed 42] [--smoke]
+//!                [--checkpoint w.json] [--manifest shards.json]
 //! ```
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use passcode::chk;
 use passcode::coordinator::{
     cli::Cli, config::RunConfig, driver, experiments, model_io::Model,
 };
 use passcode::data::registry;
+use passcode::data::shard::ShardManifest;
+use passcode::dist::{
+    run_sim, DistClient, DistCoordinator, DistWorker, MergeConfig, SimConfig,
+    WorkerConfig,
+};
 use passcode::loss::{Hinge, LossKind};
 use passcode::net::{Router, RouteSpec, RoutesConfig, Server, ServerConfig};
 use passcode::runtime::{Engine, Evaluator};
@@ -61,6 +79,9 @@ fn real_main(args: &[String]) -> Result<()> {
         "replay" => cmd_replay(&cli),
         "listen" => cmd_listen(&cli),
         "check" => cmd_check(&cli),
+        "dist-coord" => cmd_dist_coord(&cli),
+        "dist-work" => cmd_dist_work(&cli),
+        "dist-sim" => cmd_dist_sim(&cli),
         other => bail!("unknown command {other:?}\n\n{}", Cli::usage()),
     }
 }
@@ -332,6 +353,214 @@ fn cmd_check(cli: &Cli) -> Result<()> {
     if !report.ok {
         bail!("memory-model check detected violations (replay seeds above)");
     }
+    Ok(())
+}
+
+/// Flags `passcode dist-coord` accepts.
+const DIST_COORD_FLAGS: &[&str] = &[
+    "addr", "http-workers", "dim", "model", "dataset", "scale", "workers",
+    "max-lag", "checkpoint", "checkpoint-every", "loss", "c", "for-secs",
+];
+
+/// Flags `passcode dist-work` accepts.
+const DIST_WORK_FLAGS: &[&str] = &[
+    "coord", "manifest", "shard", "dataset", "scale", "workers", "solver",
+    "threads", "epochs-per-round", "rounds", "seed", "ckpt", "loss", "c",
+];
+
+/// Flags `passcode dist-sim` accepts.
+const DIST_SIM_FLAGS: &[&str] = &[
+    "dataset", "scale", "workers", "rounds", "epochs-per-round", "solver",
+    "threads", "max-lag", "seed", "checkpoint", "manifest", "smoke",
+];
+
+/// `passcode dist-coord` — the distributed merge coordinator: a
+/// [`passcode::net::Server`] whose only live plane is `/v1/dist/*`
+/// (plus `/metrics`, `/v1/stats`, `/healthz`), applying the
+/// bounded-staleness Hybrid-DCA merge to pushed worker deltas.
+fn cmd_dist_coord(cli: &Cli) -> Result<()> {
+    cli.check_flags(DIST_COORD_FLAGS)?;
+    let loss = LossKind::parse(cli.opt_or("loss", "hinge"))?;
+    let mut c = flag(cli, "c", 1.0f64)?;
+    // Initial w: a saved model, a registry dataset's dimension (C comes
+    // with it), or an explicit --dim for manifest-driven workers.
+    let (w, dataset) = match (cli.opt("model"), cli.opt("dataset")) {
+        (Some(path), _) => {
+            let m = Model::load(path)?;
+            c = m.c;
+            (m.w, m.dataset)
+        }
+        (None, Some(name)) => {
+            let (train, _, reg_c) = registry::load(name, flag(cli, "scale", 0.1f64)?)?;
+            if cli.opt("c").is_none() {
+                c = reg_c;
+            }
+            (vec![0.0; train.d()], name.to_string())
+        }
+        (None, None) => {
+            let dim: usize = cli
+                .opt_parse("dim", 0usize)
+                .map_err(|e| anyhow::anyhow!("{e:#}\n\n{}", Cli::usage()))?;
+            ensure!(
+                dim > 0,
+                "need an initial w: --model m.json, --dataset <name>, or --dim <d>\n\n{}",
+                Cli::usage()
+            );
+            (vec![0.0; dim], "dist".to_string())
+        }
+    };
+    let cfg = MergeConfig {
+        workers: flag(cli, "workers", 2usize)?,
+        max_lag: flag(cli, "max-lag", 8u64)?,
+        checkpoint: cli.opt("checkpoint").map(PathBuf::from),
+        checkpoint_every: flag(cli, "checkpoint-every", 4u64)?,
+        loss,
+        c,
+        dataset,
+    };
+    let for_secs = flag(cli, "for-secs", 0u64)?;
+    println!(
+        "dist-coord: d = {}, K = {}, max-lag = {}, checkpoint = {:?}",
+        w.len(),
+        cfg.workers,
+        cfg.max_lag,
+        cfg.checkpoint,
+    );
+    let coord = Arc::new(DistCoordinator::new(w, cfg));
+    let server = Server::start(
+        Router::empty().with_dist(Arc::clone(&coord)),
+        &ServerConfig {
+            addr: cli.opt_or("addr", "127.0.0.1:8920").to_string(),
+            workers: flag(cli, "http-workers", 4usize)?,
+            // Push bodies are ~8·d bytes; leave headroom well past the
+            // scoring plane's 4 MB default.
+            max_body: 256 << 20,
+            ..Default::default()
+        },
+    )?;
+    println!("coordinating on http://{}", server.addr());
+    println!("  POST /v1/dist/push_delta   GET /v1/dist/pull_w   GET /v1/dist/stats   GET /metrics");
+    if for_secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(for_secs));
+    println!("final stats: {}", coord.stats_json());
+    coord.checkpoint_now()?;
+    server.shutdown();
+    Ok(())
+}
+
+/// `passcode dist-work` — one distributed worker process: load (only)
+/// its shard, run warm-started local PASSCoDe rounds, and exchange
+/// deltas with the coordinator at `--coord`.  Restarting with the same
+/// `--ckpt` rejoins after a crash.
+fn cmd_dist_work(cli: &Cli) -> Result<()> {
+    cli.check_flags(DIST_WORK_FLAGS)?;
+    let coord_addr: std::net::SocketAddr = cli
+        .opt("coord")
+        .context("--coord <host:port> is required")?
+        .parse()
+        .context("--coord must be host:port")?;
+    let manifest = match cli.opt("manifest") {
+        Some(path) => ShardManifest::load(path)?,
+        None => ShardManifest::for_registry(
+            cli.opt_or("dataset", "rcv1"),
+            flag(cli, "scale", 0.1f64)?,
+            flag(cli, "workers", 2usize)?,
+        )?,
+    };
+    let id = flag(cli, "shard", 0usize)?;
+    let shard = manifest.load_shard(id)?;
+    let cfg = WorkerConfig {
+        id: id as u64,
+        solver: cli.opt_or("solver", "passcode-atomic").to_string(),
+        loss: LossKind::parse(cli.opt_or("loss", "hinge"))?,
+        c: flag(cli, "c", manifest.c)?,
+        threads: flag(cli, "threads", 1usize)?,
+        epochs_per_round: flag(cli, "epochs-per-round", 2usize)?,
+        rounds: flag(cli, "rounds", 8usize)?,
+        seed: flag(cli, "seed", 42u64)?,
+        checkpoint: cli.opt("ckpt").map(PathBuf::from),
+    };
+    println!(
+        "dist-work {}: shard rows {}..{} of {} ({} rows), coordinator {}",
+        id,
+        manifest.shards[id].start,
+        manifest.shards[id].end,
+        manifest.dataset,
+        shard.n(),
+        coord_addr,
+    );
+    let mut client = DistClient::new(coord_addr);
+    let mut worker = DistWorker::new(&shard, cfg)?;
+    let report = worker.run(&mut client, None)?;
+    println!(
+        "done: {} rounds ({} accepted, {} resyncs), {} epochs, {} updates",
+        report.rounds, report.accepted, report.resyncs, report.epochs, report.updates,
+    );
+    println!("coordinator stats: {}", client.stats()?);
+    Ok(())
+}
+
+/// `passcode dist-sim` — the whole distributed tier in one process:
+/// shard the dataset, boot a loopback coordinator, race N worker
+/// threads through it, and score the merged model.  `--smoke` is the
+/// CI shape (tiny dataset, 3 rounds).
+fn cmd_dist_sim(cli: &Cli) -> Result<()> {
+    cli.check_flags(DIST_SIM_FLAGS)?;
+    let smoke = cli.opt("smoke").is_some();
+    let base = SimConfig::default();
+    let cfg = SimConfig {
+        dataset: cli.opt_or("dataset", &base.dataset).to_string(),
+        scale: flag(cli, "scale", if smoke { 0.02 } else { base.scale })?,
+        workers: flag(cli, "workers", base.workers)?,
+        rounds: flag(cli, "rounds", if smoke { 3 } else { base.rounds })?,
+        epochs_per_round: flag(
+            cli,
+            "epochs-per-round",
+            if smoke { 1 } else { base.epochs_per_round },
+        )?,
+        solver: cli.opt_or("solver", &base.solver).to_string(),
+        loss: base.loss,
+        threads_per_worker: flag(cli, "threads", base.threads_per_worker)?,
+        max_lag: flag(cli, "max-lag", base.max_lag)?,
+        seed: flag(cli, "seed", base.seed)?,
+        checkpoint: cli.opt("checkpoint").map(PathBuf::from),
+        manifest_out: cli.opt("manifest").map(PathBuf::from),
+    };
+    println!(
+        "dist-sim: {}@{} across {} workers × {} rounds × {} epochs (max-lag {})",
+        cfg.dataset, cfg.scale, cfg.workers, cfg.rounds, cfg.epochs_per_round, cfg.max_lag,
+    );
+    let report = run_sim(&cfg)?;
+    for (i, w) in report.workers.iter().enumerate() {
+        println!(
+            "  worker {i}: {} rounds ({} accepted, {} resyncs), {} epochs, {} updates",
+            w.rounds, w.accepted, w.resyncs, w.epochs, w.updates,
+        );
+    }
+    println!(
+        "merge epoch {} ({} merges, {} rejects), backward-error ratio {:.3e}",
+        report.merge_epoch, report.merges, report.rejects, report.backward_error_ratio,
+    );
+    println!(
+        "P(w) = {:.6}  gap = {:.3e}  test acc = {:.4}",
+        report.primal, report.gap, report.test_accuracy,
+    );
+    println!("dist metrics:");
+    for line in &report.dist_metrics {
+        println!("  {line}");
+    }
+    ensure!(
+        !report.dist_metrics.is_empty(),
+        "no passcode_dist_* metrics after a sim run"
+    );
+    ensure!(
+        report.merge_epoch > 0 && report.w.iter().all(|v| v.is_finite()),
+        "simulation produced no merges or a non-finite model"
+    );
     Ok(())
 }
 

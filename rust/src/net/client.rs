@@ -62,27 +62,63 @@ impl ClientResponse {
     }
 }
 
+/// Client-side socket policy: connect/read deadlines plus the bounded
+/// retry-with-backoff budget [`HttpClient::get_with_retry`] spends.
+///
+/// The defaults match the client's historical behavior (generous
+/// deadlines, 3 retries with doubling backoff); the `dist/` worker
+/// loop tightens them so a dead coordinator surfaces as an error in
+/// seconds rather than hanging the worker indefinitely.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    /// Deadline for establishing the TCP connection.
+    pub connect_timeout: Duration,
+    /// Per-read socket deadline once connected.
+    pub read_timeout: Duration,
+    /// Extra attempts `get_with_retry` may spend after the first
+    /// (0 disables retrying entirely).
+    pub retries: u32,
+    /// Sleep before the first retry; doubles on each subsequent one.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(60),
+            retries: 3,
+            backoff: Duration::from_millis(100),
+        }
+    }
+}
+
 /// One keep-alive HTTP/1.1 connection to the server.
 #[derive(Debug)]
 pub struct HttpClient {
     addr: SocketAddr,
+    cfg: ClientConfig,
     conn: Option<BufReader<TcpStream>>,
 }
 
 impl HttpClient {
-    /// Connect to `addr` (lazily — the socket opens on first request).
+    /// Connect to `addr` (lazily — the socket opens on first request)
+    /// with the default [`ClientConfig`].
     pub fn new(addr: SocketAddr) -> HttpClient {
-        HttpClient { addr, conn: None }
+        Self::with_config(addr, ClientConfig::default())
+    }
+
+    /// Connect to `addr` with explicit timeout/retry policy.
+    pub fn with_config(addr: SocketAddr, cfg: ClientConfig) -> HttpClient {
+        HttpClient { addr, cfg, conn: None }
     }
 
     fn connect(&mut self) -> Result<&mut BufReader<TcpStream>> {
         if self.conn.is_none() {
-            let stream = TcpStream::connect(self.addr)
+            let stream = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)
                 .with_context(|| format!("connect {}", self.addr))?;
             stream.set_nodelay(true).ok();
-            stream
-                .set_read_timeout(Some(Duration::from_secs(60)))
-                .ok();
+            stream.set_read_timeout(Some(self.cfg.read_timeout)).ok();
             self.conn = Some(BufReader::new(stream));
         }
         Ok(self.conn.as_mut().expect("just connected"))
@@ -150,6 +186,33 @@ impl HttpClient {
     /// `GET path` convenience.
     pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
         self.request("GET", path, "text/plain", b"")
+    }
+
+    /// `GET path` with up to `cfg.retries` extra attempts on transport
+    /// errors, sleeping `cfg.backoff` (doubling each time) between
+    /// attempts and reconnecting from scratch before each retry.
+    ///
+    /// Only for GETs: they are idempotent, so re-sending after an
+    /// ambiguous failure is safe.  Non-2xx responses are *not* retried
+    /// — the server answered; retrying would just repeat the answer.
+    pub fn get_with_retry(&mut self, path: &str) -> Result<ClientResponse> {
+        let mut backoff = self.cfg.backoff;
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+                self.conn = None;
+            }
+            match self.get(path) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one attempt ran").context(format!(
+            "GET {path} failed after {} attempts",
+            self.cfg.retries + 1
+        )))
     }
 
     /// `POST /v1/score` of one sparse row against `route`.
@@ -329,6 +392,22 @@ mod tests {
             v.get("vals").unwrap().as_arr().unwrap()[1].as_f64().unwrap(),
             -1.0
         );
+    }
+
+    #[test]
+    fn get_with_retry_bounds_attempts_against_dead_peer() {
+        // Nothing listens on this loopback port: each attempt fails at
+        // connect.  The retry budget must bound the loop and the error
+        // must say how many attempts were spent.
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(250),
+            read_timeout: Duration::from_millis(250),
+            retries: 1,
+            backoff: Duration::from_millis(1),
+        };
+        let mut c = HttpClient::with_config("127.0.0.1:9".parse().unwrap(), cfg);
+        let err = c.get_with_retry("/healthz").unwrap_err();
+        assert!(err.to_string().contains("after 2 attempts"), "{err:#}");
     }
 
     #[test]

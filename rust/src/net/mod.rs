@@ -20,9 +20,13 @@
 //! * [`server`] — the accept loop + bounded worker pool, request
 //!   dispatch, and the admin plane (`/v1/models/{route}/publish`,
 //!   `/v1/stats`, `/healthz`, plus the telemetry plane `/metrics` and
-//!   `/v1/trace` backed by [`crate::obs`]).
+//!   `/v1/trace` backed by [`crate::obs`], plus the distributed merge
+//!   plane `/v1/dist/push_delta` / `/v1/dist/pull_w` / `/v1/dist/stats`
+//!   when a [`crate::dist::DistCoordinator`] is attached).
 //! * [`client`] — keep-alive HTTP client + load generator
-//!   (`benches/net_throughput.rs`).
+//!   (`benches/net_throughput.rs`), with configurable connect/read
+//!   timeouts and bounded retry-with-backoff for idempotent GETs
+//!   ([`ClientConfig`]).
 //!
 //! Serving many independently trained models side by side mirrors the
 //! multi-worker decomposition in Hybrid-DCA (Pal et al., 2016); each
@@ -54,7 +58,9 @@ pub mod router;
 pub mod server;
 
 pub use body::{decode_score_body, ScoreBody, SparseRow};
-pub use client::{run_load, ClientResponse, HttpClient, LoadConfig, LoadReport};
+pub use client::{
+    run_load, ClientConfig, ClientResponse, HttpClient, LoadConfig, LoadReport,
+};
 pub use http::{
     IdleTimeout, PayloadTooLarge, Request, RequestTimeout, Response,
 };

@@ -368,10 +368,12 @@ impl std::fmt::Debug for Route {
     }
 }
 
-/// The dispatch table: route name → live [`Route`].
+/// The dispatch table: route name → live [`Route`], plus (optionally)
+/// the distributed-tier coordinator the `/v1/dist/*` plane serves.
 #[derive(Debug)]
 pub struct Router {
     routes: BTreeMap<String, Route>,
+    dist: Option<Arc<crate::dist::DistCoordinator>>,
 }
 
 impl Router {
@@ -387,7 +389,7 @@ impl Router {
             );
             routes.insert(spec.name.clone(), Route::start(spec)?);
         }
-        Ok(Router { routes })
+        Ok(Router { routes, dist: None })
     }
 
     /// A single-route router around an already-built engine (the
@@ -404,7 +406,27 @@ impl Router {
                 trainer_loop: None,
             },
         );
-        Router { routes }
+        Router { routes, dist: None }
+    }
+
+    /// A router with no scoring routes at all — the shape a pure
+    /// `passcode dist-coord` process runs (only the admin plane and
+    /// `/v1/dist/*` are live).
+    pub fn empty() -> Router {
+        Router { routes: BTreeMap::new(), dist: None }
+    }
+
+    /// Attach a distributed-tier coordinator; the server then answers
+    /// `POST /v1/dist/push_delta`, `GET /v1/dist/pull_w`, and
+    /// `GET /v1/dist/stats` against it.
+    pub fn with_dist(mut self, coord: Arc<crate::dist::DistCoordinator>) -> Router {
+        self.dist = Some(coord);
+        self
+    }
+
+    /// The attached coordinator, if any.
+    pub fn dist(&self) -> Option<&Arc<crate::dist::DistCoordinator>> {
+        self.dist.as_ref()
     }
 
     /// Look up a route by name.
@@ -432,7 +454,8 @@ impl Router {
         self.routes.len()
     }
 
-    /// Whether the router has no routes (never true post-construction).
+    /// Whether the router has no routes (true only for the
+    /// [`Router::empty`] dist-coordinator shape).
     pub fn is_empty(&self) -> bool {
         self.routes.is_empty()
     }

@@ -20,6 +20,11 @@
 //! * `GET /v1/trace` — the [`crate::obs::FlightRecorder`] ring (recent
 //!   HTTP/training spans with tid + monotonic timestamps) as JSON.
 //! * `GET /healthz` — liveness plus the route list.
+//! * `POST /v1/dist/push_delta`, `GET /v1/dist/pull_w`,
+//!   `GET /v1/dist/stats` — the distributed-tier merge plane (binary
+//!   delta bodies, see [`crate::dist::protocol`]); live only when a
+//!   [`crate::dist::DistCoordinator`] is attached via
+//!   [`Router::with_dist`](super::router::Router::with_dist).
 //!
 //! Back-pressure: at most `queue_cap` accepted connections may be
 //! waiting for a worker; beyond that the server answers `503` and
@@ -427,6 +432,9 @@ fn route_request(router: &Router, req: &Request) -> Response {
             Response::json(200, &crate::obs::recorder().to_json())
         }
         ("POST", "/v1/score") => handle_score(router, req),
+        ("GET", "/v1/dist/pull_w") => handle_dist_pull(router),
+        ("GET", "/v1/dist/stats") => handle_dist_stats(router),
+        ("POST", "/v1/dist/push_delta") => handle_dist_push(router, req),
         (method, path) => {
             if let Some(route) = path
                 .strip_prefix("/v1/models/")
@@ -437,14 +445,76 @@ fn route_request(router: &Router, req: &Request) -> Response {
                 }
                 return handle_publish(router, route, req);
             }
-            if matches!(path, "/healthz" | "/v1/stats" | "/metrics" | "/v1/trace") {
+            if matches!(
+                path,
+                "/healthz"
+                    | "/v1/stats"
+                    | "/metrics"
+                    | "/v1/trace"
+                    | "/v1/dist/pull_w"
+                    | "/v1/dist/stats"
+            ) {
                 return Response::error(405, "method not allowed");
             }
             if path == "/v1/score" {
                 return Response::error(405, "score requires POST");
             }
+            if path == "/v1/dist/push_delta" {
+                return Response::error(405, "push_delta requires POST");
+            }
             Response::error(404, &format!("no handler for {method} {path}"))
         }
+    }
+}
+
+/// Resolve the attached dist coordinator, or explain its absence.
+fn dist_coordinator(
+    router: &Router,
+) -> Result<&Arc<crate::dist::DistCoordinator>, Response> {
+    router
+        .dist()
+        .ok_or_else(|| Response::error(404, "no dist coordinator on this server"))
+}
+
+/// `GET /v1/dist/pull_w`: the merged `w` + its merge epoch, binary
+/// little-endian (see `dist::protocol`).
+fn handle_dist_pull(router: &Router) -> Response {
+    let coord = match dist_coordinator(router) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    let (epoch, w) = coord.pull();
+    Response {
+        status: 200,
+        content_type: "application/octet-stream",
+        body: crate::dist::protocol::encode_w(epoch, &w),
+    }
+}
+
+/// `GET /v1/dist/stats`: coordinator merge statistics as JSON.
+fn handle_dist_stats(router: &Router) -> Response {
+    match dist_coordinator(router) {
+        Ok(coord) => Response::json(200, &coord.stats_json()),
+        Err(resp) => resp,
+    }
+}
+
+/// `POST /v1/dist/push_delta`: decode the binary delta, run the
+/// bounded-staleness merge, answer with the JSON verdict.  Malformed
+/// bodies (bad magic, wrong dimension, non-finite values) are 400s;
+/// a *stale* delta is a well-formed 200 resync verdict.
+fn handle_dist_push(router: &Router, req: &Request) -> Response {
+    let coord = match dist_coordinator(router) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    let delta = match crate::dist::protocol::decode_push(&req.body) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match coord.push(&delta) {
+        Ok(outcome) => Response::json(200, &outcome.to_json()),
+        Err(e) => Response::error(400, &format!("{e:#}")),
     }
 }
 
@@ -652,6 +722,54 @@ mod tests {
             dispatch(&router, &req("GET", "/v1/models/only/publish", "")).status,
             405
         );
+        router.shutdown();
+    }
+
+    #[test]
+    fn dispatch_dist_routes() {
+        use crate::dist::protocol::{self, PushDelta, PushOutcome};
+        use crate::dist::{DistCoordinator, MergeConfig};
+
+        // Without a coordinator attached the plane 404s (and the GET
+        // paths 405 on wrong methods like the other admin endpoints).
+        let none = single_router(1.0, 4);
+        assert_eq!(dispatch(&none, &req("GET", "/v1/dist/pull_w", "")).status, 404);
+        assert_eq!(dispatch(&none, &req("POST", "/v1/dist/pull_w", "")).status, 405);
+        assert_eq!(dispatch(&none, &req("GET", "/v1/dist/push_delta", "")).status, 405);
+        none.shutdown();
+
+        let coord = Arc::new(DistCoordinator::new(
+            vec![0.0; 2],
+            MergeConfig { workers: 2, max_lag: 4, ..Default::default() },
+        ));
+        let router = Router::empty().with_dist(coord);
+        let pull = dispatch(&router, &req("GET", "/v1/dist/pull_w", ""));
+        assert_eq!(pull.status, 200);
+        assert_eq!(protocol::decode_w(&pull.body).unwrap(), (0, vec![0.0, 0.0]));
+
+        let mut push = req("POST", "/v1/dist/push_delta", "");
+        push.body = protocol::encode_push(&PushDelta {
+            worker: 0,
+            base_epoch: 0,
+            delta_err: 0.0,
+            delta: vec![1.0, -1.0],
+        });
+        let resp = dispatch(&router, &push);
+        assert_eq!(resp.status, 200);
+        match PushOutcome::from_json(&body_json(&resp)).unwrap() {
+            PushOutcome::Accepted { epoch, weight } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(weight, 1.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let stats = dispatch(&router, &req("GET", "/v1/dist/stats", ""));
+        assert_eq!(stats.status, 200);
+        assert_eq!(body_json(&stats).get("merge_epoch").unwrap().as_usize().unwrap(), 1);
+        // Garbage body: 400, not a panic.
+        let mut bad = req("POST", "/v1/dist/push_delta", "");
+        bad.body = b"XXXX".to_vec();
+        assert_eq!(dispatch(&router, &bad).status, 400);
         router.shutdown();
     }
 

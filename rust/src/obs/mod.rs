@@ -11,8 +11,11 @@
 //!   waits, per-worker epoch timings, sampled τ, backward-error ratio)
 //!   registers via [`probes::solver`]; the HTTP/serving family
 //!   (`passcode_http_*`, `passcode_route_*`) registers from
-//!   `net/server.rs` and `Router::publish_metrics`.  `GET /metrics`
-//!   renders everything in one Prometheus text scrape.
+//!   `net/server.rs` and `Router::publish_metrics`; the distributed
+//!   tier (`passcode_dist_*`: merges, rejects, merge epoch, merge-lag
+//!   histogram, merged-`w` backward error, per-worker push/pull
+//!   counters) registers via [`probes::dist`] and `dist/worker.rs`.
+//!   `GET /metrics` renders everything in one Prometheus text scrape.
 //! * [`probes`] — the hot-path half: a global enable switch plus
 //!   static striped tick counters, shaped so the solver inner loop
 //!   pays one predictable branch when probes are off (`perf_hotpath`

@@ -149,6 +149,60 @@ pub fn solver() -> &'static SolverProbes {
     })
 }
 
+/// Registry handles for the distributed-tier telemetry family
+/// (`passcode_dist_*`).  The coordinator drives the merge-side members
+/// on every `push_delta`; workers register their own per-worker
+/// labeled push/pull counters directly (label-in-name idiom, like
+/// `passcode_route_*`).
+pub struct DistProbes {
+    /// Accepted delta merges (coordinator).
+    pub merges: Arc<Counter>,
+    /// Deltas rejected as staler than `--max-lag` (coordinator).
+    pub rejects: Arc<Counter>,
+    /// Current merge epoch of the global `w` (coordinator).
+    pub merge_epoch: Arc<Gauge>,
+    /// Staleness (merge-epoch lag) of each accepted delta.
+    pub merge_lag: Arc<Histogram>,
+    /// Accumulated worker-reported backward error of the merged `w`,
+    /// relative to ‖w‖ — the distributed analog of the Theorem-3
+    /// `passcode_train_backward_error_ratio` gauge.
+    pub backward_error_ratio: Arc<Gauge>,
+}
+
+/// The distributed-tier telemetry family (lazily registered on first
+/// use).  Unlike the solver hot counters these are never on a
+/// per-update path — one merge per worker round — so they update their
+/// registry handles directly, with no static mirror.
+pub fn dist() -> &'static DistProbes {
+    static PROBES: OnceLock<DistProbes> = OnceLock::new();
+    PROBES.get_or_init(|| {
+        let reg = crate::obs::registry();
+        DistProbes {
+            merges: reg.counter(
+                "passcode_dist_merges_total",
+                "Worker w-deltas accepted and merged into the global w",
+            ),
+            rejects: reg.counter(
+                "passcode_dist_rejects_total",
+                "Worker w-deltas rejected as staler than max-lag (resync forced)",
+            ),
+            merge_epoch: reg.gauge(
+                "passcode_dist_merge_epoch",
+                "Current merge epoch of the coordinator's global w",
+            ),
+            merge_lag: reg.histogram(
+                "passcode_dist_merge_lag",
+                "Merge-epoch staleness of accepted deltas (Hybrid-DCA bounded staleness)",
+                1.0,
+            ),
+            backward_error_ratio: reg.gauge(
+                "passcode_dist_backward_error_ratio",
+                "Accumulated worker-reported |dw - X^T dalpha| over |w| of the merged model",
+            ),
+        }
+    })
+}
+
 /// Mirror the hot tick statics into their registry counters.  Called
 /// at training-round boundaries and on every `/metrics` scrape; cheap
 /// and race-safe (`set_floor` is a `fetch_max`).
@@ -181,6 +235,19 @@ mod tests {
         assert!(solver().cas_retries.value() >= CAS_RETRIES.value());
         assert!(solver().lock_waits.value() >= 1);
         set_probes_enabled(was);
+    }
+
+    #[test]
+    fn dist_family_registers_once_and_updates() {
+        let a = dist().merges.as_ref() as *const Counter;
+        let b = dist().merges.as_ref() as *const Counter;
+        assert_eq!(a, b);
+        let before = dist().merges.value();
+        dist().merges.inc();
+        dist().merge_epoch.set(3.0);
+        dist().merge_lag.record(2);
+        assert_eq!(dist().merges.value(), before + 1);
+        assert!(dist().merge_lag.count() >= 1);
     }
 
     #[test]

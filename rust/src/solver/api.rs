@@ -919,6 +919,43 @@ impl<'a> TrainSession<'a> {
         Ok(())
     }
 
+    /// Adopt an externally supplied `(α, ŵ)` pair as the session state,
+    /// keeping the epoch/update counters and the derived RNG schedule.
+    ///
+    /// This is the warm-start hook for the distributed tier: after a
+    /// merge round a `dist/` worker overwrites its local `ŵ` with the
+    /// coordinator's merged vector and its `α` with the merge-weighted
+    /// dual, then keeps running epochs from there — the Hybrid-DCA
+    /// outer loop.  Unlike [`resume`](Self::resume) there is no
+    /// provenance to validate, only dimensions; like `resume`, any
+    /// backend caches (PASSCoDe shared buffers, serial shrink sets) are
+    /// dropped so the next epoch rebuilds them from the adopted state.
+    pub fn adopt_state(&mut self, alpha: &[f64], w_hat: &[f64]) -> Result<()> {
+        ensure!(
+            alpha.len() == self.ds.n(),
+            "adopted α dimension {} != dataset n {}",
+            alpha.len(),
+            self.ds.n()
+        );
+        ensure!(
+            w_hat.len() == self.ds.d(),
+            "adopted ŵ dimension {} != dataset d {}",
+            w_hat.len(),
+            self.ds.d()
+        );
+        if let Backend::Serial { shrink } = &mut self.backend {
+            // The shrunken active set was derived from the old α; it is
+            // meaningless for the adopted state.
+            *shrink = None;
+        }
+        if let Backend::Passcode { shared, .. } = &mut self.backend {
+            *shared = None;
+        }
+        self.alpha.copy_from_slice(alpha);
+        self.w_hat.copy_from_slice(w_hat);
+        Ok(())
+    }
+
     /// Finish the session, yielding the family-standard [`SolveResult`].
     pub fn into_result(self) -> SolveResult {
         SolveResult {
@@ -1137,6 +1174,25 @@ mod tests {
         let bad = Checkpoint::zeroed("dcd", "hinge", c * 2.0, 42, ds.n(), ds.d());
         let mut s = solver.session(&ds, LossKind::Hinge, c, opts(4)).unwrap();
         assert!(s.resume(&bad).is_err(), "mismatched C accepted");
+    }
+
+    #[test]
+    fn adopt_state_overwrites_and_validates_dims() {
+        let (ds, c) = small();
+        let solver = lookup("passcode-atomic").unwrap();
+        let mut s = solver.session(&ds, LossKind::Hinge, c, opts(4)).unwrap();
+        s.run_epochs(1).unwrap();
+        let alpha = vec![0.25; ds.n()];
+        let w = vec![0.5; ds.d()];
+        s.adopt_state(&alpha, &w).unwrap();
+        assert_eq!(s.alpha(), &alpha[..]);
+        assert_eq!(s.w_hat(), &w[..]);
+        // Training continues from the adopted state without panicking
+        // (shared buffers were dropped and rebuilt).
+        s.run_epochs(1).unwrap();
+        assert_eq!(s.epochs(), 2);
+        assert!(s.adopt_state(&alpha[1..], &w).is_err(), "short α accepted");
+        assert!(s.adopt_state(&alpha, &w[1..]).is_err(), "short ŵ accepted");
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Integration tests for the distributed tier (`dist/`): shard
+//! manifests, the 2-worker loopback simulation against single-process
+//! PASSCoDe-Atomic, and worker kill/rejoin through a real coordinator.
+//!
+//! The acceptance properties (ISSUE 8):
+//!
+//! * a 2-worker `dist-sim` run reaches an objective within 1e-3 of the
+//!   single-process PASSCoDe-Atomic solution on the same (synthetic
+//!   registry) dataset;
+//! * a worker killed mid-run and rejoined from its checkpoint neither
+//!   stalls the coordinator nor corrupts the merged `w` — the merge
+//!   epoch stays monotonic, the cluster invariant `w = Σ_p X_pᵀ α_p`
+//!   holds, and the final model still converges.
+
+use std::sync::Arc;
+
+use passcode::data::registry;
+use passcode::data::shard::{extract, plan_ranges, ShardManifest};
+use passcode::dist::{
+    DistClient, DistCoordinator, DistWorker, MergeConfig, SimConfig, WorkerConfig,
+};
+use passcode::eval;
+use passcode::loss::{DynLoss, LossKind};
+use passcode::net::{Router, Server, ServerConfig};
+use passcode::solver::{lookup, Solver, SolveOptions};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("passcode_dist_it").join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn manifest_round_trips_through_disk_and_slices_shards() {
+    let dir = tmp_dir("manifest");
+    let path = dir.join("shards.json");
+    let m = ShardManifest::for_registry("rcv1", 0.02, 3).unwrap();
+    m.save(&path).unwrap();
+    let back = ShardManifest::load(&path).unwrap();
+    assert_eq!(back, m);
+
+    // The shards partition the training rows exactly, in order.
+    let (train, _, _) = registry::load("rcv1", 0.02).unwrap();
+    assert_eq!(back.n, train.n());
+    let mut rows = 0;
+    for (i, r) in back.shards.iter().enumerate() {
+        assert_eq!(r.start, rows, "shard {i} not contiguous");
+        rows = r.end;
+        let shard = back.load_shard(i).unwrap();
+        assert_eq!(shard.n(), r.len());
+        assert_eq!(shard.d(), train.d());
+        // First row of the shard is the matching global row.
+        if !r.is_empty() {
+            let (li, lv) = shard.x.row(0);
+            let (gi, gv) = train.x.row(r.start);
+            assert_eq!((li, lv), (gi, gv));
+        }
+    }
+    assert_eq!(rows, train.n());
+}
+
+#[test]
+fn two_worker_sim_matches_single_process_atomic() {
+    // Equal epoch budget: 2 workers × 20 rounds × 2 epochs locally vs
+    // 40 single-process epochs over the full dataset (both far past
+    // convergence on the tiny registry sample, so the 1e-3 objective
+    // tolerance is a property of the merge math, not of luck).
+    let rounds = 20;
+    let epochs_per_round = 2;
+    let sim = passcode::dist::run_sim(&SimConfig {
+        dataset: "rcv1".into(),
+        scale: 0.02,
+        workers: 2,
+        rounds,
+        epochs_per_round,
+        solver: "passcode-atomic".into(),
+        max_lag: 8,
+        ..Default::default()
+    })
+    .unwrap();
+
+    let (train, _, c) = registry::load("rcv1", 0.02).unwrap();
+    let mut single = lookup("passcode-atomic")
+        .unwrap()
+        .session(&train, LossKind::Hinge, c, SolveOptions {
+            epochs: rounds * epochs_per_round,
+            ..Default::default()
+        })
+        .unwrap();
+    single.run_epochs(rounds * epochs_per_round).unwrap();
+
+    let loss = DynLoss::new(LossKind::Hinge, c);
+    let p_single = eval::primal_objective(&train, &loss, single.w_hat());
+    let gap_single = eval::duality_gap(&train, &loss, single.alpha());
+
+    assert!(sim.merge_epoch > 0, "no merges happened");
+    assert!(sim.w.iter().all(|v| v.is_finite()), "merged w has non-finite entries");
+    assert!(
+        (sim.primal - p_single).abs() <= 1e-3 * p_single.abs().max(1.0),
+        "distributed primal {} vs single-process {}",
+        sim.primal,
+        p_single
+    );
+    assert!(
+        sim.gap <= gap_single + 1e-3 * p_single.abs().max(1.0),
+        "distributed gap {} vs single-process gap {}",
+        sim.gap,
+        gap_single
+    );
+    // The dist metric family must be live after a run.
+    assert!(
+        sim.dist_metrics.iter().any(|l| l.starts_with("passcode_dist_merges_total")),
+        "missing merge counter in {:?}",
+        sim.dist_metrics
+    );
+}
+
+#[test]
+fn killed_worker_rejoins_without_stalling_or_corrupting() {
+    let dir = tmp_dir("rejoin");
+    let ckpt = dir.join("shard1.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+
+    let (train, _, c) = registry::load("rcv1", 0.02).unwrap();
+    let ranges = plan_ranges(train.n(), 2);
+    let shards: Vec<_> = ranges.iter().map(|r| extract(&train, r)).collect();
+    let coord = Arc::new(DistCoordinator::new(
+        vec![0.0; train.d()],
+        MergeConfig { workers: 2, max_lag: 16, c, ..Default::default() },
+    ));
+    let server = Server::start(
+        Router::empty().with_dist(Arc::clone(&coord)),
+        &ServerConfig::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    let wcfg = |id: u64, rounds: usize, checkpoint| WorkerConfig {
+        id,
+        c,
+        rounds,
+        epochs_per_round: 2,
+        checkpoint,
+        ..Default::default()
+    };
+
+    // Worker 0 runs its full budget up front.
+    let mut client0 = DistClient::new(addr);
+    let mut w0 = DistWorker::new(&shards[0], wcfg(0, 10, None)).unwrap();
+    w0.run(&mut client0, None).unwrap();
+    let epoch_after_w0 = coord.pull().0;
+    assert!(epoch_after_w0 > 0);
+
+    // Worker 1 does 3 rounds, checkpointing, then is "killed" (dropped).
+    let mut client1 = DistClient::new(addr);
+    {
+        let mut w1 = DistWorker::new(&shards[1], wcfg(1, 3, Some(ckpt.clone()))).unwrap();
+        w1.run(&mut client1, None).unwrap();
+    }
+    let epoch_mid = coord.pull().0;
+    assert!(epoch_mid > epoch_after_w0, "worker 1 rounds did not merge");
+    assert!(ckpt.exists(), "worker 1 left no checkpoint");
+
+    // Rejoin: a brand-new worker 1 resumes its dual block from the
+    // checkpoint, pulls the current merged w, and finishes its budget —
+    // the coordinator needed no special handling for the dropout.
+    let mut w1 = DistWorker::new(&shards[1], wcfg(1, 7, Some(ckpt.clone()))).unwrap();
+    let report = w1.run(&mut client1, None).unwrap();
+    assert_eq!(report.rounds, 7);
+    let (epoch_final, w) = coord.pull();
+    assert!(epoch_final > epoch_mid, "merge epoch must stay monotonic");
+    assert!(w.iter().all(|v| v.is_finite()), "merged w corrupted");
+
+    // Cluster invariant: the merged w is exactly the transpose-dot of
+    // the concatenated committed duals (both workers ran 1 thread, so
+    // there is no within-shard async write loss either).
+    let mut alpha = w0.alpha().to_vec();
+    alpha.extend_from_slice(w1.alpha());
+    let wbar = train.x.transpose_dot(&alpha);
+    let num = w
+        .iter()
+        .zip(&wbar)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let den = w.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    assert!(num / den < 1e-8, "w = sum_p X_p^T alpha_p violated: {}", num / den);
+
+    // And the final model converged: the duality gap shrank far below
+    // its alpha = 0 starting value P(0) = C·n.
+    let loss = DynLoss::new(LossKind::Hinge, c);
+    let gap = eval::duality_gap(&train, &loss, &alpha);
+    let gap0 = c * train.n() as f64;
+    assert!(gap.is_finite() && gap < 0.1 * gap0, "gap {gap} vs initial {gap0}");
+
+    server.shutdown();
+    std::fs::remove_file(&ckpt).ok();
+}
