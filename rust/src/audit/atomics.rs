@@ -1,0 +1,249 @@
+//! Rules 1 and 2: the atomic-ordering allowlist and lock-discipline
+//! containment.
+//!
+//! Rule 1 (`atomic-ordering`) checks every `Ordering::X` token against
+//! the per-module allowlist in [`crate::audit::policy`]: `SeqCst` is
+//! banned everywhere without an `audit: allow(seqcst)` exemption, the
+//! kernel modules are pinned to `Relaxed`, and the publication edges
+//! in `serve/registry.rs` must keep their Acquire/Release pair.
+//!
+//! Rule 2 (`lock-discipline`) keeps blocking synchronization out of
+//! the kernel module trees: no `Mutex`/`RwLock`/`Condvar` there,
+//! `impl LockDiscipline` only in `solver/locks.rs` and `chk/`, and raw
+//! CAS inside `solver/` only in the lock table itself — kernels lock
+//! via `acquire_sorted`, never ad hoc.
+
+use super::policy;
+use super::report::Finding;
+use super::scan::SourceFile;
+
+/// All ordering names an `Ordering::` token can name.
+const ORDERINGS: &[&str] = &["SeqCst", "AcqRel", "Acquire", "Release", "Relaxed"];
+
+/// Run rule 1 over `files`.  `full` additionally enforces the
+/// required-presence table (meaningless on fixture snippets).
+pub fn check_orderings(files: &[SourceFile], full: bool, out: &mut Vec<Finding>) {
+    for f in files {
+        let allowed = policy::ordering_allowlist(&f.path);
+        for (l0, code) in f.code.iter().enumerate() {
+            let line = l0 + 1;
+            let mut rest = code.as_str();
+            while let Some(pos) = rest.find("Ordering::") {
+                rest = &rest[pos + "Ordering::".len()..];
+                let Some(ord) = ORDERINGS.iter().find(|o| rest.starts_with(**o)) else {
+                    continue;
+                };
+                if *ord == "SeqCst" {
+                    if !f.exempted(line, "seqcst") {
+                        out.push(Finding::new(
+                            policy::RULE_ATOMIC,
+                            &f.path,
+                            line,
+                            "Ordering::SeqCst is banned (no site in this crate needs \
+                             a total order; PR 6 documents the per-edge choices)"
+                                .to_string(),
+                            policy::HINT_ATOMIC,
+                        ));
+                    }
+                } else if !allowed.contains(ord) && !f.exempted(line, "ordering") {
+                    out.push(Finding::new(
+                        policy::RULE_ATOMIC,
+                        &f.path,
+                        line,
+                        format!(
+                            "Ordering::{ord} is outside this module's allowlist {allowed:?}"
+                        ),
+                        policy::HINT_ATOMIC,
+                    ));
+                }
+            }
+        }
+    }
+    if full {
+        for (path, required) in policy::ORDERING_REQUIRED {
+            let Some(f) = files.iter().find(|f| f.path == *path) else {
+                continue;
+            };
+            for ord in *required {
+                let token = format!("Ordering::{ord}");
+                if !f.code.iter().any(|c| c.contains(&token)) {
+                    out.push(Finding::new(
+                        policy::RULE_ATOMIC,
+                        &f.path,
+                        1,
+                        format!(
+                            "publication edge lost its Ordering::{ord} (required in \
+                             this file: a Relaxed swap would let readers see a \
+                             partially initialized model version)"
+                        ),
+                        policy::HINT_ATOMIC,
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Run rule 2 over `files`.
+pub fn check_locks(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        let test_start = f.test_start();
+        let kernel_side = policy::in_table(&f.path, policy::LOCK_FREE_MODULES)
+            && !policy::in_table(&f.path, policy::LOCK_ALLOWED_FILES);
+        for (l0, code) in f.code.iter().enumerate() {
+            let line = l0 + 1;
+            if line >= test_start {
+                break; // test modules may synchronize however they like
+            }
+            if kernel_side {
+                for tok in ["Mutex", "RwLock", "Condvar"] {
+                    if code.contains(tok) && !f.exempted(line, "lock") {
+                        out.push(Finding::new(
+                            policy::RULE_LOCK,
+                            &f.path,
+                            line,
+                            format!("{tok} in a kernel module (blocking sync on a \
+                                     training path)"),
+                            policy::HINT_LOCK,
+                        ));
+                        break; // one finding per line is enough
+                    }
+                }
+            }
+            if code.contains("LockDiscipline for")
+                && code.contains("impl")
+                && !policy::in_table(&f.path, policy::LOCK_DISCIPLINE_IMPL_FILES)
+            {
+                out.push(Finding::new(
+                    policy::RULE_LOCK,
+                    &f.path,
+                    line,
+                    "LockDiscipline implemented outside solver/locks.rs and chk/ \
+                     (the deadlock-freedom argument only covers those two)"
+                        .to_string(),
+                    policy::HINT_LOCK,
+                ));
+            }
+            if code.contains("compare_exchange")
+                && policy::path_matches(&f.path, "src/solver/")
+                && !policy::in_table(&f.path, policy::SOLVER_CAS_ALLOWED)
+            {
+                out.push(Finding::new(
+                    policy::RULE_LOCK,
+                    &f.path,
+                    line,
+                    "raw compare_exchange in solver code outside the lock table \
+                     (kernel locking must go through acquire_sorted)"
+                        .to_string(),
+                    policy::HINT_LOCK,
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings_for(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::from_source(path, src);
+        let files = vec![f];
+        let mut out = Vec::new();
+        check_orderings(&files, false, &mut out);
+        check_locks(&files, &mut out);
+        out
+    }
+
+    #[test]
+    fn seqcst_is_flagged_unless_exempted() {
+        let bad = findings_for(
+            "src/net/server.rs",
+            "fn f(a: &AtomicBool) { a.store(true, Ordering::SeqCst); }\n",
+        );
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, "atomic-ordering");
+        assert_eq!(bad[0].line, 1);
+
+        let ok = findings_for(
+            "src/net/server.rs",
+            "// audit: allow(seqcst) — measuring fence cost in a bench harness\n\
+             fn f(a: &AtomicBool) { a.store(true, Ordering::SeqCst); }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn module_allowlists_bind() {
+        // Acquire is fine in net/ (default list) but not in the
+        // Relaxed-only kernel modules.
+        let ok = findings_for(
+            "src/net/server.rs",
+            "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Acquire) }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = findings_for(
+            "src/solver/passcode.rs",
+            "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Acquire) }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("Acquire"), "{}", bad[0].message);
+    }
+
+    #[test]
+    fn ordering_in_strings_and_comments_is_ignored() {
+        let ok = findings_for(
+            "src/solver/passcode.rs",
+            "// Ordering::SeqCst would be wrong here, see PR 6.\n\
+             fn f() -> &'static str { \"Ordering::SeqCst\" }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn required_presence_only_in_full_mode() {
+        let f = SourceFile::from_source(
+            "src/serve/registry.rs",
+            "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) }\n",
+        );
+        let files = vec![f];
+        let mut fixture = Vec::new();
+        check_orderings(&files, false, &mut fixture);
+        assert!(fixture.is_empty(), "{fixture:?}");
+        let mut full = Vec::new();
+        check_orderings(&files, true, &mut full);
+        assert_eq!(full.len(), 2, "{full:?}"); // Acquire and Release both missing
+    }
+
+    #[test]
+    fn mutex_in_kernel_modules_is_flagged() {
+        let bad = findings_for(
+            "src/solver/helper.rs",
+            "use std::sync::Mutex;\n",
+        );
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].rule, "lock-discipline");
+        // The serving layer may lock freely.
+        let ok = findings_for("src/serve/batcher.rs", "use std::sync::Mutex;\n");
+        assert!(ok.is_empty(), "{ok:?}");
+        // The lock table itself is the sanctioned home.
+        let ok = findings_for("src/solver/locks.rs", "use std::sync::Mutex;\n");
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn rogue_lock_discipline_impl_and_solver_cas_are_flagged() {
+        let bad = findings_for(
+            "src/serve/online.rs",
+            "impl LockDiscipline for MyLocks {\n}\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        let bad = findings_for(
+            "src/solver/kernel.rs",
+            "fn spin(b: &AtomicBool) { while b.compare_exchange(false, true, \
+             Ordering::Relaxed, Ordering::Relaxed).is_err() {} }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("acquire_sorted"));
+    }
+}

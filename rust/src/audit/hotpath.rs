@@ -1,0 +1,252 @@
+//! Rules 3 and 5: hot-path allocation freedom and probe gating.
+//!
+//! Rule 3 (`hot-path-alloc`) scans the `// audit: hot-path begin/end`
+//! regions — the allocation-free epoch loops PR 5 promised — for any
+//! allocating token, checks the markers pair up, and requires the
+//! files in [`crate::audit::policy::HOT_REQUIRED_FILES`] to carry at
+//! least one region (so deleting the markers cannot silently retire
+//! the guarantee).
+//!
+//! Rule 5 (`probe-gating`) pins the telemetry contract from PR 7: the
+//! tick functions in `obs/probes.rs` must gate on `probes_enabled()`
+//! before touching their counters, and solver-side code may only reach
+//! the registry-publishing `probes::solver()` handle behind the same
+//! gate (hoisted as `probes_on` in worker loops) — otherwise the
+//! probes-off hot path re-acquires the registry mutex.
+
+use super::policy;
+use super::report::Finding;
+use super::scan::SourceFile;
+
+/// Run rule 3 over `files`.  `full` additionally enforces
+/// [`policy::HOT_REQUIRED_FILES`].
+pub fn check_hot_regions(files: &[SourceFile], full: bool, out: &mut Vec<Finding>) {
+    for f in files {
+        let regions = f.hot_regions();
+        let begins = marker_count(f, "audit: hot-path begin");
+        let ends = marker_count(f, "audit: hot-path end");
+        if begins != ends {
+            out.push(Finding::new(
+                policy::RULE_HOTPATH,
+                &f.path,
+                regions.last().map(|r| r.0).unwrap_or(1),
+                format!("unbalanced hot-path markers ({begins} begin / {ends} end)"),
+                policy::HINT_HOTPATH,
+            ));
+        }
+        if full
+            && regions.is_empty()
+            && policy::in_table(&f.path, policy::HOT_REQUIRED_FILES)
+        {
+            out.push(Finding::new(
+                policy::RULE_HOTPATH,
+                &f.path,
+                1,
+                "no hot-path region markers in a file that must guarantee \
+                 allocation-free inner loops"
+                    .to_string(),
+                policy::HINT_HOTPATH,
+            ));
+        }
+        for &(a, b) in &regions {
+            for line in a..=b {
+                let code = &f.code[line - 1];
+                for tok in policy::HOT_BANNED_TOKENS {
+                    if code.contains(tok) && !f.exempted(line, "alloc") {
+                        out.push(Finding::new(
+                            policy::RULE_HOTPATH,
+                            &f.path,
+                            line,
+                            format!("allocating token `{tok}` inside a hot-path region"),
+                            policy::HINT_HOTPATH,
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn marker_count(f: &SourceFile, marker: &str) -> usize {
+    f.comments
+        .iter()
+        .filter(|c| c.trim_start().starts_with(marker))
+        .count()
+}
+
+/// Run rule 5 over `files`.
+pub fn check_probe_gating(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        if f.path == "src/obs/probes.rs" {
+            check_tick_fns(f, out);
+        }
+        let solver_side = policy::path_matches(&f.path, "src/solver/")
+            || policy::path_matches(&f.path, "src/baselines/");
+        if !solver_side {
+            continue;
+        }
+        let test_start = f.test_start();
+        for (l0, code) in f.code.iter().enumerate() {
+            let line = l0 + 1;
+            if line >= test_start {
+                break;
+            }
+            if !code.contains("probes::solver()") && !code.contains("probes::dist()") {
+                continue;
+            }
+            let start = f.fn_start(line);
+            let gated = (start..line).any(|l| {
+                let c = &f.code[l - 1];
+                policy::PROBE_GATE_TOKENS.iter().any(|t| c.contains(t))
+            });
+            if !gated && !f.exempted(line, "probe") {
+                out.push(Finding::new(
+                    policy::RULE_PROBE,
+                    &f.path,
+                    line,
+                    "probes registry handle reached without a probes_enabled() \
+                     gate earlier in the function"
+                        .to_string(),
+                    policy::HINT_PROBE,
+                ));
+            }
+        }
+    }
+}
+
+/// Every `pub fn *_tick` in `obs/probes.rs` must load the static gate
+/// before incrementing: the fn bodies are the no-op guarantee the
+/// solver call sites rely on (they call ticks ungated).
+fn check_tick_fns(f: &SourceFile, out: &mut Vec<Finding>) {
+    let n = f.len();
+    for (l0, code) in f.code.iter().enumerate() {
+        let line = l0 + 1;
+        let trimmed = code.trim_start();
+        if !(trimmed.starts_with("pub fn ") && trimmed.contains("_tick(")) {
+            continue;
+        }
+        // Body: up to the first column-0 `}` (top-level fn end).
+        let mut gate_at: Option<usize> = None;
+        let mut inc_at: Option<usize> = None;
+        for l in line + 1..=n {
+            let c = &f.code[l - 1];
+            if c.starts_with('}') {
+                break;
+            }
+            if c.contains("probes_enabled()") && gate_at.is_none() {
+                gate_at = Some(l);
+            }
+            if c.contains(".inc(") && inc_at.is_none() {
+                inc_at = Some(l);
+            }
+        }
+        if let Some(inc) = inc_at {
+            if gate_at.map(|g| g > inc).unwrap_or(true) {
+                out.push(Finding::new(
+                    policy::RULE_PROBE,
+                    &f.path,
+                    line,
+                    "tick function increments its counter without checking \
+                     probes_enabled() first"
+                        .to_string(),
+                    policy::HINT_PROBE,
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot_findings(path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile::from_source(path, src)];
+        let mut out = Vec::new();
+        check_hot_regions(&files, false, &mut out);
+        out
+    }
+
+    #[test]
+    fn allocation_inside_region_is_flagged() {
+        let src = "fn f() {\n\
+                   // audit: hot-path begin\n\
+                   let v = Vec::new();\n\
+                   // audit: hot-path end\n\
+                   let w = Vec::new();\n\
+                   }\n";
+        let got = hot_findings("src/solver/dcd.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, "hot-path-alloc");
+        assert_eq!(got[0].line, 3);
+    }
+
+    #[test]
+    fn unbalanced_markers_are_flagged() {
+        let src = "// audit: hot-path begin\nlet x = 1;\n";
+        let got = hot_findings("src/solver/dcd.rs", src);
+        assert!(
+            got.iter().any(|f| f.message.contains("unbalanced")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn required_files_must_have_regions_in_full_mode() {
+        let files = vec![SourceFile::from_source("src/solver/kernel.rs", "fn f() {}\n")];
+        let mut out = Vec::new();
+        check_hot_regions(&files, true, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("no hot-path region"));
+        let mut fixture = Vec::new();
+        check_hot_regions(&files, false, &mut fixture);
+        assert!(fixture.is_empty());
+    }
+
+    #[test]
+    fn ungated_solver_probe_site_is_flagged() {
+        let src = "fn worker() {\n\
+                       crate::obs::probes::solver().updates.inc();\n\
+                   }\n";
+        let files = vec![SourceFile::from_source("src/solver/passcode.rs", src)];
+        let mut out = Vec::new();
+        check_probe_gating(&files, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "probe-gating");
+        assert_eq!(out[0].line, 2);
+
+        let gated = "fn worker() {\n\
+                         let probes_on = crate::obs::probes_enabled();\n\
+                         if probes_on {\n\
+                             crate::obs::probes::solver().updates.inc();\n\
+                         }\n\
+                     }\n";
+        let files = vec![SourceFile::from_source("src/solver/passcode.rs", gated)];
+        let mut out = Vec::new();
+        check_probe_gating(&files, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn ungated_tick_fn_is_flagged() {
+        let src = "pub fn cas_retry_tick() {\n\
+                       CAS_RETRIES.inc();\n\
+                   }\n";
+        let files = vec![SourceFile::from_source("src/obs/probes.rs", src)];
+        let mut out = Vec::new();
+        check_probe_gating(&files, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 1);
+
+        let gated = "pub fn cas_retry_tick() {\n\
+                         if probes_enabled() {\n\
+                             CAS_RETRIES.inc();\n\
+                         }\n\
+                     }\n";
+        let files = vec![SourceFile::from_source("src/obs/probes.rs", gated)];
+        let mut out = Vec::new();
+        check_probe_gating(&files, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,210 @@
+//! `passcode audit` — a static analyzer for this crate's own
+//! concurrency and consistency invariants.
+//!
+//! `cargo test` proves the code computes the right numbers;
+//! [`crate::chk`] explores schedules against the declared memory
+//! models.  What neither can catch is a *well-typed regression of a
+//! design rule*: an innocent `Ordering::SeqCst` that quietly puts a
+//! fence in the wild-kernel loop, a `Mutex` smuggled into `data/`, an
+//! allocation inside the epoch loop PR 5 made allocation-free, a probe
+//! site that re-acquires the registry mutex with telemetry off, or a
+//! second copy of a wire string that will skew on the next version
+//! bump.  Those compile, pass tests, and slowly rot the properties the
+//! paper reproduction argues for — so the crate audits its own source.
+//!
+//! The audit is deliberately low-tech: a per-line lexer
+//! ([`scan::SourceFile`]) that separates code, comments, and string
+//! literals, plus rule passes that are mostly table lookups against
+//! [`policy`].  No syntax tree, no `syn` — same std-only footing as
+//! the rest of the crate, and the rules only need to know *which
+//! tokens appear where*.
+//!
+//! Rule families (ids in parentheses):
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `atomic-ordering`    | per-module ordering allowlists; `SeqCst` banned without an exemption comment; required Acquire/Release publication edges stay present |
+//! | `lock-discipline`    | kernel module trees stay `Mutex`/`RwLock`/`Condvar`-free; `impl LockDiscipline` and raw CAS only in the sanctioned files |
+//! | `hot-path-alloc`     | no allocating tokens inside `// audit: hot-path begin/end` regions; the key kernel files must carry such regions |
+//! | `unsafe-containment` | `*_unchecked` only from the kernel whitelist; every `unsafe {` preceded by `// SAFETY:` |
+//! | `probe-gating`       | telemetry tick fns and solver-side `probes::solver()` uses dominated by the `probes_enabled()` static gate |
+//! | `wire-consistency`   | wire magics defined once as consts; metric names registered once; test/doc metric references resolve |
+//!
+//! Exemptions are in-source and per-site: `// audit: allow(<tag>) —
+//! <why>` on the line or up to two lines above (tags: `seqcst`,
+//! `ordering`, `lock`, `alloc`, `unchecked`, `probe`).  A JSON
+//! baseline (`--baseline`) additionally suppresses known findings by
+//! (rule, file, message) identity — the shipped tree keeps an *empty*
+//! baseline.
+
+pub mod atomics;
+pub mod hotpath;
+pub mod policy;
+pub mod report;
+pub mod scan;
+pub mod unsafety;
+pub mod wire;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use report::{AuditReport, Finding, REPORT_VERSION};
+use scan::SourceFile;
+
+/// What to scan and how hard.
+pub struct AuditConfig {
+    /// Repo or package root; the scanner finds `src/` under it
+    /// directly or via a `rust/` subdirectory.
+    pub root: PathBuf,
+    /// Smoke mode: scan `src/` only (skip tests and docs), for quick
+    /// CI gates.
+    pub smoke: bool,
+}
+
+/// Run the audit over the tree at `cfg.root`.  Returns the number of
+/// files scanned and the raw findings (baseline subtraction happens in
+/// [`AuditReport::new`]).
+pub fn run_audit(cfg: &AuditConfig) -> Result<(usize, Vec<Finding>)> {
+    let package = find_package_root(&cfg.root)?;
+    let src = load_tree(&package, "src")?;
+    anyhow::ensure!(!src.is_empty(), "no .rs files under {}", package.join("src").display());
+    let tests = if cfg.smoke { Vec::new() } else { load_tree(&package, "tests")? };
+    let mut docs = Vec::new();
+    if !cfg.smoke {
+        // EXPERIMENTS.md lives at the repo root, one level above the
+        // cargo package when the crate sits in `rust/`.
+        for dir in [package.as_path(), package.parent().unwrap_or(&package)] {
+            let p = dir.join("EXPERIMENTS.md");
+            if p.is_file() {
+                let text = std::fs::read_to_string(&p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                docs.push(("EXPERIMENTS.md".to_string(), text));
+                break;
+            }
+        }
+    }
+    let scanned = src.len() + tests.len() + docs.len();
+    Ok((scanned, audit_sources(&src, &tests, &docs, true)))
+}
+
+/// Run every rule pass over already-scanned sources.  `full` enables
+/// the whole-tree presence checks (required orderings, required
+/// hot-path regions, wire-string existence) that are meaningless on
+/// fixture snippets; the fixture tests in `tests/audit.rs` pass
+/// `false`.
+pub fn audit_sources(
+    src: &[SourceFile],
+    tests: &[SourceFile],
+    docs: &[(String, String)],
+    full: bool,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    atomics::check_orderings(src, full, &mut out);
+    atomics::check_locks(src, &mut out);
+    hotpath::check_hot_regions(src, full, &mut out);
+    hotpath::check_probe_gating(src, &mut out);
+    unsafety::check_unsafe(src, &mut out);
+    wire::check_wire(src, tests, docs, full, &mut out);
+    out
+}
+
+/// Locate the cargo package under `root`: `root` itself if it has
+/// `src/`, else `root/rust`.
+fn find_package_root(root: &Path) -> Result<PathBuf> {
+    for candidate in [root.to_path_buf(), root.join("rust")] {
+        if candidate.join("src").is_dir() {
+            return Ok(candidate);
+        }
+    }
+    anyhow::bail!("no src/ directory under {} (or its rust/ subdir)", root.display())
+}
+
+/// Scan every `.rs` file under `package/<dir>`, recursively, in
+/// deterministic (sorted) order, with package-relative paths.
+fn load_tree(package: &Path, dir: &str) -> Result<Vec<SourceFile>> {
+    let top = package.join(dir);
+    let mut paths = Vec::new();
+    if top.is_dir() {
+        collect_rs(&top, &mut paths)?;
+    }
+    paths.sort();
+    let mut files = Vec::new();
+    for p in paths {
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(package)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::from_source(&rel, &text));
+    }
+    Ok(files)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn audit_sources_runs_every_rule_family() {
+        // One deliberately rotten file trips rules 1-5; the wire pass
+        // trips on a duplicated magic across two files.
+        let rotten = SourceFile::from_source(
+            "src/solver/helper.rs",
+            "use std::sync::Mutex;\n\
+             fn f(a: &AtomicBool, v: &[f64]) -> f64 {\n\
+             \x20   a.store(true, Ordering::SeqCst);\n\
+             \x20   crate::obs::probes::solver().updates.inc();\n\
+             \x20   // audit: hot-path begin\n\
+             \x20   let s = format!(\"x\");\n\
+             \x20   // audit: hot-path end\n\
+             \x20   unsafe { *v.get_unchecked(0) }\n\
+             }\n\
+             pub const A: &str = \"PDL1\";\n",
+        );
+        let dup = SourceFile::from_source(
+            "src/solver/other.rs",
+            "pub const B: &str = \"PDL1\";\n",
+        );
+        let findings = audit_sources(&[rotten, dup], &[], &[], false);
+        let rules: std::collections::BTreeSet<_> =
+            findings.iter().map(|f| f.rule.as_str()).collect();
+        for rule in [
+            policy::RULE_ATOMIC,
+            policy::RULE_LOCK,
+            policy::RULE_HOTPATH,
+            policy::RULE_UNSAFE,
+            policy::RULE_PROBE,
+            policy::RULE_WIRE,
+        ] {
+            assert!(rules.contains(rule), "missing {rule}: {findings:?}");
+        }
+    }
+
+    #[test]
+    fn package_root_is_found_from_repo_or_package() {
+        let dir = std::env::temp_dir().join("passcode_audit_root");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("rust/src")).unwrap();
+        assert_eq!(find_package_root(&dir).unwrap(), dir.join("rust"));
+        assert_eq!(
+            find_package_root(&dir.join("rust")).unwrap(),
+            dir.join("rust")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,243 @@
+//! The audit's rule book: every allowlist, module scope, banned token,
+//! and fix hint in one place, so a policy change is a table edit — not
+//! a rule-engine edit.
+//!
+//! Paths in these tables are package-relative (`src/...`) prefixes; an
+//! entry ending in `/` scopes a whole module tree, otherwise it names
+//! one file.  The most specific (longest) matching entry wins.
+
+/// Rule id: atomic-ordering allowlist (rule 1).
+pub const RULE_ATOMIC: &str = "atomic-ordering";
+/// Rule id: lock-discipline containment (rule 2).
+pub const RULE_LOCK: &str = "lock-discipline";
+/// Rule id: hot-path allocation freedom (rule 3).
+pub const RULE_HOTPATH: &str = "hot-path-alloc";
+/// Rule id: unsafe containment (rule 4).
+pub const RULE_UNSAFE: &str = "unsafe-containment";
+/// Rule id: probe gating (rule 5).
+pub const RULE_PROBE: &str = "probe-gating";
+/// Rule id: cross-file wire/metric consistency (rule 6).
+pub const RULE_WIRE: &str = "wire-consistency";
+
+/// Memory orderings legal anywhere no stricter entry applies.
+/// `SeqCst` is deliberately absent: PR 6 documented why every
+/// synchronization edge in this crate is Relaxed/Acquire/Release, so a
+/// new `SeqCst` is either an unjustified fence (hot-path cost) or a
+/// misunderstanding — it needs an `audit: allow(seqcst)` comment
+/// saying which.
+pub const ORDERING_DEFAULT: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel"];
+
+/// Stricter per-module ordering allowlists (longest prefix wins).
+///
+/// * `util/atomicf64.rs` — `SharedVec` is all-Relaxed by design: the
+///   PASSCoDe iterates tolerate stale reads (that *is* the algorithm),
+///   and PR 6's checker pins the race behavior the orderings imply.
+/// * `solver/locks.rs` — the spinlock needs exactly Acquire on CAS
+///   success and Release on unlock; everything else is Relaxed.
+/// * `solver/`, `baselines/` — worker-loop flags (stop, epoch
+///   counters) are advisory or joined by `thread::scope`, so Relaxed
+///   is the strongest ordering any site may claim to need.
+pub const ORDERING_POLICIES: &[(&str, &[&str])] = &[
+    ("src/util/atomicf64.rs", &["Relaxed"]),
+    ("src/solver/locks.rs", &["Relaxed", "Acquire", "Release"]),
+    ("src/solver/", &["Relaxed"]),
+    ("src/baselines/", &["Relaxed"]),
+];
+
+/// Orderings whose *presence* is required: publication edges that would
+/// silently become racy if someone "simplified" them to Relaxed.
+/// `serve/registry.rs` publishes model versions via Release store /
+/// Acquire load on the current-version pointer.
+pub const ORDERING_REQUIRED: &[(&str, &[&str])] = &[
+    ("src/serve/registry.rs", &["Acquire", "Release"]),
+];
+
+/// Module trees that must stay free of blocking synchronization
+/// (`Mutex`/`RwLock`/`Condvar`): the training kernels and everything
+/// under them.  Lock-based coordination belongs in the serving/network
+/// layers; kernel mutual exclusion goes through
+/// `solver/locks.rs::acquire_sorted` only.
+pub const LOCK_FREE_MODULES: &[&str] = &[
+    "src/solver/",
+    "src/data/",
+    "src/util/",
+    "src/loss/",
+    "src/eval/",
+    "src/simcore/",
+    "src/baselines/",
+];
+
+/// Files inside [`LOCK_FREE_MODULES`] allowed to implement locking:
+/// the lock table itself.
+pub const LOCK_ALLOWED_FILES: &[&str] = &["src/solver/locks.rs"];
+
+/// Where `impl LockDiscipline` may appear: the production table and
+/// the checker's instrumented twin.
+pub const LOCK_DISCIPLINE_IMPL_FILES: &[&str] = &["src/solver/locks.rs", "src/chk/"];
+
+/// Within `solver/`, raw CAS (`compare_exchange*`) is the spinlock's
+/// private primitive — kernels must lock via `acquire_sorted`, never
+/// roll their own.
+pub const SOLVER_CAS_ALLOWED: &[&str] = &["src/solver/locks.rs"];
+
+/// Tokens that allocate (or reallocate) and are therefore banned
+/// inside `// audit: hot-path begin/end` regions.
+pub const HOT_BANNED_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "vec![",
+    ".to_vec(",
+    "format!(",
+    "String::new(",
+    "String::from(",
+    ".to_string(",
+    ".to_owned(",
+    "Box::new(",
+    ".push(",
+    ".push_str(",
+    "with_capacity(",
+    ".collect(",
+    ".collect::<",
+];
+
+/// Files that must carry at least one marked hot-path region — the
+/// allocation-free zones PR 5 promised.  Deleting the markers would
+/// silently retire the guarantee, so their absence is itself a
+/// finding.
+pub const HOT_REQUIRED_FILES: &[&str] = &[
+    "src/solver/kernel.rs",
+    "src/solver/passcode.rs",
+    "src/solver/dcd.rs",
+    "src/obs/probes.rs",
+    "src/obs/registry.rs",
+];
+
+/// Modules allowed to call `*_unchecked` accessors: the kernel layer,
+/// its two backing primitives, and the checker (whose "unchecked"
+/// twins still bounds-check).
+pub const UNCHECKED_ALLOWED: &[&str] = &[
+    "src/solver/kernel.rs",
+    "src/data/sparse.rs",
+    "src/util/atomicf64.rs",
+    "src/chk/",
+];
+
+/// Registry-publication call paths that must be gated on
+/// `probes_enabled()` (or a local hoist of it) in solver-side code:
+/// `probes::solver()` lazily registers metrics (allocates, takes the
+/// registry mutex), so reaching it from an ungated path would put
+/// locks back on the hot loop.
+pub const PROBE_GATE_TOKENS: &[&str] = &["probes_enabled", "probes_on"];
+
+/// Wire-protocol magic/format strings: each must be defined exactly
+/// once in non-test source, as a `const`/`static`.  Tests and docs may
+/// repeat the literal to pin the format from outside.
+pub const WIRE_STRINGS: &[&str] = &[
+    "PDL1",
+    "PWV1",
+    "passcode-shards-v1",
+    "passcode-trace-v1",
+    "passcode-chk-v1",
+    "passcode-audit-v1",
+];
+
+/// Metric-name suffixes that mark a `passcode_*` token in tests or
+/// docs as a metric *reference* (as opposed to, say, a temp-file
+/// name), which must then resolve against a registered definition.
+pub const METRIC_REF_SUFFIXES: &[&str] = &[
+    "_total",
+    "_count",
+    "_sum",
+    "_bucket",
+    "_seconds",
+    "_qps",
+    "_per_sec",
+    "_ratio",
+    "_epoch",
+    "_alive",
+    "_lag",
+];
+
+/// Test files excluded from metric-reference scanning: the audit's own
+/// fixture file deliberately contains violating snippets.
+pub const WIRE_REF_EXEMPT_FILES: &[&str] = &["tests/audit.rs"];
+
+/// Files excluded from wire-string *definition* scanning: this policy
+/// table must name every wire string, and naming one is not defining
+/// it.
+pub const WIRE_DEF_EXEMPT_FILES: &[&str] = &["src/audit/policy.rs"];
+
+/// Fix hints per rule (shown verbatim in findings).
+pub const HINT_ATOMIC: &str = "use the weakest correct ordering for this module (see \
+     audit::policy::ORDERING_POLICIES) or annotate the site with \
+     `// audit: allow(seqcst) — <why>` / `// audit: allow(ordering) — <why>`";
+/// Fix hint for lock-discipline findings.
+pub const HINT_LOCK: &str = "kernel-side code must stay lock-free: synchronize through \
+     solver/locks.rs::acquire_sorted or move the blocking state out of the kernel \
+     modules (or annotate `// audit: allow(lock) — <why>` for non-kernel-path state)";
+/// Fix hint for hot-path allocation findings.
+pub const HINT_HOTPATH: &str = "hoist the allocation out of the marked epoch-loop region \
+     (reuse a buffer allocated before the loop), or shrink the \
+     `// audit: hot-path begin/end` region if the line is genuinely epoch-boundary code";
+/// Fix hint for unsafe-containment findings.
+pub const HINT_UNSAFE: &str = "keep unchecked accessors inside the kernel whitelist \
+     (audit::policy::UNCHECKED_ALLOWED) and precede every `unsafe` block with a \
+     `// SAFETY:` comment stating the invariant that makes it sound";
+/// Fix hint for probe-gating findings.
+pub const HINT_PROBE: &str = "dominate the probe site with `crate::obs::probes_enabled()` \
+     (hoist it into a `probes_on` local for loops) so the probes-off path stays \
+     allocation- and lock-free";
+/// Fix hint for wire-consistency findings.
+pub const HINT_WIRE: &str = "define the wire string / metric name once as a `const` (or a \
+     single registration site) and reference that definition everywhere else";
+
+/// Whether package-relative `path` matches a table `entry` (exact file
+/// or `.../` prefix).
+pub fn path_matches(path: &str, entry: &str) -> bool {
+    if let Some(prefix) = entry.strip_suffix('/') {
+        path.starts_with(prefix) && path.len() > prefix.len()
+    } else {
+        path == entry
+    }
+}
+
+/// The ordering allowlist for `path`: the longest matching
+/// [`ORDERING_POLICIES`] entry, else [`ORDERING_DEFAULT`].
+pub fn ordering_allowlist(path: &str) -> &'static [&'static str] {
+    ORDERING_POLICIES
+        .iter()
+        .filter(|(entry, _)| path_matches(path, entry))
+        .max_by_key(|(entry, _)| entry.len())
+        .map(|(_, allowed)| *allowed)
+        .unwrap_or(ORDERING_DEFAULT)
+}
+
+/// Whether `path` matches any entry of `table`.
+pub fn in_table(path: &str, table: &[&str]) -> bool {
+    table.iter().any(|entry| path_matches(path, entry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longest_prefix_wins() {
+        assert_eq!(
+            ordering_allowlist("src/solver/locks.rs"),
+            &["Relaxed", "Acquire", "Release"]
+        );
+        assert_eq!(ordering_allowlist("src/solver/passcode.rs"), &["Relaxed"]);
+        assert_eq!(ordering_allowlist("src/net/server.rs"), ORDERING_DEFAULT);
+        assert!(!ordering_allowlist("src/main.rs").contains(&"SeqCst"));
+    }
+
+    #[test]
+    fn path_matching_distinguishes_files_and_trees() {
+        assert!(path_matches("src/chk/trace.rs", "src/chk/"));
+        assert!(!path_matches("src/chk", "src/chk/"));
+        assert!(path_matches("src/solver/locks.rs", "src/solver/locks.rs"));
+        assert!(!path_matches("src/solver/locks.rs", "src/solver/kernel.rs"));
+        assert!(in_table("src/data/shard.rs", LOCK_FREE_MODULES));
+        assert!(!in_table("src/net/server.rs", LOCK_FREE_MODULES));
+    }
+}

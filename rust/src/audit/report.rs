@@ -1,0 +1,231 @@
+//! Machine-readable audit reports.
+//!
+//! Findings round-trip losslessly through the repo's own JSON (the
+//! `chk/report.rs` precedent), so CI can archive `audit_report.json`
+//! as an artifact and diff runs.  A *baseline* report can be
+//! subtracted from a fresh run: baselined findings are acknowledged
+//! debt and do not fail the build, anything new does.  Baseline
+//! identity deliberately ignores the line number — code moving above a
+//! known finding must not resurrect it.
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Report format tag, bumped on breaking layout changes.
+pub const REPORT_VERSION: &str = "passcode-audit-v1";
+
+/// One rule violation at a concrete source location.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    /// Rule identifier (`atomic-ordering`, `lock-discipline`,
+    /// `hot-path-alloc`, `unsafe-containment`, `probe-gating`,
+    /// `wire-consistency`).
+    pub rule: String,
+    /// Package-relative path of the offending file.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What was found.
+    pub message: String,
+    /// How to fix it (or how to register an exemption).
+    pub hint: String,
+}
+
+impl Finding {
+    /// Construct a finding; `rule`/`hint` usually come from
+    /// [`crate::audit::policy`] tables.
+    pub fn new(rule: &str, file: &str, line: usize, message: String, hint: &str) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            message,
+            hint: hint.to_string(),
+        }
+    }
+
+    /// Baseline identity: rule + file + message, line excluded.
+    pub fn baseline_key(&self) -> (String, String, String) {
+        (self.rule.clone(), self.file.clone(), self.message.clone())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(&self.rule)),
+            ("file", Json::str(&self.file)),
+            ("line", Json::num(self.line as f64)),
+            ("message", Json::str(&self.message)),
+            ("hint", Json::str(&self.hint)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Finding> {
+        Ok(Finding {
+            rule: v.get("rule")?.as_str().context("rule")?.to_string(),
+            file: v.get("file")?.as_str().context("file")?.to_string(),
+            line: v.get("line")?.as_usize().context("line")?,
+            message: v.get("message")?.as_str().context("message")?.to_string(),
+            hint: v.get("hint")?.as_str().context("hint")?.to_string(),
+        })
+    }
+}
+
+/// The full `passcode audit` report: scan scope echo + findings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AuditReport {
+    /// Report format tag ([`REPORT_VERSION`]).
+    pub version: String,
+    /// Source files scanned.
+    pub files_scanned: usize,
+    /// Findings suppressed by the baseline.
+    pub baselined: usize,
+    /// Non-baselined findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Whether the tree is clean (no non-baselined findings).
+    pub ok: bool,
+}
+
+impl AuditReport {
+    /// Build a report from raw findings, subtracting `baseline` (a
+    /// previously serialized report) when given.
+    pub fn new(files_scanned: usize, mut findings: Vec<Finding>, baseline: Option<&AuditReport>) -> AuditReport {
+        findings.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+        let mut baselined = 0usize;
+        if let Some(base) = baseline {
+            let known: std::collections::BTreeSet<_> =
+                base.findings.iter().map(|f| f.baseline_key()).collect();
+            findings.retain(|f| {
+                let keep = !known.contains(&f.baseline_key());
+                if !keep {
+                    baselined += 1;
+                }
+                keep
+            });
+        }
+        let ok = findings.is_empty();
+        AuditReport {
+            version: REPORT_VERSION.to_string(),
+            files_scanned,
+            baselined,
+            findings,
+            ok,
+        }
+    }
+
+    /// Serialize for `--json` / baselines / round-tripping.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::str(&self.version)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("baselined", Json::num(self.baselined as f64)),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
+            ),
+            ("ok", Json::Bool(self.ok)),
+        ])
+    }
+
+    /// Deserialize a report previously produced by
+    /// [`AuditReport::to_json`].
+    pub fn from_json(v: &Json) -> Result<AuditReport> {
+        let version = v.get("version")?.as_str().context("version")?.to_string();
+        if version != REPORT_VERSION {
+            anyhow::bail!("unsupported audit report version {version:?}");
+        }
+        let findings = v
+            .get("findings")?
+            .as_arr()?
+            .iter()
+            .map(Finding::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AuditReport {
+            version,
+            files_scanned: v.get("files_scanned")?.as_usize().context("files_scanned")?,
+            baselined: v.get("baselined")?.as_usize().context("baselined")?,
+            findings,
+            ok: v.get("ok")?.as_bool()?,
+        })
+    }
+
+    /// Human-readable summary (the CLI's stdout).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "static audit: {} files scanned, {} finding(s), {} baselined",
+            self.files_scanned,
+            self.findings.len(),
+            self.baselined,
+        );
+        for f in &self.findings {
+            let _ = writeln!(s, "  {}:{} [{}] {}", f.file, f.line, f.rule, f.message);
+            let _ = writeln!(s, "      fix: {}", f.hint);
+        }
+        let _ = writeln!(
+            s,
+            "result: {}",
+            if self.ok { "CLEAN" } else { "VIOLATIONS DETECTED" },
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Finding {
+        Finding::new(
+            "atomic-ordering",
+            "src/solver/passcode.rs",
+            42,
+            "Ordering::SeqCst outside the allowlist".to_string(),
+            "downgrade or add `audit: allow(seqcst)`",
+        )
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = AuditReport::new(7, vec![sample()], None);
+        let back = AuditReport::from_json(&Json::parse(&r.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert!(!back.ok);
+        assert_eq!(back.findings[0].line, 42);
+    }
+
+    #[test]
+    fn baseline_suppresses_by_identity_not_line() {
+        let mut moved = sample();
+        moved.line = 99; // the code drifted down the file
+        let base = AuditReport::new(7, vec![sample()], None);
+        let r = AuditReport::new(7, vec![moved], Some(&base));
+        assert!(r.ok);
+        assert_eq!(r.baselined, 1);
+
+        let mut other = sample();
+        other.message = "a different violation".to_string();
+        let r2 = AuditReport::new(7, vec![other], Some(&base));
+        assert!(!r2.ok, "new findings must not be baselined");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut r = AuditReport::new(0, vec![], None);
+        r.version = "passcode-audit-v0".to_string();
+        assert!(AuditReport::from_json(&r.to_json()).is_err());
+    }
+
+    #[test]
+    fn render_names_rule_file_line() {
+        let r = AuditReport::new(1, vec![sample()], None);
+        let text = r.render();
+        assert!(text.contains("src/solver/passcode.rs:42"));
+        assert!(text.contains("[atomic-ordering]"));
+        assert!(text.contains("VIOLATIONS DETECTED"));
+    }
+}

@@ -1,0 +1,390 @@
+//! Line-preserving Rust source scanner — the lexical substrate every
+//! audit rule reads.
+//!
+//! In the style of `chk/`, this is a purpose-built lightweight pass,
+//! not a real parser (no `syn`, no proc-macro machinery): each source
+//! file is split into three parallel per-line channels —
+//!
+//! * **code** — the line with comments removed and string/char literal
+//!   *contents* blanked (the quotes remain), so token scans like
+//!   `Ordering::SeqCst` or `Mutex` never false-positive on prose or on
+//!   the audit's own fixture strings;
+//! * **comments** — the comment text of the line (`//`, `///`, and the
+//!   per-line slices of `/* */` blocks), where the audit looks for its
+//!   region markers, `// SAFETY:` justifications, and
+//!   `// audit: allow(<rule>)` exemptions;
+//! * **strings** — the string-literal values that *start* on the line,
+//!   which the wire-consistency rule reads for magic tags and metric
+//!   names.
+//!
+//! The scanner tracks nested block comments, raw strings (`r"…"`,
+//! `r#"…"#`, any hash depth, with `b` prefixes), escapes, and the
+//! char-literal vs. lifetime ambiguity (`'a'` vs `'a`).
+
+/// One scanned source file: path plus the three per-line channels.
+#[derive(Clone)]
+pub struct SourceFile {
+    /// Path as reported in findings (package-root-relative for real
+    /// scans, whatever the caller chose for fixtures).
+    pub path: String,
+    /// Per-line code channel (comments stripped, literal bodies blanked).
+    pub code: Vec<String>,
+    /// Per-line comment text (empty string when the line has none).
+    pub comments: Vec<String>,
+    /// String-literal values by (1-based) starting line.
+    pub strings: Vec<(usize, String)>,
+}
+
+/// Scanner state across physical lines.
+enum Mode {
+    /// Plain code.
+    Code,
+    /// Inside `/* */`, with the current nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string (escape-aware).
+    Str,
+    /// Inside a raw string, closed by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+impl SourceFile {
+    /// Scan `text` into the per-line channels.  `path` is recorded
+    /// verbatim for findings.
+    pub fn from_source(path: &str, text: &str) -> SourceFile {
+        let mut code = Vec::new();
+        let mut comments = Vec::new();
+        let mut strings = Vec::new();
+        let mut mode = Mode::Code;
+        let mut cur_string = String::new();
+        let mut string_start = 0usize;
+
+        for (lineno0, line) in text.lines().enumerate() {
+            let lineno = lineno0 + 1;
+            let mut code_line = String::new();
+            let mut comment_line = String::new();
+            let bytes: Vec<char> = line.chars().collect();
+            let mut i = 0usize;
+            while i < bytes.len() {
+                let c = bytes[i];
+                match mode {
+                    Mode::Block(depth) => {
+                        if c == '*' && bytes.get(i + 1) == Some(&'/') {
+                            i += 2;
+                            if depth == 1 {
+                                mode = Mode::Code;
+                            } else {
+                                mode = Mode::Block(depth - 1);
+                            }
+                        } else if c == '/' && bytes.get(i + 1) == Some(&'*') {
+                            mode = Mode::Block(depth + 1);
+                            i += 2;
+                        } else {
+                            comment_line.push(c);
+                            i += 1;
+                        }
+                    }
+                    Mode::Str => {
+                        if c == '\\' {
+                            // Keep the escape pair out of the blanked
+                            // code but inside the recorded value.
+                            if let Some(&n) = bytes.get(i + 1) {
+                                cur_string.push(c);
+                                cur_string.push(n);
+                                i += 2;
+                            } else {
+                                cur_string.push(c);
+                                i += 1;
+                            }
+                        } else if c == '"' {
+                            code_line.push('"');
+                            strings.push((string_start, std::mem::take(&mut cur_string)));
+                            mode = Mode::Code;
+                            i += 1;
+                        } else {
+                            cur_string.push(c);
+                            i += 1;
+                        }
+                    }
+                    Mode::RawStr(hashes) => {
+                        if c == '"' {
+                            let mut ok = true;
+                            for k in 0..hashes as usize {
+                                if bytes.get(i + 1 + k) != Some(&'#') {
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                            if ok {
+                                code_line.push('"');
+                                strings.push((string_start, std::mem::take(&mut cur_string)));
+                                mode = Mode::Code;
+                                i += 1 + hashes as usize;
+                                continue;
+                            }
+                        }
+                        cur_string.push(c);
+                        i += 1;
+                    }
+                    Mode::Code => {
+                        if c == '/' && bytes.get(i + 1) == Some(&'/') {
+                            comment_line.push_str(&line[char_byte_offset(line, i + 2)..]);
+                            break; // rest of the line is a comment
+                        } else if c == '/' && bytes.get(i + 1) == Some(&'*') {
+                            mode = Mode::Block(1);
+                            i += 2;
+                        } else if c == '"' {
+                            code_line.push('"');
+                            string_start = lineno;
+                            cur_string.clear();
+                            mode = Mode::Str;
+                            i += 1;
+                        } else if c == 'r'
+                            && !prev_is_ident(&code_line)
+                            && raw_str_hashes(&bytes[i..]).is_some()
+                        {
+                            let hashes = raw_str_hashes(&bytes[i..]).unwrap();
+                            code_line.push('"');
+                            string_start = lineno;
+                            cur_string.clear();
+                            mode = Mode::RawStr(hashes);
+                            i += 2 + hashes as usize; // r, #s, "
+                        } else if c == '\'' {
+                            // Char literal vs lifetime: a literal is
+                            // `'x'` or `'\…'`; a lifetime never has a
+                            // closing quote right after its first char.
+                            if bytes.get(i + 1) == Some(&'\\') {
+                                // escaped char literal: skip to close
+                                let mut j = i + 2;
+                                while j < bytes.len() && bytes[j] != '\'' {
+                                    j += 1;
+                                }
+                                code_line.push_str("' '");
+                                i = j + 1;
+                            } else if bytes.get(i + 2) == Some(&'\'') {
+                                code_line.push_str("' '");
+                                i += 3;
+                            } else {
+                                code_line.push(c); // lifetime tick
+                                i += 1;
+                            }
+                        } else {
+                            code_line.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            // A string spanning a line break keeps accumulating; record
+            // the break so multi-line literals stay faithful.
+            if matches!(mode, Mode::Str | Mode::RawStr(_)) {
+                cur_string.push('\n');
+            }
+            code.push(code_line);
+            comments.push(comment_line);
+        }
+        SourceFile { path: path.to_string(), code, comments, strings }
+    }
+
+    /// Number of physical lines.
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Whether the file scanned to zero lines.
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+
+    /// Whether (1-based) `line` or either of the two lines above it
+    /// carries an `audit: allow(<tag>)` exemption comment.
+    pub fn exempted(&self, line: usize, tag: &str) -> bool {
+        let needle = format!("audit: allow({tag})");
+        let lo = line.saturating_sub(3);
+        (lo..line)
+            .filter_map(|l| self.comments.get(l))
+            .any(|c| c.contains(&needle))
+    }
+
+    /// (1-based) line of the first `#[cfg(test)]` attribute, or
+    /// `usize::MAX` when the file has no test module.  By repo
+    /// convention test modules sit at the end of the file, so
+    /// everything at or past this line is test code (where, e.g., wire
+    /// literals may be repeated to pin a format).
+    pub fn test_start(&self) -> usize {
+        self.code
+            .iter()
+            .position(|l| l.contains("#[cfg(test)]"))
+            .map(|p| p + 1)
+            .unwrap_or(usize::MAX)
+    }
+
+    /// (1-based) start line of the function enclosing (1-based)
+    /// `line`: the nearest preceding line that declares a `fn` at an
+    /// indentation of at most 4 spaces (top-level or impl-level — the
+    /// repo's style never nests named fns deeper).  Returns 1 when no
+    /// declaration precedes the line.
+    pub fn fn_start(&self, line: usize) -> usize {
+        (0..line.min(self.len()))
+            .rev()
+            .find(|&l| {
+                let c = &self.code[l];
+                let trimmed = c.trim_start();
+                let indent = c.len() - trimmed.len();
+                indent <= 4
+                    && (trimmed.starts_with("fn ")
+                        || trimmed.starts_with("pub fn ")
+                        || trimmed.starts_with("pub(crate) fn ")
+                        || trimmed.starts_with("unsafe fn ")
+                        || trimmed.starts_with("pub unsafe fn ")
+                        || trimmed.starts_with("pub(crate) unsafe fn "))
+            })
+            .map(|l| l + 1)
+            .unwrap_or(1)
+    }
+
+    /// The `// audit: hot-path begin` / `end` regions of the file, as
+    /// inclusive (1-based) line ranges.  An unclosed `begin` extends to
+    /// the end of the file (the audit reports that separately).
+    pub fn hot_regions(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut open: Option<usize> = None;
+        for (l0, c) in self.comments.iter().enumerate() {
+            // Markers are whole-line comments; prose *mentioning* a
+            // marker (docs, hints) never starts the comment with it.
+            let c = c.trim_start();
+            if c.starts_with("audit: hot-path begin") {
+                open.get_or_insert(l0 + 1);
+            } else if c.starts_with("audit: hot-path end") {
+                if let Some(start) = open.take() {
+                    out.push((start, l0 + 1));
+                }
+            }
+        }
+        if let Some(start) = open {
+            out.push((start, self.len()));
+        }
+        out
+    }
+
+    /// Whether (1-based) `line` falls inside a hot-path region.
+    pub fn in_hot_region(&self, line: usize, regions: &[(usize, usize)]) -> bool {
+        regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// Byte offset of char index `i` in `line` (the scanner walks chars,
+/// slices need bytes).
+fn char_byte_offset(line: &str, i: usize) -> usize {
+    line.char_indices().nth(i).map(|(b, _)| b).unwrap_or(line.len())
+}
+
+/// Whether the accumulated code line ends in an identifier char — used
+/// to keep `crate::r#fn`-style and `for r in` tokens from being taken
+/// for a raw-string prefix.
+fn prev_is_ident(code_line: &str) -> bool {
+    code_line
+        .chars()
+        .last()
+        .map(|c| c.is_alphanumeric() || c == '_')
+        .unwrap_or(false)
+}
+
+/// If `chars` starts a raw string (`r"`, `r#"`, `br"`, ... — caller
+/// has already matched the leading `r`), the number of `#`s; else None.
+fn raw_str_hashes(chars: &[char]) -> Option<u32> {
+    debug_assert_eq!(chars.first(), Some(&'r'));
+    let mut hashes = 0u32;
+    let mut k = 1usize;
+    while chars.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    (chars.get(k) == Some(&'"')).then_some(hashes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_and_collected() {
+        let f = SourceFile::from_source(
+            "t.rs",
+            "let x = 1; // trailing\n/* block\nstill block */ code();\n",
+        );
+        assert_eq!(f.code[0], "let x = 1; ");
+        assert_eq!(f.comments[0], " trailing");
+        assert_eq!(f.code[1], "");
+        assert!(f.comments[1].contains("block"));
+        assert!(f.code[2].contains("code();"));
+    }
+
+    #[test]
+    fn string_bodies_are_blanked_but_recorded() {
+        let f = SourceFile::from_source(
+            "t.rs",
+            "let s = \"Mutex::new // not a comment\";\nlet r = r#\"SeqCst\"#;\n",
+        );
+        assert!(!f.code[0].contains("Mutex"));
+        assert!(!f.code[0].contains("not a comment"));
+        assert!(!f.code[1].contains("SeqCst"));
+        assert_eq!(f.strings[0], (1, "Mutex::new // not a comment".to_string()));
+        assert_eq!(f.strings[1], (2, "SeqCst".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_disambiguate() {
+        let f = SourceFile::from_source(
+            "t.rs",
+            "fn f<'a>(x: &'a str) -> char { '\"' }\nlet c = 'y';\n",
+        );
+        // The quote char literal must not open a string.
+        assert!(f.strings.is_empty());
+        assert!(f.code[0].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let f = SourceFile::from_source("t.rs", "/* a /* b */ still */ code();\n");
+        assert!(f.code[0].contains("code();"));
+        assert!(!f.code[0].contains("still"));
+    }
+
+    #[test]
+    fn exemptions_look_up_to_two_lines_back() {
+        let src = "// audit: allow(seqcst) — why\nlet a = 1;\nlet b = 2;\nlet c = 3;\n";
+        let f = SourceFile::from_source("t.rs", src);
+        assert!(f.exempted(1, "seqcst"));
+        assert!(f.exempted(2, "seqcst"));
+        assert!(f.exempted(3, "seqcst"));
+        assert!(!f.exempted(4, "seqcst"));
+        assert!(!f.exempted(2, "lock"));
+    }
+
+    #[test]
+    fn hot_regions_pair_markers() {
+        let src = "a();\n// audit: hot-path begin\nb();\n// audit: hot-path end\nc();\n";
+        let f = SourceFile::from_source("t.rs", src);
+        assert_eq!(f.hot_regions(), vec![(2, 4)]);
+        let r = f.hot_regions();
+        assert!(f.in_hot_region(3, &r));
+        assert!(!f.in_hot_region(5, &r));
+    }
+
+    #[test]
+    fn fn_start_finds_enclosing_declaration() {
+        let src = "fn outer() {\n    let x = 1;\n}\n\npub fn later() {\n    x();\n}\n";
+        let f = SourceFile::from_source("t.rs", src);
+        assert_eq!(f.fn_start(2), 1);
+        assert_eq!(f.fn_start(6), 5);
+    }
+
+    #[test]
+    fn test_start_marks_cfg_test() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {}\n";
+        let f = SourceFile::from_source("t.rs", src);
+        assert_eq!(f.test_start(), 2);
+        let none = SourceFile::from_source("t.rs", "fn a() {}\n");
+        assert_eq!(none.test_start(), usize::MAX);
+    }
+}

@@ -1,0 +1,147 @@
+//! Rule 4: unsafe containment.
+//!
+//! Two checks keep `unsafe` auditable:
+//!
+//! 1. `*_unchecked` accessors may only be called from the kernel
+//!    whitelist ([`crate::audit::policy::UNCHECKED_ALLOWED`]) — the
+//!    modules whose bounds invariants the kernel docs actually argue.
+//! 2. Every `unsafe {` block must be preceded by a `// SAFETY:`
+//!    comment (on the same line, or in the contiguous comment block
+//!    directly above) stating the invariant that makes it sound.
+
+use super::policy;
+use super::report::Finding;
+use super::scan::SourceFile;
+
+/// Run rule 4 over `files`.
+pub fn check_unsafe(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        let whitelisted = policy::in_table(&f.path, policy::UNCHECKED_ALLOWED);
+        for (l0, code) in f.code.iter().enumerate() {
+            let line = l0 + 1;
+            if !whitelisted
+                && code.contains("_unchecked(")
+                && !f.exempted(line, "unchecked")
+            {
+                out.push(Finding::new(
+                    policy::RULE_UNSAFE,
+                    &f.path,
+                    line,
+                    "unchecked accessor outside the kernel whitelist".to_string(),
+                    policy::HINT_UNSAFE,
+                ));
+            }
+            if code.contains("unsafe {") && !has_safety_comment(f, line) {
+                out.push(Finding::new(
+                    policy::RULE_UNSAFE,
+                    &f.path,
+                    line,
+                    "unsafe block without a `// SAFETY:` comment".to_string(),
+                    policy::HINT_UNSAFE,
+                ));
+            }
+        }
+    }
+}
+
+/// Whether the `unsafe {` on `line` is covered by a SAFETY comment:
+/// on the line itself, or anywhere in the contiguous run of
+/// comment-only lines directly above it (multi-line SAFETY arguments
+/// are common; see `serve/registry.rs`).
+fn has_safety_comment(f: &SourceFile, line: usize) -> bool {
+    if f.comments[line - 1].contains("SAFETY") {
+        return true;
+    }
+    let mut l = line - 1; // 1-based line above
+    while l >= 1 {
+        let comment = &f.comments[l - 1];
+        let code_empty = f.code[l - 1].trim().is_empty();
+        if !code_empty {
+            break; // hit a code line: comment block ended
+        }
+        if comment.contains("SAFETY") {
+            return true;
+        }
+        if comment.trim().is_empty() {
+            break; // blank line ends the contiguous block
+        }
+        l -= 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings_for(path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile::from_source(path, src)];
+        let mut out = Vec::new();
+        check_unsafe(&files, &mut out);
+        out
+    }
+
+    #[test]
+    fn unchecked_outside_whitelist_is_flagged() {
+        let bad = findings_for(
+            "src/net/server.rs",
+            "fn f(v: &[f64]) -> f64 { unsafe { *v.get_unchecked(0) } }\n",
+        );
+        // Two findings: unchecked outside whitelist AND missing SAFETY.
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        assert!(bad.iter().all(|f| f.rule == "unsafe-containment"));
+
+        let ok = findings_for(
+            "src/solver/kernel.rs",
+            "// SAFETY: idx < v.len() by construction of the shard plan.\n\
+             fn f(v: &[f64]) -> f64 { unsafe { *v.get_unchecked(0) } }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn unsafe_block_needs_safety_comment() {
+        let bad = findings_for(
+            "src/solver/kernel.rs",
+            "fn f(p: *const f64) -> f64 { unsafe { *p } }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn multiline_safety_block_above_counts() {
+        let ok = findings_for(
+            "src/solver/kernel.rs",
+            "fn f(p: *const f64) -> f64 {\n\
+             \x20   // SAFETY: the pointer comes from a live SharedVec whose\n\
+             \x20   // backing allocation outlives this call; alignment is\n\
+             \x20   // guaranteed by Vec<f64>.\n\
+             \x20   unsafe { *p }\n\
+             }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn blank_line_breaks_the_safety_link() {
+        let bad = findings_for(
+            "src/solver/kernel.rs",
+            "fn f(p: *const f64) -> f64 {\n\
+             \x20   // SAFETY: stale comment about something else.\n\
+             \n\
+             \x20   unsafe { *p }\n\
+             }\n",
+        );
+        assert_eq!(bad.len(), 1, "{bad:?}");
+    }
+
+    #[test]
+    fn same_line_safety_counts() {
+        let ok = findings_for(
+            "src/solver/kernel.rs",
+            "fn f(p: *const f64) -> f64 { unsafe { *p } // SAFETY: p is valid\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+}

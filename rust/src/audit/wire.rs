@@ -1,0 +1,343 @@
+//! Rule 6: cross-file wire/metric consistency.
+//!
+//! Two families of shared names cross file (and process) boundaries:
+//!
+//! * **Wire strings** — protocol magics and format tags
+//!   ([`crate::audit::policy::WIRE_STRINGS`]).  Each must be defined
+//!   exactly once in non-test source, as a `const`/`static`; a second
+//!   inline copy is a future version-skew bug.  Tests and docs may
+//!   repeat the literal: that is how the format is pinned from
+//!   outside.
+//! * **Metric names** — every `passcode_*` name registered with the
+//!   metrics registry.  A name may only be registered from one file,
+//!   and every metric reference in tests or `EXPERIMENTS.md` must
+//!   resolve against a registered name (directly, via the histogram
+//!   `_count`/`_sum`/`_bucket` series, or as a `passcode_x_*` family
+//!   prefix).  This keeps the docs' scrape examples and the tests'
+//!   assertions from drifting away from what the binary actually
+//!   exports.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::policy;
+use super::report::Finding;
+use super::scan::SourceFile;
+
+/// Run rule 6.  `src` is non-test crate source, `tests` the
+/// integration-test files, `docs` raw (path, text) documents such as
+/// `EXPERIMENTS.md`.  `full` enables the presence checks that only
+/// make sense on the whole tree.
+pub fn check_wire(
+    src: &[SourceFile],
+    tests: &[SourceFile],
+    docs: &[(String, String)],
+    full: bool,
+    out: &mut Vec<Finding>,
+) {
+    check_wire_strings(src, full, out);
+    let defs = metric_definitions(src, out);
+    check_metric_refs(&defs, tests, docs, out);
+}
+
+/// Wire-string uniqueness: one `const`/`static` definition per magic.
+fn check_wire_strings(src: &[SourceFile], full: bool, out: &mut Vec<Finding>) {
+    for wire in policy::WIRE_STRINGS {
+        // (file, line, is_const_line) for every non-test exact literal.
+        let mut sites: Vec<(&str, usize, bool)> = Vec::new();
+        for f in src {
+            if policy::in_table(&f.path, policy::WIRE_DEF_EXEMPT_FILES) {
+                continue; // the policy table names the strings, by design
+            }
+            let test_start = f.test_start();
+            for (line, value) in &f.strings {
+                if *line >= test_start || value != wire {
+                    continue;
+                }
+                let code = &f.code[line - 1];
+                sites.push((&f.path, *line, code.contains("const") || code.contains("static")));
+            }
+        }
+        sites.sort();
+        if sites.is_empty() {
+            if full {
+                out.push(Finding::new(
+                    policy::RULE_WIRE,
+                    "src",
+                    1,
+                    format!("wire string {wire:?} has no definition anywhere in src/"),
+                    policy::HINT_WIRE,
+                ));
+            }
+            continue;
+        }
+        if sites.len() > 1 {
+            for (file, line, _) in &sites[1..] {
+                out.push(Finding::new(
+                    policy::RULE_WIRE,
+                    file,
+                    *line,
+                    format!(
+                        "wire string {wire:?} duplicated (canonical definition at {}:{})",
+                        sites[0].0, sites[0].1
+                    ),
+                    policy::HINT_WIRE,
+                ));
+            }
+        } else if !sites[0].2 {
+            out.push(Finding::new(
+                policy::RULE_WIRE,
+                sites[0].0,
+                sites[0].1,
+                format!("wire string {wire:?} inlined at its only use — hoist to a const"),
+                policy::HINT_WIRE,
+            ));
+        }
+    }
+}
+
+/// Collect `passcode_*` metric names registered in non-test source
+/// (the first such string within 3 lines of a `counter(` / `gauge(` /
+/// `histogram(` call), flagging names registered from multiple files.
+fn metric_definitions(src: &[SourceFile], out: &mut Vec<Finding>) -> BTreeSet<String> {
+    let mut owners: BTreeMap<String, Vec<(String, usize)>> = BTreeMap::new();
+    for f in src {
+        let test_start = f.test_start();
+        for (l0, code) in f.code.iter().enumerate() {
+            let line = l0 + 1;
+            if line >= test_start {
+                break;
+            }
+            if !(code.contains("counter(") || code.contains("gauge(") || code.contains("histogram("))
+            {
+                continue;
+            }
+            let name = f
+                .strings
+                .iter()
+                .filter(|(l, _)| *l >= line && *l <= line + 3)
+                .filter_map(|(_, v)| v.starts_with("passcode_").then(|| base_name(v)))
+                .next();
+            if let Some(name) = name {
+                owners.entry(name).or_default().push((f.path.clone(), line));
+            }
+        }
+    }
+    for (name, sites) in &owners {
+        let files: BTreeSet<_> = sites.iter().map(|(f, _)| f.as_str()).collect();
+        if files.len() > 1 {
+            for (file, line) in &sites[1..] {
+                out.push(Finding::new(
+                    policy::RULE_WIRE,
+                    file,
+                    *line,
+                    format!(
+                        "metric {name:?} registered from multiple files (first at {}:{})",
+                        sites[0].0, sites[0].1
+                    ),
+                    policy::HINT_WIRE,
+                ));
+            }
+        }
+    }
+    owners.into_keys().collect()
+}
+
+/// The metric base name: a registration literal with inline labels
+/// (`passcode_route_qps{{route="x"}}`) strips at the first `{`.
+fn base_name(literal: &str) -> String {
+    literal.split('{').next().unwrap_or(literal).to_string()
+}
+
+/// Resolve every metric *reference* in tests and docs against `defs`.
+fn check_metric_refs(
+    defs: &BTreeSet<String>,
+    tests: &[SourceFile],
+    docs: &[(String, String)],
+    out: &mut Vec<Finding>,
+) {
+    for f in tests {
+        if policy::in_table(&f.path, policy::WIRE_REF_EXEMPT_FILES) {
+            continue; // the audit's own fixtures are deliberately bad
+        }
+        for (line, value) in &f.strings {
+            for token in passcode_tokens(value) {
+                check_one_ref(defs, &f.path, *line, &token, out);
+            }
+        }
+    }
+    for (path, text) in docs {
+        for (l0, raw) in text.lines().enumerate() {
+            for token in passcode_tokens(raw) {
+                check_one_ref(defs, path, l0 + 1, &token, out);
+            }
+        }
+    }
+}
+
+fn check_one_ref(
+    defs: &BTreeSet<String>,
+    file: &str,
+    line: usize,
+    token: &str,
+    out: &mut Vec<Finding>,
+) {
+    let resolved = if token.ends_with('_') {
+        // Family reference like `passcode_train_*` (token keeps the
+        // trailing underscore once the `*` stops the scan).
+        defs.iter().any(|d| d.starts_with(token))
+    } else if policy::METRIC_REF_SUFFIXES.iter().any(|s| token.ends_with(s)) {
+        defs.contains(token)
+            || ["_count", "_sum", "_bucket"].iter().any(|series| {
+                token
+                    .strip_suffix(series)
+                    .map(|base| defs.contains(base))
+                    .unwrap_or(false)
+            })
+    } else {
+        return; // not metric-shaped (temp dir names and the like)
+    };
+    if !resolved {
+        out.push(Finding::new(
+            policy::RULE_WIRE,
+            file,
+            line,
+            format!("metric reference {token:?} does not match any registered metric"),
+            policy::HINT_WIRE,
+        ));
+    }
+}
+
+/// Maximal `passcode_[a-z0-9_]*` runs in `text`.
+fn passcode_tokens(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut tokens = Vec::new();
+    let mut i = 0;
+    while let Some(off) = text[i..].find("passcode_") {
+        let start = i + off;
+        // Skip matches glued to a longer identifier (`my_passcode_x`).
+        if start > 0 && (bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_') {
+            i = start + "passcode_".len();
+            continue;
+        }
+        let mut end = start;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_lowercase() || bytes[end].is_ascii_digit() || bytes[end] == b'_')
+        {
+            end += 1;
+        }
+        tokens.push(text[start..end].to_string());
+        i = end;
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire_findings(files: Vec<SourceFile>, full: bool) -> Vec<Finding> {
+        let mut out = Vec::new();
+        check_wire(&files, &[], &[], full, &mut out);
+        out
+    }
+
+    #[test]
+    fn duplicated_wire_string_is_flagged() {
+        let a = SourceFile::from_source(
+            "src/dist/protocol.rs",
+            "pub const MAGIC: &str = \"PDL1\";\n",
+        );
+        let b = SourceFile::from_source(
+            "src/dist/worker.rs",
+            "fn hdr() -> &'static str { \"PDL1\" }\n",
+        );
+        let got = wire_findings(vec![a, b], false);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, "wire-consistency");
+        assert_eq!(got[0].file, "src/dist/worker.rs");
+        assert!(got[0].message.contains("duplicated"));
+    }
+
+    #[test]
+    fn inline_only_definition_wants_a_const() {
+        let f = SourceFile::from_source(
+            "src/obs/trace.rs",
+            "fn fmt() -> &'static str { \"passcode-trace-v1\" }\n",
+        );
+        let got = wire_findings(vec![f], false);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("hoist"));
+    }
+
+    #[test]
+    fn missing_wire_string_only_flagged_in_full_mode() {
+        let f = SourceFile::from_source("src/lib.rs", "fn f() {}\n");
+        assert!(wire_findings(vec![f.clone()], false).is_empty());
+        let got = wire_findings(vec![f], true);
+        assert_eq!(got.len(), policy::WIRE_STRINGS.len(), "{got:?}");
+    }
+
+    #[test]
+    fn metric_registered_twice_is_flagged() {
+        let a = SourceFile::from_source(
+            "src/obs/probes.rs",
+            "fn f(reg: &R) { reg.counter(\n\"passcode_train_updates_total\",\n\"u\"); }\n",
+        );
+        let b = SourceFile::from_source(
+            "src/net/server.rs",
+            "fn f(reg: &R) { reg.counter(\"passcode_train_updates_total\", \"u\"); }\n",
+        );
+        let got = wire_findings(vec![a, b], false);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("multiple files"));
+    }
+
+    #[test]
+    fn labeled_registration_strips_to_base_name() {
+        let src = SourceFile::from_source(
+            "src/net/router.rs",
+            "fn f(reg: &R, name: &str) {\n\
+             \x20   reg.counter(&format!(\"passcode_route_requests_total{{route=\\\"{name}\\\"}}\"), \"d\");\n\
+             }\n",
+        );
+        let tests = SourceFile::from_source(
+            "tests/net.rs",
+            "fn t() { assert!(s.contains(\"passcode_route_requests_total\")); }\n",
+        );
+        let mut out = Vec::new();
+        check_wire(&[src], &[tests], &[], false, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unresolvable_metric_ref_is_flagged() {
+        let src = SourceFile::from_source(
+            "src/obs/probes.rs",
+            "fn f(reg: &R) { reg.counter(\"passcode_train_updates_total\", \"u\"); }\n",
+        );
+        let tests = SourceFile::from_source(
+            "tests/obs.rs",
+            "fn t() { assert!(s.contains(\"passcode_train_misspelled_total\")); }\n",
+        );
+        let mut out = Vec::new();
+        check_wire(&[src.clone()], &[tests], &[], false, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("misspelled"));
+
+        // Histogram series and family refs resolve; temp names are ignored.
+        let docs = vec![(
+            "EXPERIMENTS.md".to_string(),
+            "scrape `passcode_train_*` and watch the counters".to_string(),
+        )];
+        let tests_ok = SourceFile::from_source(
+            "tests/obs.rs",
+            "fn t() {\n\
+             \x20   let d = std::env::temp_dir().join(\"passcode_obs_it\");\n\
+             \x20   assert!(s.contains(\"passcode_train_updates_total\"));\n\
+             }\n",
+        );
+        let mut out = Vec::new();
+        check_wire(&[src], &[tests_ok], &docs, false, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -160,7 +160,9 @@ impl Asyscd {
                     let mut order = block.clone();
                     let mut local = 0u64;
                     for epoch in 0..opts.epochs {
-                        if stop_ref.load(Ordering::SeqCst) {
+                        // Relaxed: advisory stop flag — one stale epoch
+                        // costs work, not correctness.
+                        if stop_ref.load(Ordering::Relaxed) {
                             break;
                         }
                         if epoch % shuffle_period == 0 {
@@ -185,8 +187,10 @@ impl Asyscd {
                             local += 1;
                         }
                         if t == 0 {
+                            // Relaxed: monotonic progress counter, read
+                            // after the scope join.
                             epochs_done_ref
-                                .store(epoch as u64 + 1, Ordering::SeqCst);
+                                .store(epoch as u64 + 1, Ordering::Relaxed);
                         }
                         if sync_every > 0 && (epoch + 1) % sync_every == 0 {
                             barrier_ref.wait();
@@ -203,7 +207,9 @@ impl Asyscd {
                                         train_secs: train_t.secs(),
                                     };
                                     if !cb(&pr) {
-                                        stop_ref.store(true, Ordering::SeqCst);
+                                        // Relaxed: the barrier below is
+                                        // the synchronization edge.
+                                        stop_ref.store(true, Ordering::Relaxed);
                                     }
                                 }
                             }
@@ -221,7 +227,8 @@ impl Asyscd {
         SolveResult {
             alpha: alpha_v,
             w_hat,
-            epochs_run: epochs_done.load(Ordering::SeqCst) as usize,
+            // Relaxed: thread::scope's join already synchronized.
+            epochs_run: epochs_done.load(Ordering::Relaxed) as usize,
             updates: updates.load(Ordering::Relaxed),
             phases,
         }

@@ -14,6 +14,8 @@
 //! removes; the per-iteration convergence penalty of the (1/K) averaging
 //! is what Figures 2–6(a) show.
 
+// audit: allow(lock) — CoCoA's per-round merge buffer is the point of
+// the baseline (synchronous rounds), not a per-update kernel path.
 use std::sync::Mutex;
 
 use crate::data::Dataset;
@@ -76,6 +78,7 @@ impl Cocoa {
         'outer: for epoch in 0..opts.epochs {
             // Workers run truly in parallel; results land in a mutex'd
             // vec (one entry per block — contention-free in practice).
+            // audit: allow(lock) — epoch-granular merge, not per-update
             let results: Mutex<Vec<(usize, Vec<(usize, f64)>, Vec<f64>, u64)>> =
                 Mutex::new(Vec::with_capacity(k));
             std::thread::scope(|scope| {

@@ -43,6 +43,10 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
         "dist-sim",
         "N in-process dist workers over a loopback coordinator (--workers, --rounds, --max-lag, --smoke)",
     ),
+    (
+        "audit",
+        "statically audit the crate's own sources for concurrency-invariant rot (--json, --baseline, --smoke)",
+    ),
 ];
 
 /// Parsed command line.
@@ -198,6 +202,21 @@ mod tests {
         let err = format!("{:#}", c.check_flags(&["model"]).unwrap_err());
         assert!(err.contains("--bogus"), "{err}");
         assert!(err.contains("serve"), "{err}");
+        assert!(err.contains("commands:"), "{err}");
+    }
+
+    #[test]
+    fn audit_is_a_known_subcommand() {
+        assert!(SUBCOMMANDS.iter().any(|(name, _)| *name == "audit"));
+        let c = Cli::parse(&argv("audit --json out.json --smoke")).unwrap();
+        assert!(c.check_flags(&["json", "baseline", "smoke", "root"]).is_ok());
+        let bad = Cli::parse(&argv("audit --basline b.json")).unwrap();
+        let err = format!(
+            "{:#}",
+            bad.check_flags(&["json", "baseline", "smoke", "root"]).unwrap_err()
+        );
+        assert!(err.contains("--basline"), "{err}");
+        assert!(err.contains("audit"), "{err}");
         assert!(err.contains("commands:"), "{err}");
     }
 

@@ -225,10 +225,33 @@
 //! From the CLI: `passcode check` (or `passcode check --smoke` in CI);
 //! any violation prints the schedule seed that deterministically
 //! replays it.
+//!
+//! # Static analysis quick start
+//!
+//! The checker explores runtime schedules; the static audit ([`audit`])
+//! pins the *source-level* invariants those schedules rely on, and that
+//! `cargo test` cannot see eroding: per-module atomic-ordering
+//! allowlists (`SeqCst` is banned without an in-source exemption),
+//! lock-discipline containment (no `Mutex` in the kernel module trees),
+//! allocation-freedom of the marked hot-path regions, `unsafe`/
+//! `*_unchecked` containment with mandatory `// SAFETY:` comments,
+//! probe gating, and cross-file wire-string/metric-name consistency:
+//!
+//! ```text
+//! passcode audit                         # scan src/, tests/, EXPERIMENTS.md
+//! passcode audit --smoke                 # src/ only (CI bench-smoke gate)
+//! passcode audit --json audit_report.json --baseline audit_baseline.json
+//! ```
+//!
+//! Every finding carries `file:line`, a rule id, and a fix hint; any
+//! non-baselined finding exits nonzero.  The shipped tree is
+//! audit-clean with an **empty** baseline — see EXPERIMENTS.md §Static
+//! analysis for the rule table and the exemption-comment grammar.
 
 #![warn(missing_docs)]
 #![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod audit;
 pub mod baselines;
 pub mod chk;
 pub mod coordinator;

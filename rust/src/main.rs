@@ -33,6 +33,9 @@
 //!                [--dataset rcv1] [--scale 0.05] [--solver passcode-atomic]
 //!                [--threads 1] [--max-lag 8] [--seed 42] [--smoke]
 //!                [--checkpoint w.json] [--manifest shards.json]
+//! passcode audit [--json report.json] [--baseline baseline.json]
+//!                [--root .] [--smoke]   # static source audit, exits
+//!                                       # nonzero on any violation
 //! ```
 
 use std::path::PathBuf;
@@ -82,6 +85,7 @@ fn real_main(args: &[String]) -> Result<()> {
         "dist-coord" => cmd_dist_coord(&cli),
         "dist-work" => cmd_dist_work(&cli),
         "dist-sim" => cmd_dist_sim(&cli),
+        "audit" => cmd_audit(&cli),
         other => bail!("unknown command {other:?}\n\n{}", Cli::usage()),
     }
 }
@@ -352,6 +356,47 @@ fn cmd_check(cli: &Cli) -> Result<()> {
     }
     if !report.ok {
         bail!("memory-model check detected violations (replay seeds above)");
+    }
+    Ok(())
+}
+
+/// Flags `passcode audit` accepts.
+const AUDIT_FLAGS: &[&str] = &["json", "baseline", "smoke", "root"];
+
+/// `passcode audit` — the static analyzer over the crate's own sources
+/// ([`passcode::audit`]): atomic-ordering allowlists, lock-discipline
+/// containment, hot-path allocation freedom, unsafe containment, probe
+/// gating, and cross-file wire/metric consistency.  Complements
+/// `passcode check`: the checker explores runtime schedules, the audit
+/// pins the source-level invariants those schedules rely on.  Any
+/// non-baselined finding exits nonzero.
+fn cmd_audit(cli: &Cli) -> Result<()> {
+    cli.check_flags(AUDIT_FLAGS)?;
+    let cfg = passcode::audit::AuditConfig {
+        root: PathBuf::from(cli.opt_or("root", ".")),
+        smoke: cli.opt("smoke").is_some(),
+    };
+    let (files_scanned, findings) = passcode::audit::run_audit(&cfg)?;
+    let baseline = match cli.opt("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading baseline {path}"))?;
+            let json = passcode::util::Json::parse(&text)
+                .with_context(|| format!("parsing baseline {path}"))?;
+            Some(passcode::audit::AuditReport::from_json(&json)?)
+        }
+        None => None,
+    };
+    let report =
+        passcode::audit::AuditReport::new(files_scanned, findings, baseline.as_ref());
+    print!("{}", report.render());
+    if let Some(path) = cli.opt("json") {
+        std::fs::write(path, report.to_json().to_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("report written to {path}");
+    }
+    if !report.ok {
+        bail!("static audit detected violations (findings above)");
     }
     Ok(())
 }

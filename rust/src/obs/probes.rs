@@ -44,6 +44,8 @@ pub fn set_probes_enabled(on: bool) {
     PROBES_ENABLED.store(on, Ordering::Relaxed);
 }
 
+// audit: hot-path begin — tick fns are called from inside the kernels;
+// with probes off they must be a single relaxed load and branch.
 /// CAS retries in `SharedVec::cas_add` (PASSCoDe-Atomic contention).
 static CAS_RETRIES: Counter = Counter::new();
 /// Contended `LockTable::acquire_sorted` acquisitions (PASSCoDe-Lock).
@@ -85,6 +87,7 @@ pub fn scatter_tick() {
 pub fn scatter_ticks() -> u64 {
     SCATTERS.value()
 }
+// audit: hot-path end
 
 /// Registry handles for the solver telemetry family, registered once
 /// into the global [`crate::obs::registry()`].

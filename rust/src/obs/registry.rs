@@ -76,6 +76,7 @@ impl Counter {
         }
     }
 
+    // audit: hot-path begin — counter record path (ticked from kernels).
     /// Add `n` to this thread's stripe (relaxed; lock- and
     /// allocation-free).
     #[inline]
@@ -95,6 +96,7 @@ impl Counter {
     pub fn set_floor(&self, total: u64) {
         self.floor.fetch_max(total, Ordering::Relaxed);
     }
+    // audit: hot-path end
 
     /// Current value: max(sum of stripes, floor).
     pub fn value(&self) -> u64 {
@@ -123,11 +125,13 @@ impl Gauge {
         Gauge { bits: AtomicU64::new(0) }
     }
 
+    // audit: hot-path begin — gauge record path.
     /// Set the gauge.
     #[inline]
     pub fn set(&self, v: f64) {
         self.bits.store(v.to_bits(), Ordering::Relaxed);
     }
+    // audit: hot-path end
 
     /// Read the gauge.
     pub fn get(&self) -> f64 {
@@ -170,6 +174,7 @@ impl Histogram {
         }
     }
 
+    // audit: hot-path begin — histogram record path (τ and epoch probes).
     /// Record one raw sample (three relaxed atomic adds; no locks, no
     /// allocation).
     #[inline]
@@ -183,6 +188,7 @@ impl Histogram {
         self.sum.fetch_add(raw, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
+    // audit: hot-path end
 
     /// Number of recorded samples.
     pub fn count(&self) -> u64 {

@@ -15,6 +15,9 @@ use std::time::{Duration, Instant};
 
 use crate::util::Json;
 
+/// Trace dump format tag (`GET /v1/trace` and `--trace-out` payloads).
+pub const TRACE_FORMAT: &str = "passcode-trace-v1";
+
 /// One recorded span/event.
 pub struct TraceEvent {
     /// Monotonic sequence number (total events recorded, including
@@ -119,7 +122,7 @@ impl FlightRecorder {
             })
             .collect();
         Json::obj(vec![
-            ("format", Json::str("passcode-trace-v1")),
+            ("format", Json::str(TRACE_FORMAT)),
             ("capacity", Json::num(self.cap as f64)),
             ("dropped", Json::num(ring.dropped as f64)),
             ("events", Json::Arr(events)),

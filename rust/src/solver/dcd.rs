@@ -104,6 +104,8 @@ impl SerialDcd {
                 &order
             };
 
+            // audit: hot-path begin — serial reference epoch loop:
+            // buffers were allocated in init, none may appear here.
             shrink.begin_epoch();
             for &i in visit {
                 let q = qii[i];
@@ -130,6 +132,7 @@ impl SerialDcd {
                 }
             }
             shrink.end_epoch();
+            // audit: hot-path end
             epochs_run = epoch + 1;
 
             if opts.eval_every > 0 && (epoch + 1) % opts.eval_every == 0 {

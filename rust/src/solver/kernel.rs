@@ -137,6 +137,8 @@ impl MemAccess for SharedVec {
     }
 }
 
+// audit: hot-path begin — the fused kernels and unrolled dots below
+// run once per coordinate update; nothing here may allocate.
 /// A memory-model-specific fused update kernel over the shared `w`.
 ///
 /// Implementations are `Copy` handles (a reference or two) so worker
@@ -398,6 +400,7 @@ pub fn dot_dense_shared<M: MemAccess>(q_row: &[f64], a: &M) -> f64 {
     }
     acc
 }
+// audit: hot-path end
 
 /// Re-export of the checked serving-side dot (unknown features score 0),
 /// so kernel users need a single import path.

@@ -256,7 +256,9 @@ impl Passcode {
         });
         phases.add("train", train_t.secs());
 
-        let epochs_run = epochs_done.load(Ordering::SeqCst) as usize;
+        // Relaxed: thread::scope's join synchronizes-with this read, so
+        // the workers' final store is already visible.
+        let epochs_run = epochs_done.load(Ordering::Relaxed) as usize;
         let total_updates = updates.load(Ordering::Relaxed);
         // Publish round totals into the metrics registry here (not in
         // the session layer) so every entry point that reaches the
@@ -328,11 +330,16 @@ fn worker<L: Loss, K: UpdateKernel>(
     let mut tau_countdown = crate::obs::probes::TAU_SAMPLE_EVERY;
 
     for epoch in 0..ctx.opts.epochs {
-        if ctx.stop.load(Ordering::SeqCst) {
+        // Relaxed: the stop flag is advisory — a worker may run one
+        // extra epoch after it flips, which only costs work, never
+        // correctness (α/w stay consistent under any interleaving).
+        if ctx.stop.load(Ordering::Relaxed) {
             break;
         }
         let epoch_t = probes_on.then(Timer::start);
 
+        // audit: hot-path begin — per-epoch update loops: no heap
+        // allocation after the first epoch (buffers are reused).
         if let Some(st) = shrink.as_mut() {
             st.active_indices_into(&mut locals);
             rng.shuffle(&mut locals);
@@ -392,6 +399,8 @@ fn worker<L: Loss, K: UpdateKernel>(
                 });
             }
         }
+        // audit: hot-path end — epoch boundary below may allocate
+        // (progress labels, eval snapshots).
 
         if let Some(timer) = epoch_t {
             let dur = timer.elapsed();
@@ -404,7 +413,9 @@ fn worker<L: Loss, K: UpdateKernel>(
         }
 
         if t == 0 {
-            ctx.epochs_done.store(epoch as u64 + 1, Ordering::SeqCst);
+            // Relaxed: a monotonic progress counter read either after
+            // the scope join (synchronized) or opportunistically.
+            ctx.epochs_done.store(epoch as u64 + 1, Ordering::Relaxed);
         }
 
         // Rendezvous for evaluation snapshots.
@@ -421,7 +432,9 @@ fn worker<L: Loss, K: UpdateKernel>(
                         train_secs: ctx.train_t.secs(),
                     };
                     if !cb(&pr) {
-                        ctx.stop.store(true, Ordering::SeqCst);
+                        // Relaxed: the barrier wait below is the
+                        // synchronization; the flag itself is advisory.
+                        ctx.stop.store(true, Ordering::Relaxed);
                     }
                 }
             }
@@ -439,6 +452,7 @@ fn worker<L: Loss, K: UpdateKernel>(
 /// the convergence analysis charges for (Liu & Wright,
 /// arXiv:1403.3862) — here measured on the free-running schedule,
 /// complementing the serialized-schedule τ from `passcode check`.
+// audit: hot-path begin — wraps every single coordinate update.
 #[inline]
 fn probed_update<K: UpdateKernel, F: FnOnce(f64) -> Option<f64>>(
     kernel: &K,
@@ -462,6 +476,7 @@ fn probed_update<K: UpdateKernel, F: FnOnce(f64) -> Option<f64>>(
     }
     kernel.update(idx, vals, solve);
 }
+// audit: hot-path end
 
 /// Split a slice into `p` nearly-equal chunks (first `rem` get one extra).
 fn chunk_evenly<T>(xs: &[T], p: usize) -> Vec<&[T]> {

@@ -1,0 +1,166 @@
+//! Acceptance tests for the static audit (`passcode::audit`):
+//!
+//! * each of the six rule families fires on a known-bad inline fixture,
+//!   at the exact rule id and line the fixture plants;
+//! * the shipped tree itself scans **clean** with an empty baseline
+//!   (the audit's headline guarantee — this test is the tree's
+//!   tamper-proofing);
+//! * reports round-trip through the repo's JSON and baselines suppress
+//!   by identity, not line number.
+//!
+//! This file is listed in `audit::policy::WIRE_REF_EXEMPT_FILES`: the
+//! fixture snippets below deliberately contain violating tokens.
+
+use passcode::audit::{self, policy, AuditConfig, AuditReport};
+use passcode::audit::scan::SourceFile;
+use passcode::util::Json;
+
+/// Run the rule passes over one fixture file (fixture mode: whole-tree
+/// presence checks off).
+fn scan_one(path: &str, src: &str) -> Vec<audit::Finding> {
+    let files = vec![SourceFile::from_source(path, src)];
+    audit::audit_sources(&files, &[], &[], false)
+}
+
+#[test]
+fn rule_atomic_ordering_fires_at_the_planted_line() {
+    let src = "fn f(a: &std::sync::atomic::AtomicBool) {\n\
+               \x20   a.store(true, Ordering::SeqCst);\n\
+               }\n";
+    let got = scan_one("src/net/server.rs", src);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, policy::RULE_ATOMIC);
+    assert_eq!(got[0].line, 2);
+    assert!(!got[0].hint.is_empty());
+}
+
+#[test]
+fn rule_lock_discipline_fires_at_the_planted_line() {
+    let src = "fn f() {}\n\
+               use std::sync::Mutex;\n";
+    let got = scan_one("src/data/shard.rs", src);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, policy::RULE_LOCK);
+    assert_eq!(got[0].line, 2);
+}
+
+#[test]
+fn rule_hot_path_alloc_fires_at_the_planted_line() {
+    let src = "fn f() {\n\
+               \x20   // audit: hot-path begin\n\
+               \x20   let v = vec![0.0f64; 4];\n\
+               \x20   // audit: hot-path end\n\
+               \x20   drop(v);\n\
+               }\n";
+    let got = scan_one("src/solver/dcd.rs", src);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, policy::RULE_HOTPATH);
+    assert_eq!(got[0].line, 3);
+}
+
+#[test]
+fn rule_unsafe_containment_fires_at_the_planted_line() {
+    let src = "fn f(v: &[f64]) -> f64 {\n\
+               \x20   unsafe { *v.get_unchecked(0) }\n\
+               }\n";
+    let got = scan_one("src/serve/batcher.rs", src);
+    // Both halves of the rule: non-whitelisted module + missing SAFETY.
+    assert_eq!(got.len(), 2, "{got:?}");
+    assert!(got.iter().all(|f| f.rule == policy::RULE_UNSAFE));
+    assert!(got.iter().all(|f| f.line == 2));
+}
+
+#[test]
+fn rule_probe_gating_fires_at_the_planted_line() {
+    let src = "fn worker() {\n\
+               \x20   crate::obs::probes::solver().updates.inc();\n\
+               }\n";
+    let got = scan_one("src/baselines/asyscd.rs", src);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, policy::RULE_PROBE);
+    assert_eq!(got[0].line, 2);
+}
+
+#[test]
+fn rule_wire_consistency_fires_at_the_planted_line() {
+    let a = SourceFile::from_source(
+        "src/dist/protocol.rs",
+        "pub const MAGIC: &str = \"PDL1\";\n",
+    );
+    let b = SourceFile::from_source(
+        "src/dist/worker.rs",
+        "fn hdr() -> &'static str { \"PDL1\" }\n",
+    );
+    let got = audit::audit_sources(&[a, b], &[], &[], false);
+    assert_eq!(got.len(), 1, "{got:?}");
+    assert_eq!(got[0].rule, policy::RULE_WIRE);
+    assert_eq!(got[0].file, "src/dist/worker.rs");
+    assert_eq!(got[0].line, 1);
+}
+
+#[test]
+fn exemption_comments_suppress_per_site() {
+    let src = "// audit: allow(seqcst) — fixture: measuring fence cost\n\
+               fn f(a: &std::sync::atomic::AtomicBool) {\n\
+               \x20   a.store(true, Ordering::SeqCst);\n\
+               }\n";
+    assert!(scan_one("src/net/server.rs", src).is_empty());
+}
+
+/// The headline guarantee: the tree this test ships in is audit-clean
+/// with an *empty* baseline, across the full scan (src + tests + docs,
+/// all presence checks on).
+#[test]
+fn shipped_tree_is_audit_clean_with_empty_baseline() {
+    let cfg = AuditConfig {
+        root: std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+        smoke: false,
+    };
+    let (files_scanned, findings) = audit::run_audit(&cfg).unwrap();
+    assert!(files_scanned > 50, "suspiciously small scan: {files_scanned}");
+    let report = AuditReport::new(files_scanned, findings, None);
+    assert!(
+        report.ok,
+        "shipped tree must be audit-clean:\n{}",
+        report.render()
+    );
+    assert_eq!(report.baselined, 0);
+}
+
+/// Smoke mode still scans src/ and still passes.
+#[test]
+fn smoke_scan_is_clean_too() {
+    let cfg = AuditConfig {
+        root: std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+        smoke: true,
+    };
+    let (_, findings) = audit::run_audit(&cfg).unwrap();
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn report_roundtrips_and_baselines_by_identity() {
+    let src = "fn f(a: &std::sync::atomic::AtomicBool) {\n\
+               \x20   a.store(true, Ordering::SeqCst);\n\
+               }\n";
+    let findings = scan_one("src/net/server.rs", src);
+    let report = AuditReport::new(1, findings.clone(), None);
+    assert!(!report.ok);
+
+    let text = report.to_json().to_pretty();
+    let back = AuditReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+
+    // The same finding at a different line is baselined (identity is
+    // rule+file+message); a different message is not.
+    let mut moved = findings.clone();
+    moved[0].line = 77;
+    let suppressed = AuditReport::new(1, moved, Some(&back));
+    assert!(suppressed.ok);
+    assert_eq!(suppressed.baselined, 1);
+
+    let mut other = findings;
+    other[0].message = "something new".to_string();
+    let fresh = AuditReport::new(1, other, Some(&back));
+    assert!(!fresh.ok);
+}
