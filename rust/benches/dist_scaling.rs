@@ -6,12 +6,15 @@
 //! and the cluster-level backward-error gauge, so a PR that perturbs
 //! the merge math shows up as an objective/gap drift in the K > 1
 //! columns relative to K = 1 (which degenerates to plain warm-started
-//! PASSCoDe with an HTTP round-trip per round).
+//! PASSCoDe with an HTTP round-trip per round).  A final `2*` row runs
+//! K = 2 under the default `--chaos` fault plan: its primal must stay
+//! inside the same 5% envelope, or a merge-robustness regression
+//! (broken idempotence, bad damping) is showing through.
 //!
 //! Run: `cargo bench --bench dist_scaling [-- --smoke]`
 
 use passcode::coordinator::metrics::TextTable;
-use passcode::dist::{run_sim, SimConfig};
+use passcode::dist::{run_sim, FaultPlan, SimConfig};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -30,7 +33,10 @@ fn main() {
         "test_acc", "bwd_err",
     ]);
     let mut gaps = Vec::new();
-    for workers in [1usize, 2, 4] {
+    // The last cell repeats K = 2 under the default chaos plan (plus
+    // op-clock leases): same budget, adversarial transport.
+    let cells: [(usize, bool); 4] = [(1, false), (2, false), (4, false), (2, true)];
+    for (workers, chaos) in cells {
         let report = run_sim(&SimConfig {
             dataset: "rcv1".into(),
             scale,
@@ -38,11 +44,13 @@ fn main() {
             rounds,
             epochs_per_round,
             max_lag: 8,
+            chaos: chaos.then(|| FaultPlan::moderate(42)),
+            lease_ops: if chaos { 64 } else { 0 },
             ..Default::default()
         })
         .expect("dist-sim");
         table.row(&[
-            workers.to_string(),
+            format!("{workers}{}", if chaos { "*" } else { "" }),
             report.merges.to_string(),
             report.rejects.to_string(),
             report.merge_epoch.to_string(),
@@ -51,22 +59,24 @@ fn main() {
             format!("{:.4}", report.test_accuracy),
             format!("{:.3e}", report.backward_error_ratio),
         ]);
-        gaps.push((workers, report.gap, report.primal));
+        gaps.push((workers, chaos, report.gap, report.primal));
     }
     println!("{}", table.render());
+    println!("(* = under the default --chaos fault plan, seed 42, lease-ops 64)\n");
 
     // Soft shape checks (report, don't panic the bench): every K must
-    // end converged, and damped multi-worker merges may trail K = 1
-    // but not blow up the objective.
-    let p1 = gaps[0].2;
+    // end converged, and damped multi-worker merges — even under the
+    // chaos plan — may trail K = 1 but not blow up the objective.
+    let p1 = gaps[0].3;
     println!("shape checks:");
-    for (k, gap, primal) in &gaps {
+    for (k, chaos, gap, primal) in &gaps {
         let ok = gap.is_finite()
             && *gap >= -1e-9
             && (primal - p1).abs() <= 0.05 * p1.abs().max(1.0);
         println!(
-            "  [{}] K={k}: gap {gap:.3e}, primal within 5% of K=1",
-            if ok { "PASS" } else { "FAIL" }
+            "  [{}] K={k}{}: gap {gap:.3e}, primal within 5% of K=1",
+            if ok { "PASS" } else { "FAIL" },
+            if *chaos { " (chaos)" } else { "" }
         );
     }
 }

@@ -132,12 +132,14 @@ pub const PROBE_GATE_TOKENS: &[&str] = &["probes_enabled", "probes_on"];
 /// once in non-test source, as a `const`/`static`.  Tests and docs may
 /// repeat the literal to pin the format from outside.
 pub const WIRE_STRINGS: &[&str] = &[
-    "PDL1",
+    "PDL2",
     "PWV1",
+    "PDH1",
     "passcode-shards-v1",
     "passcode-trace-v1",
     "passcode-chk-v1",
     "passcode-audit-v1",
+    "passcode-faults-v1",
 ];
 
 /// Metric-name suffixes that mark a `passcode_*` token in tests or

@@ -245,11 +245,11 @@ mod tests {
     fn duplicated_wire_string_is_flagged() {
         let a = SourceFile::from_source(
             "src/dist/protocol.rs",
-            "pub const MAGIC: &str = \"PDL1\";\n",
+            "pub const MAGIC: &str = \"PDL2\";\n",
         );
         let b = SourceFile::from_source(
             "src/dist/worker.rs",
-            "fn hdr() -> &'static str { \"PDL1\" }\n",
+            "fn hdr() -> &'static str { \"PDL2\" }\n",
         );
         let got = wire_findings(vec![a, b], false);
         assert_eq!(got.len(), 1, "{got:?}");

@@ -33,7 +33,7 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ),
     (
         "dist-coord",
-        "run the distributed merge coordinator (--addr, --dataset|--dim, --workers, --max-lag, --checkpoint)",
+        "run the distributed merge coordinator (--addr, --dataset|--dim, --workers, --max-lag, --lease-ops, --checkpoint)",
     ),
     (
         "dist-work",
@@ -41,7 +41,7 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ),
     (
         "dist-sim",
-        "N in-process dist workers over a loopback coordinator (--workers, --rounds, --max-lag, --smoke)",
+        "N in-process dist workers over a loopback coordinator (--workers, --rounds, --max-lag, --smoke; --chaos/--faults for seeded fault injection)",
     ),
     (
         "audit",

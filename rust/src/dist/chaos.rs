@@ -1,0 +1,631 @@
+//! Deterministic fault injection for the distributed tier.
+//!
+//! PASSCoDe's claim is robustness to stale, reordered updates; this
+//! module makes that adversary a seeded, replayable input instead of
+//! an accident of thread timing — the distributed analogue of the
+//! schedule-exploring `passcode check` harness.  A [`FaultPlan`]
+//! (JSON, [`FAULTS_FORMAT`], seeds as decimal strings like the
+//! checker's reports) drives a [`FaultyTransport`] wrapped around the
+//! real [`Transport`](super::client::Transport): per-op probabilistic
+//! delay / drop / duplicate / reorder / truncate, timed partition
+//! windows, and an exact per-op fault script for pinning specific
+//! failure sequences in tests.
+//!
+//! Determinism model: each worker's transport owns one
+//! [`Pcg32`](crate::util::Pcg32) stream `(plan.seed, worker)`, and
+//! every decision is a function of (stream state, op index, op kind).
+//! The op index — not wall clock — is the logical time base, so the
+//! same plan over the same request sequence reproduces the identical
+//! fault sequence, byte for byte.  Replays of duplicated pushes are
+//! held in-transport and re-posted at a later op (the reorder window),
+//! which is exactly the duplicate-late-delivery case the
+//! `(worker, boot, round)` idempotence key exists for.
+//!
+//! Every injected fault increments
+//! `passcode_dist_fault_injected_total{kind=...}` and appends a line
+//! to a shared event log that [`run_sim`](super::run_sim) surfaces in
+//! its report — the replay-determinism test compares these logs
+//! across runs.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::{Json, Pcg32};
+
+use super::client::Transport;
+
+/// Fault-plan file format tag, bumped on breaking layout changes.
+pub const FAULTS_FORMAT: &str = "passcode-faults-v1";
+
+/// A loopback partition: ops of `worker` in `from..until` (op index,
+/// half-open) fail before the request leaves the transport.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionSpec {
+    /// Worker whose transport is partitioned.
+    pub worker: u64,
+    /// First op index (1-based) inside the partition.
+    pub from: u64,
+    /// First op index past the partition (`u64::MAX`-ish = forever).
+    pub until: u64,
+}
+
+/// One exact scripted fault: the `nth` op of `kind` on `worker`'s
+/// transport suffers `fault` instead of a probabilistic draw.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScriptedFault {
+    /// Worker whose transport the fault targets.
+    pub worker: u64,
+    /// Op kind: `"push"`, `"pull"`, or `"heartbeat"`.
+    pub kind: String,
+    /// 1-based attempt index within that kind on that transport.
+    pub nth: u64,
+    /// `"drop_request"`, `"drop_response"`, `"delay"`, `"truncate"`,
+    /// or `"dup"`.
+    pub fault: String,
+}
+
+/// A seeded, serializable chaos schedule (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; worker `i`'s transport draws from stream
+    /// `Pcg32::new(seed, i)`.
+    pub seed: u64,
+    /// Per-op probability of an injected delay.
+    pub delay_prob: f64,
+    /// Upper bound (inclusive, milliseconds) of an injected delay.
+    pub delay_max_ms: u64,
+    /// Per-op probability the op is dropped (request or response,
+    /// an even coin decides which).
+    pub drop_prob: f64,
+    /// Per-push probability the accepted push is replayed later.
+    pub dup_prob: f64,
+    /// Max op-index gap a held replay may be deferred by (≥ 1).
+    pub reorder_window: u64,
+    /// Per-op probability the response body is truncated.
+    pub truncate_prob: f64,
+    /// Timed partition windows.
+    pub partitions: Vec<PartitionSpec>,
+    /// Exact scripted faults (win over probabilistic draws).
+    pub script: Vec<ScriptedFault>,
+}
+
+impl FaultPlan {
+    /// A benign plan: no probabilistic faults, no partitions, no
+    /// script.  The identity element — useful as a base to extend.
+    pub fn quiet(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            delay_prob: 0.0,
+            delay_max_ms: 0,
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            reorder_window: 1,
+            truncate_prob: 0.0,
+            partitions: Vec::new(),
+            script: Vec::new(),
+        }
+    }
+
+    /// The default `--chaos` profile: moderate probabilistic noise on
+    /// every fault axis, plus one scripted dropped push response so a
+    /// smoke run is guaranteed to exercise the idempotent-retry path
+    /// (and the `passcode_dist_fault_*` family is provably non-empty).
+    pub fn moderate(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            delay_prob: 0.10,
+            delay_max_ms: 2,
+            drop_prob: 0.05,
+            dup_prob: 0.15,
+            reorder_window: 3,
+            truncate_prob: 0.05,
+            partitions: Vec::new(),
+            script: vec![ScriptedFault {
+                worker: 0,
+                kind: "push".into(),
+                nth: 2,
+                fault: "drop_response".into(),
+            }],
+        }
+    }
+
+    /// Serialize (seeds and op indices as decimal strings, like the
+    /// checker's `passcode-chk-v1` reports — they exceed 2^53).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(FAULTS_FORMAT)),
+            ("seed", u64_str(self.seed)),
+            ("delay_prob", Json::num(self.delay_prob)),
+            ("delay_max_ms", u64_str(self.delay_max_ms)),
+            ("drop_prob", Json::num(self.drop_prob)),
+            ("dup_prob", Json::num(self.dup_prob)),
+            ("reorder_window", u64_str(self.reorder_window)),
+            ("truncate_prob", Json::num(self.truncate_prob)),
+            (
+                "partitions",
+                Json::Arr(
+                    self.partitions
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("worker", u64_str(p.worker)),
+                                ("from", u64_str(p.from)),
+                                ("until", u64_str(p.until)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "script",
+                Json::Arr(
+                    self.script
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("worker", u64_str(s.worker)),
+                                ("kind", Json::str(&s.kind)),
+                                ("nth", u64_str(s.nth)),
+                                ("fault", Json::str(&s.fault)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a plan; validates the format tag, probability ranges, and
+    /// fault/kind vocabularies.
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let format = j.get("format")?.as_str()?;
+        ensure!(format == FAULTS_FORMAT, "unsupported fault-plan format {format:?}");
+        let mut plan = FaultPlan {
+            seed: parse_u64(j.get("seed")?, "seed")?,
+            delay_prob: j.get("delay_prob")?.as_f64()?,
+            delay_max_ms: parse_u64(j.get("delay_max_ms")?, "delay_max_ms")?,
+            drop_prob: j.get("drop_prob")?.as_f64()?,
+            dup_prob: j.get("dup_prob")?.as_f64()?,
+            reorder_window: parse_u64(j.get("reorder_window")?, "reorder_window")?,
+            truncate_prob: j.get("truncate_prob")?.as_f64()?,
+            partitions: Vec::new(),
+            script: Vec::new(),
+        };
+        for p in [plan.delay_prob, plan.drop_prob, plan.dup_prob, plan.truncate_prob] {
+            ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+        }
+        for part in j.get("partitions")?.as_arr()? {
+            let spec = PartitionSpec {
+                worker: parse_u64(part.get("worker")?, "partition worker")?,
+                from: parse_u64(part.get("from")?, "partition from")?,
+                until: parse_u64(part.get("until")?, "partition until")?,
+            };
+            ensure!(spec.from <= spec.until, "partition from {} > until {}", spec.from, spec.until);
+            plan.partitions.push(spec);
+        }
+        for s in j.get("script")?.as_arr()? {
+            let fault = ScriptedFault {
+                worker: parse_u64(s.get("worker")?, "script worker")?,
+                kind: s.get("kind")?.as_str()?.to_string(),
+                nth: parse_u64(s.get("nth")?, "script nth")?,
+                fault: s.get("fault")?.as_str()?.to_string(),
+            };
+            match fault.kind.as_str() {
+                "push" | "pull" | "heartbeat" => {}
+                other => bail!("unknown scripted op kind {other:?}"),
+            }
+            match fault.fault.as_str() {
+                "drop_request" | "drop_response" | "delay" | "truncate" | "dup" => {}
+                other => bail!("unknown scripted fault {other:?}"),
+            }
+            ensure!(fault.nth >= 1, "script nth is 1-based, got 0");
+            plan.script.push(fault);
+        }
+        Ok(plan)
+    }
+
+    /// Write the plan to `path` as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("write fault plan {}", path.display()))
+    }
+
+    /// Load a plan from `path`.
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read fault plan {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parse fault plan {}", path.display()))
+    }
+}
+
+fn u64_str(v: u64) -> Json {
+    Json::str(&v.to_string())
+}
+
+fn parse_u64(v: &Json, what: &str) -> Result<u64> {
+    let s = v.as_str().with_context(|| format!("{what}: expected decimal string"))?;
+    s.parse::<u64>().with_context(|| format!("{what}: bad u64 {s:?}"))
+}
+
+/// The shared, append-only record of every injected fault, in
+/// injection order.  One log spans all workers' transports so the
+/// replay-determinism test can compare whole runs.
+pub type FaultLog = Arc<Mutex<Vec<String>>>;
+
+/// A replayed push held for later delivery.
+struct HeldReplay {
+    due_op: u64,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// A [`Transport`] that injects the plan's faults around an inner
+/// transport (see module docs for the decision order per op).
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: Arc<FaultPlan>,
+    worker: u64,
+    rng: Pcg32,
+    /// 1-based op index — the transport's logical clock.
+    op: u64,
+    /// 1-based per-kind attempt counters, indexed by [`op_kind`].
+    attempts: [u64; 3],
+    held: Vec<HeldReplay>,
+    log: FaultLog,
+}
+
+/// Classify a dist-plane path for fault purposes.  `None` means the
+/// op is harness introspection (`/v1/dist/stats`, `/metrics`) and
+/// passes through unfaulted — chaos targets the training plane only.
+fn op_kind(path: &str) -> Option<usize> {
+    if path.starts_with("/v1/dist/push_delta") {
+        Some(0)
+    } else if path.starts_with("/v1/dist/pull_w") {
+        Some(1)
+    } else if path.starts_with("/v1/dist/heartbeat") {
+        Some(2)
+    } else {
+        None
+    }
+}
+
+const KIND_NAMES: [&str; 3] = ["push", "pull", "heartbeat"];
+
+impl FaultyTransport {
+    /// Wrap `inner` with the plan's faults for `worker`'s transport.
+    /// All transports of a run share one `log`.
+    pub fn new(
+        inner: Box<dyn Transport>,
+        worker: u64,
+        plan: Arc<FaultPlan>,
+        log: FaultLog,
+    ) -> FaultyTransport {
+        let rng = Pcg32::new(plan.seed, worker);
+        FaultyTransport { inner, plan, worker, rng, op: 0, attempts: [0; 3], held: Vec::new(), log }
+    }
+
+    fn record(&self, kind: &str, detail: String) {
+        crate::obs::registry()
+            .counter(
+                &format!("passcode_dist_fault_injected_total{{kind=\"{kind}\"}}"),
+                "chaos-injected transport faults by kind",
+            )
+            .inc();
+        self.log.lock().expect("fault log poisoned").push(detail);
+    }
+
+    fn partitioned(&self, op: u64) -> bool {
+        self.plan
+            .partitions
+            .iter()
+            .any(|p| p.worker == self.worker && p.from <= op && op < p.until)
+    }
+
+    fn scripted(&self, kind: usize, attempt: u64) -> Option<&str> {
+        self.plan
+            .script
+            .iter()
+            .find(|s| {
+                s.worker == self.worker && s.kind == KIND_NAMES[kind] && s.nth == attempt
+            })
+            .map(|s| s.fault.as_str())
+    }
+
+    /// Deliver held replays that came due, unless the partition holds
+    /// them back (they fire after heal — late delivery is the point).
+    fn deliver_due(&mut self, op: u64) {
+        let mut i = 0;
+        while i < self.held.len() {
+            if self.held[i].due_op <= op && !self.partitioned(op) {
+                let r = self.held.remove(i);
+                let gap = op.saturating_sub(r.due_op);
+                self.record(
+                    "reorder",
+                    format!("w{} op{op}: replay of held push (deferred {gap} extra ops)", self.worker),
+                );
+                // The ghost retry: re-POST the recorded bytes, discard
+                // whatever the coordinator answers.  Idempotence at
+                // the coordinator is what keeps this harmless.
+                let _ = self.inner.post(&r.path, &r.body);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn forward(&mut self, is_post: bool, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+        if is_post {
+            self.inner.post(path, body)
+        } else {
+            self.inner.get(path)
+        }
+    }
+
+    fn faulted(&mut self, is_post: bool, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+        let kind = match op_kind(path) {
+            Some(k) => k,
+            None => return self.forward(is_post, path, body),
+        };
+        self.op += 1;
+        let op = self.op;
+        self.deliver_due(op);
+        if self.partitioned(op) {
+            self.record(
+                "partition",
+                format!("w{} op{op} {}#{}: partitioned", self.worker, KIND_NAMES[kind],
+                        self.attempts[kind] + 1),
+            );
+            self.attempts[kind] += 1;
+            bail!("chaos: partitioned (worker {}, op {op})", self.worker);
+        }
+        self.attempts[kind] += 1;
+        let attempt = self.attempts[kind];
+        let tag = format!("w{} op{op} {}#{attempt}", self.worker, KIND_NAMES[kind]);
+
+        if let Some(fault) = self.scripted(kind, attempt) {
+            let fault = fault.to_string();
+            self.record(&scripted_metric_kind(&fault), format!("{tag}: scripted {fault}"));
+            return match fault.as_str() {
+                "drop_request" => bail!("chaos: scripted drop_request ({tag})"),
+                "drop_response" => {
+                    let _ = self.forward(is_post, path, body);
+                    bail!("chaos: scripted drop_response ({tag})")
+                }
+                "delay" => {
+                    std::thread::sleep(Duration::from_millis(self.plan.delay_max_ms));
+                    self.forward(is_post, path, body)
+                }
+                "truncate" => {
+                    let resp = self.forward(is_post, path, body)?;
+                    Ok(resp[..resp.len() / 2].to_vec())
+                }
+                "dup" => {
+                    let resp = self.forward(is_post, path, body)?;
+                    if is_post {
+                        self.hold_replay(op, path, body);
+                    }
+                    Ok(resp)
+                }
+                other => unreachable!("validated fault kind {other:?}"),
+            };
+        }
+
+        if self.plan.delay_prob > 0.0 && self.rng.gen_f64() < self.plan.delay_prob {
+            let ms = self.rng.gen_range(self.plan.delay_max_ms as usize + 1) as u64;
+            self.record("delay", format!("{tag}: delay {ms}ms"));
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if self.plan.drop_prob > 0.0 && self.rng.gen_f64() < self.plan.drop_prob {
+            if self.rng.gen_f64() < 0.5 {
+                self.record("drop", format!("{tag}: drop(request)"));
+                bail!("chaos: dropped request ({tag})");
+            }
+            self.record("drop", format!("{tag}: drop(response)"));
+            let _ = self.forward(is_post, path, body);
+            bail!("chaos: dropped response ({tag})");
+        }
+        let resp = self.forward(is_post, path, body)?;
+        let resp = if self.plan.truncate_prob > 0.0
+            && self.rng.gen_f64() < self.plan.truncate_prob
+        {
+            self.record("truncate", format!("{tag}: truncate {} -> {} bytes", resp.len(),
+                                            resp.len() / 2));
+            resp[..resp.len() / 2].to_vec()
+        } else {
+            resp
+        };
+        if is_post
+            && kind == 0
+            && self.plan.dup_prob > 0.0
+            && self.rng.gen_f64() < self.plan.dup_prob
+        {
+            self.hold_replay(op, path, body);
+        }
+        Ok(resp)
+    }
+
+    fn hold_replay(&mut self, op: u64, path: &str, body: &[u8]) {
+        let window = self.plan.reorder_window.max(1) as usize;
+        let due_op = op + 1 + self.rng.gen_range(window) as u64;
+        self.record(
+            "duplicate",
+            format!("w{} op{op}: duplicate push held until op{due_op}", self.worker),
+        );
+        self.held.push(HeldReplay { due_op, path: path.to_string(), body: body.to_vec() });
+    }
+}
+
+/// The metric kind a scripted fault counts under.
+fn scripted_metric_kind(fault: &str) -> String {
+    match fault {
+        "drop_request" | "drop_response" => "drop",
+        "delay" => "delay",
+        "truncate" => "truncate",
+        "dup" => "duplicate",
+        other => other,
+    }
+    .to_string()
+}
+
+impl Transport for FaultyTransport {
+    fn get(&mut self, path: &str) -> Result<Vec<u8>> {
+        self.faulted(false, path, b"")
+    }
+
+    fn post(&mut self, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+        self.faulted(true, path, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Inner transport that records every call and answers a canned
+    /// body.
+    struct Recorder {
+        calls: Arc<Mutex<Vec<(String, Vec<u8>)>>>,
+    }
+
+    impl Transport for Recorder {
+        fn get(&mut self, path: &str) -> Result<Vec<u8>> {
+            self.calls.lock().unwrap().push((format!("GET {path}"), Vec::new()));
+            Ok(b"pong-body".to_vec())
+        }
+
+        fn post(&mut self, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+            self.calls.lock().unwrap().push((format!("POST {path}"), body.to_vec()));
+            Ok(b"post-ack".to_vec())
+        }
+    }
+
+    fn harness(plan: FaultPlan) -> (FaultyTransport, Arc<Mutex<Vec<(String, Vec<u8>)>>>, FaultLog) {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let log: FaultLog = Arc::new(Mutex::new(Vec::new()));
+        let t = FaultyTransport::new(
+            Box::new(Recorder { calls: Arc::clone(&calls) }),
+            0,
+            Arc::new(plan),
+            Arc::clone(&log),
+        );
+        (t, calls, log)
+    }
+
+    #[test]
+    fn plan_json_round_trips_and_validates() {
+        let mut plan = FaultPlan::moderate(123);
+        plan.partitions.push(PartitionSpec { worker: 1, from: 5, until: 9 });
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(FaultPlan::from_json(&j).unwrap(), plan);
+        // The seed survives as a decimal string even past 2^53.
+        let mut big = FaultPlan::quiet(u64::MAX - 1);
+        big.reorder_window = 2;
+        let j = Json::parse(&big.to_json().to_string()).unwrap();
+        assert_eq!(FaultPlan::from_json(&j).unwrap().seed, u64::MAX - 1);
+        // Bad format tag, probability, and fault vocabulary all fail.
+        let mut j = plan.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("format".into(), Json::str("passcode-faults-v0"));
+        }
+        assert!(FaultPlan::from_json(&j).is_err());
+        let mut j = plan.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("drop_prob".into(), Json::num(1.5));
+        }
+        assert!(FaultPlan::from_json(&j).is_err());
+        let mut bad = plan.clone();
+        bad.script[0].fault = "explode".into();
+        assert!(FaultPlan::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn scripted_drop_request_never_reaches_inner() {
+        let mut plan = FaultPlan::quiet(7);
+        plan.script.push(ScriptedFault {
+            worker: 0,
+            kind: "push".into(),
+            nth: 2,
+            fault: "drop_request".into(),
+        });
+        let (mut t, calls, _) = harness(plan);
+        assert!(t.post("/v1/dist/push_delta", b"a").is_ok());
+        assert!(t.post("/v1/dist/push_delta", b"b").is_err());
+        assert!(t.post("/v1/dist/push_delta", b"c").is_ok());
+        let seen: Vec<Vec<u8>> =
+            calls.lock().unwrap().iter().map(|(_, b)| b.clone()).collect();
+        assert_eq!(seen, vec![b"a".to_vec(), b"c".to_vec()]);
+    }
+
+    #[test]
+    fn duplicate_push_is_replayed_on_a_later_op() {
+        let mut plan = FaultPlan::quiet(7);
+        plan.reorder_window = 1;
+        plan.script.push(ScriptedFault {
+            worker: 0,
+            kind: "push".into(),
+            nth: 1,
+            fault: "dup".into(),
+        });
+        let (mut t, calls, log) = harness(plan);
+        assert!(t.post("/v1/dist/push_delta", b"dup-me").is_ok());
+        assert_eq!(calls.lock().unwrap().len(), 1);
+        // Next op delivers the held replay before its own request.
+        assert!(t.get("/v1/dist/pull_w").is_ok());
+        let seen = calls.lock().unwrap();
+        assert_eq!(seen.len(), 3, "{seen:?}");
+        assert_eq!(seen[1].1, b"dup-me".to_vec());
+        assert!(seen[2].0.starts_with("GET /v1/dist/pull_w"));
+        let log = log.lock().unwrap();
+        assert!(log.iter().any(|l| l.contains("duplicate")), "{log:?}");
+        assert!(log.iter().any(|l| l.contains("replay")), "{log:?}");
+    }
+
+    #[test]
+    fn partition_window_blocks_and_heals_by_op_index() {
+        let mut plan = FaultPlan::quiet(7);
+        plan.partitions.push(PartitionSpec { worker: 0, from: 2, until: 4 });
+        let (mut t, calls, _) = harness(plan);
+        assert!(t.get("/v1/dist/pull_w").is_ok()); // op 1
+        assert!(t.get("/v1/dist/pull_w").is_err()); // op 2: partitioned
+        assert!(t.get("/v1/dist/pull_w").is_err()); // op 3: partitioned
+        assert!(t.get("/v1/dist/pull_w").is_ok()); // op 4: healed
+        assert_eq!(calls.lock().unwrap().len(), 2);
+        // Introspection paths bypass chaos entirely.
+        let mut plan = FaultPlan::quiet(7);
+        plan.partitions.push(PartitionSpec { worker: 0, from: 1, until: 100 });
+        let (mut t, calls, _) = harness(plan);
+        assert!(t.get("/metrics").is_ok());
+        assert!(t.get("/v1/dist/stats").is_ok());
+        assert_eq!(calls.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_identical_fault_sequence() {
+        let mut plan = FaultPlan::moderate(99);
+        plan.delay_prob = 0.0; // keep the test sleep-free
+        plan.drop_prob = 0.3;
+        plan.truncate_prob = 0.2;
+        plan.dup_prob = 0.3;
+        let run = |plan: FaultPlan| {
+            let (mut t, _, log) = harness(plan);
+            for _ in 0..40 {
+                let _ = t.post("/v1/dist/push_delta", b"x");
+                let _ = t.get("/v1/dist/pull_w");
+            }
+            let log = log.lock().unwrap().clone();
+            log
+        };
+        let a = run(plan.clone());
+        let b = run(plan.clone());
+        assert!(!a.is_empty(), "no faults injected at these probabilities");
+        assert_eq!(a, b, "fault sequence not reproducible");
+        // A different seed produces a different sequence.
+        let mut other = plan;
+        other.seed = 100;
+        assert_ne!(a, run(other));
+    }
+}

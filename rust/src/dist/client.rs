@@ -1,13 +1,23 @@
-//! Worker-side HTTP client for the coordinator's `/v1/dist/*` plane.
+//! Worker-side client for the coordinator's `/v1/dist/*` plane.
 //!
-//! A thin typed wrapper over [`net::HttpClient`](crate::net::HttpClient):
-//! pulls decode into `(epoch, w)`, pushes encode a [`PushDelta`] and
-//! decode the coordinator's [`PushOutcome`].  Pulls ride the bounded
-//! retry-with-backoff GET path (idempotent — a dead coordinator
-//! surfaces as an error after the retry budget instead of hanging the
-//! worker); pushes are deliberately *not* retried, because a push that
-//! dies mid-flight may already have been merged, and re-sending it
-//! would double-count the delta.
+//! [`DistClient`] is a thin typed layer — pulls decode into
+//! `(epoch, w)`, pushes encode a [`PushDelta`] and decode the
+//! coordinator's [`PushOutcome`], heartbeats round-trip the lease
+//! protocol — over a [`Transport`] seam.  Production uses
+//! [`HttpTransport`] (a [`net::HttpClient`](crate::net::HttpClient)
+//! with the dist-tier socket policy); the chaos harness substitutes
+//! [`FaultyTransport`](super::chaos::FaultyTransport) to inject
+//! seeded delays, drops, duplicates, reordering, truncation, and
+//! partitions *under* the typed layer, so the worker/coordinator
+//! logic is exercised against exactly the failures real networks
+//! produce.
+//!
+//! Both pulls and pushes ride bounded retry-with-backoff paths.
+//! Pulls are idempotent GETs.  Pushes became retry-safe when the
+//! protocol gained the `(worker, boot, round)` idempotence id: the
+//! coordinator merges each id exactly once and answers a duplicate
+//! with the recorded verdict, so a timed-out push is re-sent instead
+//! of silently lost (pre-PDL2 behavior).
 
 use std::net::SocketAddr;
 use std::time::Duration;
@@ -17,18 +27,67 @@ use anyhow::{ensure, Context, Result};
 use crate::net::{ClientConfig, HttpClient};
 use crate::util::Json;
 
-use super::protocol::{self, PushDelta, PushOutcome};
+use super::protocol::{self, Heartbeat, HeartbeatReply, PushDelta, PushOutcome};
+
+/// The byte-level request seam between the typed [`DistClient`] and
+/// whatever carries the bytes.  Implementations own connection state,
+/// retry policy, and (in the chaos harness) the fault schedule.
+///
+/// Contract: `post` bodies on the push path carry an idempotence id,
+/// so an implementation may re-send them after ambiguous failures;
+/// `get` is always idempotent.  An `Err` means the bytes may or may
+/// not have reached the peer — callers must tolerate both.
+pub trait Transport: Send {
+    /// Issue a GET; returns the 2xx response body.
+    fn get(&mut self, path: &str) -> Result<Vec<u8>>;
+    /// Issue a POST of `body`; returns the 2xx response body.
+    fn post(&mut self, path: &str, body: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// The production [`Transport`]: one keep-alive HTTP/1.1 connection
+/// with bounded retry-with-backoff on both verbs.
+#[derive(Debug)]
+pub struct HttpTransport {
+    http: HttpClient,
+}
+
+impl HttpTransport {
+    /// Connect to `addr` with an explicit socket/retry policy.
+    pub fn new(addr: SocketAddr, cfg: ClientConfig) -> HttpTransport {
+        HttpTransport { http: HttpClient::with_config(addr, cfg) }
+    }
+}
+
+impl Transport for HttpTransport {
+    fn get(&mut self, path: &str) -> Result<Vec<u8>> {
+        Ok(self.http.get_with_retry(path)?.ok()?.body)
+    }
+
+    fn post(&mut self, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+        Ok(self
+            .http
+            .post_with_retry(path, "application/octet-stream", body)?
+            .ok()?
+            .body)
+    }
+}
 
 /// A worker's connection to the coordinator.
-#[derive(Debug)]
 pub struct DistClient {
-    http: HttpClient,
+    t: Box<dyn Transport>,
+    worker: Option<u64>,
+}
+
+impl std::fmt::Debug for DistClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DistClient").field("worker", &self.worker).finish()
+    }
 }
 
 impl DistClient {
     /// Connect to the coordinator at `addr` with the dist-tier policy
     /// (5 s connect, 30 s read, 4 retries with doubling backoff from
-    /// 100 ms on the pull path).
+    /// 100 ms on both the pull and the idempotent push path).
     pub fn new(addr: SocketAddr) -> DistClient {
         Self::with_config(
             addr,
@@ -43,44 +102,69 @@ impl DistClient {
 
     /// Connect with an explicit socket/retry policy (tests tighten it).
     pub fn with_config(addr: SocketAddr, cfg: ClientConfig) -> DistClient {
-        DistClient { http: HttpClient::with_config(addr, cfg) }
+        Self::over(Box::new(HttpTransport::new(addr, cfg)))
+    }
+
+    /// Build a client over an arbitrary [`Transport`] — the chaos
+    /// harness wraps [`HttpTransport`] in a
+    /// [`FaultyTransport`](super::chaos::FaultyTransport) here.
+    pub fn over(t: Box<dyn Transport>) -> DistClient {
+        DistClient { t, worker: None }
+    }
+
+    /// Identify this client's worker id so pulls can piggyback a lease
+    /// refresh (`?worker=ID` on `pull_w`).  Optional: an anonymous
+    /// client still pulls, it just doesn't refresh any lease.
+    pub fn set_worker(&mut self, id: u64) {
+        self.worker = Some(id);
     }
 
     /// Pull the current merged model: `(merge_epoch, w)`.
     pub fn pull_w(&mut self) -> Result<(u64, Vec<f64>)> {
-        let resp = self
-            .http
-            .get_with_retry("/v1/dist/pull_w")
-            .context("pull_w from coordinator")?
-            .ok()?;
-        protocol::decode_w(&resp.body)
+        let path = match self.worker {
+            Some(id) => format!("/v1/dist/pull_w?worker={id}"),
+            None => "/v1/dist/pull_w".to_string(),
+        };
+        let body = self.t.get(&path).context("pull_w from coordinator")?;
+        protocol::decode_w(&body)
     }
 
     /// Push one round's delta; the coordinator answers with the merge
-    /// verdict.  Not retried (see module docs).
+    /// verdict.  Retried under the `(worker, boot, round)` idempotence
+    /// id (see module docs).
     pub fn push_delta(&mut self, p: &PushDelta) -> Result<PushOutcome> {
-        let resp = self
-            .http
-            .request(
-                "POST",
-                "/v1/dist/push_delta",
-                "application/octet-stream",
-                &protocol::encode_push(p),
-            )
-            .context("push_delta to coordinator")?
-            .ok()?;
-        PushOutcome::from_json(&resp.json()?)
+        let body = self
+            .t
+            .post("/v1/dist/push_delta", &protocol::encode_push(p))
+            .context("push_delta to coordinator")?;
+        PushOutcome::from_json(&Json::parse(
+            std::str::from_utf8(&body).context("non-UTF-8 push verdict")?,
+        )?)
+    }
+
+    /// Send a liveness heartbeat; the coordinator answers with the
+    /// current epoch and this worker's assigned shard ranges (or a
+    /// revocation if the lease already expired).
+    pub fn heartbeat(&mut self, h: &Heartbeat) -> Result<HeartbeatReply> {
+        let body = self
+            .t
+            .post("/v1/dist/heartbeat", &protocol::encode_heartbeat(h))
+            .context("heartbeat to coordinator")?;
+        HeartbeatReply::from_json(&Json::parse(
+            std::str::from_utf8(&body).context("non-UTF-8 heartbeat reply")?,
+        )?)
     }
 
     /// Fetch the coordinator's merge statistics (`GET /v1/dist/stats`).
     pub fn stats(&mut self) -> Result<Json> {
-        self.http.get_with_retry("/v1/dist/stats")?.ok()?.json()
+        let body = self.t.get("/v1/dist/stats")?;
+        Json::parse(std::str::from_utf8(&body).context("non-UTF-8 stats body")?)
     }
 
     /// Scrape the coordinator's `/metrics` exposition text.
     pub fn metrics_text(&mut self) -> Result<String> {
-        let resp = self.http.get_with_retry("/metrics")?.ok()?;
-        let text = String::from_utf8(resp.body).context("non-UTF-8 /metrics body")?;
+        let body = self.t.get("/metrics")?;
+        let text = String::from_utf8(body).context("non-UTF-8 /metrics body")?;
         ensure!(!text.is_empty(), "empty /metrics scrape");
         Ok(text)
     }

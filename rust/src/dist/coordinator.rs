@@ -22,8 +22,28 @@
 //! invariant `w = Σ_p X_pᵀ α_p` exact across the cluster, so the
 //! merged model remains a genuine PASSCoDe iterate rather than an
 //! averaged approximation (see `dist/worker.rs`).
+//!
+//! # Exactly-once merging
+//!
+//! Every push carries a `(worker, boot, round)` id; the coordinator
+//! records the verdict per id and answers a duplicate (a client retry
+//! after an ambiguous failure, or a chaos-replayed ghost) from the
+//! record without touching `w`.  That record is what makes the client
+//! side's `post_with_retry` sound.
+//!
+//! # Leases and shard reassignment
+//!
+//! With `lease_ops > 0` the coordinator runs a worker registry on a
+//! logical op clock (every push/pull/heartbeat ticks it; wall time
+//! would not replay).  A worker whose lease goes `lease_ops` ticks
+//! without refresh is declared dead: its accumulated contribution is
+//! *rolled out* of `w` (restoring `w = Σ_live X_pᵀ α_p` exactly), the
+//! epoch is bumped so survivors rebase, and its shard ranges are
+//! reassigned to the live worker with the fewest rows (or parked as
+//! orphans until one heartbeats).  A dead worker's later pushes and
+//! heartbeats answer `Revoked` — its life is over.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::sync::Mutex;
 
@@ -34,7 +54,11 @@ use crate::loss::LossKind;
 use crate::obs::probes;
 use crate::util::Json;
 
-use super::protocol::{PushDelta, PushOutcome};
+use super::protocol::{Heartbeat, HeartbeatReply, PushDelta, PushOutcome};
+
+/// Dedup verdicts retained per worker (newest rounds win).  Far more
+/// than any retry window needs; bounds memory over long runs.
+const DEDUP_KEEP: usize = 128;
 
 /// Coordinator policy: the merge rule's constants plus checkpointing
 /// and the metadata stamped into saved models.
@@ -46,6 +70,15 @@ pub struct MergeConfig {
     /// Maximum tolerated merge-epoch lag; staler deltas are rejected
     /// with a resync order.
     pub max_lag: u64,
+    /// Lease length in logical coordinator ops (pushes + pulls +
+    /// heartbeats).  0 disables the registry entirely — no lease
+    /// tracking, no death, no reassignment (the pre-chaos behavior;
+    /// idle workers must not be revoked in plain sims).
+    pub lease_ops: u64,
+    /// Record a deterministic per-verdict merge trace (chaos replay
+    /// compares it across runs).  Off by default: the trace grows with
+    /// every push.
+    pub record_trace: bool,
     /// Where to checkpoint the merged model (None = no checkpoints).
     pub checkpoint: Option<PathBuf>,
     /// Checkpoint every this many accepted merges (0 = only on
@@ -64,6 +97,8 @@ impl Default for MergeConfig {
         Self {
             workers: 2,
             max_lag: 8,
+            lease_ops: 0,
+            record_trace: false,
             checkpoint: None,
             checkpoint_every: 0,
             loss: LossKind::Hinge,
@@ -71,6 +106,21 @@ impl Default for MergeConfig {
             dataset: "dist".into(),
         }
     }
+}
+
+/// Registry entry for one worker id.
+#[derive(Debug)]
+struct WorkerEntry {
+    /// Op-clock tick of the last push/pull/heartbeat from this worker.
+    last_seen_op: u64,
+    /// False once the lease expired: the life is over for good.
+    alive: bool,
+    /// Row ranges currently assigned to this worker.
+    ranges: Vec<(u64, u64)>,
+    /// Σ weight·delta over this worker's accepted merges — exactly
+    /// `X_pᵀ (α_committed − α_initial)`, the amount rolled out of `w`
+    /// if the lease expires.
+    contrib: Vec<f64>,
 }
 
 /// Everything the merge rule mutates, under one mutex.  A merge is a
@@ -87,6 +137,19 @@ struct State {
     /// backward error carried into `w` (numerator of the gauge).
     err_accum: f64,
     workers_seen: BTreeSet<u64>,
+    /// Logical clock: one tick per push/pull/heartbeat handled.
+    op_clock: u64,
+    /// Worker registry (populated in lease mode; heartbeats populate
+    /// it even without leases, for stats).
+    registry: BTreeMap<u64, WorkerEntry>,
+    /// Recorded verdicts keyed `(worker, boot, round)`.
+    recent: BTreeMap<(u64, u64, u64), PushOutcome>,
+    /// Shard ranges reassigned so far.
+    reassigns: u64,
+    /// Ranges of dead workers awaiting a live claimant.
+    orphaned: Vec<(u64, u64)>,
+    /// Deterministic verdict/lease trace (when `record_trace`).
+    merge_trace: Vec<String>,
 }
 
 /// The coordinator: shared global `w` + the bounded-staleness merge.
@@ -127,6 +190,12 @@ impl DistCoordinator {
                 rejects: 0,
                 err_accum: 0.0,
                 workers_seen: BTreeSet::new(),
+                op_clock: 0,
+                registry: BTreeMap::new(),
+                recent: BTreeMap::new(),
+                reassigns: 0,
+                orphaned: Vec::new(),
+                merge_trace: Vec::new(),
             }),
         }
     }
@@ -136,14 +205,148 @@ impl DistCoordinator {
         &self.cfg
     }
 
+    fn trace(&self, s: &mut State, line: String) {
+        if self.cfg.record_trace {
+            s.merge_trace.push(line);
+        }
+    }
+
+    /// Refresh `worker`'s lease at the current op tick, creating its
+    /// registry entry on first contact.  Returns false if the worker
+    /// is already dead (lease mode only).
+    fn refresh_lease(&self, s: &mut State, worker: u64) -> bool {
+        if self.cfg.lease_ops == 0 {
+            return true;
+        }
+        let dim = s.w.len();
+        let tick = s.op_clock;
+        let entry = s.registry.entry(worker).or_insert_with(|| WorkerEntry {
+            last_seen_op: tick,
+            alive: true,
+            ranges: Vec::new(),
+            contrib: vec![0.0; dim],
+        });
+        if !entry.alive {
+            return false;
+        }
+        entry.last_seen_op = tick;
+        true
+    }
+
+    /// Expire overdue leases: roll each dead worker's contribution out
+    /// of `w`, bump the epoch so survivors rebase, and reassign (or
+    /// orphan) its shard ranges.  `exempt` is the worker whose request
+    /// is being handled — its lease was just refreshed.
+    fn expire_leases(&self, s: &mut State, exempt: u64) {
+        if self.cfg.lease_ops == 0 {
+            return;
+        }
+        let now = s.op_clock;
+        let expired: Vec<u64> = s
+            .registry
+            .iter()
+            .filter(|(id, e)| **id != exempt && e.alive && now - e.last_seen_op > self.cfg.lease_ops)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in expired {
+            let (ranges, contrib) = {
+                let e = s.registry.get_mut(&id).expect("expired entry exists");
+                e.alive = false;
+                (std::mem::take(&mut e.ranges), std::mem::take(&mut e.contrib))
+            };
+            for (wi, ci) in s.w.iter_mut().zip(&contrib) {
+                *wi -= ci;
+            }
+            s.epoch += 1;
+            probes::dist().lease_expired.inc();
+            probes::dist().merge_epoch.set(s.epoch as f64);
+            self.trace(
+                s,
+                format!("lease-expire w{id} op{now}: rollback, epoch->{}", s.epoch),
+            );
+            for range in ranges {
+                self.reassign_range(s, id, range);
+            }
+        }
+        let alive = s.registry.values().filter(|e| e.alive).count();
+        probes::dist().workers_alive.set(alive as f64);
+    }
+
+    /// Hand `range` (owned by dead `from`) to the live worker holding
+    /// the fewest rows (ties → smallest id), or park it as an orphan.
+    fn reassign_range(&self, s: &mut State, from: u64, range: (u64, u64)) {
+        let target = s
+            .registry
+            .iter()
+            .filter(|(_, e)| e.alive)
+            .min_by_key(|(id, e)| {
+                (e.ranges.iter().map(|(a, b)| b - a).sum::<u64>(), **id)
+            })
+            .map(|(id, _)| *id);
+        match target {
+            Some(to) => {
+                s.registry.get_mut(&to).expect("target exists").ranges.push(range);
+                s.reassigns += 1;
+                probes::dist().reassigns.inc();
+                self.trace(
+                    s,
+                    format!("reassign [{}, {}) w{from} -> w{to}", range.0, range.1),
+                );
+            }
+            None => {
+                s.orphaned.push(range);
+                self.trace(
+                    s,
+                    format!("orphan [{}, {}) from w{from} (no live worker)", range.0, range.1),
+                );
+            }
+        }
+    }
+
+    /// Record `verdict` under the push id and prune old records.
+    fn remember(&self, s: &mut State, p: &PushDelta, verdict: PushOutcome) {
+        s.recent.insert((p.worker, p.boot, p.round), verdict);
+        let worker_keys: Vec<(u64, u64, u64)> = s
+            .recent
+            .range((p.worker, 0, 0)..=(p.worker, u64::MAX, u64::MAX))
+            .map(|(k, _)| *k)
+            .collect();
+        if worker_keys.len() > DEDUP_KEEP {
+            for k in &worker_keys[..worker_keys.len() - DEDUP_KEEP] {
+                s.recent.remove(k);
+            }
+        }
+    }
+
     /// Apply the bounded-staleness merge rule to one pushed delta.
     ///
     /// Errors mean a malformed push (dimension mismatch, non-finite
     /// values, or a base epoch from the future) — the HTTP layer maps
     /// them to 400.  A *stale* push is not an error: it returns
-    /// [`PushOutcome::Resync`] and the delta is discarded.
+    /// [`PushOutcome::Resync`] and the delta is discarded.  A push
+    /// whose `(worker, boot, round)` id was already decided returns
+    /// the recorded verdict without touching `w`; a push from a
+    /// dead-leased worker returns [`PushOutcome::Revoked`].
     pub fn push(&self, p: &PushDelta) -> Result<PushOutcome> {
         let mut s = self.state.lock().expect("coordinator state poisoned");
+        let s = &mut *s;
+        s.op_clock += 1;
+        // A revoked life stays revoked — even for a retried round the
+        // original of which merged: that contribution was rolled back,
+        // so confirming it would desynchronize the worker's dual.
+        if !self.refresh_lease(s, p.worker) {
+            self.trace(s, format!("push w{} boot{} round{}: revoked", p.worker, p.boot, p.round));
+            return Ok(PushOutcome::Revoked { epoch: s.epoch });
+        }
+        self.expire_leases(s, p.worker);
+        if let Some(v) = s.recent.get(&(p.worker, p.boot, p.round)).copied() {
+            probes::dist().dedup_hits.inc();
+            self.trace(
+                s,
+                format!("push w{} boot{} round{}: dedup -> {v:?}", p.worker, p.boot, p.round),
+            );
+            return Ok(v);
+        }
         ensure!(
             p.delta.len() == s.w.len(),
             "delta dimension {} != model dimension {}",
@@ -167,7 +370,16 @@ impl DistCoordinator {
         if lag > self.cfg.max_lag {
             s.rejects += 1;
             probes::dist().rejects.inc();
-            return Ok(PushOutcome::Resync { epoch: s.epoch });
+            let verdict = PushOutcome::Resync { epoch: s.epoch };
+            self.remember(s, p, verdict);
+            self.trace(
+                s,
+                format!(
+                    "push w{} boot{} round{} base{} lag{lag}: resync@{}",
+                    p.worker, p.boot, p.round, p.base_epoch, s.epoch
+                ),
+            );
+            return Ok(verdict);
         }
         let weight =
             if lag == 0 { 1.0 } else { 1.0 / self.cfg.workers.max(1) as f64 };
@@ -177,6 +389,13 @@ impl DistCoordinator {
         s.epoch += 1;
         s.merges += 1;
         s.err_accum += weight * p.delta_err;
+        if self.cfg.lease_ops > 0 {
+            if let Some(e) = s.registry.get_mut(&p.worker) {
+                for (ci, di) in e.contrib.iter_mut().zip(&p.delta) {
+                    *ci += weight * di;
+                }
+            }
+        }
         let probes = probes::dist();
         probes.merges.inc();
         probes.merge_epoch.set(s.epoch as f64);
@@ -186,6 +405,14 @@ impl DistCoordinator {
             .backward_error_ratio
             .set(if norm > 0.0 { s.err_accum / norm } else { 0.0 });
         let outcome = PushOutcome::Accepted { epoch: s.epoch, weight };
+        self.remember(s, p, outcome);
+        self.trace(
+            s,
+            format!(
+                "push w{} boot{} round{} base{} lag{lag}: accepted@{} weight {weight}",
+                p.worker, p.boot, p.round, p.base_epoch, s.epoch
+            ),
+        );
         let due = self.cfg.checkpoint_every > 0 && s.merges % self.cfg.checkpoint_every == 0;
         if due {
             // Best-effort: a full disk must not fail the merge the
@@ -197,23 +424,100 @@ impl DistCoordinator {
         Ok(outcome)
     }
 
+    /// Handle one worker heartbeat: refresh (or create) its lease,
+    /// adopt announced ranges on first contact, hand it any orphaned
+    /// ranges, then expire overdue peers.  A dead worker gets a
+    /// revoked reply and must stop pushing.
+    pub fn heartbeat(&self, h: &Heartbeat) -> HeartbeatReply {
+        let mut s = self.state.lock().expect("coordinator state poisoned");
+        let s = &mut *s;
+        s.op_clock += 1;
+        probes::dist().heartbeats.inc();
+        s.workers_seen.insert(h.worker);
+        if self.cfg.lease_ops == 0 {
+            // No registry: echo the announced ranges, nothing expires.
+            return HeartbeatReply { revoked: false, epoch: s.epoch, shards: h.ranges.clone() };
+        }
+        if !self.refresh_lease(s, h.worker) {
+            self.trace(s, format!("heartbeat w{}: revoked", h.worker));
+            return HeartbeatReply { revoked: true, epoch: s.epoch, shards: Vec::new() };
+        }
+        {
+            let entry = s.registry.get_mut(&h.worker).expect("lease just refreshed");
+            if entry.ranges.is_empty() {
+                // First contact announces what the worker loaded; the
+                // coordinator owns the assignment from here on.
+                entry.ranges = h.ranges.clone();
+            }
+        }
+        if !s.orphaned.is_empty() {
+            let orphans = std::mem::take(&mut s.orphaned);
+            for range in orphans {
+                self.reassign_range(s, h.worker, range);
+            }
+        }
+        self.expire_leases(s, h.worker);
+        let entry = s.registry.get(&h.worker).expect("lease just refreshed");
+        HeartbeatReply { revoked: false, epoch: s.epoch, shards: entry.ranges.clone() }
+    }
+
+    /// Lease refresh piggybacked on a pull (`GET /v1/dist/pull_w
+    /// ?worker=ID`).  Ticks the op clock and may expire peers; a dead
+    /// worker's pull still serves `w` (harmless — the revocation
+    /// arrives with its next push or heartbeat).
+    pub fn touch(&self, worker: u64) {
+        let mut s = self.state.lock().expect("coordinator state poisoned");
+        let s = &mut *s;
+        s.op_clock += 1;
+        if self.refresh_lease(s, worker) {
+            self.expire_leases(s, worker);
+        }
+    }
+
     /// Snapshot `(merge_epoch, w)` for a puller.
     pub fn pull(&self) -> (u64, Vec<f64>) {
         let s = self.state.lock().expect("coordinator state poisoned");
         (s.epoch, s.w.clone())
     }
 
+    /// The current assignment table: `(worker, alive, ranges)` per
+    /// registered worker, sorted by id.  The in-process chaos driver
+    /// reads this to rebuild workers after a reassignment; does not
+    /// tick the op clock (it is introspection, not worker traffic).
+    pub fn assignments(&self) -> Vec<(u64, bool, Vec<(u64, u64)>)> {
+        let s = self.state.lock().expect("coordinator state poisoned");
+        s.registry
+            .iter()
+            .map(|(id, e)| (*id, e.alive, e.ranges.clone()))
+            .collect()
+    }
+
+    /// Shard ranges reassigned so far.
+    pub fn reassign_count(&self) -> u64 {
+        self.state.lock().expect("coordinator state poisoned").reassigns
+    }
+
+    /// The deterministic merge/lease trace (empty unless
+    /// `record_trace` was set).
+    pub fn merge_trace(&self) -> Vec<String> {
+        self.state.lock().expect("coordinator state poisoned").merge_trace.clone()
+    }
+
     /// Merge statistics as JSON (served at `GET /v1/dist/stats`).
     pub fn stats_json(&self) -> Json {
         let s = self.state.lock().expect("coordinator state poisoned");
         let norm = s.w.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let alive = s.registry.values().filter(|e| e.alive).count();
         Json::obj(vec![
             ("merge_epoch", Json::num(s.epoch as f64)),
             ("merges", Json::num(s.merges as f64)),
             ("rejects", Json::num(s.rejects as f64)),
             ("dim", Json::num(s.w.len() as f64)),
             ("workers_seen", Json::num(s.workers_seen.len() as f64)),
+            ("workers_alive", Json::num(alive as f64)),
+            ("reassigns", Json::num(s.reassigns as f64)),
             ("max_lag", Json::num(self.cfg.max_lag as f64)),
+            ("lease_ops", Json::num(self.cfg.lease_ops as f64)),
             ("w_norm", Json::num(norm)),
             (
                 "backward_error_ratio",
@@ -249,8 +553,8 @@ impl DistCoordinator {
 mod tests {
     use super::*;
 
-    fn push(worker: u64, base_epoch: u64, delta: Vec<f64>) -> PushDelta {
-        PushDelta { worker, base_epoch, delta_err: 0.0, delta }
+    fn push(worker: u64, round: u64, base_epoch: u64, delta: Vec<f64>) -> PushDelta {
+        PushDelta { worker, boot: 0, round, base_epoch, delta_err: 0.0, delta }
     }
 
     fn coord(max_lag: u64) -> DistCoordinator {
@@ -263,7 +567,7 @@ mod tests {
     #[test]
     fn fresh_delta_merges_at_full_weight() {
         let c = coord(4);
-        match c.push(&push(0, 0, vec![1.0, 2.0, 3.0])).unwrap() {
+        match c.push(&push(0, 0, 0, vec![1.0, 2.0, 3.0])).unwrap() {
             PushOutcome::Accepted { epoch, weight } => {
                 assert_eq!(epoch, 1);
                 assert_eq!(weight, 1.0);
@@ -276,9 +580,9 @@ mod tests {
     #[test]
     fn stale_delta_is_damped_by_one_over_k() {
         let c = coord(4);
-        c.push(&push(0, 0, vec![1.0, 0.0, 0.0])).unwrap();
+        c.push(&push(0, 0, 0, vec![1.0, 0.0, 0.0])).unwrap();
         // Worker 1 still based on epoch 0: lag 1, weight 1/2.
-        match c.push(&push(1, 0, vec![0.0, 4.0, 0.0])).unwrap() {
+        match c.push(&push(1, 0, 0, vec![0.0, 4.0, 0.0])).unwrap() {
             PushOutcome::Accepted { epoch, weight } => {
                 assert_eq!(epoch, 2);
                 assert_eq!(weight, 0.5);
@@ -291,12 +595,12 @@ mod tests {
     #[test]
     fn beyond_lag_is_rejected_and_epoch_monotonic() {
         let c = coord(1);
-        for _ in 0..3 {
-            c.push(&push(0, c.pull().0, vec![1.0, 0.0, 0.0])).unwrap();
+        for round in 0..3 {
+            c.push(&push(0, round, c.pull().0, vec![1.0, 0.0, 0.0])).unwrap();
         }
         let before = c.pull();
         // Base epoch 0 against coordinator epoch 3, max_lag 1: resync.
-        match c.push(&push(1, 0, vec![9.0, 9.0, 9.0])).unwrap() {
+        match c.push(&push(1, 0, 0, vec![9.0, 9.0, 9.0])).unwrap() {
             PushOutcome::Resync { epoch } => assert_eq!(epoch, 3),
             other => panic!("unexpected {other:?}"),
         }
@@ -308,14 +612,108 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_push_merges_exactly_once() {
+        let c = coord(4);
+        let p = push(0, 7, 0, vec![1.0, 2.0, 3.0]);
+        let first = c.push(&p).unwrap();
+        assert!(matches!(first, PushOutcome::Accepted { epoch: 1, .. }));
+        // A byte-identical retry answers the recorded verdict and
+        // leaves w, the epoch, and the merge count untouched.
+        for _ in 0..3 {
+            assert_eq!(c.push(&p).unwrap(), first);
+        }
+        assert_eq!(c.pull(), (1, vec![1.0, 2.0, 3.0]));
+        let stats = c.stats_json();
+        assert_eq!(stats.get("merges").unwrap().as_usize().unwrap(), 1);
+        // A rejected round's retry re-answers the recorded Resync too.
+        let c = coord(0);
+        c.push(&push(0, 0, 0, vec![1.0, 0.0, 0.0])).unwrap();
+        let stale = push(1, 0, 0, vec![0.0, 1.0, 0.0]);
+        let v1 = c.push(&stale).unwrap();
+        assert!(matches!(v1, PushOutcome::Resync { .. }));
+        assert_eq!(c.push(&stale).unwrap(), v1);
+        assert_eq!(c.stats_json().get("rejects").unwrap().as_usize().unwrap(), 1);
+        // A different boot is a different life: not deduped.
+        let c = coord(4);
+        c.push(&push(0, 0, 0, vec![1.0, 0.0, 0.0])).unwrap();
+        let mut rejoin = push(0, 0, 1, vec![1.0, 0.0, 0.0]);
+        rejoin.boot = 1;
+        assert!(matches!(c.push(&rejoin).unwrap(), PushOutcome::Accepted { epoch: 2, .. }));
+    }
+
+    #[test]
+    fn lease_expiry_rolls_back_reassigns_and_revokes() {
+        let c = DistCoordinator::new(
+            vec![0.0; 3],
+            MergeConfig {
+                workers: 2,
+                max_lag: 64,
+                lease_ops: 3,
+                record_trace: true,
+                ..Default::default()
+            },
+        );
+        // Both workers announce their shards and contribute once.
+        assert!(!c.heartbeat(&Heartbeat { worker: 0, ranges: vec![(0, 50)] }).revoked);
+        assert!(!c.heartbeat(&Heartbeat { worker: 1, ranges: vec![(50, 100)] }).revoked);
+        c.push(&push(0, 0, 0, vec![1.0, 0.0, 0.0])).unwrap();
+        c.push(&push(1, 0, 1, vec![0.0, 2.0, 0.0])).unwrap();
+        let epoch_before = c.pull().0;
+        // Worker 1 goes silent; worker 0 keeps the op clock moving
+        // past the lease bound.
+        for round in 1..6 {
+            c.push(&push(0, round, c.pull().0, vec![1.0, 0.0, 0.0])).unwrap();
+        }
+        // Worker 1 is dead: its full-weight contribution was rolled
+        // back out of w, its range moved to worker 0.
+        let w = c.pull().1;
+        assert_eq!(w[1], 0.0, "dead worker's contribution still in w: {w:?}");
+        assert!(c.pull().0 > epoch_before);
+        let assigns = c.assignments();
+        let w0 = assigns.iter().find(|(id, _, _)| *id == 0).unwrap();
+        let w1 = assigns.iter().find(|(id, _, _)| *id == 1).unwrap();
+        assert!(w0.1 && !w1.1, "{assigns:?}");
+        assert!(w0.2.contains(&(50, 100)), "{assigns:?}");
+        assert!(w1.2.is_empty(), "{assigns:?}");
+        assert_eq!(c.reassign_count(), 1);
+        // The dead worker's later push and heartbeat answer Revoked.
+        assert!(matches!(
+            c.push(&push(1, 1, 0, vec![0.0, 1.0, 0.0])).unwrap(),
+            PushOutcome::Revoked { .. }
+        ));
+        assert!(c.heartbeat(&Heartbeat { worker: 1, ranges: vec![(50, 100)] }).revoked);
+        assert!(c.merge_trace().iter().any(|l| l.contains("lease-expire w1")));
+        assert!(c.merge_trace().iter().any(|l| l.contains("reassign [50, 100) w1 -> w0")));
+    }
+
+    #[test]
+    fn expired_ranges_pass_to_the_emptiest_live_worker() {
+        let c = DistCoordinator::new(
+            vec![0.0; 2],
+            MergeConfig { workers: 2, max_lag: 64, lease_ops: 2, ..Default::default() },
+        );
+        c.heartbeat(&Heartbeat { worker: 0, ranges: vec![(0, 10)] });
+        // Worker 0 goes silent; a newcomer's traffic moves the op
+        // clock past the lease bound.  The newcomer holds no rows, so
+        // the expired range lands on it.
+        for _ in 0..4 {
+            c.touch(7);
+        }
+        let reply = c.heartbeat(&Heartbeat { worker: 7, ranges: vec![] });
+        assert!(!reply.revoked);
+        assert_eq!(reply.shards, vec![(0, 10)]);
+        assert_eq!(c.reassign_count(), 1);
+    }
+
+    #[test]
     fn malformed_pushes_error() {
         let c = coord(4);
-        assert!(c.push(&push(0, 0, vec![1.0])).is_err(), "dim mismatch accepted");
+        assert!(c.push(&push(0, 0, 0, vec![1.0])).is_err(), "dim mismatch accepted");
         assert!(
-            c.push(&push(0, 0, vec![f64::NAN, 0.0, 0.0])).is_err(),
+            c.push(&push(0, 1, 0, vec![f64::NAN, 0.0, 0.0])).is_err(),
             "NaN accepted"
         );
-        assert!(c.push(&push(0, 5, vec![0.0; 3])).is_err(), "future epoch accepted");
+        assert!(c.push(&push(0, 2, 5, vec![0.0; 3])).is_err(), "future epoch accepted");
         // Errors never advance the epoch.
         assert_eq!(c.pull().0, 0);
     }
@@ -335,7 +733,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        c.push(&push(0, 0, vec![0.5, -0.5])).unwrap();
+        c.push(&push(0, 0, 0, vec![0.5, -0.5])).unwrap();
         let m = Model::load(&path).unwrap();
         assert_eq!(m.w, vec![0.5, -0.5]);
         assert_eq!(m.solver, "dist-hybrid-dca");

@@ -10,35 +10,51 @@
 //! machinery, and workers exchange `ŵ` deltas with a coordinator over
 //! plain HTTP — asynchronously, with bounded staleness:
 //!
-//! * [`protocol`] — the binary little-endian push/pull bodies and the
-//!   JSON merge verdict.
+//! * [`protocol`] — the binary little-endian push/pull/heartbeat
+//!   bodies and the JSON merge verdict.  Pushes carry a
+//!   `(worker, boot, round)` idempotence id.
 //! * [`coordinator`] — the global `w`, the merge epoch, and the
 //!   accept rule: fresh deltas merge at weight 1, stale-but-bounded
 //!   ones are damped by `1/K`, beyond `--max-lag` the worker is told
-//!   to resync.  Checkpoints through `model_io`.
+//!   to resync.  With op-clock leases on, it also tracks worker
+//!   liveness, rolls a dead worker's contribution out of `w`, and
+//!   reassigns its shard ranges to a live worker.  Checkpoints
+//!   through `model_io`.
 //! * [`worker`] — the local solve loop; scales its committed dual by
 //!   the coordinator's merge weight so `w = Σ_p X_pᵀ α_p` stays exact
-//!   across the cluster, and ships the measured Theorem-3 write loss
-//!   of each delta.
-//! * [`client`] — typed worker-side HTTP client (bounded retry on the
-//!   idempotent pull path, never on pushes).
+//!   across the cluster, ships the measured Theorem-3 write loss of
+//!   each delta, parks a push whose verdict was lost and re-sends the
+//!   same id, and honors lease revocation.
+//! * [`client`] — typed worker-side client over the [`Transport`]
+//!   seam (bounded retry on the idempotent pull path *and*, thanks to
+//!   the push id, on pushes).
+//! * [`chaos`] — deterministic fault injection: a seeded
+//!   [`FaultPlan`] (`passcode-faults-v1` JSON) drives a
+//!   [`FaultyTransport`] that delays, drops, duplicates, reorders,
+//!   truncates, and partitions requests — replayable from its seed
+//!   like a `passcode check` schedule.
 //! * [`sim`] — N in-process workers over a loopback coordinator: the
-//!   whole tier in one process for tests, CI, and quick experiments.
+//!   whole tier in one process for tests, CI, and quick experiments;
+//!   `--chaos` switches it to a deterministic single-threaded driver
+//!   that survives injected faults, lease expiry, and shard
+//!   reassignment.
 //!
 //! The HTTP surface lives on the ordinary [`crate::net::Server`]
 //! (`POST /v1/dist/push_delta`, `GET /v1/dist/pull_w`,
-//! `GET /v1/dist/stats`, plus `/metrics` with the `passcode_dist_*`
-//! family); the CLI surface is `passcode dist-coord`, `dist-work`,
-//! and `dist-sim`.
+//! `POST /v1/dist/heartbeat`, `GET /v1/dist/stats`, plus `/metrics`
+//! with the `passcode_dist_*` family); the CLI surface is `passcode
+//! dist-coord`, `dist-work`, and `dist-sim`.
 
+pub mod chaos;
 pub mod client;
 pub mod coordinator;
 pub mod protocol;
 pub mod sim;
 pub mod worker;
 
-pub use client::DistClient;
+pub use chaos::{FaultLog, FaultPlan, FaultyTransport, PartitionSpec, ScriptedFault, FAULTS_FORMAT};
+pub use client::{DistClient, HttpTransport, Transport};
 pub use coordinator::{DistCoordinator, MergeConfig};
-pub use protocol::{PushDelta, PushOutcome};
+pub use protocol::{Heartbeat, HeartbeatReply, PushDelta, PushOutcome};
 pub use sim::{run_sim, SimConfig, SimReport};
 pub use worker::{DistWorker, WorkerConfig, WorkerReport};

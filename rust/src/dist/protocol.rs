@@ -7,24 +7,36 @@
 //! (or a future format bump) fails loudly instead of decoding into
 //! garbage coefficients:
 //!
-//! * push (`POST /v1/dist/push_delta`): [`PUSH_MAGIC`] `b"PDL1"`,
-//!   worker id, the worker's base merge epoch, the worker-measured
-//!   backward error of its delta, then the `Δŵ` vector.
+//! * push (`POST /v1/dist/push_delta`): [`PUSH_MAGIC`] `b"PDL2"`,
+//!   worker id, the worker's boot nonce and per-life round sequence
+//!   (together the idempotence key that makes client-side POST retry
+//!   safe — a duplicated delta merges exactly once), the worker's base
+//!   merge epoch, the worker-measured backward error of its delta,
+//!   then the `Δŵ` vector.
 //! * pull (`GET /v1/dist/pull_w` response): [`W_MAGIC`] `b"PWV1"`,
 //!   the merge epoch the vector corresponds to, then `w` itself.
+//! * heartbeat (`POST /v1/dist/heartbeat`): [`HEARTBEAT_MAGIC`]
+//!   `b"PDH1"`, worker id, then the `(start, end)` row ranges the
+//!   worker currently owns (announced on first contact; afterwards the
+//!   coordinator's registry is authoritative).
 //!
 //! The coordinator's answer to a push is small and goes back as JSON
-//! ([`PushOutcome`]): accepted-with-weight, or a resync order when the
-//! delta is staler than the lag bound.
+//! ([`PushOutcome`]): accepted-with-weight, a resync order when the
+//! delta is staler than the lag bound, or a revocation when the
+//! worker's lease already expired and its shard was reassigned.
+//! Heartbeats are answered with a JSON [`HeartbeatReply`].
 
 use anyhow::{bail, ensure, Result};
 
 use crate::util::Json;
 
-/// Magic + version prefix of a push body (`PASSCoDe Delta, v1`).
-pub const PUSH_MAGIC: &[u8; 4] = b"PDL1";
+/// Magic + version prefix of a push body (`PASSCoDe Delta, v2` —
+/// v2 added the `(boot, round)` idempotence id).
+pub const PUSH_MAGIC: &[u8; 4] = b"PDL2";
 /// Magic + version prefix of a pull response (`PASSCoDe W Vector, v1`).
 pub const W_MAGIC: &[u8; 4] = b"PWV1";
+/// Magic + version prefix of a heartbeat body (`PASSCoDe Heartbeat, v1`).
+pub const HEARTBEAT_MAGIC: &[u8; 4] = b"PDH1";
 
 /// One worker round's contribution: the `ŵ` delta accumulated over the
 /// worker's local epochs since it last synced at `base_epoch`.
@@ -32,6 +44,14 @@ pub const W_MAGIC: &[u8; 4] = b"PWV1";
 pub struct PushDelta {
     /// Worker id (labels the per-worker metrics; not trusted for auth).
     pub worker: u64,
+    /// Boot nonce: the merge epoch observed at this worker life's
+    /// first successful sync.  Distinguishes the rounds of a restarted
+    /// worker from those of its previous life, so the dedup key
+    /// `(worker, boot, round)` stays unique across crashes.
+    pub boot: u64,
+    /// Per-life push sequence number.  A retried POST re-sends the
+    /// same `(worker, boot, round)` and must merge exactly once.
+    pub round: u64,
     /// Merge epoch of the global `w` this delta was computed against.
     pub base_epoch: u64,
     /// Worker-measured ‖Δŵ − X_pᵀΔα_p‖ on its own shard — the async
@@ -43,9 +63,11 @@ pub struct PushDelta {
 
 /// Encode a push body (see module docs for the layout).
 pub fn encode_push(p: &PushDelta) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + 8 * 4 + 8 * p.delta.len());
+    let mut out = Vec::with_capacity(4 + 8 * 6 + 8 * p.delta.len());
     out.extend_from_slice(PUSH_MAGIC);
     out.extend_from_slice(&p.worker.to_le_bytes());
+    out.extend_from_slice(&p.boot.to_le_bytes());
+    out.extend_from_slice(&p.round.to_le_bytes());
     out.extend_from_slice(&p.base_epoch.to_le_bytes());
     out.extend_from_slice(&p.delta_err.to_le_bytes());
     out.extend_from_slice(&(p.delta.len() as u64).to_le_bytes());
@@ -59,11 +81,13 @@ pub fn encode_push(p: &PushDelta) -> Vec<u8> {
 pub fn decode_push(body: &[u8]) -> Result<PushDelta> {
     let mut r = Reader::new(body, PUSH_MAGIC)?;
     let worker = r.u64()?;
+    let boot = r.u64()?;
+    let round = r.u64()?;
     let base_epoch = r.u64()?;
     let delta_err = r.f64()?;
     let delta = r.vec_f64()?;
     r.finish()?;
-    Ok(PushDelta { worker, base_epoch, delta_err, delta })
+    Ok(PushDelta { worker, boot, round, base_epoch, delta_err, delta })
 }
 
 /// Encode a pull response: the merge `epoch` and the global `w`.
@@ -87,6 +111,102 @@ pub fn decode_w(body: &[u8]) -> Result<(u64, Vec<f64>)> {
     Ok((epoch, w))
 }
 
+/// A worker's liveness ping: its id plus the row ranges it owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Heartbeat {
+    /// Worker id.
+    pub worker: u64,
+    /// `(start, end)` half-open global row ranges the worker holds.
+    pub ranges: Vec<(u64, u64)>,
+}
+
+/// Encode a heartbeat body (see module docs for the layout).
+pub fn encode_heartbeat(h: &Heartbeat) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 16 + 16 * h.ranges.len());
+    out.extend_from_slice(HEARTBEAT_MAGIC);
+    out.extend_from_slice(&h.worker.to_le_bytes());
+    out.extend_from_slice(&(h.ranges.len() as u64).to_le_bytes());
+    for (start, end) in &h.ranges {
+        out.extend_from_slice(&start.to_le_bytes());
+        out.extend_from_slice(&end.to_le_bytes());
+    }
+    out
+}
+
+/// Decode and validate a heartbeat body.
+pub fn decode_heartbeat(body: &[u8]) -> Result<Heartbeat> {
+    let mut r = Reader::new(body, HEARTBEAT_MAGIC)?;
+    let worker = r.u64()?;
+    let count = usize::try_from(r.u64()?)?;
+    ensure!(
+        count.checked_mul(16).is_some_and(|bytes| bytes <= r.remaining()),
+        "PDH1 range count {count} exceeds remaining body ({} bytes)",
+        r.remaining()
+    );
+    let mut ranges = Vec::with_capacity(count);
+    for _ in 0..count {
+        let start = r.u64()?;
+        let end = r.u64()?;
+        ensure!(start <= end, "PDH1 range start {start} > end {end}");
+        ranges.push((start, end));
+    }
+    r.finish()?;
+    Ok(Heartbeat { worker, ranges })
+}
+
+/// The coordinator's answer to a heartbeat.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeartbeatReply {
+    /// True when the worker's lease expired and its shards were
+    /// reassigned: the worker must stop pushing and exit (or rejoin
+    /// under a fresh life).
+    pub revoked: bool,
+    /// Current merge epoch.
+    pub epoch: u64,
+    /// The row ranges the coordinator currently assigns this worker —
+    /// a superset of the announced ranges once orphans are adopted.
+    pub shards: Vec<(u64, u64)>,
+}
+
+impl HeartbeatReply {
+    /// Serialize for the HTTP response body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("status", Json::str(if self.revoked { "revoked" } else { "ok" })),
+            ("epoch", Json::num(self.epoch as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|&(start, end)| {
+                            Json::obj(vec![
+                                ("start", Json::num(start as f64)),
+                                ("end", Json::num(end as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a coordinator heartbeat response body.
+    pub fn from_json(j: &Json) -> Result<HeartbeatReply> {
+        let revoked = match j.get("status")?.as_str()? {
+            "ok" => false,
+            "revoked" => true,
+            other => bail!("unknown heartbeat status {other:?}"),
+        };
+        let epoch = j.get("epoch")?.as_f64()? as u64;
+        let mut shards = Vec::new();
+        for s in j.get("shards")?.as_arr()? {
+            shards.push((s.get("start")?.as_f64()? as u64, s.get("end")?.as_f64()? as u64));
+        }
+        Ok(HeartbeatReply { revoked, epoch, shards })
+    }
+}
+
 /// The coordinator's verdict on a pushed delta.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PushOutcome {
@@ -107,6 +227,13 @@ pub enum PushOutcome {
         /// Current merge epoch to rebase onto.
         epoch: u64,
     },
+    /// Rejected for good: the worker's lease expired, its dual
+    /// contribution was rolled out of `w`, and its shard ranges were
+    /// reassigned.  The worker must stop pushing under this life.
+    Revoked {
+        /// Merge epoch at revocation time.
+        epoch: u64,
+    },
 }
 
 impl PushOutcome {
@@ -122,6 +249,10 @@ impl PushOutcome {
                 ("status", Json::str("resync")),
                 ("epoch", Json::num(epoch as f64)),
             ]),
+            PushOutcome::Revoked { epoch } => Json::obj(vec![
+                ("status", Json::str("revoked")),
+                ("epoch", Json::num(epoch as f64)),
+            ]),
         }
     }
 
@@ -131,32 +262,54 @@ impl PushOutcome {
         match j.get("status")?.as_str()? {
             "accepted" => Ok(PushOutcome::Accepted { epoch, weight: j.get("weight")?.as_f64()? }),
             "resync" => Ok(PushOutcome::Resync { epoch }),
+            "revoked" => Ok(PushOutcome::Revoked { epoch }),
             other => bail!("unknown push outcome status {other:?}"),
         }
     }
 }
 
 /// Little-endian body reader: magic check, then sized scalar/vector
-/// reads, then a trailing-bytes check.
+/// reads, then a trailing-bytes check.  Errors carry the wire magic
+/// and the exact expected/actual byte counts so a truncated body (the
+/// chaos layer produces them on purpose) is diagnosable from the
+/// message alone.
 struct Reader<'a> {
     b: &'a [u8],
+    magic: &'static str,
+    off: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(body: &'a [u8], magic: &[u8; 4]) -> Result<Reader<'a>> {
+    fn new(body: &'a [u8], magic: &'static [u8; 4]) -> Result<Reader<'a>> {
         ensure!(
             body.len() >= 4 && &body[..4] == magic,
-            "bad body magic: want {:?}, got {:?}",
+            "bad body magic: want {:?}, got {:?} ({} body bytes)",
             String::from_utf8_lossy(magic),
             String::from_utf8_lossy(body.get(..4).unwrap_or(body)),
+            body.len(),
         );
-        Ok(Reader { b: &body[4..] })
+        Ok(Reader {
+            b: &body[4..],
+            magic: std::str::from_utf8(magic).unwrap_or("????"),
+            off: 4,
+        })
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len()
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.b.len() >= n, "body truncated: need {n} more bytes, have {}", self.b.len());
+        ensure!(
+            self.b.len() >= n,
+            "{} body truncated at byte {}: need {n} more bytes, have {}",
+            self.magic,
+            self.off,
+            self.b.len()
+        );
         let (head, rest) = self.b.split_at(n);
         self.b = rest;
+        self.off += n;
         Ok(head)
     }
 
@@ -173,7 +326,9 @@ impl<'a> Reader<'a> {
         let len = usize::try_from(len)?;
         ensure!(
             len.checked_mul(8).is_some_and(|bytes| bytes <= self.b.len()),
-            "vector length {len} exceeds remaining body ({} bytes)",
+            "{} vector length {len} ({} bytes) exceeds remaining body ({} bytes)",
+            self.magic,
+            len.saturating_mul(8),
             self.b.len()
         );
         let raw = self.take(len * 8)?;
@@ -184,7 +339,13 @@ impl<'a> Reader<'a> {
     }
 
     fn finish(self) -> Result<()> {
-        ensure!(self.b.is_empty(), "{} trailing bytes after body", self.b.len());
+        ensure!(
+            self.b.is_empty(),
+            "{} trailing bytes: {} extra after byte {}",
+            self.magic,
+            self.b.len(),
+            self.off
+        );
         Ok(())
     }
 }
@@ -197,6 +358,8 @@ mod tests {
     fn push_round_trips() {
         let p = PushDelta {
             worker: 3,
+            boot: 11,
+            round: 4,
             base_epoch: 17,
             delta_err: 0.125,
             delta: vec![1.0, -2.5, 0.0, 1e-9],
@@ -211,8 +374,23 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_round_trips() {
+        let h = Heartbeat { worker: 2, ranges: vec![(0, 100), (250, 400)] };
+        assert_eq!(decode_heartbeat(&encode_heartbeat(&h)).unwrap(), h);
+        let empty = Heartbeat { worker: 0, ranges: vec![] };
+        assert_eq!(decode_heartbeat(&encode_heartbeat(&empty)).unwrap(), empty);
+    }
+
+    #[test]
     fn decode_rejects_bad_magic_truncation_and_trailing() {
-        let p = PushDelta { worker: 0, base_epoch: 0, delta_err: 0.0, delta: vec![1.0] };
+        let p = PushDelta {
+            worker: 0,
+            boot: 0,
+            round: 0,
+            base_epoch: 0,
+            delta_err: 0.0,
+            delta: vec![1.0],
+        };
         let mut good = encode_push(&p);
         assert!(decode_push(b"XXXX").is_err());
         assert!(decode_push(&good[..good.len() - 1]).is_err());
@@ -223,6 +401,29 @@ mod tests {
         let n = huge.len();
         huge[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(decode_w(&huge).is_err());
+        // Heartbeat with a lying range count must not allocate either.
+        let mut hb = encode_heartbeat(&Heartbeat { worker: 0, ranges: vec![] });
+        let n = hb.len();
+        hb[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_heartbeat(&hb).is_err());
+    }
+
+    #[test]
+    fn decode_errors_name_magic_and_byte_counts() {
+        let p = PushDelta {
+            worker: 1,
+            boot: 0,
+            round: 0,
+            base_epoch: 0,
+            delta_err: 0.0,
+            delta: vec![2.0, 3.0],
+        };
+        let good = encode_push(&p);
+        let err = format!("{:#}", decode_push(&good[..good.len() - 3]).unwrap_err());
+        assert!(err.contains("PDL2"), "{err}");
+        assert!(err.contains("need") && err.contains("have"), "{err}");
+        let err = format!("{:#}", decode_w(b"PWV1").unwrap_err());
+        assert!(err.contains("PWV1") && err.contains("need 8"), "{err}");
     }
 
     #[test]
@@ -230,6 +431,7 @@ mod tests {
         for o in [
             PushOutcome::Accepted { epoch: 5, weight: 0.5 },
             PushOutcome::Resync { epoch: 7 },
+            PushOutcome::Revoked { epoch: 9 },
         ] {
             let j = Json::parse(&o.to_json().to_string()).unwrap();
             assert_eq!(PushOutcome::from_json(&j).unwrap(), o);
@@ -239,5 +441,16 @@ mod tests {
             ("epoch", Json::num(1.0)),
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn heartbeat_reply_json_round_trips() {
+        for r in [
+            HeartbeatReply { revoked: false, epoch: 3, shards: vec![(0, 10), (20, 30)] },
+            HeartbeatReply { revoked: true, epoch: 8, shards: vec![] },
+        ] {
+            let j = Json::parse(&r.to_json().to_string()).unwrap();
+            assert_eq!(HeartbeatReply::from_json(&j).unwrap(), r);
+        }
     }
 }

@@ -8,20 +8,46 @@
 //! `127.0.0.1:0`, one OS thread per worker.  Because the workers race
 //! through the real coordinator, the run is a genuine asynchronous
 //! Hybrid-DCA execution, just with loopback latency.
+//!
+//! # Chaos mode
+//!
+//! With [`SimConfig::chaos`] set, the sim switches to a deterministic
+//! single-threaded driver: every worker's [`DistClient`] rides a
+//! [`FaultyTransport`] seeded from the [`FaultPlan`], workers are
+//! stepped round-robin on one thread, and the coordinator runs with
+//! op-clock leases ([`SimConfig::lease_ops`]) and its merge trace
+//! recorder on.  Determinism is the point — the same plan replays the
+//! same fault sequence and the same merge-epoch trace, so a chaos
+//! failure is reproducible from its seed exactly like a `passcode
+//! check` schedule.
+//!
+//! When a lease expires mid-run the coordinator rolls the dead
+//! worker's contribution out of `w` and reassigns its row ranges; the
+//! driver notices the new assignment map and rebuilds the affected
+//! workers over their enlarged shards — committed dual carried over
+//! for rows they already owned, zeros for adopted rows (whose dual the
+//! rollback really did zero).  The Σ-invariant `w = Σ_p X_pᵀ α_p` is
+//! checked at the end across everything that happened
+//! ([`SimReport::sigma_residual`]).
 
+use std::net::SocketAddr;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::data::shard::{extract, plan_ranges, ShardManifest};
 use crate::data::registry;
+use crate::data::shard::{extract, plan_ranges, ShardManifest, ShardRange};
+use crate::data::Dataset;
 use crate::eval;
 use crate::loss::{DynLoss, LossKind};
-use crate::net::{Router, Server, ServerConfig};
+use crate::net::{ClientConfig, Router, Server, ServerConfig};
 
-use super::client::DistClient;
+use super::chaos::{FaultLog, FaultPlan, FaultyTransport};
+use super::client::{DistClient, HttpTransport};
 use super::coordinator::{DistCoordinator, MergeConfig};
+use super::protocol::Heartbeat;
 use super::worker::{DistWorker, WorkerConfig, WorkerReport};
 
 /// Simulation shape.
@@ -51,6 +77,12 @@ pub struct SimConfig {
     pub checkpoint: Option<PathBuf>,
     /// Write the shard manifest JSON here (None = don't).
     pub manifest_out: Option<PathBuf>,
+    /// Inject transport faults from this plan (switches the sim to the
+    /// deterministic single-threaded chaos driver).
+    pub chaos: Option<FaultPlan>,
+    /// Coordinator lease length in logical ops (0 = no leases; chaos
+    /// runs that want death/reassignment set this).
+    pub lease_ops: u64,
 }
 
 impl Default for SimConfig {
@@ -68,6 +100,8 @@ impl Default for SimConfig {
             seed: 42,
             checkpoint: None,
             manifest_out: None,
+            chaos: None,
+            lease_ops: 0,
         }
     }
 }
@@ -77,15 +111,17 @@ impl Default for SimConfig {
 pub struct SimReport {
     /// Final merged `w` pulled from the coordinator.
     pub w: Vec<f64>,
-    /// Global dual: the workers' committed blocks concatenated in
-    /// shard order.
+    /// Global dual in row order (the workers' committed blocks; rows
+    /// of a dead worker are zero — their contribution was rolled back).
     pub alpha: Vec<f64>,
-    /// Final merge epoch (= accepted merges).
+    /// Final merge epoch.
     pub merge_epoch: u64,
     /// Accepted merges.
     pub merges: u64,
     /// Rejected (resync'd) pushes.
     pub rejects: u64,
+    /// Shard ranges reassigned off dead workers.
+    pub reassigns: u64,
     /// Primal objective of the merged `w` on the training shard union.
     pub primal: f64,
     /// Duality gap of the concatenated dual.
@@ -94,20 +130,29 @@ pub struct SimReport {
     pub test_accuracy: f64,
     /// Coordinator's accumulated backward-error ratio.
     pub backward_error_ratio: f64,
+    /// ‖w − Xᵀα‖ / ‖w‖ over the full training set — the Σ-invariant
+    /// residual.  Near machine precision for single-threaded workers
+    /// (faults must not perturb it); with multi-threaded local solves
+    /// it absorbs their genuine Theorem-3 write loss.
+    pub sigma_residual: f64,
     /// Per-worker round/epoch/update counts.
     pub workers: Vec<WorkerReport>,
     /// The `passcode_dist_*` lines of a final `/metrics` scrape.
     pub dist_metrics: Vec<String>,
+    /// Chaos only: every injected fault, in injection order.
+    pub fault_events: Vec<String>,
+    /// Chaos only: the coordinator's per-verdict merge trace.
+    pub merge_trace: Vec<String>,
 }
 
 /// Run the simulation: shard, boot a loopback coordinator, race the
-/// workers through it, and score the merged model.
+/// workers through it (or step them deterministically under a fault
+/// plan), and score the merged model.
 pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
     ensure!(cfg.workers > 0, "need at least one worker");
     ensure!(cfg.rounds > 0, "need at least one round");
     let (train, test, c) = registry::load(&cfg.dataset, cfg.scale)?;
     let ranges = plan_ranges(train.n(), cfg.workers);
-    let shards: Vec<_> = ranges.iter().map(|r| extract(&train, r)).collect();
     if let Some(path) = &cfg.manifest_out {
         ShardManifest {
             dataset: cfg.dataset.clone(),
@@ -125,6 +170,8 @@ pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
         MergeConfig {
             workers: cfg.workers,
             max_lag: cfg.max_lag,
+            lease_ops: cfg.lease_ops,
+            record_trace: cfg.chaos.is_some(),
             checkpoint: cfg.checkpoint.clone(),
             checkpoint_every: if cfg.checkpoint.is_some() { cfg.workers as u64 } else { 0 },
             loss: cfg.loss,
@@ -138,6 +185,65 @@ pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
     )?;
     let addr = server.addr();
 
+    let (reports, alpha, fault_events) = match &cfg.chaos {
+        Some(plan) => run_chaos(cfg, &train, &ranges, plan, addr, &coord, c)?,
+        None => run_threaded(cfg, &train, &ranges, addr, c)?,
+    };
+    ensure!(alpha.len() == train.n(), "dual does not cover the dataset");
+
+    let (merge_epoch, w) = coord.pull();
+    let stats = coord.stats_json();
+    let dist_metrics: Vec<String> = {
+        crate::obs::probes::sync_hot_counters();
+        crate::obs::registry()
+            .render()
+            .lines()
+            .filter(|l| l.contains("passcode_dist_"))
+            .map(str::to_string)
+            .collect()
+    };
+    let merge_trace = coord.merge_trace();
+    let reassigns = coord.reassign_count();
+    server.shutdown();
+
+    // Σ-invariant: the merged w against X^T of the committed global
+    // dual, across every merge, rollback, and reassignment that ran.
+    let exact = train.x.transpose_dot(&alpha);
+    let w_norm = w.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let resid =
+        w.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let sigma_residual = if w_norm > 0.0 { resid / w_norm } else { resid };
+
+    let loss = DynLoss::new(cfg.loss, c);
+    Ok(SimReport {
+        primal: eval::primal_objective(&train, &loss, &w),
+        gap: eval::duality_gap(&train, &loss, &alpha),
+        test_accuracy: eval::accuracy(&test, &w),
+        merge_epoch,
+        merges: stats.get("merges")?.as_f64()? as u64,
+        rejects: stats.get("rejects")?.as_f64()? as u64,
+        reassigns,
+        backward_error_ratio: stats.get("backward_error_ratio")?.as_f64()?,
+        sigma_residual,
+        w,
+        alpha,
+        workers: reports,
+        dist_metrics,
+        fault_events,
+        merge_trace,
+    })
+}
+
+/// The fault-free path: one OS thread per worker, racing through the
+/// coordinator for a genuinely asynchronous execution.
+fn run_threaded(
+    cfg: &SimConfig,
+    train: &Dataset,
+    ranges: &[ShardRange],
+    addr: SocketAddr,
+    c: f64,
+) -> Result<(Vec<WorkerReport>, Vec<f64>, Vec<String>)> {
+    let shards: Vec<_> = ranges.iter().map(|r| extract(train, r)).collect();
     let worker_results: Vec<Result<(WorkerReport, Vec<f64>)>> =
         std::thread::scope(|s| {
             let handles: Vec<_> = shards
@@ -154,6 +260,8 @@ pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
                         rounds: cfg.rounds,
                         seed: cfg.seed,
                         checkpoint: None,
+                        heartbeat: false,
+                        ranges: Vec::new(),
                     };
                     s.spawn(move || -> Result<(WorkerReport, Vec<f64>)> {
                         let mut client = DistClient::new(addr);
@@ -170,39 +278,223 @@ pub fn run_sim(cfg: &SimConfig) -> Result<SimReport> {
         });
 
     let mut reports = Vec::with_capacity(cfg.workers);
-    let mut alpha = Vec::with_capacity(train.n());
+    let mut alpha = Vec::new();
     for (id, r) in worker_results.into_iter().enumerate() {
         let (report, block) = r.with_context(|| format!("worker {id} failed"))?;
         reports.push(report);
         alpha.extend_from_slice(&block);
     }
-    ensure!(alpha.len() == train.n(), "dual blocks do not cover the dataset");
+    Ok((reports, alpha, Vec::new()))
+}
 
-    let (merge_epoch, w) = coord.pull();
-    let stats = coord.stats_json();
-    let dist_metrics: Vec<String> = {
-        crate::obs::probes::sync_hot_counters();
-        crate::obs::registry()
-            .render()
-            .lines()
-            .filter(|l| l.contains("passcode_dist_"))
-            .map(str::to_string)
-            .collect()
+/// Global row indices covered by `ranges`, in announcement order (the
+/// order the union shard's rows are laid out in).
+fn rows_of(ranges: &[(u64, u64)]) -> impl Iterator<Item = usize> + '_ {
+    ranges.iter().flat_map(|&(a, b)| (a as usize)..(b as usize))
+}
+
+/// Slice the union of several global row ranges out of `ds` as one
+/// shard (a reassignment can leave a worker holding non-adjacent
+/// ranges; row order follows the range list).
+fn union_extract(ds: &Dataset, ranges: &[(u64, u64)]) -> Dataset {
+    let rows: Vec<usize> = rows_of(ranges).collect();
+    Dataset::new(
+        ds.x.select_rows(&rows),
+        rows.iter().map(|&i| ds.y[i]).collect(),
+        format!("{}[union of {} ranges]", ds.name, ranges.len()),
+    )
+}
+
+/// The chaos path: deterministic round-robin stepping on one thread,
+/// every client behind a seeded [`FaultyTransport`], with generation
+/// rebuilds whenever the coordinator's assignment map changes.
+fn run_chaos(
+    cfg: &SimConfig,
+    train: &Dataset,
+    ranges: &[ShardRange],
+    plan: &FaultPlan,
+    addr: SocketAddr,
+    coord: &Arc<DistCoordinator>,
+    c: f64,
+) -> Result<(Vec<WorkerReport>, Vec<f64>, Vec<String>)> {
+    let k = cfg.workers;
+    let plan = Arc::new(plan.clone());
+    let log: FaultLog = Arc::new(Mutex::new(Vec::new()));
+    // The faulty transport simulates drops/partitions above HTTP, so
+    // the HTTP layer underneath keeps only a light real-socket retry.
+    let client_cfg = ClientConfig {
+        connect_timeout: Duration::from_secs(5),
+        read_timeout: Duration::from_secs(10),
+        retries: 1,
+        backoff: Duration::from_millis(5),
     };
-    server.shutdown();
+    let mut clients: Vec<DistClient> = (0..k)
+        .map(|id| {
+            let inner = HttpTransport::new(addr, client_cfg.clone());
+            let mut cl = DistClient::over(Box::new(FaultyTransport::new(
+                Box::new(inner),
+                id as u64,
+                Arc::clone(&plan),
+                Arc::clone(&log),
+            )));
+            cl.set_worker(id as u64);
+            cl
+        })
+        .collect();
 
-    let loss = DynLoss::new(cfg.loss, c);
-    Ok(SimReport {
-        primal: eval::primal_objective(&train, &loss, &w),
-        gap: eval::duality_gap(&train, &loss, &alpha),
-        test_accuracy: eval::accuracy(&test, &w),
-        merge_epoch,
-        merges: stats.get("merges")?.as_f64()? as u64,
-        rejects: stats.get("rejects")?.as_f64()? as u64,
-        backward_error_ratio: stats.get("backward_error_ratio")?.as_f64()?,
-        w,
-        alpha,
-        workers: reports,
-        dist_metrics,
-    })
+    // Driver-side ownership map, kept in lockstep with the
+    // coordinator's registry.
+    let mut owned: Vec<Vec<(u64, u64)>> =
+        ranges.iter().map(|r| vec![(r.start as u64, r.end as u64)]).collect();
+    let mut dead = vec![false; k];
+    let mut global_alpha = vec![0.0; train.n()];
+    let mut acc = vec![WorkerReport::default(); k];
+
+    // Register every worker (announce its ranges) before the fault
+    // plan gets a chance to hide one from the lease registry.
+    for id in 0..k {
+        let hb = Heartbeat { worker: id as u64, ranges: owned[id].clone() };
+        let registered = (0..16).any(|_| clients[id].heartbeat(&hb).is_ok());
+        ensure!(registered, "worker {id} could not register (16 heartbeats faulted)");
+    }
+
+    let target = cfg.rounds * cfg.epochs_per_round;
+    let max_steps = (cfg.rounds * k).saturating_mul(16) + 256;
+    let mut steps = 0usize;
+    let mut view = coord.assignments();
+
+    'generations: loop {
+        // Build this generation: a union shard and a worker life per
+        // live owner.  Committed dual carries over for rows a worker
+        // already owned; adopted rows start at zero (the dead owner's
+        // rollback zeroed their contribution).
+        let shards: Vec<Option<Dataset>> = (0..k)
+            .map(|id| {
+                (!dead[id] && !owned[id].is_empty())
+                    .then(|| union_extract(train, &owned[id]))
+            })
+            .collect();
+        let mut lives: Vec<Option<DistWorker>> = Vec::with_capacity(k);
+        for id in 0..k {
+            match &shards[id] {
+                None => lives.push(None),
+                Some(shard) => {
+                    let wcfg = WorkerConfig {
+                        id: id as u64,
+                        solver: cfg.solver.clone(),
+                        loss: cfg.loss,
+                        c,
+                        threads: cfg.threads_per_worker,
+                        epochs_per_round: cfg.epochs_per_round,
+                        rounds: cfg.rounds,
+                        seed: cfg.seed,
+                        checkpoint: None,
+                        heartbeat: true,
+                        ranges: owned[id].clone(),
+                    };
+                    let dual: Vec<f64> = rows_of(&owned[id]).map(|i| global_alpha[i]).collect();
+                    lives.push(Some(
+                        DistWorker::with_dual(shard, wcfg, dual)
+                            .with_context(|| format!("rebuilding worker {id}"))?,
+                    ));
+                }
+            }
+        }
+
+        loop {
+            let mut progressed = false;
+            for id in 0..k {
+                let Some(worker) = lives[id].as_mut() else { continue };
+                if worker.is_revoked()
+                    || acc[id].epochs + worker.report().epochs >= target
+                {
+                    continue;
+                }
+                // A faulted round stalls the worker, it doesn't kill
+                // the sim — that is the scenario under test.
+                let _ = worker.run_round(&mut clients[id]);
+                progressed = true;
+                steps += 1;
+                if steps >= max_steps {
+                    break;
+                }
+            }
+            let now = coord.assignments();
+            let changed = now != view;
+            let done = !progressed || steps >= max_steps;
+            if !(changed || done) {
+                continue;
+            }
+
+            // Tear the generation down: settle in-flight pushes, then
+            // harvest each life's committed dual into global row
+            // coordinates.  A worker the coordinator declared dead was
+            // rolled back — its rows' committed dual is zero no matter
+            // what the (possibly partitioned, still unaware) worker
+            // believes.
+            let coord_dead: Vec<bool> = (0..k)
+                .map(|id| {
+                    now.iter()
+                        .find(|(wid, _, _)| *wid == id as u64)
+                        .is_some_and(|(_, alive, _)| !alive)
+                })
+                .collect();
+            for id in 0..k {
+                let Some(worker) = lives[id].as_mut() else { continue };
+                let is_dead = coord_dead[id] || worker.is_revoked();
+                if !is_dead {
+                    for _ in 0..32 {
+                        if worker.is_revoked()
+                            || worker.settle(&mut clients[id]).unwrap_or(false)
+                        {
+                            break;
+                        }
+                    }
+                }
+                let r = worker.report();
+                acc[id].rounds += r.rounds;
+                acc[id].accepted += r.accepted;
+                acc[id].resyncs += r.resyncs;
+                acc[id].epochs += r.epochs;
+                acc[id].updates += r.updates;
+                acc[id].revoked |= r.revoked;
+                if coord_dead[id] || worker.is_revoked() {
+                    for i in rows_of(&owned[id]) {
+                        global_alpha[i] = 0.0;
+                    }
+                    dead[id] = true;
+                    owned[id].clear();
+                } else {
+                    ensure!(
+                        !worker.has_pending(),
+                        "worker {id}: push still unsettled at generation teardown"
+                    );
+                    for (i, a) in rows_of(&owned[id]).zip(worker.alpha()) {
+                        global_alpha[i] = *a;
+                    }
+                }
+            }
+            if done {
+                break 'generations;
+            }
+            // Adopt the coordinator's new map and rebuild.
+            for (wid, alive, r) in &now {
+                let id = *wid as usize;
+                if id >= k {
+                    continue;
+                }
+                if *alive {
+                    owned[id] = r.clone();
+                } else {
+                    dead[id] = true;
+                    owned[id].clear();
+                }
+            }
+            view = now;
+            continue 'generations;
+        }
+    }
+
+    let fault_events = log.lock().map_err(|_| anyhow!("fault log poisoned"))?.clone();
+    Ok((acc, global_alpha, fault_events))
 }

@@ -25,6 +25,19 @@
 //! the delta so the coordinator can expose the accumulated backward
 //! error of the merged model.
 //!
+//! # Surviving a faulty transport
+//!
+//! Every push carries a `(worker, boot, round)` id (`boot` = the merge
+//! epoch at this life's first successful pull, `round` a per-life
+//! sequence).  A push whose transport call fails is *parked*, not
+//! dropped: the worker holds the encoded delta and its `Δα`, does no
+//! further local work, and re-sends the identical id next round until
+//! the coordinator answers — the coordinator's dedup record makes the
+//! retry merge exactly once no matter how many ghosts the network
+//! delivered meanwhile.  A [`PushOutcome::Revoked`] verdict (or a
+//! revoked heartbeat reply) ends the life: the coordinator already
+//! rolled back this worker's contribution and reassigned its shard.
+//!
 //! Dropout/rejoin: each accepted round the worker checkpoints
 //! `(α_base, merged w)` through `model_io`'s checkpoint schema; a
 //! restarted worker resumes the dual from its checkpoint, pulls the
@@ -35,7 +48,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::model_io;
 use crate::data::Dataset;
@@ -45,7 +58,7 @@ use crate::solver::api::{lookup, TrainSession};
 use crate::solver::SolveOptions;
 
 use super::client::DistClient;
-use super::protocol::{PushDelta, PushOutcome};
+use super::protocol::{Heartbeat, PushDelta, PushOutcome};
 
 /// Per-worker training policy.
 #[derive(Debug, Clone)]
@@ -71,6 +84,13 @@ pub struct WorkerConfig {
     /// Where to checkpoint `(α_base, merged w)` after each accepted
     /// round (None = no checkpoints, no rejoin).
     pub checkpoint: Option<PathBuf>,
+    /// Send a lease heartbeat at the top of every round (lease-mode
+    /// coordinators expect one; off by default).
+    pub heartbeat: bool,
+    /// Global `(start, end)` row ranges this worker holds — announced
+    /// in heartbeats so the coordinator's registry can reassign them
+    /// if this worker dies.
+    pub ranges: Vec<(u64, u64)>,
 }
 
 impl Default for WorkerConfig {
@@ -85,6 +105,8 @@ impl Default for WorkerConfig {
             rounds: 8,
             seed: 42,
             checkpoint: None,
+            heartbeat: false,
+            ranges: Vec::new(),
         }
     }
 }
@@ -102,6 +124,9 @@ pub struct WorkerReport {
     pub epochs: usize,
     /// Coordinate updates performed locally.
     pub updates: u64,
+    /// True once the coordinator revoked this worker's lease — the
+    /// life ended and its contribution was rolled back.
+    pub revoked: bool,
 }
 
 /// One distributed worker bound to its shard.
@@ -119,6 +144,15 @@ pub struct DistWorker<'a> {
     /// Whether `(w_base, base_epoch)` reflect the coordinator's
     /// current state (false forces a pull before the next local solve).
     synced: bool,
+    /// Boot nonce: merge epoch at this life's first successful pull
+    /// (None until then).  Half of the push idempotence id.
+    boot: Option<u64>,
+    /// Next push's per-life sequence number (the other half).
+    round_seq: u64,
+    /// A push the transport failed to deliver a verdict for, parked
+    /// with its `Δα` until the coordinator answers.
+    pending: Option<(PushDelta, Vec<f64>)>,
+    revoked: bool,
     push_total: Arc<Counter>,
     pull_total: Arc<Counter>,
     report: WorkerReport,
@@ -162,9 +196,35 @@ impl<'a> DistWorker<'a> {
             w_base: vec![0.0; shard.d()],
             base_epoch: 0,
             synced: false,
+            boot: None,
+            round_seq: 0,
+            pending: None,
+            revoked: false,
             session,
             report: WorkerReport::default(),
         })
+    }
+
+    /// Open a worker over `shard` with an explicit committed dual —
+    /// how the chaos driver rebuilds a worker after it adopts a dead
+    /// peer's rows (its own committed `α` at its old offsets, zeros in
+    /// the adopted rows, whose rolled-back dual really is zero).  The
+    /// session aligns with `alpha_base` at the first sync's
+    /// `adopt_state`.
+    pub fn with_dual(
+        shard: &'a Dataset,
+        cfg: WorkerConfig,
+        alpha_base: Vec<f64>,
+    ) -> Result<DistWorker<'a>> {
+        ensure!(
+            alpha_base.len() == shard.n(),
+            "dual length {} != shard rows {}",
+            alpha_base.len(),
+            shard.n()
+        );
+        let mut w = Self::new(shard, cfg)?;
+        w.alpha_base = alpha_base;
+        Ok(w)
     }
 
     /// The committed dual block (test hook: concatenating the shards'
@@ -178,6 +238,16 @@ impl<'a> DistWorker<'a> {
         self.report
     }
 
+    /// Whether the coordinator revoked this worker's lease.
+    pub fn is_revoked(&self) -> bool {
+        self.revoked
+    }
+
+    /// Whether a pushed delta is still waiting for a verdict.
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+
     /// Pull the coordinator's current `(epoch, w)` and adopt it
     /// together with the committed dual as the session state.
     fn resync(&mut self, client: &mut DistClient) -> Result<()> {
@@ -186,13 +256,86 @@ impl<'a> DistWorker<'a> {
         self.session.adopt_state(&self.alpha_base, &w)?;
         self.w_base = w;
         self.base_epoch = epoch;
+        if self.boot.is_none() {
+            self.boot = Some(epoch);
+        }
         self.synced = true;
         Ok(())
     }
 
-    /// Run one round: sync if needed, solve locally, push the delta,
-    /// settle `α_base` by the merge weight, re-sync, checkpoint.
+    fn mark_revoked(&mut self) {
+        self.revoked = true;
+        self.report.revoked = true;
+        self.pending = None;
+    }
+
+    /// Re-send a parked push, if any.  Returns `Ok(true)` when no push
+    /// is parked anymore (settled, rejected, or revoked), `Ok(false)`
+    /// when the transport failed again and the push stays parked.
+    /// No local work may run while a push is parked: its `Δα` is
+    /// already in the session but not yet in `α_base`.
+    pub fn settle(&mut self, client: &mut DistClient) -> Result<bool> {
+        let Some((p, dalpha)) = self.pending.take() else {
+            return Ok(true);
+        };
+        match client.push_delta(&p) {
+            Ok(outcome) => {
+                self.push_total.inc();
+                match outcome {
+                    PushOutcome::Accepted { weight, .. } => {
+                        for (b, d) in self.alpha_base.iter_mut().zip(&dalpha) {
+                            *b += weight * d;
+                        }
+                        self.report.accepted += 1;
+                        self.report.rounds += 1;
+                    }
+                    PushOutcome::Resync { .. } => {
+                        self.report.resyncs += 1;
+                        self.report.rounds += 1;
+                    }
+                    PushOutcome::Revoked { .. } => self.mark_revoked(),
+                }
+                self.synced = false;
+                Ok(true)
+            }
+            Err(_) => {
+                // Ambiguous: the coordinator may or may not have seen
+                // it.  Park again; the id makes the re-send safe.
+                self.pending = Some((p, dalpha));
+                Ok(false)
+            }
+        }
+    }
+
+    /// Run one round: heartbeat, settle any parked push, sync if
+    /// needed, solve locally, push the delta, settle `α_base` by the
+    /// merge weight, re-sync, checkpoint.  Transport faults on the
+    /// push path park the push and return `Ok` — the round stalls
+    /// instead of dying; faults on the *initial* sync propagate (a
+    /// coordinator that never answers must surface eventually).
     pub fn run_round(&mut self, client: &mut DistClient) -> Result<()> {
+        if self.revoked {
+            return Ok(());
+        }
+        client.set_worker(self.cfg.id);
+        if self.cfg.heartbeat {
+            let hb = Heartbeat { worker: self.cfg.id, ranges: self.cfg.ranges.clone() };
+            match client.heartbeat(&hb) {
+                Ok(reply) if reply.revoked => {
+                    self.mark_revoked();
+                    return Ok(());
+                }
+                // A lost heartbeat is survivable — pushes and pulls
+                // refresh the lease too; next round retries.
+                _ => {}
+            }
+        }
+        if !self.settle(client)? {
+            return Ok(()); // still parked: no local work this round
+        }
+        if self.revoked {
+            return Ok(());
+        }
         if !self.synced {
             self.resync(client)?;
         }
@@ -228,53 +371,78 @@ impl<'a> DistWorker<'a> {
             .sum::<f64>()
             .sqrt();
 
-        let outcome = client.push_delta(&PushDelta {
+        let p = PushDelta {
             worker: self.cfg.id,
+            boot: self.boot.expect("synced implies a boot nonce"),
+            round: self.round_seq,
             base_epoch: self.base_epoch,
             delta_err,
             delta,
-        })?;
-        self.push_total.inc();
-        match outcome {
-            PushOutcome::Accepted { weight, .. } => {
-                for (b, d) in self.alpha_base.iter_mut().zip(&dalpha) {
-                    *b += weight * d;
+        };
+        self.round_seq += 1;
+        match client.push_delta(&p) {
+            Ok(outcome) => {
+                self.push_total.inc();
+                match outcome {
+                    PushOutcome::Accepted { weight, .. } => {
+                        for (b, d) in self.alpha_base.iter_mut().zip(&dalpha) {
+                            *b += weight * d;
+                        }
+                        self.report.accepted += 1;
+                    }
+                    PushOutcome::Resync { .. } => {
+                        // Round discarded on both sides; α_base already
+                        // matches what the coordinator credited us with.
+                        self.report.resyncs += 1;
+                    }
+                    PushOutcome::Revoked { .. } => {
+                        self.mark_revoked();
+                        return Ok(());
+                    }
                 }
-                self.report.accepted += 1;
             }
-            PushOutcome::Resync { .. } => {
-                // Round discarded on both sides; α_base already matches
-                // what the coordinator credited us with.
-                self.report.resyncs += 1;
+            Err(_) => {
+                // Verdict unknown: park the push (with its Δα) and
+                // stall until the coordinator answers the same id.
+                self.pending = Some((p, dalpha));
+                self.synced = false;
+                return Ok(());
             }
         }
         self.report.rounds += 1;
+        self.synced = false;
         // Rebase onto the post-merge w before checkpointing, so the
         // checkpoint pairs α_base with a w that includes (or excludes)
-        // this round consistently.
-        self.resync(client)?;
-        if let Some(path) = &self.cfg.checkpoint {
-            let ckpt = self.session.snapshot();
-            if let Err(e) = model_io::save_checkpoint(&ckpt, path) {
-                eprintln!("dist-work {}: checkpoint failed: {e:#}", self.cfg.id);
+        // this round consistently.  A failed rebase just leaves the
+        // worker unsynced — the next round's opening pull retries it —
+        // and skips the checkpoint (its α/w pairing would be stale).
+        if self.resync(client).is_ok() {
+            if let Some(path) = &self.cfg.checkpoint {
+                let ckpt = self.session.snapshot();
+                if let Err(e) = model_io::save_checkpoint(&ckpt, path) {
+                    eprintln!("dist-work {}: checkpoint failed: {e:#}", self.cfg.id);
+                }
             }
         }
         Ok(())
     }
 
     /// Run `cfg.rounds` rounds (or until `stop` flips true between
-    /// rounds — the dropout hook the kill/rejoin test uses).
+    /// rounds — the dropout hook the kill/rejoin test uses, or until
+    /// the coordinator revokes this worker's lease).  Drains any
+    /// still-parked push before returning.
     pub fn run(
         &mut self,
         client: &mut DistClient,
         stop: Option<&AtomicBool>,
     ) -> Result<WorkerReport> {
         for _ in 0..self.cfg.rounds {
-            if stop.is_some_and(|s| s.load(Ordering::Relaxed)) {
+            if stop.is_some_and(|s| s.load(Ordering::Relaxed)) || self.revoked {
                 break;
             }
             self.run_round(client)?;
         }
+        let _ = self.settle(client);
         Ok(self.report)
     }
 }
@@ -286,6 +454,10 @@ impl std::fmt::Debug for DistWorker<'_> {
             .field("shard_rows", &self.shard.n())
             .field("base_epoch", &self.base_epoch)
             .field("synced", &self.synced)
+            .field("boot", &self.boot)
+            .field("round_seq", &self.round_seq)
+            .field("pending", &self.pending.is_some())
+            .field("revoked", &self.revoked)
             .field("report", &self.report)
             .finish()
     }

@@ -193,11 +193,24 @@
 //!
 //! A killed worker just stops contributing; restarting it with the
 //! same `--ckpt` rejoins — it resumes its dual block from the
-//! checkpoint and pulls the current merged `w`.  For tests and CI,
+//! checkpoint and pulls the current merged `w`.  With `--lease-ops N`
+//! the coordinator goes further: a worker silent for N logical ops is
+//! declared dead, its contribution is rolled out of `w`, and its shard
+//! ranges are reassigned to a live worker.  For tests and CI,
 //! `passcode dist-sim --workers 2 --smoke` runs the whole tier
-//! (sharding, HTTP, merge, metrics) in one process over loopback.
+//! (sharding, HTTP, merge, metrics) in one process over loopback, and
+//! `--chaos` (or `--faults plan.json`) puts every worker's transport
+//! behind a seeded deterministic fault injector ([`dist::FaultPlan`])
+//! — drops, duplicates, reorders, partitions — replayable from its
+//! seed like a `passcode check` schedule:
+//!
+//! ```text
+//! passcode dist-sim --workers 2 --chaos --fault-seed 7 --lease-ops 64
+//! ```
+//!
 //! EXPERIMENTS.md §Distributed relates the merge rule to Hybrid-DCA
-//! and to the τ/backward-error gauges.
+//! and to the τ/backward-error gauges; §Chaos covers the fault model,
+//! idempotent pushes, leases, and reassignment.
 //!
 //! # Memory-model checking quick start
 //!

@@ -24,6 +24,7 @@
 //!                [--preemptions 16] [--out report.json] [--smoke]
 //! passcode dist-coord [--addr 127.0.0.1:8920] [--dataset rcv1 --scale 0.1 |
 //!                --model m.json | --dim 47236] [--workers 2] [--max-lag 8]
+//!                [--lease-ops 0]           # worker leases (0 = off)
 //!                [--checkpoint w.json] [--checkpoint-every 4] [--for-secs 0]
 //! passcode dist-work --coord 127.0.0.1:8920 [--manifest shards.json |
 //!                --dataset rcv1 --scale 0.1 --workers 2] --shard 0
@@ -33,6 +34,8 @@
 //!                [--dataset rcv1] [--scale 0.05] [--solver passcode-atomic]
 //!                [--threads 1] [--max-lag 8] [--seed 42] [--smoke]
 //!                [--checkpoint w.json] [--manifest shards.json]
+//!                [--chaos] [--fault-seed 42] [--faults plan.json]
+//!                [--lease-ops 0]           # deterministic fault injection
 //! passcode audit [--json report.json] [--baseline baseline.json]
 //!                [--root .] [--smoke]   # static source audit, exits
 //!                                       # nonzero on any violation
@@ -51,8 +54,8 @@ use passcode::coordinator::{
 use passcode::data::registry;
 use passcode::data::shard::ShardManifest;
 use passcode::dist::{
-    run_sim, DistClient, DistCoordinator, DistWorker, MergeConfig, SimConfig,
-    WorkerConfig,
+    run_sim, DistClient, DistCoordinator, DistWorker, FaultPlan, MergeConfig,
+    SimConfig, WorkerConfig,
 };
 use passcode::loss::{Hinge, LossKind};
 use passcode::net::{Router, RouteSpec, RoutesConfig, Server, ServerConfig};
@@ -404,7 +407,8 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
 /// Flags `passcode dist-coord` accepts.
 const DIST_COORD_FLAGS: &[&str] = &[
     "addr", "http-workers", "dim", "model", "dataset", "scale", "workers",
-    "max-lag", "checkpoint", "checkpoint-every", "loss", "c", "for-secs",
+    "max-lag", "lease-ops", "checkpoint", "checkpoint-every", "loss", "c",
+    "for-secs",
 ];
 
 /// Flags `passcode dist-work` accepts.
@@ -417,6 +421,7 @@ const DIST_WORK_FLAGS: &[&str] = &[
 const DIST_SIM_FLAGS: &[&str] = &[
     "dataset", "scale", "workers", "rounds", "epochs-per-round", "solver",
     "threads", "max-lag", "seed", "checkpoint", "manifest", "smoke",
+    "chaos", "fault-seed", "faults", "lease-ops",
 ];
 
 /// `passcode dist-coord` — the distributed merge coordinator: a
@@ -457,6 +462,8 @@ fn cmd_dist_coord(cli: &Cli) -> Result<()> {
     let cfg = MergeConfig {
         workers: flag(cli, "workers", 2usize)?,
         max_lag: flag(cli, "max-lag", 8u64)?,
+        lease_ops: flag(cli, "lease-ops", 0u64)?,
+        record_trace: false,
         checkpoint: cli.opt("checkpoint").map(PathBuf::from),
         checkpoint_every: flag(cli, "checkpoint-every", 4u64)?,
         loss,
@@ -465,10 +472,11 @@ fn cmd_dist_coord(cli: &Cli) -> Result<()> {
     };
     let for_secs = flag(cli, "for-secs", 0u64)?;
     println!(
-        "dist-coord: d = {}, K = {}, max-lag = {}, checkpoint = {:?}",
+        "dist-coord: d = {}, K = {}, max-lag = {}, lease-ops = {}, checkpoint = {:?}",
         w.len(),
         cfg.workers,
         cfg.max_lag,
+        cfg.lease_ops,
         cfg.checkpoint,
     );
     let coord = Arc::new(DistCoordinator::new(w, cfg));
@@ -484,7 +492,7 @@ fn cmd_dist_coord(cli: &Cli) -> Result<()> {
         },
     )?;
     println!("coordinating on http://{}", server.addr());
-    println!("  POST /v1/dist/push_delta   GET /v1/dist/pull_w   GET /v1/dist/stats   GET /metrics");
+    println!("  POST /v1/dist/push_delta   GET /v1/dist/pull_w   POST /v1/dist/heartbeat   GET /v1/dist/stats   GET /metrics");
     if for_secs == 0 {
         loop {
             std::thread::sleep(Duration::from_secs(3600));
@@ -528,6 +536,14 @@ fn cmd_dist_work(cli: &Cli) -> Result<()> {
         rounds: flag(cli, "rounds", 8usize)?,
         seed: flag(cli, "seed", 42u64)?,
         checkpoint: cli.opt("ckpt").map(PathBuf::from),
+        // Announce liveness + the shard range so a lease-mode
+        // coordinator can reassign it if this process dies (a no-op
+        // echo when the coordinator runs without leases).
+        heartbeat: true,
+        ranges: vec![(
+            manifest.shards[id].start as u64,
+            manifest.shards[id].end as u64,
+        )],
     };
     println!(
         "dist-work {}: shard rows {}..{} of {} ({} rows), coordinator {}",
@@ -542,7 +558,8 @@ fn cmd_dist_work(cli: &Cli) -> Result<()> {
     let mut worker = DistWorker::new(&shard, cfg)?;
     let report = worker.run(&mut client, None)?;
     println!(
-        "done: {} rounds ({} accepted, {} resyncs), {} epochs, {} updates",
+        "done{}: {} rounds ({} accepted, {} resyncs), {} epochs, {} updates",
+        if report.revoked { " (lease revoked — contribution rolled back)" } else { "" },
         report.rounds, report.accepted, report.resyncs, report.epochs, report.updates,
     );
     println!("coordinator stats: {}", client.stats()?);
@@ -552,10 +569,22 @@ fn cmd_dist_work(cli: &Cli) -> Result<()> {
 /// `passcode dist-sim` — the whole distributed tier in one process:
 /// shard the dataset, boot a loopback coordinator, race N worker
 /// threads through it, and score the merged model.  `--smoke` is the
-/// CI shape (tiny dataset, 3 rounds).
+/// CI shape (tiny dataset, 3 rounds).  `--chaos` (or an explicit
+/// `--faults plan.json`) injects seeded transport faults and verifies
+/// the Σ-invariant survived them.
 fn cmd_dist_sim(cli: &Cli) -> Result<()> {
     cli.check_flags(DIST_SIM_FLAGS)?;
     let smoke = cli.opt("smoke").is_some();
+    // --faults loads an explicit passcode-faults-v1 plan; bare --chaos
+    // takes the built-in moderate plan seeded by --fault-seed.  Either
+    // switches the sim to the deterministic chaos driver.
+    let chaos = match cli.opt("faults") {
+        Some(path) => Some(FaultPlan::load(std::path::Path::new(path))?),
+        None if cli.opt("chaos").is_some() => {
+            Some(FaultPlan::moderate(flag(cli, "fault-seed", 42u64)?))
+        }
+        None => None,
+    };
     let base = SimConfig::default();
     let cfg = SimConfig {
         dataset: cli.opt_or("dataset", &base.dataset).to_string(),
@@ -574,10 +603,21 @@ fn cmd_dist_sim(cli: &Cli) -> Result<()> {
         seed: flag(cli, "seed", base.seed)?,
         checkpoint: cli.opt("checkpoint").map(PathBuf::from),
         manifest_out: cli.opt("manifest").map(PathBuf::from),
+        lease_ops: flag(cli, "lease-ops", 0u64)?,
+        chaos,
     };
     println!(
-        "dist-sim: {}@{} across {} workers × {} rounds × {} epochs (max-lag {})",
-        cfg.dataset, cfg.scale, cfg.workers, cfg.rounds, cfg.epochs_per_round, cfg.max_lag,
+        "dist-sim: {}@{} across {} workers × {} rounds × {} epochs (max-lag {}{})",
+        cfg.dataset,
+        cfg.scale,
+        cfg.workers,
+        cfg.rounds,
+        cfg.epochs_per_round,
+        cfg.max_lag,
+        match &cfg.chaos {
+            Some(p) => format!(", chaos seed {}", p.seed),
+            None => String::new(),
+        },
     );
     let report = run_sim(&cfg)?;
     for (i, w) in report.workers.iter().enumerate() {
@@ -606,6 +646,37 @@ fn cmd_dist_sim(cli: &Cli) -> Result<()> {
         report.merge_epoch > 0 && report.w.iter().all(|v| v.is_finite()),
         "simulation produced no merges or a non-finite model"
     );
+    if cfg.chaos.is_some() {
+        println!(
+            "chaos: {} faults injected, {} rejects, {} reassigns, {} merge-trace entries",
+            report.fault_events.len(),
+            report.rejects,
+            report.reassigns,
+            report.merge_trace.len(),
+        );
+        ensure!(
+            report
+                .dist_metrics
+                .iter()
+                .any(|l| l.contains("passcode_dist_fault_injected_total")),
+            "chaos run exported no passcode_dist_fault_injected_total metrics"
+        );
+        ensure!(
+            !report.fault_events.is_empty(),
+            "chaos run injected no faults — the plan never fired"
+        );
+        // Single-threaded local solves have no asynchronous write loss,
+        // so any Σ-invariant drift there is a merge/rollback bug; with
+        // threads the residual legitimately absorbs Theorem-3 loss.
+        if cfg.threads_per_worker == 1 {
+            ensure!(
+                report.sigma_residual < 1e-6,
+                "sigma-invariant BROKEN: |w - X^T a| / |w| = {:.3e}",
+                report.sigma_residual,
+            );
+        }
+        println!("sigma-invariant OK (residual {:.3e})", report.sigma_residual);
+    }
     Ok(())
 }
 

@@ -215,6 +215,43 @@ impl HttpClient {
         )))
     }
 
+    /// `POST path` with the same bounded retry-with-backoff budget as
+    /// [`Self::get_with_retry`]: up to `cfg.retries` extra attempts on
+    /// transport errors, doubling backoff, fresh connection per retry.
+    ///
+    /// POSTs are not idempotent in general — an ambiguous failure may
+    /// mean the server already processed the body — so this is only
+    /// for endpoints whose bodies carry an application-level
+    /// idempotence key.  The dist push protocol qualifies: every
+    /// `push_delta` body carries a `(worker, boot, round)` id and the
+    /// coordinator merges each id exactly once, so re-sending after a
+    /// timeout at worst re-fetches the recorded verdict.  Non-2xx
+    /// responses are *not* retried — the server answered.
+    pub fn post_with_retry(
+        &mut self,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<ClientResponse> {
+        let mut backoff = self.cfg.backoff;
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+                self.conn = None;
+            }
+            match self.request("POST", path, content_type, body) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one attempt ran").context(format!(
+            "POST {path} failed after {} attempts",
+            self.cfg.retries + 1
+        )))
+    }
+
     /// `POST /v1/score` of one sparse row against `route`.
     pub fn score(&mut self, route: &str, row: &SparseRow) -> Result<ClientResponse> {
         self.request(
@@ -407,6 +444,21 @@ mod tests {
         };
         let mut c = HttpClient::with_config("127.0.0.1:9".parse().unwrap(), cfg);
         let err = c.get_with_retry("/healthz").unwrap_err();
+        assert!(err.to_string().contains("after 2 attempts"), "{err:#}");
+    }
+
+    #[test]
+    fn post_with_retry_bounds_attempts_against_dead_peer() {
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(250),
+            read_timeout: Duration::from_millis(250),
+            retries: 1,
+            backoff: Duration::from_millis(1),
+        };
+        let mut c = HttpClient::with_config("127.0.0.1:9".parse().unwrap(), cfg);
+        let err = c
+            .post_with_retry("/v1/dist/push_delta", "application/octet-stream", b"x")
+            .unwrap_err();
         assert!(err.to_string().contains("after 2 attempts"), "{err:#}");
     }
 

@@ -21,10 +21,13 @@
 //!   HTTP/training spans with tid + monotonic timestamps) as JSON.
 //! * `GET /healthz` — liveness plus the route list.
 //! * `POST /v1/dist/push_delta`, `GET /v1/dist/pull_w`,
-//!   `GET /v1/dist/stats` — the distributed-tier merge plane (binary
-//!   delta bodies, see [`crate::dist::protocol`]); live only when a
+//!   `POST /v1/dist/heartbeat`, `GET /v1/dist/stats` — the
+//!   distributed-tier merge plane (binary delta/heartbeat bodies, see
+//!   [`crate::dist::protocol`]); live only when a
 //!   [`crate::dist::DistCoordinator`] is attached via
-//!   [`Router::with_dist`](super::router::Router::with_dist).
+//!   [`Router::with_dist`](super::router::Router::with_dist).  Pulls
+//!   accept an optional `?worker=ID` so they refresh that worker's
+//!   lease.
 //!
 //! Back-pressure: at most `queue_cap` accepted connections may be
 //! waiting for a worker; beyond that the server answers `503` and
@@ -432,9 +435,10 @@ fn route_request(router: &Router, req: &Request) -> Response {
             Response::json(200, &crate::obs::recorder().to_json())
         }
         ("POST", "/v1/score") => handle_score(router, req),
-        ("GET", "/v1/dist/pull_w") => handle_dist_pull(router),
+        ("GET", "/v1/dist/pull_w") => handle_dist_pull(router, req),
         ("GET", "/v1/dist/stats") => handle_dist_stats(router),
         ("POST", "/v1/dist/push_delta") => handle_dist_push(router, req),
+        ("POST", "/v1/dist/heartbeat") => handle_dist_heartbeat(router, req),
         (method, path) => {
             if let Some(route) = path
                 .strip_prefix("/v1/models/")
@@ -462,6 +466,9 @@ fn route_request(router: &Router, req: &Request) -> Response {
             if path == "/v1/dist/push_delta" {
                 return Response::error(405, "push_delta requires POST");
             }
+            if path == "/v1/dist/heartbeat" {
+                return Response::error(405, "heartbeat requires POST");
+            }
             Response::error(404, &format!("no handler for {method} {path}"))
         }
     }
@@ -477,12 +484,16 @@ fn dist_coordinator(
 }
 
 /// `GET /v1/dist/pull_w`: the merged `w` + its merge epoch, binary
-/// little-endian (see `dist::protocol`).
-fn handle_dist_pull(router: &Router) -> Response {
+/// little-endian (see `dist::protocol`).  An optional `?worker=ID`
+/// identifies the puller so the pull doubles as a lease refresh.
+fn handle_dist_pull(router: &Router, req: &Request) -> Response {
     let coord = match dist_coordinator(router) {
         Ok(c) => c,
         Err(resp) => return resp,
     };
+    if let Some(id) = req.query("worker").and_then(|v| v.parse::<u64>().ok()) {
+        coord.touch(id);
+    }
     let (epoch, w) = coord.pull();
     Response {
         status: 200,
@@ -516,6 +527,22 @@ fn handle_dist_push(router: &Router, req: &Request) -> Response {
         Ok(outcome) => Response::json(200, &outcome.to_json()),
         Err(e) => Response::error(400, &format!("{e:#}")),
     }
+}
+
+/// `POST /v1/dist/heartbeat`: decode the binary heartbeat, refresh (or
+/// refuse) the worker's lease, answer with the JSON lease reply —
+/// current epoch plus the worker's assigned shard ranges, or a
+/// revocation if the lease already expired.
+fn handle_dist_heartbeat(router: &Router, req: &Request) -> Response {
+    let coord = match dist_coordinator(router) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    let hb = match crate::dist::protocol::decode_heartbeat(&req.body) {
+        Ok(h) => h,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    Response::json(200, &coord.heartbeat(&hb).to_json())
 }
 
 /// `GET /metrics`: sync the scrape-time families (per-route serving
@@ -727,7 +754,7 @@ mod tests {
 
     #[test]
     fn dispatch_dist_routes() {
-        use crate::dist::protocol::{self, PushDelta, PushOutcome};
+        use crate::dist::protocol::{self, Heartbeat, HeartbeatReply, PushDelta, PushOutcome};
         use crate::dist::{DistCoordinator, MergeConfig};
 
         // Without a coordinator attached the plane 404s (and the GET
@@ -736,6 +763,8 @@ mod tests {
         assert_eq!(dispatch(&none, &req("GET", "/v1/dist/pull_w", "")).status, 404);
         assert_eq!(dispatch(&none, &req("POST", "/v1/dist/pull_w", "")).status, 405);
         assert_eq!(dispatch(&none, &req("GET", "/v1/dist/push_delta", "")).status, 405);
+        assert_eq!(dispatch(&none, &req("GET", "/v1/dist/heartbeat", "")).status, 405);
+        assert_eq!(dispatch(&none, &req("POST", "/v1/dist/heartbeat", "")).status, 404);
         none.shutdown();
 
         let coord = Arc::new(DistCoordinator::new(
@@ -743,13 +772,17 @@ mod tests {
             MergeConfig { workers: 2, max_lag: 4, ..Default::default() },
         ));
         let router = Router::empty().with_dist(coord);
-        let pull = dispatch(&router, &req("GET", "/v1/dist/pull_w", ""));
+        // A pull with ?worker= is still a plain pull when leases are
+        // off (the refresh is a no-op, never an error).
+        let pull = dispatch(&router, &req("GET", "/v1/dist/pull_w?worker=0", ""));
         assert_eq!(pull.status, 200);
         assert_eq!(protocol::decode_w(&pull.body).unwrap(), (0, vec![0.0, 0.0]));
 
         let mut push = req("POST", "/v1/dist/push_delta", "");
         push.body = protocol::encode_push(&PushDelta {
             worker: 0,
+            boot: 0,
+            round: 0,
             base_epoch: 0,
             delta_err: 0.0,
             delta: vec![1.0, -1.0],
@@ -763,13 +796,27 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+
+        // Heartbeat round-trips the lease reply (leases off: announced
+        // ranges are echoed back, never revoked).
+        let mut hb = req("POST", "/v1/dist/heartbeat", "");
+        hb.body = protocol::encode_heartbeat(&Heartbeat { worker: 0, ranges: vec![(0, 10)] });
+        let hresp = dispatch(&router, &hb);
+        assert_eq!(hresp.status, 200);
+        let reply = HeartbeatReply::from_json(&body_json(&hresp)).unwrap();
+        assert!(!reply.revoked);
+        assert_eq!(reply.shards, vec![(0, 10)]);
+
         let stats = dispatch(&router, &req("GET", "/v1/dist/stats", ""));
         assert_eq!(stats.status, 200);
         assert_eq!(body_json(&stats).get("merge_epoch").unwrap().as_usize().unwrap(), 1);
-        // Garbage body: 400, not a panic.
+        // Garbage bodies: 400, not a panic.
         let mut bad = req("POST", "/v1/dist/push_delta", "");
         bad.body = b"XXXX".to_vec();
         assert_eq!(dispatch(&router, &bad).status, 400);
+        let mut badhb = req("POST", "/v1/dist/heartbeat", "");
+        badhb.body = b"XXXX".to_vec();
+        assert_eq!(dispatch(&router, &badhb).status, 400);
         router.shutdown();
     }
 

@@ -170,6 +170,18 @@ pub struct DistProbes {
     /// relative to ‖w‖ — the distributed analog of the Theorem-3
     /// `passcode_train_backward_error_ratio` gauge.
     pub backward_error_ratio: Arc<Gauge>,
+    /// Heartbeats handled (coordinator, lease mode).
+    pub heartbeats: Arc<Counter>,
+    /// Duplicate pushes answered from the `(worker, boot, round)`
+    /// dedup record instead of merging twice.
+    pub dedup_hits: Arc<Counter>,
+    /// Worker leases expired (worker declared dead, contribution
+    /// rolled back).
+    pub lease_expired: Arc<Counter>,
+    /// Shard ranges reassigned from a dead worker to a live one.
+    pub reassigns: Arc<Counter>,
+    /// Workers currently holding a live lease.
+    pub workers_alive: Arc<Gauge>,
 }
 
 /// The distributed-tier telemetry family (lazily registered on first
@@ -201,6 +213,26 @@ pub fn dist() -> &'static DistProbes {
             backward_error_ratio: reg.gauge(
                 "passcode_dist_backward_error_ratio",
                 "Accumulated worker-reported |dw - X^T dalpha| over |w| of the merged model",
+            ),
+            heartbeats: reg.counter(
+                "passcode_dist_heartbeats_total",
+                "Worker heartbeats handled by the coordinator",
+            ),
+            dedup_hits: reg.counter(
+                "passcode_dist_push_dedup_total",
+                "Duplicate pushes answered from the (worker, boot, round) dedup record",
+            ),
+            lease_expired: reg.counter(
+                "passcode_dist_lease_expired_total",
+                "Worker leases expired: worker declared dead, contribution rolled back",
+            ),
+            reassigns: reg.counter(
+                "passcode_dist_reassign_total",
+                "Shard ranges reassigned from dead workers to live ones",
+            ),
+            workers_alive: reg.gauge(
+                "passcode_dist_workers_alive",
+                "Workers currently holding a live lease",
             ),
         }
     })
